@@ -1,0 +1,90 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT artifacts, builds a photonic engine (machine simulator +
+//! PJRT executables), classifies a few test digits with N = 10 stochastic
+//! passes, and prints the per-input uncertainty breakdown — plus a taste of
+//! the entropy source that powers it.
+
+use anyhow::Result;
+use photonic_bayes::bnn::{Decision, UncertaintyPolicy};
+use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
+use photonic_bayes::data::{Dataset, DatasetKind};
+use photonic_bayes::entropy::{nist, ChaoticLightSource};
+use photonic_bayes::photonics::{timing, MachineConfig};
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
+
+fn main() -> Result<()> {
+    let root = artifacts_root();
+
+    // --- 1. the machine's headline numbers, derived from its constants ----
+    let h = timing::headline();
+    println!("photonic Bayesian machine:");
+    println!("  {:.1} ps per probabilistic convolution", h.symbol_period_ps);
+    println!("  {:.2} G convolutions/s, {:.2} Tbit/s digital interface\n",
+        h.convolutions_per_sec / 1e9, h.interface_tbit_per_sec);
+
+    // --- 2. the chaotic-light entropy source passes NIST SP800-22 --------
+    let mut src = ChaoticLightSource::with_defaults(7);
+    let bits = src.extract_bits(100.0, 20_000);
+    let passed = nist::run_battery(&bits).iter().filter(|r| r.pass).count();
+    println!("entropy source: {passed}/{} NIST SP800-22 tests pass on 20 kbit\n", nist::run_battery(&bits).len());
+
+    // --- 3. load artifacts + (trained, if available) parameters ----------
+    let arts = ModelArtifacts::load_dataset(&root, "digits")?;
+    let trained = root.join("digits/params_trained.bin");
+    let params = if trained.exists() {
+        ParamStore::load_bin(&arts.meta, &trained)?
+    } else {
+        println!("note: params_trained.bin missing — run `pbm train --dataset digits`");
+        ParamStore::load_init(&arts.meta, &root.join("digits"))?
+    };
+
+    // --- 4. build the engine: PJRT pre/post + photonic probabilistic block
+    let mut engine = Engine::new(
+        arts,
+        params,
+        EngineConfig {
+            n_samples: 10,
+            mode: ExecMode::Photonic,
+            policy: UncertaintyPolicy::full(0.02, 1.2),
+            calibrate: true,
+            machine: MachineConfig::default(),
+            noise_bw_ghz: 150.0,
+            seed: 42,
+        },
+    )?;
+
+    // --- 5. classify some test digits -------------------------------------
+    let ds = Dataset::load(&root.join("data"), "digits_test", DatasetKind::InDomain)?;
+    let n = 8;
+    let mut batch = Vec::new();
+    for i in 0..n {
+        batch.extend_from_slice(ds.image(i));
+    }
+    println!("classifying {n} test digits with N = 10 photonic passes each:");
+    for (i, r) in engine.classify(&batch, n)?.iter().enumerate() {
+        let verdict = match &r.decision {
+            Decision::Accept { class, confidence } => {
+                format!("accept class {class} (p = {confidence:.2})")
+            }
+            Decision::RejectOod { .. } => "REJECT (out-of-domain)".to_string(),
+            Decision::FlagAmbiguous { class, .. } => format!("class {class} but AMBIGUOUS"),
+        };
+        println!(
+            "  #{i}: true {} | {} | MI {:.4} SE {:.3} agreement {:.0}%",
+            ds.labels[i],
+            verdict,
+            r.predictive.mutual_information,
+            r.predictive.softmax_entropy,
+            r.predictive.agreement * 100.0
+        );
+    }
+    println!("\n{}", engine.report());
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! End-to-end serving driver: router + dynamic batcher + photonic engines
+//! behind the TCP gateway, under Poisson client load.
+//!
+//! This is the E2E validation workload: it proves all layers compose —
+//! AOT HLO artifacts (L2/L1) executed by PJRT, the photonic machine on the
+//! request path (L3), dynamic batching, the wire protocol — and reports
+//! serving latency/throughput percentiles.
+//!
+//! ```bash
+//! cargo run --release --example serving_gateway [-- n_requests rate_hz]
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::coordinator::service::{EngineHandle, ServiceConfig};
+use photonic_bayes::coordinator::{EngineConfig, ExecMode, Router};
+use photonic_bayes::data::synth::poisson_arrivals_us;
+use photonic_bayes::data::{Dataset, DatasetKind};
+use photonic_bayes::entropy::Xoshiro256pp;
+use photonic_bayes::exec::CancelToken;
+use photonic_bayes::photonics::MachineConfig;
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::server::{serve, Client, ServerOptions};
+use photonic_bayes::util::mathstat::{mean, percentile};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(120);
+    let rate_hz: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150.0);
+
+    let root = artifacts_root();
+    let trained = root.join("digits/params_trained.bin");
+    let params_path = if trained.exists() {
+        trained
+    } else {
+        eprintln!("warning: serving with untrained init params");
+        root.join("digits/params_init.bin")
+    };
+
+    // --- spin up the router with one photonic engine ----------------------
+    let engine_cfg = EngineConfig {
+        n_samples: 10,
+        mode: ExecMode::Photonic,
+        policy: UncertaintyPolicy::ood_only(0.00308),
+        calibrate: false, // load-time speed; calibration is exercised elsewhere
+        machine: MachineConfig::default(),
+        noise_bw_ghz: 150.0,
+        seed: 42,
+    };
+    let svc_cfg = ServiceConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 512,
+    };
+    let mut router = Router::new();
+    router.register(EngineHandle::spawn(
+        &root,
+        "digits",
+        Some(&params_path),
+        engine_cfg,
+        svc_cfg,
+    )?);
+
+    let cancel = CancelToken::new();
+    let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::new(Mutex::new(None));
+    let bound2 = bound.clone();
+    let cancel_srv = cancel.clone();
+    let server = std::thread::spawn(move || {
+        serve(
+            router,
+            ServerOptions {
+                addr: "127.0.0.1:0".into(),
+                workers: 8,
+            },
+            cancel_srv,
+            move |addr| {
+                *bound2.lock().unwrap() = Some(addr);
+            },
+        )
+    });
+    let addr = loop {
+        if let Some(a) = *bound.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    println!("gateway listening on {addr}");
+
+    // --- Poisson client load ----------------------------------------------
+    let ds = Dataset::load(&root.join("data"), "digits_test", DatasetKind::InDomain)?;
+    let mut rng = Xoshiro256pp::new(99);
+    let gaps = poisson_arrivals_us(&mut rng, rate_hz, n_requests);
+    println!("firing {n_requests} requests at ~{rate_hz:.0} req/s (4 client connections)...");
+
+    let t_start = Instant::now();
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut clients = Vec::new();
+    let per_client = n_requests / 4;
+    for c in 0..4 {
+        let lat = latencies.clone();
+        let addr = addr.to_string();
+        let images: Vec<Vec<f32>> = (0..per_client)
+            .map(|i| ds.image((c * per_client + i) % ds.n).to_vec())
+            .collect();
+        let gaps: Vec<f64> = gaps[c * per_client..(c + 1) * per_client].to_vec();
+        clients.push(std::thread::spawn(move || -> Result<usize> {
+            let mut client = Client::connect(&addr)?;
+            let mut ok = 0usize;
+            for (img, gap) in images.iter().zip(gaps) {
+                std::thread::sleep(Duration::from_micros((gap * 4.0) as u64));
+                let t0 = Instant::now();
+                let resp = client.classify("digits", img)?;
+                let us = t0.elapsed().as_micros() as f64;
+                if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                    ok += 1;
+                }
+                lat.lock().unwrap().push(us);
+            }
+            Ok(ok)
+        }));
+    }
+    let mut total_ok = 0;
+    for c in clients {
+        total_ok += c.join().unwrap()?;
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+
+    // --- report ------------------------------------------------------------
+    let lat = latencies.lock().unwrap().clone();
+    println!("\n== serving report ==");
+    println!("  completed: {total_ok}/{} ok in {wall:.2}s ({:.1} req/s)",
+        4 * per_client, total_ok as f64 / wall);
+    println!(
+        "  latency: mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+        mean(&lat) / 1e3,
+        percentile(&lat, 50.0) / 1e3,
+        percentile(&lat, 95.0) / 1e3,
+        percentile(&lat, 99.0) / 1e3
+    );
+    println!("  (each request = 10 stochastic photonic passes, dynamic batch <= 8)");
+
+    cancel.cancel();
+    server.join().unwrap()?;
+    Ok(())
+}

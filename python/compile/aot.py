@@ -1,0 +1,194 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts + data + metadata.
+
+This is the single build-time entry point (``make artifacts``).  It runs
+Python exactly once; afterwards the Rust binary is self-contained:
+
+  artifacts/
+    digits/   meta.json, params_init.bin, fwd_pre_b*.hlo.txt,
+              fwd_post_b*.hlo.txt, fwd_full_b*.hlo.txt, train_step.hlo.txt
+    blood/    (same, 3 input channels / 7 classes)
+    data/     *.npy procedural datasets (see datasets.py)
+    MANIFEST.json
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` rust crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model
+
+PRE_BATCHES = [1, 8, 32]
+POST_BATCHES = [1, 8, 32]
+FULL_BATCHES = [1, 8, 32, 100]
+TRAIN_BATCH = 64
+
+DATASET_CFG = {
+    "digits": dict(in_channels=1, n_classes=10),
+    "blood": dict(in_channels=3, n_classes=7),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export_model(outdir: str, name: str, in_channels: int, n_classes: int) -> dict:
+    """Lower every entry point for one dataset configuration."""
+    ddir = os.path.join(outdir, name)
+    os.makedirs(ddir, exist_ok=True)
+    n = model.num_params(in_channels, n_classes)
+    theta_s = _spec((n,))
+    arts = {}
+
+    def dump(fname: str, lowered) -> None:
+        text = to_hlo_text(lowered)
+        path = os.path.join(ddir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        arts[fname[: -len(".hlo.txt")]] = fname
+        print(f"  [{name}] {fname}: {len(text) / 1024:.0f} KiB")
+
+    for b in PRE_BATCHES:
+        fn = lambda t, x: (model.fwd_pre(t, x, in_channels, n_classes),)
+        dump(f"fwd_pre_b{b}.hlo.txt",
+             jax.jit(fn).lower(theta_s, _spec((b, in_channels, model.IMG_HW, model.IMG_HW))))
+
+    act = (model.PROB_CH, model.PROB_HW, model.PROB_HW)
+    for b in POST_BATCHES:
+        fn = lambda t, x3q, d3: (model.fwd_post(t, x3q, d3, in_channels, n_classes),)
+        dump(f"fwd_post_b{b}.hlo.txt",
+             jax.jit(fn).lower(theta_s, _spec((b,) + act), _spec((b,) + act)))
+
+    eps_shape = (model.PROB_CH, model.PROB_HW, model.PROB_HW, 9)
+    for b in FULL_BATCHES:
+        fn = lambda t, x, e: (model.fwd_full(t, x, e, in_channels, n_classes),)
+        dump(f"fwd_full_b{b}.hlo.txt",
+             jax.jit(fn).lower(theta_s,
+                               _spec((b, in_channels, model.IMG_HW, model.IMG_HW)),
+                               _spec((b,) + eps_shape)))
+
+    fn = lambda t, m, v, s, x, y, e, ks, lr: model.train_step(
+        t, m, v, s, x, y, e, ks, lr, in_channels, n_classes)
+    dump("train_step.hlo.txt",
+         jax.jit(fn).lower(
+             theta_s, theta_s, theta_s, _spec((), jnp.float32),
+             _spec((TRAIN_BATCH, in_channels, model.IMG_HW, model.IMG_HW)),
+             _spec((TRAIN_BATCH,), jnp.int32),
+             _spec((TRAIN_BATCH,) + eps_shape),
+             _spec((), jnp.float32), _spec((), jnp.float32)))
+
+    theta0 = model.init_params(seed=1234, in_channels=in_channels, n_classes=n_classes)
+    theta0.astype("<f4").tofile(os.path.join(ddir, "params_init.bin"))
+
+    meta = {
+        "dataset": name,
+        "in_channels": in_channels,
+        "n_classes": n_classes,
+        "img_hw": model.IMG_HW,
+        "prob_ch": model.PROB_CH,
+        "prob_hw": model.PROB_HW,
+        "num_taps": 9,
+        "feat_ch": model.FEAT_CH,
+        "num_params": n,
+        "scale_dac": model.SCALE_DAC,
+        "scale_adc": model.SCALE_ADC,
+        "prior_sigma": model.PRIOR_SIGMA,
+        "rho_init": model.RHO_INIT,
+        "min_rel_sigma": model.MIN_REL_SIGMA,
+        "t_symbol_ps": model.T_SYMBOL_PS,
+        "bw_range_ghz": [model.BW_MIN_GHZ, model.BW_MAX_GHZ],
+        "batch_sizes": {"pre": PRE_BATCHES, "post": POST_BATCHES,
+                        "full": FULL_BATCHES, "train": TRAIN_BATCH},
+        "param_layout": [
+            {"name": s.name, "shape": list(s.shape), "offset": s.offset, "size": s.size}
+            for s in model.param_layout(in_channels, n_classes)
+        ],
+        "artifacts": arts,
+    }
+    with open(os.path.join(ddir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def export_data(outdir: str) -> None:
+    ddir = os.path.join(outdir, "data")
+    os.makedirs(ddir, exist_ok=True)
+
+    def save(stem, x, y):
+        np.save(os.path.join(ddir, stem + "_x.npy"), x)
+        np.save(os.path.join(ddir, stem + "_y.npy"), y)
+        print(f"  data/{stem}: x{list(x.shape)} y{list(y.shape)}")
+
+    t0 = time.time()
+    save("digits_train", *datasets.gen_digits(8000, seed=11))
+    save("digits_test", *datasets.gen_digits(2000, seed=12))
+    save("ambiguous", *datasets.gen_ambiguous(1500, seed=13))
+    save("fashion", *datasets.gen_fashion(1500, seed=14))
+    save("blood_train", *datasets.gen_blood(8000, seed=15))
+    save("blood_test", *datasets.gen_blood(1500, seed=16))
+    save("blood_ood", *datasets.gen_blood(1000, seed=17, ood=True))
+    print(f"  data generated in {time.time() - t0:.1f}s")
+
+
+def source_digest() -> str:
+    """Hash of the compile-path sources, stored in MANIFEST.json so `make`
+    can skip regeneration when nothing changed."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _dirs, files in os.walk(here):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--datasets", default="digits,blood")
+    ap.add_argument("--skip-data", action="store_true")
+    ap.add_argument("--skip-models", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"source_digest": source_digest(), "models": {}}
+    if not args.skip_models:
+        for name in args.datasets.split(","):
+            cfg = DATASET_CFG[name]
+            print(f"exporting model artifacts for '{name}' ...")
+            meta = export_model(args.outdir, name, **cfg)
+            manifest["models"][name] = {"num_params": meta["num_params"]}
+    if not args.skip_data:
+        print("generating datasets ...")
+        export_data(args.outdir)
+    with open(os.path.join(args.outdir, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

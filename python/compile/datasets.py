@@ -1,0 +1,308 @@
+"""Procedural dataset substrates (paper-data substitution, see DESIGN.md).
+
+The paper evaluates on MedMNIST BloodMNIST (7 blood-cell classes +
+erythroblasts held out as OOD) and on MNIST / Ambiguous-MNIST /
+Fashion-MNIST.  None of those are available offline, so this module builds
+procedural equivalents that preserve the *experimental structure*:
+
+* ``digits``      — 10-class stroke-rendered handwritten-digit analogue
+                    (train + ID test set),
+* ``ambiguous``   — alpha-blends of two digit renders (the exact
+                    construction of Ambiguous-MNIST): factually unclear
+                    inputs -> aleatoric uncertainty probe,
+* ``fashion``     — procedural garment silhouettes, distributionally
+                    disjoint from strokes: epistemic uncertainty probe,
+* ``blood``       — 28x28x3 blood-cell microscopy analogue with
+                    class-specific morphology (nucleus lobation, granule
+                    color/density, cell size); the erythroblast morphology
+                    (round dark nucleus + *reddish* cytoplasm) is generated
+                    only for the OOD split, mirroring the paper's held-out
+                    precursor cell type.
+
+Images are stored as uint8 ``.npy`` (N, C, H, W) plus int32 label vectors;
+the Rust side has a matching reader (``rust/src/data/npy.rs``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+HW = 28
+
+# Difficulty knobs — tuned so the BNN lands near the paper's ID accuracies
+# (blood ~90 %, digits ~96 %) instead of saturating at 100 %.
+DIGIT_NOISE = 0.10
+DIGIT_JITTER = 0.16
+BLOOD_NOISE = 0.055
+BLOOD_OCCLUDE_P = 0.22
+
+_YY, _XX = np.meshgrid(np.arange(HW, dtype=np.float32),
+                       np.arange(HW, dtype=np.float32), indexing="ij")
+
+
+# ---------------------------------------------------------------------------
+# Digit strokes
+# ---------------------------------------------------------------------------
+
+# Normalized [0,1]^2 polyline skeletons (y down).  Multiple strokes per digit.
+_DIGIT_STROKES = {
+    0: [[(0.5, 0.1), (0.8, 0.3), (0.8, 0.7), (0.5, 0.9), (0.2, 0.7), (0.2, 0.3), (0.5, 0.1)]],
+    1: [[(0.35, 0.25), (0.55, 0.1), (0.55, 0.9)]],
+    2: [[(0.2, 0.3), (0.4, 0.1), (0.7, 0.15), (0.75, 0.4), (0.25, 0.85), (0.8, 0.85)]],
+    3: [[(0.25, 0.15), (0.7, 0.2), (0.5, 0.45), (0.75, 0.65), (0.55, 0.9), (0.22, 0.85)]],
+    4: [[(0.65, 0.9), (0.65, 0.1), (0.2, 0.6), (0.85, 0.6)]],
+    5: [[(0.75, 0.12), (0.3, 0.12), (0.28, 0.45), (0.65, 0.45), (0.72, 0.7), (0.5, 0.9), (0.22, 0.82)]],
+    6: [[(0.7, 0.12), (0.35, 0.35), (0.25, 0.7), (0.5, 0.9), (0.72, 0.7), (0.55, 0.5), (0.28, 0.62)]],
+    7: [[(0.2, 0.12), (0.8, 0.12), (0.45, 0.9)]],
+    8: [[(0.5, 0.1), (0.75, 0.25), (0.5, 0.48), (0.25, 0.25), (0.5, 0.1)],
+        [(0.5, 0.48), (0.78, 0.7), (0.5, 0.92), (0.22, 0.7), (0.5, 0.48)]],
+    9: [[(0.72, 0.38), (0.5, 0.5), (0.28, 0.35), (0.35, 0.12), (0.65, 0.1), (0.72, 0.38), (0.68, 0.9)]],
+}
+
+
+def _resample_polyline(pts: np.ndarray, n: int) -> np.ndarray:
+    """Resample a polyline to n equidistant points."""
+    seg = np.diff(pts, axis=0)
+    seglen = np.sqrt((seg ** 2).sum(1))
+    t = np.concatenate([[0.0], np.cumsum(seglen)])
+    total = t[-1]
+    if total <= 0:
+        return np.repeat(pts[:1], n, axis=0)
+    u = np.linspace(0, total, n)
+    x = np.interp(u, t, pts[:, 0])
+    y = np.interp(u, t, pts[:, 1])
+    return np.stack([x, y], axis=1)
+
+
+def _render_strokes(strokes, rng, thickness=None, jitter=DIGIT_JITTER):
+    """Rasterize jittered strokes with a Gaussian brush -> (HW, HW) in [0,1]."""
+    ang = rng.normal(0.0, 0.18) * jitter / 0.16
+    scale = 1.0 + rng.normal(0.0, 0.09)
+    shear = rng.normal(0.0, 0.08)
+    tx, ty = rng.normal(0.0, 1.3, 2)
+    ca, sa = np.cos(ang), np.sin(ang)
+    A = np.array([[ca, -sa], [sa + shear, ca]]) * scale
+    if thickness is None:
+        thickness = rng.uniform(0.9, 1.6)
+    img = np.zeros((HW, HW), np.float32)
+    for poly in strokes:
+        pts = np.asarray(poly, np.float32)
+        pts = pts + rng.normal(0.0, 0.02 * jitter / 0.16, pts.shape)
+        pts = _resample_polyline(pts, 60)
+        xy = (pts - 0.5) * (HW - 8)
+        xy = xy @ A.T
+        px = xy[:, 0] + HW / 2 + tx
+        py = xy[:, 1] + HW / 2 + ty
+        d2 = (_XX[None] - px[:, None, None]) ** 2 + (_YY[None] - py[:, None, None]) ** 2
+        img = np.maximum(img, np.exp(-d2 / (2 * thickness ** 2)).max(axis=0))
+    return img
+
+
+def _finish_gray(img, rng, noise=DIGIT_NOISE):
+    img = img * rng.uniform(0.75, 1.0)
+    img = img + rng.normal(0.0, noise, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def gen_digits(n: int, seed: int, noise: float = DIGIT_NOISE):
+    """n stroke-digit images -> (x uint8 (n,1,28,28), y int32 (n,))."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 1, HW, HW), np.uint8)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        img = _render_strokes(_DIGIT_STROKES[int(y[i])], rng)
+        img = _finish_gray(img, rng, noise)
+        x[i, 0] = (img * 255).astype(np.uint8)
+    return x, y
+
+
+def gen_ambiguous(n: int, seed: int):
+    """Ambiguous digits: alpha-blend two classes (aleatoric probe).
+
+    Returns (x, y_pair) where y_pair[:, 0] and [:, 1] are the blended classes.
+    """
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 1, HW, HW), np.uint8)
+    pairs = np.zeros((n, 2), np.int32)
+    # visually confusable digit pairs (as in Ambiguous-MNIST's construction)
+    cand = [(0, 6), (1, 7), (3, 8), (4, 9), (5, 6), (2, 3), (8, 9), (3, 5), (7, 9), (0, 8)]
+    for i in range(n):
+        a, b = cand[rng.integers(0, len(cand))]
+        alpha = rng.uniform(0.38, 0.62)
+        ia = _render_strokes(_DIGIT_STROKES[a], rng)
+        ib = _render_strokes(_DIGIT_STROKES[b], rng)
+        img = np.maximum(alpha * ia, (1 - alpha) * ib)
+        img = img / max(img.max(), 1e-6) * rng.uniform(0.8, 1.0)
+        img = _finish_gray(img, rng)
+        x[i, 0] = (img * 255).astype(np.uint8)
+        pairs[i] = (a, b)
+    return x, pairs
+
+
+# ---------------------------------------------------------------------------
+# Fashion silhouettes (epistemic probe)
+# ---------------------------------------------------------------------------
+
+
+def _rect(cx, cy, hw, hh):
+    return (np.abs(_XX - cx) < hw) & (np.abs(_YY - cy) < hh)
+
+
+def _ellipse(cx, cy, rx, ry):
+    return ((_XX - cx) / max(rx, 1e-3)) ** 2 + ((_YY - cy) / max(ry, 1e-3)) ** 2 < 1.0
+
+
+def _triangle_down(cx, top, bot, halfw):
+    """Triangle widening from (cx, top) down to half-width halfw at bot."""
+    frac = np.clip((_YY - top) / max(bot - top, 1e-3), 0, 1)
+    return (np.abs(_XX - cx) < halfw * frac) & (_YY >= top) & (_YY <= bot)
+
+
+def gen_fashion(n: int, seed: int):
+    """Procedural garment silhouettes (10 pseudo-classes), uint8 (n,1,28,28)."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 1, HW, HW), np.uint8)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        c = int(y[i])
+        j = lambda s=1.0: rng.normal(0, s)
+        m = np.zeros((HW, HW), bool)
+        if c == 0:  # t-shirt
+            m = _rect(14 + j(), 16 + j(), 5.5, 8) | _rect(14 + j(), 10 + j(), 10, 2.5)
+        elif c == 1:  # trousers
+            m = _rect(10.5 + j(0.5), 16 + j(), 2.2, 10) | _rect(17.5 + j(0.5), 16 + j(), 2.2, 10) | _rect(14, 7.5, 5.5, 2)
+        elif c == 2:  # pullover
+            m = _rect(14 + j(), 16 + j(), 6.5, 8.5) | _rect(6 + j(), 14, 2.2, 6.5) | _rect(22 + j(), 14, 2.2, 6.5)
+        elif c == 3:  # dress
+            m = _triangle_down(14 + j(), 6 + j(), 24, 8.5) | _rect(14, 6.5, 3, 2.5)
+        elif c == 4:  # coat
+            m = _rect(14 + j(), 15.5 + j(), 7, 10) | _rect(14, 5.5, 3.5, 1.8)
+        elif c == 5:  # sandal
+            m = _rect(14 + j(), 20 + j(0.5), 9, 1.6) | _rect(10 + j(), 16, 1.2, 3.5) | _rect(18 + j(), 16, 1.2, 3.5)
+        elif c == 6:  # shirt
+            m = _rect(14 + j(), 16 + j(), 6, 9) | _rect(14, 8, 9.5, 2) | _rect(14, 14, 0.8, 6)
+        elif c == 7:  # sneaker
+            m = _rect(14 + j(), 19.5 + j(0.5), 9, 2.6) | _triangle_down(19 + j(), 13.5, 18.5, 4.5)
+        elif c == 8:  # bag
+            m = _rect(14 + j(), 17 + j(), 8, 6) | (_ellipse(14 + j(), 10.5, 5, 3.5) & ~_ellipse(14, 10.5, 3.4, 2.2))
+        else:  # ankle boot
+            m = _rect(17 + j(), 20 + j(0.5), 6.5, 2.8) | _rect(12 + j(), 14 + j(), 2.8, 7)
+        img = m.astype(np.float32) * rng.uniform(0.7, 1.0)
+        img *= 1.0 - 0.35 * rng.random((HW, HW)).astype(np.float32)  # fabric texture
+        img = _finish_gray(img, rng, noise=0.06)
+        x[i, 0] = (img * 255).astype(np.uint8)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Blood cells (BloodMNIST analogue)
+# ---------------------------------------------------------------------------
+
+BLOOD_CLASSES = [
+    "basophil", "eosinophil", "immature_granulocyte", "lymphocyte",
+    "monocyte", "neutrophil", "platelet",
+]
+BLOOD_OOD_CLASS = "erythroblast"
+
+# morphology table: body radius, cytoplasm RGB, nucleus lobe count range,
+# nucleus radius factor, nucleus RGB, granule (density, RGB, size)
+_BLOOD_MORPH = {
+    "basophil":    dict(r=(7.0, 8.5), cyto=(0.75, 0.70, 0.85), lobes=(2, 2), nucr=0.55,
+                        nuc=(0.35, 0.25, 0.55), gran=(0.55, (0.30, 0.15, 0.45), 1.1)),
+    "eosinophil":  dict(r=(7.0, 8.5), cyto=(0.95, 0.75, 0.70), lobes=(2, 2), nucr=0.50,
+                        nuc=(0.45, 0.30, 0.60), gran=(0.50, (0.90, 0.35, 0.25), 1.0)),
+    "immature_granulocyte": dict(r=(8.0, 9.5), cyto=(0.80, 0.82, 0.92), lobes=(1, 1), nucr=0.72,
+                        nuc=(0.40, 0.30, 0.62), gran=(0.12, (0.55, 0.45, 0.70), 0.8)),
+    "lymphocyte":  dict(r=(5.0, 6.5), cyto=(0.70, 0.78, 0.92), lobes=(1, 1), nucr=0.85,
+                        nuc=(0.28, 0.20, 0.52), gran=(0.0, (0, 0, 0), 0)),
+    "monocyte":    dict(r=(9.0, 10.5), cyto=(0.78, 0.80, 0.88), lobes=(1, 2), nucr=0.62,
+                        nuc=(0.50, 0.42, 0.68), gran=(0.0, (0, 0, 0), 0)),
+    "neutrophil":  dict(r=(7.0, 8.5), cyto=(0.92, 0.82, 0.82), lobes=(3, 5), nucr=0.32,
+                        nuc=(0.38, 0.28, 0.58), gran=(0.25, (0.85, 0.70, 0.72), 0.7)),
+    "platelet":    dict(r=(2.2, 3.4), cyto=(0.72, 0.60, 0.80), lobes=(0, 0), nucr=0.0,
+                        nuc=(0, 0, 0), gran=(0.3, (0.55, 0.40, 0.65), 0.5)),
+    # OOD: lymphocyte-like round dark nucleus but tell-tale reddish cytoplasm
+    "erythroblast": dict(r=(6.0, 7.5), cyto=(0.92, 0.62, 0.60), lobes=(1, 1), nucr=0.70,
+                        nuc=(0.30, 0.18, 0.48), gran=(0.0, (0, 0, 0), 0)),
+}
+
+
+def _blood_image(kind: str, rng) -> np.ndarray:
+    mph = _BLOOD_MORPH[kind]
+    img = np.zeros((3, HW, HW), np.float32)
+    # plasma background with tint jitter
+    base = np.array([0.96, 0.90, 0.92], np.float32) + rng.normal(0, 0.02, 3).astype(np.float32)
+    img += base[:, None, None]
+    # faint background erythrocytes (pale red discs)
+    for _ in range(rng.integers(2, 6)):
+        cx, cy = rng.uniform(0, HW, 2)
+        r = rng.uniform(3.0, 4.5)
+        mask = _ellipse(cx, cy, r, r * rng.uniform(0.85, 1.15)).astype(np.float32) * 0.5
+        col = np.array([0.94, 0.70, 0.68]) + rng.normal(0, 0.02, 3)
+        img = img * (1 - mask) + col[:, None, None] * mask
+    cx, cy = HW / 2 + rng.normal(0, 1.2), HW / 2 + rng.normal(0, 1.2)
+    r = rng.uniform(*mph["r"])
+    body = _ellipse(cx, cy, r, r * rng.uniform(0.88, 1.12)).astype(np.float32)
+    cyto = np.array(mph["cyto"], np.float32) + rng.normal(0, 0.03, 3).astype(np.float32)
+    img = img * (1 - body) + cyto[:, None, None] * body
+    # nucleus lobes
+    lo, hi = mph["lobes"]
+    nlobe = int(rng.integers(lo, hi + 1)) if hi > 0 else 0
+    if nlobe > 0:
+        nucr = mph["nucr"] * r
+        ncol = np.array(mph["nuc"], np.float32) + rng.normal(0, 0.03, 3).astype(np.float32)
+        for li in range(nlobe):
+            if nlobe == 1:
+                lx, ly = cx + rng.normal(0, 0.8), cy + rng.normal(0, 0.8)
+                lr = nucr
+            else:
+                ang = 2 * np.pi * li / nlobe + rng.uniform(0, 2 * np.pi / nlobe)
+                rad = r * rng.uniform(0.25, 0.45)
+                lx, ly = cx + rad * np.cos(ang), cy + rad * np.sin(ang)
+                lr = nucr * rng.uniform(0.9, 1.3)
+            m = _ellipse(lx, ly, lr, lr * rng.uniform(0.8, 1.2)).astype(np.float32) * body
+            img = img * (1 - m) + ncol[:, None, None] * m
+    # granules
+    dens, gcol, gsize = mph["gran"]
+    if dens > 0:
+        ng = int(dens * r * r)
+        gcol = np.asarray(gcol, np.float32)
+        for _ in range(ng):
+            ang, rad = rng.uniform(0, 2 * np.pi), r * np.sqrt(rng.uniform(0, 1)) * 0.9
+            gx, gy = cx + rad * np.cos(ang), cy + rad * np.sin(ang)
+            m = _ellipse(gx, gy, gsize, gsize).astype(np.float32) * 0.8
+            img = img * (1 - m) + gcol[:, None, None] * m
+    return img
+
+
+def _finish_blood(img, rng):
+    # illumination, blur, sensor noise, occasional occlusion (aleatoric noise)
+    img = img * rng.uniform(0.8, 1.05)
+    # cheap 3x3 binomial blur
+    k = np.array([0.25, 0.5, 0.25], np.float32)
+    img = np.apply_along_axis(lambda v: np.convolve(v, k, mode="same"), 1, img)
+    img = np.apply_along_axis(lambda v: np.convolve(v, k, mode="same"), 2, img)
+    img = img + rng.normal(0, BLOOD_NOISE, img.shape).astype(np.float32)
+    if rng.random() < BLOOD_OCCLUDE_P:
+        w0 = rng.integers(0, HW - 5)
+        img[:, :, w0 : w0 + rng.integers(2, 5)] *= rng.uniform(0.3, 0.65)
+    return np.clip(img, 0.0, 1.0)
+
+
+def gen_blood(n: int, seed: int, ood: bool = False):
+    """Blood-cell analogue images.
+
+    ood=False -> 7 ID classes, labels 0..6; ood=True -> erythroblasts, label 7.
+    """
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 3, HW, HW), np.uint8)
+    if ood:
+        y = np.full(n, 7, np.int32)
+        kinds = [BLOOD_OOD_CLASS] * n
+    else:
+        y = rng.integers(0, 7, n).astype(np.int32)
+        kinds = [BLOOD_CLASSES[int(c)] for c in y]
+    for i in range(n):
+        img = _finish_blood(_blood_image(kinds[i], rng), rng)
+        x[i] = (img * 255).astype(np.uint8)
+    return x, y

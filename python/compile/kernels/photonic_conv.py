@@ -1,0 +1,229 @@
+"""L1 Pallas kernels for the photonic Bayesian machine.
+
+The machine's compute hot-spot is a nine-tap *probabilistic* convolution:
+nine spectral channels of a chaotic ASE source each carry one stochastic
+weight (mean = channel power, std = channel bandwidth), an EOM time-encodes
+the activation stream onto all channels, and a chirped grating shifts channel
+``k`` by ``k`` symbols so a single photodetector integrates
+
+    y[t] = sum_k (mu_k + sigma_k * eps_k(t)) * x[t - k].
+
+Hardware adaptation (GPU/photonics -> TPU, see DESIGN.md §Hardware-Adaptation):
+
+* the nine spectral channels become a **tap axis resident in VMEM** — taps
+  are O(C*9) floats, trivially resident; the activation map is the streamed
+  operand, blocked one (H, W) map per grid step via ``BlockSpec``;
+* the chirped grating's one-symbol-per-channel delay becomes the **static
+  shift structure** of an unrolled nine-term accumulation (no gathers, no
+  runtime indexing — the shifts are compile-time slices);
+* chaotic-light randomness enters as an **external noise operand** ``eps``
+  (physical entropy is data, keeping the kernel deterministic and therefore
+  AOT-exportable as plain HLO);
+* the DAC/ADC pair becomes an 8-bit fake-quantization kernel with a
+  straight-through estimator so SVI gradients pass through unchanged.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute, and this repo's runtime is
+the CPU client.  Pallas has no general reverse-mode AD, so each kernel is
+wrapped in ``jax.custom_vjp`` with an analytic backward pass in pure jnp
+(the ops are linear / piecewise-linear, so the VJPs are exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KERNEL_EDGE, NUM_TAPS
+
+# Always interpret: the CPU PJRT plugin cannot run Mosaic custom-calls.
+_INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Probabilistic depthwise 3x3 convolution (the photonic machine itself)
+# ---------------------------------------------------------------------------
+
+
+def _prob_dws_kernel(x_ref, mu_ref, sig_ref, eps_ref, o_ref, *, h: int, w: int):
+    """Single-block 9-tap probabilistic conv over the full (B, C, H, W) map.
+
+    The kernel is one VMEM-resident block (no grid): for the paper's
+    probabilistic stage (B<=100, C=64, 7x7 maps) the operands total
+    x (B,C,9,9) + eps (B,C,7,7,9) + out (B,C,7,7) ≈ 10 MiB f32 at B=100,
+    inside the ~16 MiB VMEM budget.  The unrolled static shifts are the
+    chirped grating's per-channel symbol delays; there are no gathers and
+    no serialized grid loop (a (B, C) grid lowers to B*C sequential
+    while-loop steps under interpret mode — measured 12 s/train-step vs
+    ~0.1 s for this single-block form; see EXPERIMENTS.md §Perf).
+    For larger maps, block over the batch axis before the taps.
+    """
+    xw = x_ref[...]  # (B, C, h+2, w+2) padded activations
+    mu = mu_ref[...]  # (C, 9)
+    sig = sig_ref[...]
+    acc = jnp.zeros(o_ref.shape, dtype=o_ref.dtype)
+    for k in range(NUM_TAPS):
+        dy, dx = divmod(k, KERNEL_EDGE)
+        wk = (
+            mu[None, :, None, None, k]
+            + sig[None, :, None, None, k] * eps_ref[..., k]
+        )
+        acc = acc + wk * xw[:, :, dy : dy + h, dx : dx + w]
+    o_ref[...] = acc
+
+
+def _prob_dws_pallas(x, mu, sigma, eps):
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    kern = functools.partial(_prob_dws_kernel, h=h, w=w)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, mu, sigma, eps)
+
+
+@jax.custom_vjp
+def prob_depthwise_conv3x3(x, mu, sigma, eps):
+    """Probabilistic 3x3 depthwise conv with per-output-element weight noise.
+
+    Args:
+      x:     (B, C, H, W) activations.
+      mu:    (C, 9) tap means.
+      sigma: (C, 9) tap standard deviations (>= 0).
+      eps:   (B, C, H, W, 9) unit noise (from the chaotic light source).
+
+    Returns: (B, C, H, W).
+    """
+    return _prob_dws_pallas(x, mu, sigma, eps)
+
+
+def _prob_dws_fwd(x, mu, sigma, eps):
+    return _prob_dws_pallas(x, mu, sigma, eps), (x, mu, sigma, eps)
+
+
+def _prob_dws_bwd(res, g):
+    x, mu, sigma, eps = res
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    dx = jnp.zeros_like(x)
+    dmu = jnp.zeros_like(mu)
+    dsig = jnp.zeros_like(sigma)
+    deps = jnp.zeros_like(eps)
+    for k in range(NUM_TAPS):
+        dy, dxo = divmod(k, KERNEL_EDGE)
+        win = xp[:, :, dy : dy + h, dxo : dxo + w]  # (B, C, H, W)
+        ek = eps[..., k]
+        wk = mu[None, :, None, None, k] + sigma[None, :, None, None, k] * ek
+        # dL/dx: transpose of the shift — correlation with flipped offsets.
+        gk = jnp.pad(wk * g, ((0, 0), (0, 0), (1, 1), (1, 1)))
+        dx = dx + gk[:, :, 2 - dy : 2 - dy + h, 2 - dxo : 2 - dxo + w]
+        dmu = dmu.at[:, k].add(jnp.sum(g * win, axis=(0, 2, 3)))
+        dsig = dsig.at[:, k].add(jnp.sum(g * win * ek, axis=(0, 2, 3)))
+        deps = deps.at[..., k].set(g * sigma[None, :, None, None, k] * win)
+    return dx, dmu, dsig, deps
+
+
+prob_depthwise_conv3x3.defvjp(_prob_dws_fwd, _prob_dws_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (1x1 over channels) convolution — the second half of the paper's
+# Depthwise-Separable block, shaped as a (pixels x C_in) @ (C_in x C_out)
+# matmul so a real-TPU lowering would hit the MXU systolic array.
+# ---------------------------------------------------------------------------
+
+
+def _pointwise_kernel(x_ref, w_ref, o_ref):
+    # x: (B*HW, C_in); w: (C_in, C_out) resident; one MXU-shaped dot.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _pointwise_pallas(x, wmat):
+    b, c_in, h, w = x.shape
+    c_out = wmat.shape[1]
+    # single block: (B*HW, C_in) @ (C_in, C_out); the flattened pixel axis is
+    # the MXU's long dimension, the weight matrix stays VMEM-resident.
+    xr = jnp.transpose(x, (0, 2, 3, 1)).reshape(b * h * w, c_in)
+    out = pl.pallas_call(
+        _pointwise_kernel,
+        out_shape=jax.ShapeDtypeStruct((b * h * w, c_out), x.dtype),
+        interpret=_INTERPRET,
+    )(xr, wmat)
+    return jnp.transpose(out.reshape(b, h, w, c_out), (0, 3, 1, 2))
+
+
+@jax.custom_vjp
+def pointwise_conv(x, wmat):
+    """1x1 channel-mixing convolution: (B, C_in, H, W) x (C_in, C_out)."""
+    return _pointwise_pallas(x, wmat)
+
+
+def _pointwise_fwd(x, wmat):
+    return _pointwise_pallas(x, wmat), (x, wmat)
+
+
+def _pointwise_bwd(res, g):
+    x, wmat = res
+    # y[b,o,i,j] = sum_c x[b,c,i,j] * w[c,o]
+    dx = jnp.einsum("boij,co->bcij", g, wmat)
+    dw = jnp.einsum("bcij,boij->co", x, g)
+    return dx, dw
+
+
+pointwise_conv.defvjp(_pointwise_fwd, _pointwise_bwd)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit fake quantization (DAC/ADC model) with straight-through estimator
+# ---------------------------------------------------------------------------
+
+
+def _quant_kernel(x_ref, o_ref, *, scale: float):
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x * (127.0 / scale)), -128.0, 127.0)
+    o_ref[...] = q * (scale / 127.0)
+
+
+def _quant_pallas(x, scale: float):
+    flat = x.reshape(-1)
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=_INTERPRET,
+    )(flat)
+    return out.reshape(x.shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant8(x, scale: float):
+    """8-bit symmetric fake quantization with a *saturating* straight-through
+    estimator: identity gradient inside the converter's full-scale range,
+    zero outside.
+
+    Models the machine's 8-bit 80 GSPS DAC (input path) and ADC (readout
+    path).  ``scale`` is the full-scale range, a static calibration
+    constant.  The saturating STE matters: with an unmasked STE, weights
+    that push activations past the ADC range keep receiving gradients as if
+    the converter were linear, and SVI training diverges once the
+    probabilistic layer's outputs start clipping (observed: loss collapse
+    after ~3 epochs; see EXPERIMENTS.md §Perf notes).
+    """
+    return _quant_pallas(x, scale)
+
+
+def _quant_fwd(x, scale):
+    return _quant_pallas(x, scale), (x,)
+
+
+def _quant_bwd(scale, res, g):
+    (x,) = res
+    lo = -128.0 * scale / 127.0
+    mask = ((x >= lo) & (x <= scale)).astype(g.dtype)
+    return (g * mask,)
+
+
+fake_quant8.defvjp(_quant_fwd, _quant_bwd)

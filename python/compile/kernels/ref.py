@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+These are the ground-truth implementations the Pallas kernels are tested
+against (pytest + hypothesis sweeps in ``python/tests``).  They model the
+photonic Bayesian machine's probabilistic depthwise convolution:
+
+    y[b, c, i, j] = sum_k  (mu[c, k] + sigma[c, k] * eps[b, c, i, j, k])
+                           * x_pad[b, c, i + dy(k), j + dx(k)]
+
+where ``k`` indexes the machine's nine spectral weight channels (== the nine
+taps of a 3x3 depthwise kernel), ``mu``/``sigma`` are the programmed optical
+power / bandwidth of each channel, and ``eps`` is the chaotic-light noise
+drawn per 37.5 ps convolution window (i.e. per output element), supplied
+externally because the entropy is physical, not pseudo-random.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Spatial kernel edge of the photonic machine: nine spectral channels map to
+#: the nine taps of one 3x3 depthwise kernel (paper, Fig. 2(a)).
+KERNEL_EDGE = 3
+NUM_TAPS = KERNEL_EDGE * KERNEL_EDGE
+
+
+def prob_depthwise_conv3x3_ref(x, mu, sigma, eps):
+    """Probabilistic 3x3 depthwise ("fully grouped") convolution, SAME pad.
+
+    Args:
+      x:     (B, C, H, W) activations (the EOM-encoded input stream).
+      mu:    (C, 9) per-channel tap means (programmed channel power).
+      sigma: (C, 9) per-channel tap standard deviations (channel bandwidth).
+      eps:   (B, C, H, W, 9) unit-variance noise per output element and tap.
+
+    Returns:
+      (B, C, H, W) convolution with weights sampled per output element.
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    out = jnp.zeros_like(x)
+    for k in range(NUM_TAPS):
+        dy, dx = divmod(k, KERNEL_EDGE)
+        win = xp[:, :, dy : dy + h, dx : dx + w]
+        wk = mu[None, :, None, None, k] + sigma[None, :, None, None, k] * eps[..., k]
+        out = out + wk * win
+    return out
+
+
+def depthwise_conv3x3_ref(x, taps):
+    """Deterministic 3x3 depthwise convolution, SAME pad.
+
+    Args:
+      x:    (B, C, H, W)
+      taps: (C, 9)
+
+    Returns: (B, C, H, W)
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    out = jnp.zeros_like(x)
+    for k in range(NUM_TAPS):
+        dy, dx = divmod(k, KERNEL_EDGE)
+        win = xp[:, :, dy : dy + h, dx : dx + w]
+        out = out + taps[None, :, None, None, k] * win
+    return out
+
+
+def fake_quant8_ref(x, scale):
+    """8-bit symmetric fake quantization (DAC/ADC model), no STE.
+
+    ``q = clip(round(x / scale * 127), -128, 127) * scale / 127``
+    """
+    q = jnp.clip(jnp.round(x / scale * 127.0), -128.0, 127.0)
+    return q * scale / 127.0

@@ -1,0 +1,116 @@
+"""AOT export tests: HLO text round-trip through the XLA client, metadata
+consistency, and numerical agreement between the exported computation and
+the live jax function (the contract the Rust runtime relies on)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "MANIFEST.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def _compile_text(text):
+    """Round-trip HLO text through the parser (as the Rust loader does) and
+    compile it on the CPU client: text -> HloModule -> XlaComputation ->
+    MLIR -> LoadedExecutable."""
+    backend = jax.devices("cpu")[0].client
+    mod = xc._xla.hlo_module_from_text(text)
+    comp = xc.XlaComputation(mod.as_serialized_hlo_module_proto())
+    mlir_text = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    return backend, backend.compile_and_load(mlir_text, backend.local_devices())
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn = lambda a, b: (jnp.dot(a, b) + 1.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+@needs_artifacts
+def test_manifest_and_meta_consistent():
+    with open(os.path.join(ARTIFACTS, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    for name, info in manifest["models"].items():
+        with open(os.path.join(ARTIFACTS, name, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["num_params"] == info["num_params"]
+        cfg = aot.DATASET_CFG[name]
+        assert meta["in_channels"] == cfg["in_channels"]
+        assert meta["n_classes"] == cfg["n_classes"]
+        last = meta["param_layout"][-1]
+        assert last["offset"] + last["size"] == meta["num_params"]
+        # every artifact listed must exist
+        for fname in meta["artifacts"].values():
+            assert os.path.exists(os.path.join(ARTIFACTS, name, fname)), fname
+
+
+@needs_artifacts
+def test_params_init_matches_layout():
+    for name in ("digits", "blood"):
+        with open(os.path.join(ARTIFACTS, name, "meta.json")) as f:
+            meta = json.load(f)
+        raw = np.fromfile(os.path.join(ARTIFACTS, name, "params_init.bin"), "<f4")
+        assert raw.shape[0] == meta["num_params"]
+        # prob_rho region must equal RHO_INIT (softplus^-1 of init sigma)
+        spec = next(s for s in meta["param_layout"] if s["name"] == "prob_rho")
+        region = raw[spec["offset"] : spec["offset"] + spec["size"]]
+        np.testing.assert_allclose(region, meta["rho_init"], atol=1e-6)
+
+
+@needs_artifacts
+def test_exported_fwd_full_matches_live_jax():
+    """Execute the exported HLO text via the XLA CPU client and compare with
+    the live jax function — the exact contract the Rust runtime depends on."""
+    name, ic, nc = "digits", 1, 10
+    with open(os.path.join(ARTIFACTS, name, "fwd_full_b8.hlo.txt")) as f:
+        text = f.read()
+    backend, exe = _compile_text(text)
+
+    theta = np.asarray(model.init_params(77, ic, nc))
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, (8, ic, 28, 28)).astype(np.float32)
+    eps = rng.normal(0, 1, (8, model.PROB_CH, 7, 7, 9)).astype(np.float32)
+
+    out = exe.execute([backend.buffer_from_pyval(v) for v in (theta, x, eps)])
+    r = out[0]
+    got = np.asarray(r[0] if isinstance(r, (list, tuple)) else r)
+    want = np.asarray(model.fwd_full(jnp.asarray(theta), jnp.asarray(x),
+                                     jnp.asarray(eps), ic, nc))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@needs_artifacts
+def test_data_files_exist_with_expected_shapes():
+    ddir = os.path.join(ARTIFACTS, "data")
+    expect = {
+        "digits_train_x.npy": (8000, 1, 28, 28),
+        "digits_test_x.npy": (2000, 1, 28, 28),
+        "ambiguous_x.npy": (1500, 1, 28, 28),
+        "fashion_x.npy": (1500, 1, 28, 28),
+        "blood_train_x.npy": (8000, 3, 28, 28),
+        "blood_test_x.npy": (1500, 3, 28, 28),
+        "blood_ood_x.npy": (1000, 3, 28, 28),
+    }
+    for fname, shape in expect.items():
+        arr = np.load(os.path.join(ddir, fname))
+        assert arr.shape == shape, fname
+        assert arr.dtype == np.uint8
+
+
+def test_source_digest_stable():
+    assert aot.source_digest() == aot.source_digest()

@@ -1,0 +1,96 @@
+"""Dataset substrate tests: determinism, shapes, class separability."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+def test_digits_shapes_and_range():
+    x, y = datasets.gen_digits(32, seed=0)
+    assert x.shape == (32, 1, 28, 28) and x.dtype == np.uint8
+    assert y.shape == (32,) and y.dtype == np.int32
+    assert y.min() >= 0 and y.max() <= 9
+    assert x.max() > 100  # strokes actually rendered
+
+
+def test_digits_deterministic_by_seed():
+    x1, y1 = datasets.gen_digits(16, seed=42)
+    x2, y2 = datasets.gen_digits(16, seed=42)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = datasets.gen_digits(16, seed=43)
+    assert not np.array_equal(x1, x3)
+
+
+def test_digits_all_classes_reachable():
+    _, y = datasets.gen_digits(500, seed=1)
+    assert set(np.unique(y)) == set(range(10))
+
+
+def test_digits_class_templates_distinct():
+    """Mean images of different classes must differ clearly (separability)."""
+    x, y = datasets.gen_digits(800, seed=2)
+    means = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            d = np.abs(means[a] - means[b]).mean()
+            assert d > 2.0, (a, b, d)
+
+
+def test_ambiguous_blends_two_classes():
+    x, pairs = datasets.gen_ambiguous(64, seed=3)
+    assert x.shape == (64, 1, 28, 28)
+    assert pairs.shape == (64, 2)
+    assert np.all(pairs[:, 0] != pairs[:, 1])
+
+
+def test_fashion_distinct_from_digits():
+    """Fashion silhouettes occupy much more area than digit strokes (they
+    are filled shapes) — the epistemic probe is off-manifold by construction."""
+    xd, _ = datasets.gen_digits(200, seed=4)
+    xf, _ = datasets.gen_fashion(200, seed=4)
+    area_d = (xd > 96).mean()
+    area_f = (xf > 96).mean()
+    assert area_f > 1.3 * area_d
+
+
+def test_blood_shapes_and_classes():
+    x, y = datasets.gen_blood(64, seed=5)
+    assert x.shape == (64, 3, 28, 28) and x.dtype == np.uint8
+    assert set(np.unique(y)).issubset(set(range(7)))
+    xo, yo = datasets.gen_blood(16, seed=6, ood=True)
+    assert np.all(yo == 7)
+
+
+def test_blood_morphology_knobs():
+    """Class morphology must be visible in simple statistics."""
+    rng_n = 300
+    x, y = datasets.gen_blood(rng_n, seed=7)
+
+    def cellsize(c):
+        imgs = x[y == c].astype(np.float32) / 255.0
+        # darker-than-background area near center ~ cell footprint
+        return (imgs.mean(axis=1) < 0.75).mean()
+
+    # platelets (6) are tiny; monocytes (4) are the largest
+    assert cellsize(6) < cellsize(4)
+    # eosinophils (1) are redder than lymphocytes (3)
+    red_eo = (x[y == 1, 0].astype(float) - x[y == 1, 2].astype(float)).mean()
+    red_ly = (x[y == 3, 0].astype(float) - x[y == 3, 2].astype(float)).mean()
+    assert red_eo > red_ly
+
+
+def test_blood_ood_is_reddish_lymphocyte_like():
+    """Erythroblast cytoplasm is red-shifted vs lymphocyte (the OOD cue)."""
+    xi, yi = datasets.gen_blood(300, seed=8)
+    xo, _ = datasets.gen_blood(150, seed=9, ood=True)
+    ly = xi[yi == 3].astype(np.float32)
+    eb = xo.astype(np.float32)
+    assert (eb[:, 0] - eb[:, 2]).mean() > (ly[:, 0] - ly[:, 2]).mean()
+
+
+def test_blood_deterministic():
+    x1, _ = datasets.gen_blood(8, seed=10)
+    x2, _ = datasets.gen_blood(8, seed=10)
+    np.testing.assert_array_equal(x1, x2)

@@ -1,0 +1,205 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (``ref.py``).
+
+This is the CORE correctness signal for the photonic machine's compute
+model: hypothesis sweeps shapes/dtypes/parameter ranges and asserts
+allclose between the interpret-mode Pallas kernel and the reference.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import photonic_conv as pk
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(rng, shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# prob_depthwise_conv3x3
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    b=st.integers(1, 4),
+    c=st.integers(1, 8),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prob_dws_matches_ref(b, c, h, w, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, c, h, w))
+    mu = _rand(rng, (c, 9), -1, 1)
+    sigma = _rand(rng, (c, 9), 0.0, 0.5)
+    eps = _rand(rng, (b, c, h, w, 9), -3, 3)
+    got = pk.prob_depthwise_conv3x3(x, mu, sigma, eps)
+    want = ref.prob_depthwise_conv3x3_ref(x, mu, sigma, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_prob_dws_zero_sigma_is_deterministic():
+    """With sigma == 0 the probabilistic conv equals the deterministic one."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (2, 3, 7, 7))
+    mu = _rand(rng, (3, 9))
+    eps = _rand(rng, (2, 3, 7, 7, 9), -5, 5)
+    got = pk.prob_depthwise_conv3x3(x, mu, jnp.zeros((3, 9)), eps)
+    want = ref.depthwise_conv3x3_ref(x, mu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_prob_dws_noise_scales_with_sigma():
+    """Output variance across noise draws grows with sigma (physics knob)."""
+    rng = np.random.default_rng(1)
+    x = jnp.ones((1, 1, 7, 7))
+    mu = jnp.zeros((1, 9))
+    outs = []
+    for s in (0.05, 0.2):
+        sigma = jnp.full((1, 9), s)
+        draws = []
+        for i in range(64):
+            eps = _rand(np.random.default_rng(i), (1, 1, 7, 7, 9), -3, 3)
+            draws.append(np.asarray(pk.prob_depthwise_conv3x3(x, mu, sigma, eps)))
+        outs.append(np.std(np.stack(draws)))
+    assert outs[1] > 2.5 * outs[0]
+
+
+def test_prob_dws_linear_in_input():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (1, 2, 5, 5))
+    mu, sigma = _rand(rng, (2, 9)), _rand(rng, (2, 9), 0, 0.3)
+    eps = _rand(rng, (1, 2, 5, 5, 9))
+    y1 = pk.prob_depthwise_conv3x3(x, mu, sigma, eps)
+    y2 = pk.prob_depthwise_conv3x3(2.0 * x, mu, sigma, eps)
+    np.testing.assert_allclose(2.0 * y1, y2, rtol=1e-5, atol=1e-5)
+
+
+def test_prob_dws_gradients_match_fd():
+    """custom_vjp backward pass vs central finite differences."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (1, 2, 4, 4))
+    mu = _rand(rng, (2, 9), -0.5, 0.5)
+    sigma = _rand(rng, (2, 9), 0.05, 0.3)
+    eps = _rand(rng, (1, 2, 4, 4, 9))
+
+    def f(x_, mu_, sigma_):
+        return jnp.sum(jnp.sin(pk.prob_depthwise_conv3x3(x_, mu_, sigma_, eps)))
+
+    gx, gmu, gs = jax.grad(f, argnums=(0, 1, 2))(x, mu, sigma)
+    delta = 1e-3
+    for (g, arg, idx) in [
+        (gx, 0, (0, 1, 2, 2)),
+        (gmu, 1, (1, 4)),
+        (gs, 2, (0, 7)),
+    ]:
+        args = [x, mu, sigma]
+        pert = np.zeros(args[arg].shape, np.float32)
+        pert[idx] = delta
+        pert = jnp.asarray(pert)
+        hi = f(*[a + pert if i == arg else a for i, a in enumerate(args)])
+        lo = f(*[a - pert if i == arg else a for i, a in enumerate(args)])
+        fd = float((hi - lo) / (2 * delta))
+        assert abs(fd - float(g[idx])) < 5e-2, (arg, idx, fd, float(g[idx]))
+
+
+def test_prob_dws_grad_eps_equals_sigma_times_window():
+    """Analytic identity: dL/deps_k = sigma_k * shifted-input * upstream."""
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (1, 1, 4, 4))
+    mu = jnp.zeros((1, 9))
+    sigma = jnp.full((1, 9), 0.5)
+    eps = _rand(rng, (1, 1, 4, 4, 9))
+    g = jax.grad(lambda e: jnp.sum(pk.prob_depthwise_conv3x3(x, mu, sigma, e)))(eps)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    for k in range(9):
+        dy, dx = divmod(k, 3)
+        want = 0.5 * xp[:, :, dy : dy + 4, dx : dx + 4]
+        np.testing.assert_allclose(g[..., k], want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pointwise_conv
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 12),
+    hw=st.integers(2, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pointwise_matches_einsum(b, cin, cout, hw, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, cin, hw, hw))
+    w = _rand(rng, (cin, cout))
+    got = pk.pointwise_conv(x, w)
+    want = jnp.einsum("bcij,co->boij", x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pointwise_grads():
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 3, 4, 4))
+    w = _rand(rng, (3, 5))
+    f = lambda x_, w_: jnp.sum(pk.pointwise_conv(x_, w_) ** 2)
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    f_ref = lambda x_, w_: jnp.sum(jnp.einsum("bcij,co->boij", x_, w_) ** 2)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gw_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant8 (DAC/ADC model)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    n=st.integers(1, 200),
+    scale=st.floats(0.5, 16.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matches_ref(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n,), -2 * scale, 2 * scale)
+    got = pk.fake_quant8(x, scale)
+    want = ref.fake_quant8_ref(x, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_quant_is_8bit():
+    """Quantized values take at most 256 distinct levels."""
+    x = jnp.linspace(-5, 5, 4001)
+    q = np.asarray(pk.fake_quant8(x, 4.0))
+    assert len(np.unique(q)) <= 256
+
+
+def test_quant_error_bounded_in_range():
+    x = jnp.linspace(-3.99, 3.99, 997)
+    q = pk.fake_quant8(x, 4.0)
+    assert float(jnp.max(jnp.abs(q - x))) <= 4.0 / 127.0 / 2 + 1e-6
+
+
+def test_quant_ste_gradient_saturating():
+    """Identity gradient inside the converter range, zero where clipped."""
+    x = jnp.asarray([-10.0, -0.3, 0.0, 0.7, 10.0])
+    g = jax.grad(lambda x_: jnp.sum(pk.fake_quant8(x_, 4.0) * 3.0))(x)
+    np.testing.assert_allclose(g, [0.0, 3.0, 3.0, 3.0, 0.0], rtol=1e-6)
+
+
+def test_quant_clips_out_of_range():
+    q = pk.fake_quant8(jnp.asarray([100.0, -100.0]), 4.0)
+    np.testing.assert_allclose(q, [4.0, -128.0 * 4.0 / 127.0], rtol=1e-5)

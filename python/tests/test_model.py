@@ -1,0 +1,139 @@
+"""L2 model tests: shapes, parameter packing, SVI step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+CFGS = [(1, 10), (3, 7)]  # (in_channels, n_classes) for digits / blood
+
+
+def _theta(ic, nc, seed=0):
+    return jnp.asarray(model.init_params(seed, ic, nc))
+
+
+def _batch(ic, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 1, (b, ic, 28, 28)).astype(np.float32))
+    eps = jnp.asarray(rng.normal(0, 1, (b, model.PROB_CH, 7, 7, 9)).astype(np.float32))
+    return x, eps
+
+
+@pytest.mark.parametrize("ic,nc", CFGS)
+def test_param_layout_contiguous(ic, nc):
+    specs = model.param_layout(ic, nc)
+    off = 0
+    for s in specs:
+        assert s.offset == off
+        off += s.size
+    assert off == model.num_params(ic, nc)
+
+
+@pytest.mark.parametrize("ic,nc", CFGS)
+def test_unpack_roundtrip(ic, nc):
+    theta = _theta(ic, nc)
+    p = model.unpack(theta, ic, nc)
+    for s in model.param_layout(ic, nc):
+        want = np.asarray(theta[s.offset : s.offset + s.size]).reshape(s.shape)
+        np.testing.assert_array_equal(np.asarray(p[s.name]), want)
+
+
+@pytest.mark.parametrize("ic,nc", CFGS)
+def test_fwd_shapes(ic, nc):
+    theta = _theta(ic, nc)
+    x, eps = _batch(ic, b=3)
+    x3q = model.fwd_pre(theta, x, ic, nc)
+    assert x3q.shape == (3, model.PROB_CH, 7, 7)
+    logits = model.fwd_post(theta, x3q, x3q, ic, nc)
+    assert logits.shape == (3, nc)
+    logits_full = model.fwd_full(theta, x, eps, ic, nc)
+    assert logits_full.shape == (3, nc)
+    assert np.all(np.isfinite(np.asarray(logits_full)))
+
+
+def test_pre_output_is_quantized():
+    """fwd_pre output must be on the 8-bit DAC grid."""
+    theta = _theta(1, 10)
+    x, _ = _batch(1)
+    x3q = np.asarray(model.fwd_pre(theta, x, 1, 10))
+    lv = np.round(x3q / model.SCALE_DAC * 127.0)
+    np.testing.assert_allclose(lv * model.SCALE_DAC / 127.0, x3q, atol=1e-6)
+    assert lv.min() >= -128 and lv.max() <= 127
+
+
+def test_full_equals_pre_prob_post_composition():
+    """fwd_full == fwd_post(fwd_pre, quant(prob_conv(fwd_pre))) — the split
+    the Rust serving path uses must agree with the monolithic surrogate."""
+    from compile.kernels.photonic_conv import fake_quant8, prob_depthwise_conv3x3
+
+    ic, nc = 1, 10
+    theta = _theta(ic, nc)
+    x, eps = _batch(ic, b=2, seed=3)
+    p = model.unpack(theta, ic, nc)
+    x3q = model.fwd_pre(theta, x, ic, nc)
+    sigma = model.ste_sigma_floor(jax.nn.softplus(p["prob_rho"]), p["prob_mu"])
+    d3 = prob_depthwise_conv3x3(x3q, p["prob_mu"], sigma, eps)
+    d3q = fake_quant8(d3, model.SCALE_ADC)
+    want = model.fwd_post(theta, x3q, d3q, ic, nc)
+    got = model.fwd_full(theta, x, eps, ic, nc)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stochasticity_only_from_eps():
+    """Same eps -> identical logits; different eps -> different logits."""
+    theta = _theta(1, 10)
+    x, eps = _batch(1, b=2, seed=1)
+    l1 = model.fwd_full(theta, x, eps, 1, 10)
+    l2 = model.fwd_full(theta, x, eps, 1, 10)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    _, eps2 = _batch(1, b=2, seed=99)
+    l3 = model.fwd_full(theta, x, eps2, 1, 10)
+    assert not np.allclose(np.asarray(l1), np.asarray(l3))
+
+
+def test_kl_positive_and_zero_at_prior():
+    mu = jnp.zeros((4, 9))
+    sig = jnp.full((4, 9), model.PRIOR_SIGMA)
+    assert abs(float(model._kl_gauss(mu, sig, model.PRIOR_SIGMA))) < 1e-5
+    assert float(model._kl_gauss(mu + 1.0, sig, model.PRIOR_SIGMA)) > 0
+    assert float(model._kl_gauss(mu, sig * 0.3, model.PRIOR_SIGMA)) > 0
+
+
+def test_train_step_decreases_loss():
+    ic, nc = 1, 10
+    theta = _theta(ic, nc)
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(0, 1, (64, ic, 28, 28)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, nc, 64).astype(np.int32))
+    eps = jnp.asarray(rng.normal(0, 1, (64, model.PROB_CH, 7, 7, 9)).astype(np.float32))
+    step_fn = jax.jit(lambda t, m, v, s: model.train_step(
+        t, m, v, s, x, y, eps, 1e-5, 3e-3, ic, nc))
+    losses = []
+    s = jnp.float32(0)
+    for i in range(30):
+        theta, m, v, loss, nll, kl, acc = step_fn(theta, m, v, s)
+        s = s + 1
+        losses.append(float(loss))
+    # memorizing a fixed batch must reduce the loss substantially
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]
+
+
+def test_train_step_shapes_and_finiteness():
+    ic, nc = 3, 7
+    theta = _theta(ic, nc)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(0, 1, (64, ic, 28, 28)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, nc, 64).astype(np.int32))
+    eps = jnp.asarray(rng.normal(0, 1, (64, model.PROB_CH, 7, 7, 9)).astype(np.float32))
+    out = model.train_step(theta, jnp.zeros_like(theta), jnp.zeros_like(theta),
+                           jnp.float32(0), x, y, eps, 1e-4, 1e-3, ic, nc)
+    t2, m2, v2, loss, nll, kl, acc = out
+    assert t2.shape == theta.shape and m2.shape == theta.shape
+    for s in (loss, nll, kl, acc):
+        assert np.isfinite(float(s))
+    assert float(kl) >= 0 and 0 <= float(acc) <= 1

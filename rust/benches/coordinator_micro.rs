@@ -1,0 +1,128 @@
+//! `cargo bench --bench coordinator_micro` — L3 serving-path latency
+//! decomposition: PJRT entry points per batch size, end-to-end classify in
+//! both execution modes, batching/channel overhead, protocol costs.
+
+use std::time::Duration;
+
+use photonic_bayes::benchkit::{black_box, section, Bench};
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::coordinator::{DynamicBatcher, Engine, EngineConfig, ExecMode};
+use photonic_bayes::data::synth::random_activations;
+use photonic_bayes::entropy::Xoshiro256pp;
+use photonic_bayes::exec::channel::channel;
+use photonic_bayes::photonics::MachineConfig;
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{Arg, ModelArtifacts, ParamStore};
+use photonic_bayes::server::protocol;
+
+fn main() {
+    let bench = Bench::default();
+    let quick = Bench::quick();
+    let root = artifacts_root();
+    if !root.join("digits/meta.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return;
+    }
+
+    section("SUBSTRATE — channel + batcher overhead");
+    {
+        let (tx, rx) = channel::<u64>(1024);
+        let s = bench.run("mpmc send+recv", || {
+            tx.send(1).unwrap();
+            black_box(rx.recv());
+        });
+        println!("{}   ({:.1} M msg/s)", s.row(), s.throughput(1.0) / 1e6);
+
+        let (tx, rx) = channel::<u64>(1024);
+        let b = DynamicBatcher::new(rx, 8, Duration::from_micros(100));
+        let s = bench.run("batcher 8-item batch", || {
+            for i in 0..8 {
+                tx.send(i).unwrap();
+            }
+            black_box(b.next_batch());
+        });
+        println!("{}   ({:.2} M items/s)", s.row(), s.throughput(8.0) / 1e6);
+    }
+
+    section("PROTOCOL — JSON encode/decode");
+    {
+        let image = vec![0.5f32; 784];
+        let line = protocol::encode_classify("digits", &image);
+        println!("classify request size: {} bytes", line.len());
+        let s = bench.run("parse classify request (784 px)", || {
+            black_box(protocol::parse_request(&line).unwrap());
+        });
+        println!("{}   ({:.0} k req/s)", s.row(), s.throughput(1.0) / 1e3);
+    }
+
+    section("PJRT ENTRY POINTS (digits model)");
+    {
+        let arts = ModelArtifacts::load_dataset(&root, "digits").unwrap();
+        let meta = arts.meta.clone();
+        let ps = ParamStore::load_init(&meta, &root.join("digits")).unwrap();
+        let np = meta.num_params as i64;
+        let mut rng = Xoshiro256pp::new(5);
+        for b in [1usize, 8, 32] {
+            let f = arts.get(&format!("fwd_full_b{b}")).unwrap();
+            let x = random_activations(&mut rng, b * meta.image_size(), 1.0);
+            let eps = random_activations(&mut rng, b * meta.eps_size(), 1.0);
+            let xs = [b as i64, meta.in_channels as i64, 28, 28];
+            let es = [b as i64, meta.prob_ch as i64, 7, 7, 9];
+            let s = quick.run(&format!("fwd_full b={b}"), || {
+                black_box(
+                    f.call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &xs), Arg::F32(&eps, &es)])
+                        .unwrap(),
+                );
+            });
+            println!("{}   ({:.0} img/s)", s.row(), s.throughput(b as f64));
+        }
+        for b in [1usize, 8] {
+            let f = arts.get(&format!("fwd_pre_b{b}")).unwrap();
+            let x = random_activations(&mut rng, b * meta.image_size(), 1.0);
+            let xs = [b as i64, meta.in_channels as i64, 28, 28];
+            let s = quick.run(&format!("fwd_pre  b={b}"), || {
+                black_box(f.call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &xs)]).unwrap());
+            });
+            println!("{}", s.row());
+            let g = arts.get(&format!("fwd_post_b{b}")).unwrap();
+            let act = random_activations(&mut rng, b * meta.act_size(), 4.0);
+            let a_s = [b as i64, meta.prob_ch as i64, 7, 7];
+            let s = quick.run(&format!("fwd_post b={b}"), || {
+                black_box(
+                    g.call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&act, &a_s), Arg::F32(&act, &a_s)])
+                        .unwrap(),
+                );
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    section("END-TO-END classify (N = 10 passes, batch 8)");
+    {
+        for (name, mode) in [("surrogate", ExecMode::Surrogate), ("photonic", ExecMode::Photonic)] {
+            let arts = ModelArtifacts::load_dataset(&root, "digits").unwrap();
+            let params = ParamStore::load_init(&arts.meta, &root.join("digits")).unwrap();
+            let image_size = arts.meta.image_size();
+            let mut engine = Engine::new(
+                arts,
+                params,
+                EngineConfig {
+                    n_samples: 10,
+                    mode,
+                    policy: UncertaintyPolicy::ood_only(0.02),
+                    calibrate: false,
+                    machine: MachineConfig::default(),
+                    noise_bw_ghz: 150.0,
+                    seed: 7,
+                },
+            )
+            .unwrap();
+            let mut rng = Xoshiro256pp::new(9);
+            let images = random_activations(&mut rng, 8 * image_size, 1.0);
+            let s = quick.run(&format!("classify batch=8 mode={name}"), || {
+                black_box(engine.classify(&images, 8).unwrap());
+            });
+            println!("{}   ({:.1} img/s)", s.row(), s.throughput(8.0));
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! `cargo bench --bench paper_tables [-- filter]` — regenerates every table
+//! and figure of the paper's evaluation section (DESIGN.md experiment
+//! index).  Each section prints the paper's value next to the measured one.
+//!
+//! Sections: headline, fig2_error, fig2_delay, nist, fig4_roc,
+//! fig4_confusion, fig5_scatter, fig5_auroc, ablations.
+//!
+//! The Fig. 4/5 sections need trained checkpoints
+//! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
+//! reduced sample count + a warning when only init params exist.
+
+use photonic_bayes::benchkit::section;
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::calibration::computation_error_experiment;
+use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
+use photonic_bayes::data::{Dataset, DatasetKind};
+use photonic_bayes::entropy::{nist, ChaoticLightSource};
+use photonic_bayes::experiments::uncertainty::{build_report, eval_split};
+use photonic_bayes::photonics::grating::{channel_frequency_thz, ChirpedGrating};
+use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
+use photonic_bayes::util::mathstat::{linfit, mean, median};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let filter = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    if run("headline") {
+        headline();
+    }
+    if run("fig2_error") {
+        fig2_error();
+    }
+    if run("fig2_delay") {
+        fig2_delay();
+    }
+    if run("nist") {
+        nist_table();
+    }
+    if run("fig4") {
+        fig4();
+    }
+    if run("fig5") {
+        fig5();
+    }
+    if run("ablations") {
+        ablations();
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn headline() {
+    section("HEADLINE — abstract numbers derived from architecture constants");
+    let h = timing::headline();
+    println!("{:<38} {:>12} {:>12}", "metric", "measured", "paper");
+    println!("{:<38} {:>12.1} {:>12}", "ps per probabilistic convolution", h.symbol_period_ps, "37.5");
+    println!("{:<38} {:>12.2} {:>12}", "G convolutions / s", h.convolutions_per_sec / 1e9, "26.7");
+    println!("{:<38} {:>12.2} {:>12}", "Tbit/s digital interface", h.interface_tbit_per_sec, "1.28");
+    println!("{:<38} {:>12.2} {:>12}", "grating delay step (ps/channel)", h.channel_delay_step_ps, "37.5");
+    println!("{:<38} {:>12.2} {:>12}", "grating latency (ns, sub-100 claim)", h.grating_latency_ns, "<100");
+}
+
+fn fig2_error() {
+    section("FIG 2(c,d) — computation error, 25 random kernels");
+    let mut machine = PhotonicMachine::with_defaults(7);
+    let rep = computation_error_experiment(&mut machine, 25, 1024, 99);
+    println!("{:<38} {:>12} {:>12}", "quantity", "measured", "paper");
+    println!("{:<38} {:>12.3} {:>12}", "normalized mean error", rep.mean_error, "0.158");
+    println!("{:<38} {:>12.3} {:>12}", "normalized std error", rep.std_error, "0.266");
+    println!("{:<38} {:>12.3} {:>12}", "measured-vs-target mean slope", rep.mean_slope, "1.0");
+    println!("{:<38} {:>12.3} {:>12}", "measured-vs-target std slope", rep.std_slope, "1.0");
+}
+
+fn fig2_delay() {
+    section("FIG 2(e) — frequency-dependent group delay");
+    let g = ChirpedGrating::paper_device(9, 0.5, 7);
+    let mut fs = Vec::new();
+    let mut ds = Vec::new();
+    println!("{:<10} {:>14} {:>14}", "channel", "f (THz)", "delay (ps)");
+    for k in 0..9 {
+        let f = channel_frequency_thz(k, 9);
+        let d = g.channel_delay_ps(k);
+        println!("{:<10} {:>14.3} {:>14.2}", k, f, d);
+        fs.push(f);
+        ds.push(d);
+    }
+    let (_, slope, r2) = linfit(&fs, &ds);
+    println!("fitted dispersion: {slope:.2} ps/THz (r2 = {r2:.6})   [paper: -93.1]");
+}
+
+fn nist_table() {
+    section("NIST SP800-22 — chaotic-light entropy source (paper: passes)");
+    let mut src = ChaoticLightSource::with_defaults(2024);
+    let bits = src.extract_bits(100.0, 200_000);
+    println!("{:<20} {:>10} {:>8}", "test", "p-value", "pass");
+    for r in nist::run_battery(&bits) {
+        println!("{:<20} {:>10.4} {:>8}", r.name, r.p_value, if r.pass { "yes" } else { "NO" });
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn load_engine(dataset: &str, mode: ExecMode, n_samples: usize, seed: u64) -> Option<(Engine, bool)> {
+    let root = artifacts_root();
+    if !root.join(dataset).join("meta.json").exists() {
+        println!("  !! artifacts for {dataset} missing; run `make artifacts`");
+        return None;
+    }
+    let arts = ModelArtifacts::load_dataset(&root, dataset).ok()?;
+    let trained_path = root.join(dataset).join("params_trained.bin");
+    let trained = trained_path.exists();
+    let params = if trained {
+        ParamStore::load_bin(&arts.meta, &trained_path).ok()?
+    } else {
+        println!("  !! no trained checkpoint for {dataset}; numbers will be near-chance");
+        ParamStore::load_init(&arts.meta, &root.join(dataset)).ok()?
+    };
+    let engine = Engine::new(
+        arts,
+        params,
+        EngineConfig {
+            n_samples,
+            mode,
+            policy: UncertaintyPolicy::ood_only(0.0185),
+            calibrate: true,
+            machine: MachineConfig::default(),
+            noise_bw_ghz: 150.0,
+            seed,
+        },
+    )
+    .ok()?;
+    Some((engine, trained))
+}
+
+fn load_split(stem: &str, kind: DatasetKind) -> Option<Dataset> {
+    Dataset::load(&artifacts_root().join("data"), stem, kind).ok()
+}
+
+fn fig4() {
+    section("FIG 4 — blood cells: OOD ROC, accuracy with rejection, confusion");
+    let Some((mut engine, trained)) = load_engine("blood", ExecMode::Photonic, 10, 7) else {
+        return;
+    };
+    let limit = if trained { 300 } else { 96 };
+    let id = eval_split(&mut engine, &load_split("blood_test", DatasetKind::InDomain).unwrap(), limit).unwrap();
+    let ood = eval_split(&mut engine, &load_split("blood_ood", DatasetKind::Epistemic).unwrap(), limit).unwrap();
+    let rep = build_report(id, ood, None, 7);
+    println!("{:<38} {:>12} {:>12}", "quantity", "measured", "paper");
+    println!("{:<38} {:>11.2}% {:>12}", "OOD AUROC (MI)", rep.ood_auroc * 100.0, "91.16%");
+    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (plain)", rep.acc_plain * 100.0, "90.26%");
+    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (MI rejection)", rep.acc_reject * 100.0, "94.62%");
+    println!("{:<38} {:>12.5} {:>12}", "optimal MI threshold", rep.mi_threshold, "0.0185");
+    println!("\nROC curve (threshold sweep, 10 sample points):");
+    let pts = &rep.ood_roc;
+    for i in (0..pts.len()).step_by((pts.len() / 10).max(1)) {
+        println!("  thr {:>9.5}  FPR {:.3}  TPR {:.3}", pts[i].threshold, pts[i].fpr, pts[i].tpr);
+    }
+    println!("\nconfusion matrix with rejection (x = erythroblast):");
+    let names = ["baso", "eosi", "ig", "lymp", "mono", "neut", "plt"];
+    println!("{}", rep.confusion.render(&names));
+}
+
+fn fig5() {
+    section("FIG 5 — uncertainty disentanglement (digits / ambiguous / fashion)");
+    let Some((mut engine, trained)) = load_engine("digits", ExecMode::Photonic, 10, 11) else {
+        return;
+    };
+    let limit = if trained { 300 } else { 96 };
+    let id = eval_split(&mut engine, &load_split("digits_test", DatasetKind::InDomain).unwrap(), limit).unwrap();
+    let amb = eval_split(&mut engine, &load_split("ambiguous", DatasetKind::Aleatoric).unwrap(), limit).unwrap();
+    let fash = eval_split(&mut engine, &load_split("fashion", DatasetKind::Epistemic).unwrap(), limit).unwrap();
+
+    println!("Fig 5(e) cluster medians:");
+    println!("{:<14} {:>10} {:>10}", "split", "med MI", "med SE");
+    for s in [&id, &amb, &fash] {
+        println!("{:<14} {:>10.4} {:>10.3}", s.name, median(&s.mi), median(&s.se));
+    }
+
+    let rep = build_report(id, fash, Some(amb), 10);
+    println!("\n{:<38} {:>12} {:>12}", "quantity", "measured", "paper");
+    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (plain)", rep.acc_plain * 100.0, "96.01%");
+    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (MI rejection)", rep.acc_reject * 100.0, "99.7%");
+    println!("{:<38} {:>11.2}% {:>12}", "epistemic AUROC (MI, fashion)", rep.ood_auroc * 100.0, "84.42%");
+    println!("{:<38} {:>11.2}% {:>12}", "aleatoric AUROC (SE, ambiguous)", rep.aleatoric_auroc.unwrap_or(0.0) * 100.0, "88.03%");
+    println!("{:<38} {:>12.5} {:>12}", "optimal MI threshold", rep.mi_threshold, "0.00308");
+}
+
+// ---------------------------------------------------------------------------
+
+fn ablations() {
+    section("ABLATIONS — design choices called out in DESIGN.md");
+
+    // (a) surrogate vs photonic agreement on predictions
+    if let Some((mut photonic, _)) = load_engine("digits", ExecMode::Photonic, 10, 21) {
+        if let Some((mut surrogate, _)) = load_engine("digits", ExecMode::Surrogate, 10, 21) {
+            let ds = load_split("digits_test", DatasetKind::InDomain).unwrap();
+            let a = eval_split(&mut photonic, &ds, 120).unwrap();
+            let b = eval_split(&mut surrogate, &ds, 120).unwrap();
+            let agree = a
+                .predicted
+                .iter()
+                .zip(&b.predicted)
+                .filter(|(x, y)| x == y)
+                .count() as f64
+                / a.predicted.len() as f64;
+            println!("(a) photonic-vs-surrogate prediction agreement: {:.1}%", agree * 100.0);
+            println!("    accuracy photonic {:.2}%  surrogate {:.2}%", a.accuracy() * 100.0, b.accuracy() * 100.0);
+        }
+    }
+
+    // (b) N-sample sweep: MI resolution vs sampling cost
+    println!("\n(b) N-sample sweep (mean OOD MI - mean ID MI gap, digits/fashion):");
+    for n in [3, 5, 10, 20] {
+        if let Some((mut e, _)) = load_engine("digits", ExecMode::Photonic, n, 31) {
+            let id = eval_split(&mut e, &load_split("digits_test", DatasetKind::InDomain).unwrap(), 100).unwrap();
+            let fa = eval_split(&mut e, &load_split("fashion", DatasetKind::Epistemic).unwrap(), 100).unwrap();
+            println!(
+                "    N = {n:>2}: MI gap = {:.4} (id {:.4}, fashion {:.4})",
+                mean(&fa.mi) - mean(&id.mi),
+                mean(&id.mi),
+                mean(&fa.mi)
+            );
+        }
+    }
+
+    // (c) bandwidth range vs std-programming error (Discussion claim:
+    //     larger max bandwidth would cut the std error at the cost of
+    //     channel count)
+    println!("\n(c) channel-bandwidth range vs Fig 2(d) std error:");
+    for bw_max in [100.0, 150.0, 300.0, 600.0] {
+        let mut cfg = MachineConfig {
+            seed: 13,
+            ..MachineConfig::default()
+        };
+        cfg.source.bw_max_ghz = bw_max;
+        let mut m = PhotonicMachine::new(cfg);
+        let rep = computation_error_experiment(&mut m, 12, 512, 5);
+        println!(
+            "    B_max = {bw_max:>5.0} GHz: mean err {:.3}, std err {:.3}",
+            rep.mean_error, rep.std_error
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! `cargo bench --bench photonics_micro` — the photonic machine simulator's
+//! hot paths: weight sampling, patch convolution, full depthwise layers,
+//! calibration, entropy extraction.  Reports simulator wall-clock rates
+//! next to the simulated-optical rates so the gap is explicit.
+
+use photonic_bayes::benchkit::{black_box, section, Bench};
+use photonic_bayes::calibration::{calibrate_kernel, CalibrationOptions};
+use photonic_bayes::data::synth::{random_activations, random_kernel};
+use photonic_bayes::entropy::gaussian::Gaussian;
+use photonic_bayes::entropy::{gamma, ChaoticLightSource, Xoshiro256pp};
+use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
+
+fn main() {
+    let bench = Bench::default();
+    let h = timing::headline();
+
+    section("ENTROPY PRIMITIVES");
+    {
+        let mut rng = Xoshiro256pp::new(1);
+        let s = bench.run("xoshiro256++ next_u64", || {
+            use photonic_bayes::entropy::BitSource;
+            black_box(rng.next_u64());
+        });
+        println!("{}   ({:.0} M words/s)", s.row(), s.throughput(1.0) / 1e6);
+
+        let mut rng = Xoshiro256pp::new(2);
+        let mut g = Gaussian::new();
+        let s = bench.run("gaussian sample", || {
+            black_box(g.sample(&mut rng));
+        });
+        println!("{}   ({:.0} M/s)", s.row(), s.throughput(1.0) / 1e6);
+
+        let mut rng = Xoshiro256pp::new(3);
+        let mut g = Gaussian::new();
+        let s = bench.run("gamma sample (M = 2.56)", || {
+            black_box(gamma::sample_gamma(&mut rng, &mut g, 2.56, 0.4));
+        });
+        println!("{}   ({:.0} M/s)", s.row(), s.throughput(1.0) / 1e6);
+
+        let mut src = ChaoticLightSource::with_defaults(4);
+        let s = bench.run("chaotic intensity (150 GHz ch)", || {
+            black_box(src.intensity_dof(0, 1.0, 6.625));
+        });
+        println!("{}   ({:.0} M/s)", s.row(), s.throughput(1.0) / 1e6);
+
+        let mut src = ChaoticLightSource::with_defaults(5);
+        let mut buf = vec![0.0f32; 4096];
+        let s = bench.run("fill_eps 4096 floats", || {
+            src.fill_eps(150.0, &mut buf);
+            black_box(buf[0]);
+        });
+        println!("{}   ({:.0} M floats/s)", s.row(), s.throughput(4096.0) / 1e6);
+
+        let mut src = ChaoticLightSource::with_defaults(6);
+        let s = bench.run("extract_bits 1024", || {
+            black_box(src.extract_bits(100.0, 1024));
+        });
+        println!("{}   ({:.1} Mbit/s)", s.row(), s.throughput(1024.0) / 1e6);
+    }
+
+    section("MACHINE HOT PATH — conv_patches (9-tap probabilistic conv)");
+    {
+        let mut machine = PhotonicMachine::with_defaults(7);
+        let mut rng = Xoshiro256pp::new(8);
+        let idx = machine.load_kernel(&random_kernel(&mut rng));
+        for n_patches in [49usize, 490, 4900] {
+            let patches = random_activations(&mut rng, n_patches * 9, 4.0);
+            let mut out = vec![0.0f32; n_patches];
+            let s = bench.run(&format!("conv_patches x{n_patches}"), || {
+                machine.conv_patches(idx, &patches, &mut out);
+                black_box(out[0]);
+            });
+            let conv_rate = s.throughput(n_patches as f64);
+            println!(
+                "{}   ({:.2} M conv/s wall; optical would be {:.1} G conv/s -> sim slowdown {:.0}x)",
+                s.row(),
+                conv_rate / 1e6,
+                h.convolutions_per_sec / 1e9,
+                h.convolutions_per_sec / conv_rate
+            );
+        }
+    }
+
+    section("MACHINE — full depthwise layer (64 ch, 7x7)");
+    {
+        let mut machine = PhotonicMachine::with_defaults(9);
+        let mut rng = Xoshiro256pp::new(10);
+        for _ in 0..64 {
+            let k = random_kernel(&mut rng);
+            machine.load_kernel(&k);
+        }
+        let x = random_activations(&mut rng, 64 * 49, 4.0);
+        let s = bench.run("depthwise_conv 64ch 7x7", || {
+            black_box(machine.depthwise_conv(0, &x, 64, 7, 7));
+        });
+        let macs = 64.0 * 49.0 * 9.0;
+        println!("{}   ({:.1} M MAC/s wall)", s.row(), s.throughput(macs) / 1e6);
+        println!("  one BNN pass (N=10) costs 10 such layers: ~{:.1} ms wall", s.mean_ns * 10.0 / 1e6);
+    }
+
+    section("CALIBRATION");
+    {
+        let quick = Bench::quick();
+        let mut machine = PhotonicMachine::new(MachineConfig {
+            seed: 11,
+            ..MachineConfig::default()
+        });
+        let mut rng = Xoshiro256pp::new(12);
+        let targets = random_kernel(&mut rng);
+        let idx = machine.load_kernel(&targets);
+        let opts = CalibrationOptions::default();
+        let s = quick.run("calibrate_kernel (4 rounds x 256 probes)", || {
+            black_box(calibrate_kernel(&mut machine, idx, &targets, &opts));
+        });
+        println!("{}", s.row());
+        println!("  64-kernel bank load-time calibration: ~{:.1} ms", s.mean_ns * 64.0 / 1e6);
+    }
+}

@@ -1,0 +1,173 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets use `harness = false` binaries built on this
+//! module: warmup, fixed-duration measurement, outlier-trimmed statistics,
+//! and aligned table output so the paper-table benches print rows directly
+//! comparable to the paper's evaluation section.
+
+use std::time::{Duration, Instant};
+
+use crate::util::mathstat::{mean, percentile, std};
+
+/// Robust summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchStats {
+    /// Operations per second given `ops_per_iter` work items per iteration.
+    pub fn throughput(&self, ops_per_iter: f64) -> f64 {
+        ops_per_iter / (self.mean_ns * 1e-9)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Run `f` repeatedly and summarize per-iteration latency.  The closure
+    /// should return something observable to defeat dead-code elimination
+    /// (use [`black_box`]).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.measure || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let it = Instant::now();
+            f();
+            samples_ns.push(it.elapsed().as_nanos() as f64);
+        }
+        // trim 2% tails against scheduler outliers
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let trim = samples_ns.len() / 50;
+        let trimmed = &samples_ns[trim..samples_ns.len() - trim.min(samples_ns.len() - 1)];
+        BenchStats {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean(trimmed),
+            median_ns: percentile(trimmed, 50.0),
+            p05_ns: percentile(trimmed, 5.0),
+            p95_ns: percentile(trimmed, 95.0),
+            std_ns: std(trimmed),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header helper for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} {}", "=".repeat(66usize.saturating_sub(title.len())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::quick();
+        let stats = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p95_ns >= stats.median_ns);
+        assert!(stats.median_ns >= stats.p05_ns);
+    }
+
+    #[test]
+    fn throughput_inverse_of_latency() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1000.0,
+            median_ns: 1000.0,
+            p05_ns: 900.0,
+            p95_ns: 1100.0,
+            std_ns: 50.0,
+        };
+        assert!((s.throughput(1.0) - 1e6).abs() < 1e-6);
+        assert!((s.throughput(100.0) - 1e8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("us"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains('s'));
+    }
+}

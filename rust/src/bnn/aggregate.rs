@@ -1,0 +1,136 @@
+//! Predictive aggregation over the N stochastic forward passes.
+
+use super::metrics;
+use crate::util::mathstat::softmax;
+
+/// The BNN's predictive distribution for one input: per-pass probabilities
+/// plus the derived uncertainty metrics.
+#[derive(Debug, Clone)]
+pub struct Predictive {
+    /// Row-major (n_samples, n_classes) per-pass probabilities.
+    pub probs: Vec<Vec<f32>>,
+    /// Mean predictive distribution.
+    pub mean_probs: Vec<f32>,
+    /// argmax of the mean predictive.
+    pub predicted: usize,
+    /// Eq. 1 — total uncertainty.
+    pub shannon_entropy: f64,
+    /// Eq. 2 — aleatoric uncertainty.
+    pub softmax_entropy: f64,
+    /// H − SE — epistemic uncertainty.
+    pub mutual_information: f64,
+    /// Fraction of passes agreeing with the majority class.
+    pub agreement: f64,
+}
+
+impl Predictive {
+    /// Aggregate per-pass logits (row-major `(n_samples, n_classes)`).
+    pub fn from_logits(logits: &[Vec<f32>]) -> Self {
+        let probs: Vec<Vec<f32>> = logits.iter().map(|row| softmax(row)).collect();
+        Self::from_probs(probs)
+    }
+
+    /// Aggregate a flat logits buffer of `n_samples * n_classes`.
+    pub fn from_flat_logits(flat: &[f32], n_classes: usize) -> Self {
+        assert_eq!(flat.len() % n_classes, 0);
+        let logits: Vec<Vec<f32>> = flat.chunks(n_classes).map(|c| c.to_vec()).collect();
+        Self::from_logits(&logits)
+    }
+
+    pub fn from_probs(probs: Vec<Vec<f32>>) -> Self {
+        assert!(!probs.is_empty());
+        let c = probs[0].len();
+        let n = probs.len();
+        let mut mean = vec![0.0f32; c];
+        for row in &probs {
+            debug_assert_eq!(row.len(), c);
+            for (m, &p) in mean.iter_mut().zip(row) {
+                *m += p / n as f32;
+            }
+        }
+        let predicted = argmax(&mean);
+        let votes = probs
+            .iter()
+            .filter(|row| argmax(row) == predicted)
+            .count();
+        let h = metrics::shannon_entropy(&probs);
+        let se = metrics::softmax_entropy(&probs);
+        Self {
+            mean_probs: mean,
+            predicted,
+            shannon_entropy: h,
+            softmax_entropy: se,
+            mutual_information: (h - se).max(0.0),
+            agreement: votes as f64 / n as f64,
+            probs,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.probs.len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.mean_probs.len()
+    }
+
+    /// Confidence of the mean predictive in its argmax.
+    pub fn confidence(&self) -> f32 {
+        self.mean_probs[self.predicted]
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_logits_consistent() {
+        let logits = vec![vec![2.0, 0.0, -1.0]; 10];
+        let p = Predictive::from_logits(&logits);
+        assert_eq!(p.predicted, 0);
+        assert_eq!(p.n_samples(), 10);
+        assert_eq!(p.n_classes(), 3);
+        assert!((p.agreement - 1.0).abs() < 1e-12);
+        assert!(p.mutual_information < 1e-6);
+    }
+
+    #[test]
+    fn from_flat_matches_nested() {
+        let flat = vec![1.0, 0.0, 0.5, 0.2, 2.0, -1.0];
+        let a = Predictive::from_flat_logits(&flat, 3);
+        let b = Predictive::from_logits(&[vec![1.0, 0.0, 0.5], vec![0.2, 2.0, -1.0]]);
+        assert_eq!(a.predicted, b.predicted);
+        assert!((a.mutual_information - b.mutual_information).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disagreement_lowers_agreement() {
+        let logits = vec![
+            vec![3.0, 0.0],
+            vec![3.0, 0.0],
+            vec![0.0, 3.0],
+            vec![0.0, 3.0],
+            vec![3.0, 0.0],
+        ];
+        let p = Predictive::from_logits(&logits);
+        assert!((p.agreement - 0.6).abs() < 1e-12);
+        assert!(p.mutual_information > 0.2);
+    }
+
+    #[test]
+    fn mean_probs_sum_to_one() {
+        let logits = vec![vec![0.3, -0.2, 1.5, 0.0], vec![-1.0, 0.4, 0.2, 2.0]];
+        let p = Predictive::from_logits(&logits);
+        let s: f32 = p.mean_probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}

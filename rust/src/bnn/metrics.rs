@@ -1,0 +1,129 @@
+//! Uncertainty metrics over the BNN's sampled output distribution.
+//!
+//! For N stochastic forward passes with per-pass class probabilities
+//! `p(y_n = c | x, θ_n)` the paper uses (Eq. 1, Eq. 2):
+//!
+//! * **Shannon entropy** `H` of the *mean* predictive — total uncertainty,
+//! * **Softmax entropy** `SE` — mean of the per-pass entropies — aleatoric,
+//! * **Mutual information** `MI = H − SE` — epistemic.
+//!
+//! All entropies are in nats.
+
+/// Shannon entropy of a probability vector (nats). Zero-probability entries
+/// contribute zero (lim p→0 of p·log p).
+pub fn entropy(p: &[f32]) -> f64 {
+    p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| -(x as f64) * (x as f64).ln())
+        .sum()
+}
+
+/// Eq. 1: entropy of the mean predictive distribution over `n` samples.
+/// `probs` is row-major `(n_samples, n_classes)`.
+pub fn shannon_entropy(probs: &[Vec<f32>]) -> f64 {
+    assert!(!probs.is_empty());
+    let c = probs[0].len();
+    let n = probs.len() as f64;
+    let mut mean = vec![0.0f32; c];
+    for row in probs {
+        for (m, &p) in mean.iter_mut().zip(row) {
+            *m += p / n as f32;
+        }
+    }
+    entropy(&mean)
+}
+
+/// Eq. 2: mean of per-sample entropies (aleatoric uncertainty).
+pub fn softmax_entropy(probs: &[Vec<f32>]) -> f64 {
+    assert!(!probs.is_empty());
+    probs.iter().map(|row| entropy(row)).sum::<f64>() / probs.len() as f64
+}
+
+/// Mutual information `MI = H − SE` (epistemic uncertainty).  Clamped at 0:
+/// Jensen guarantees `H >= SE` analytically, and the clamp removes the tiny
+/// negative values finite-precision aggregation can produce.
+pub fn mutual_information(probs: &[Vec<f32>]) -> f64 {
+    (shannon_entropy(probs) - softmax_entropy(probs)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_is_log_c() {
+        let p = vec![0.25f32; 4];
+        assert!((entropy(&p) - (4f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_onehot_is_zero() {
+        let p = vec![1.0, 0.0, 0.0];
+        assert!(entropy(&p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confident_consistent_low_everything() {
+        // ID case: every pass confidently predicts class 0
+        let probs = vec![vec![0.99, 0.005, 0.005]; 10];
+        assert!(shannon_entropy(&probs) < 0.1);
+        assert!(softmax_entropy(&probs) < 0.1);
+        assert!(mutual_information(&probs) < 0.01);
+    }
+
+    #[test]
+    fn confident_disagreement_high_mi() {
+        // OOD case: each pass confident but in different classes
+        let mut probs = Vec::new();
+        for n in 0..10 {
+            let mut p = vec![0.005f32; 3];
+            p[n % 3] = 0.99;
+            probs.push(p);
+        }
+        let mi = mutual_information(&probs);
+        let se = softmax_entropy(&probs);
+        assert!(mi > 0.8, "mi {mi}");
+        assert!(se < 0.1, "se {se}");
+    }
+
+    #[test]
+    fn flat_agreement_high_se_low_mi() {
+        // aleatoric case: every pass returns the same flat distribution
+        let probs = vec![vec![1.0 / 3.0; 3]; 10];
+        let se = softmax_entropy(&probs);
+        let mi = mutual_information(&probs);
+        assert!((se - (3f64).ln()).abs() < 1e-6);
+        assert!(mi < 1e-6, "mi {mi}");
+    }
+
+    #[test]
+    fn mi_nonnegative_random() {
+        use crate::entropy::{BitSource, Xoshiro256pp};
+        use crate::util::mathstat::softmax;
+        let mut rng = Xoshiro256pp::new(5);
+        for _ in 0..200 {
+            let probs: Vec<Vec<f32>> = (0..10)
+                .map(|_| {
+                    let logits: Vec<f32> =
+                        (0..7).map(|_| (rng.next_f64() * 6.0 - 3.0) as f32).collect();
+                    softmax(&logits)
+                })
+                .collect();
+            assert!(mutual_information(&probs) >= 0.0);
+            assert!(shannon_entropy(&probs) >= softmax_entropy(&probs) - 1e-6);
+        }
+    }
+
+    #[test]
+    fn h_equals_se_plus_mi() {
+        let probs = vec![
+            vec![0.7, 0.2, 0.1],
+            vec![0.2, 0.7, 0.1],
+            vec![0.4, 0.4, 0.2],
+        ];
+        let h = shannon_entropy(&probs);
+        let se = softmax_entropy(&probs);
+        let mi = mutual_information(&probs);
+        assert!((h - (se + mi)).abs() < 1e-9);
+    }
+}

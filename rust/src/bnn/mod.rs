@@ -1,0 +1,13 @@
+//! Bayesian-inference post-processing: uncertainty metrics (Eq. 1 / Eq. 2),
+//! predictive aggregation over the N stochastic forward passes, ROC/AUROC,
+//! confusion matrices with rejection, and decision policies.
+
+pub mod aggregate;
+pub mod confusion;
+pub mod metrics;
+pub mod policy;
+pub mod rocauc;
+
+pub use aggregate::Predictive;
+pub use metrics::{mutual_information, shannon_entropy, softmax_entropy};
+pub use policy::{Decision, UncertaintyPolicy};

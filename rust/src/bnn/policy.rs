@@ -1,0 +1,131 @@
+//! Decision policies over the predictive distribution.
+//!
+//! The serving engine applies an [`UncertaintyPolicy`] to each aggregated
+//! prediction: reject as out-of-domain when the epistemic score (MI) is
+//! high, flag as ambiguous when the aleatoric score (SE) is high, otherwise
+//! accept the argmax class — the "uncertainty reasoning" of Fig. 5.
+
+use super::aggregate::Predictive;
+
+/// The verdict for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// Confident in-domain prediction.
+    Accept { class: usize, confidence: f32 },
+    /// Epistemic rejection: the input looks out-of-domain (MI above
+    /// threshold) — "seek further assessment".
+    RejectOod { mutual_information: f64 },
+    /// Aleatoric flag: the input itself is ambiguous (SE above threshold);
+    /// a class is still reported but marked unreliable.
+    FlagAmbiguous { class: usize, softmax_entropy: f64 },
+}
+
+/// Thresholds for the two uncertainty axes.
+#[derive(Debug, Clone, Copy)]
+pub struct UncertaintyPolicy {
+    /// MI threshold for OOD rejection (paper: 0.0185 blood / 0.00308 MNIST).
+    pub mi_threshold: f64,
+    /// SE threshold for the aleatoric flag (None disables it).
+    pub se_threshold: Option<f64>,
+}
+
+impl UncertaintyPolicy {
+    pub fn ood_only(mi_threshold: f64) -> Self {
+        Self {
+            mi_threshold,
+            se_threshold: None,
+        }
+    }
+
+    pub fn full(mi_threshold: f64, se_threshold: f64) -> Self {
+        Self {
+            mi_threshold,
+            se_threshold: Some(se_threshold),
+        }
+    }
+
+    /// Apply the policy: epistemic rejection dominates, then the aleatoric
+    /// flag, then acceptance.
+    pub fn decide(&self, pred: &Predictive) -> Decision {
+        if pred.mutual_information > self.mi_threshold {
+            return Decision::RejectOod {
+                mutual_information: pred.mutual_information,
+            };
+        }
+        if let Some(se_thr) = self.se_threshold {
+            if pred.softmax_entropy > se_thr {
+                return Decision::FlagAmbiguous {
+                    class: pred.predicted,
+                    softmax_entropy: pred.softmax_entropy,
+                };
+            }
+        }
+        Decision::Accept {
+            class: pred.predicted,
+            confidence: pred.confidence(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred(rows: Vec<Vec<f32>>) -> Predictive {
+        Predictive::from_logits(&rows)
+    }
+
+    #[test]
+    fn accepts_confident_consistent() {
+        let p = pred(vec![vec![5.0, 0.0, 0.0]; 10]);
+        let d = UncertaintyPolicy::full(0.02, 0.5).decide(&p);
+        match d {
+            Decision::Accept { class, confidence } => {
+                assert_eq!(class, 0);
+                assert!(confidence > 0.9);
+            }
+            other => panic!("expected accept, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_disagreeing_passes() {
+        let mut rows = Vec::new();
+        for n in 0..10 {
+            let mut r = vec![0.0f32; 3];
+            r[n % 3] = 6.0;
+            rows.push(r);
+        }
+        let d = UncertaintyPolicy::full(0.02, 0.5).decide(&pred(rows));
+        assert!(matches!(d, Decision::RejectOod { .. }));
+    }
+
+    #[test]
+    fn flags_flat_distributions() {
+        let rows = vec![vec![0.0f32; 4]; 10]; // uniform every pass
+        let d = UncertaintyPolicy::full(0.02, 0.5).decide(&pred(rows));
+        assert!(matches!(d, Decision::FlagAmbiguous { .. }));
+    }
+
+    #[test]
+    fn ood_only_policy_accepts_ambiguous() {
+        let rows = vec![vec![0.0f32; 4]; 10];
+        let d = UncertaintyPolicy::ood_only(0.02).decide(&pred(rows));
+        assert!(matches!(d, Decision::Accept { .. }));
+    }
+
+    #[test]
+    fn epistemic_rejection_dominates_aleatoric_flag() {
+        // both MI and SE high: policy must reject OOD first
+        let mut rows = Vec::new();
+        for n in 0..10 {
+            let mut r = vec![0.4f32; 3];
+            r[n % 3] = 2.0;
+            rows.push(r);
+        }
+        let p = pred(rows);
+        assert!(p.mutual_information > 0.02 || p.softmax_entropy > 0.2);
+        let d = UncertaintyPolicy::full(0.0005, 0.0005).decide(&p);
+        assert!(matches!(d, Decision::RejectOod { .. }));
+    }
+}

@@ -1,0 +1,159 @@
+//! ROC curves and AUROC for the OOD / uncertainty detectors.
+//!
+//! The paper's Fig. 4(c) sweeps the MI threshold to trade false-positive
+//! against true-positive rejection of unknown cell types (AUROC 91.16 %);
+//! Fig. 5(f) reports AUROC 84.42 % (epistemic / Fashion probe, MI score) and
+//! 88.03 % (aleatoric / Ambiguous probe, SE score).
+
+/// One point of a ROC curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RocPoint {
+    pub threshold: f64,
+    pub fpr: f64,
+    pub tpr: f64,
+}
+
+/// ROC curve over scores: `positives` should score *higher* than
+/// `negatives`.  Returns points sorted by increasing FPR (threshold from
+/// +inf down to -inf inclusive).
+pub fn roc_curve(positives: &[f64], negatives: &[f64]) -> Vec<RocPoint> {
+    assert!(!positives.is_empty() && !negatives.is_empty());
+    let mut events: Vec<(f64, bool)> = positives
+        .iter()
+        .map(|&s| (s, true))
+        .chain(negatives.iter().map(|&s| (s, false)))
+        .collect();
+    // descending score
+    events.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let np = positives.len() as f64;
+    let nn = negatives.len() as f64;
+    let mut pts = vec![RocPoint {
+        threshold: f64::INFINITY,
+        fpr: 0.0,
+        tpr: 0.0,
+    }];
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let mut i = 0;
+    while i < events.len() {
+        let thr = events[i].0;
+        // consume all events tied at this threshold
+        while i < events.len() && events[i].0 == thr {
+            if events[i].1 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        pts.push(RocPoint {
+            threshold: thr,
+            fpr: fp as f64 / nn,
+            tpr: tp as f64 / np,
+        });
+    }
+    pts
+}
+
+/// AUROC by trapezoidal integration of the ROC curve.
+pub fn auroc(positives: &[f64], negatives: &[f64]) -> f64 {
+    let pts = roc_curve(positives, negatives);
+    let mut area = 0.0;
+    for w in pts.windows(2) {
+        area += (w[1].fpr - w[0].fpr) * (w[1].tpr + w[0].tpr) / 2.0;
+    }
+    area
+}
+
+/// Rank-based AUROC (Mann–Whitney U) — an independent formula used to
+/// cross-check the trapezoid in tests.
+pub fn auroc_rank(positives: &[f64], negatives: &[f64]) -> f64 {
+    let mut wins = 0.0;
+    for &p in positives {
+        for &n in negatives {
+            if p > n {
+                wins += 1.0;
+            } else if p == n {
+                wins += 0.5;
+            }
+        }
+    }
+    wins / (positives.len() as f64 * negatives.len() as f64)
+}
+
+/// The threshold maximizing Youden's J = TPR − FPR (the "optimal" point the
+/// paper quotes for accuracy-with-rejection).
+pub fn best_threshold(positives: &[f64], negatives: &[f64]) -> RocPoint {
+    roc_curve(positives, negatives)
+        .into_iter()
+        .max_by(|a, b| (a.tpr - a.fpr).partial_cmp(&(b.tpr - b.fpr)).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::{BitSource, Xoshiro256pp};
+
+    #[test]
+    fn perfect_separation_gives_auc_one() {
+        let pos = [2.0, 3.0, 4.0];
+        let neg = [0.0, 0.5, 1.0];
+        assert!((auroc(&pos, &neg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_separation_gives_zero() {
+        let pos = [0.0, 0.1];
+        let neg = [1.0, 2.0];
+        assert!(auroc(&pos, &neg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_distributions_give_half() {
+        let mut rng = Xoshiro256pp::new(3);
+        let pos: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let neg: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let a = auroc(&pos, &neg);
+        assert!((a - 0.5).abs() < 0.03, "auc {a}");
+    }
+
+    #[test]
+    fn trapezoid_matches_rank_statistic() {
+        let mut rng = Xoshiro256pp::new(4);
+        let pos: Vec<f64> = (0..300).map(|_| rng.next_f64() + 0.3).collect();
+        let neg: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+        let a = auroc(&pos, &neg);
+        let b = auroc_rank(&pos, &neg);
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn ties_handled_consistently() {
+        let pos = [1.0, 1.0, 2.0];
+        let neg = [1.0, 0.0];
+        assert!((auroc(&pos, &neg) - auroc_rank(&pos, &neg)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roc_curve_monotone() {
+        let mut rng = Xoshiro256pp::new(5);
+        let pos: Vec<f64> = (0..100).map(|_| rng.next_f64() + 0.5).collect();
+        let neg: Vec<f64> = (0..100).map(|_| rng.next_f64()).collect();
+        let pts = roc_curve(&pos, &neg);
+        for w in pts.windows(2) {
+            assert!(w[1].fpr >= w[0].fpr);
+            assert!(w[1].tpr >= w[0].tpr);
+        }
+        let last = pts.last().unwrap();
+        assert!((last.fpr - 1.0).abs() < 1e-12 && (last.tpr - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_threshold_separates() {
+        let pos = [0.8, 0.9, 0.95];
+        let neg = [0.1, 0.2, 0.3];
+        let pt = best_threshold(&pos, &neg);
+        assert!(pt.threshold > 0.3 && pt.threshold <= 0.8);
+        assert!((pt.tpr - 1.0).abs() < 1e-12 && pt.fpr.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny declarative flag parser: `--key value`, `--key=value`, bare
+//! `--switch`, and positional arguments.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse a token list (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse("train --dataset digits --epochs=12 --verbose --lr 0.002");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("digits"));
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 12);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.002);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn switch_before_flag_not_swallowed() {
+        let a = parse("cmd --flag --key value");
+        assert!(a.has("flag"));
+        assert_eq!(a.get("key"), Some("value"));
+    }
+
+    #[test]
+    fn multiple_positionals() {
+        let a = parse("report fig4 --params x.bin");
+        assert_eq!(a.positional, vec!["report", "fig4"]);
+    }
+}

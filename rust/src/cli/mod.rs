@@ -1,0 +1,5 @@
+//! Command-line interface substrate (clap substitute).
+
+pub mod args;
+
+pub use args::Args;

@@ -1,0 +1,151 @@
+//! Configuration files: a TOML-subset (`key = value` with `[sections]`)
+//! parser and the typed serving/training configs built on it.
+//!
+//! Example (`pbm serve --config serve.toml`):
+//!
+//! ```toml
+//! [server]
+//! addr = "127.0.0.1:7878"
+//! workers = 8
+//!
+//! [engine]
+//! datasets = "digits,blood"
+//! n_samples = 10
+//! mode = "photonic"
+//! mi_threshold = 0.0185
+//! calibrate = true
+//!
+//! [batcher]
+//! max_batch = 8
+//! max_wait_ms = 2
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed config: section -> key -> raw string value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("[{section}] {key} = {v}: not a bool")),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[server]
+addr = "127.0.0.1:0"
+workers = 4
+
+[engine]
+n_samples = 10
+mode = photonic
+mi_threshold = 0.0185
+calibrate = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("server", "addr"), Some("127.0.0.1:0"));
+        assert_eq!(c.get_usize("server", "workers", 1).unwrap(), 4);
+        assert_eq!(c.get_f64("engine", "mi_threshold", 0.0).unwrap(), 0.0185);
+        assert!(c.get_bool("engine", "calibrate", false).unwrap());
+        assert_eq!(c.get_or("engine", "mode", "surrogate"), "photonic");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("x", "y", 7).unwrap(), 7);
+        assert!(!c.get_bool("x", "y", false).unwrap());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only comments\n\n  # more\n").unwrap();
+        assert_eq!(c.sections().count(), 0);
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        assert!(Config::parse("[s]\nnot a kv line").is_err());
+        assert!(Config::parse("[e]\nbad_bool = maybe").unwrap().get_bool("e", "bad_bool", true).is_err());
+    }
+}

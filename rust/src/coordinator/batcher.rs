@@ -1,0 +1,107 @@
+//! Dynamic batching: coalesce queued requests up to `max_batch`, waiting at
+//! most `max_wait` after the first arrival (the classic latency/throughput
+//! knob of serving systems).
+
+use std::time::{Duration, Instant};
+
+use crate::exec::channel::Receiver;
+
+/// Pulls batches from a request channel.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, max_batch: usize, max_wait: Duration) -> Self {
+        Self {
+            rx,
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Block for the next batch; `None` when the channel is closed and
+    /// drained.  Returns as soon as `max_batch` items are collected or
+    /// `max_wait` has elapsed since the first item arrived.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = self.rx.recv()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(Some(item)) => batch.push(item),
+                Ok(None) => break, // closed: ship what we have
+                Err(()) => break,  // timed out
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::channel::channel;
+    use std::thread;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel(64);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, 4, Duration::from_millis(5));
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn flushes_partial_batch_after_max_wait() {
+        let (tx, rx) = channel(64);
+        let b = DynamicBatcher::new(rx, 32, Duration::from_millis(30));
+        let h = thread::spawn(move || {
+            tx.send(1u32).unwrap();
+            thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+            // the third arrives after the window closes
+            thread::sleep(Duration::from_millis(60));
+            tx.send(3).unwrap();
+            tx.close();
+        });
+        let t0 = Instant::now();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        assert_eq!(b.next_batch().unwrap(), vec![3]);
+        assert!(b.next_batch().is_none());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn none_on_closed_empty() {
+        let (tx, rx) = channel::<u8>(4);
+        tx.close();
+        let b = DynamicBatcher::new(rx, 4, Duration::from_millis(1));
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let (tx, rx) = channel(64);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        // huge max_wait must not delay a full batch
+        let b = DynamicBatcher::new(rx, 4, Duration::from_secs(10));
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+}

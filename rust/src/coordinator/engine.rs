@@ -1,0 +1,254 @@
+//! The inference engine: PJRT for deterministic layers, the photonic
+//! machine for the probabilistic block, uncertainty aggregation on top.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::bnn::{Decision, Predictive, UncertaintyPolicy};
+use crate::calibration::{calibrate_kernel, CalibrationOptions};
+use crate::entropy::chaotic::ChaoticLightSource;
+use crate::log_info;
+use crate::photonics::{MachineConfig, PhotonicMachine};
+use crate::runtime::{Arg, ModelArtifacts, ParamStore};
+
+/// Where the probabilistic block executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The AOT surrogate (`fwd_full` HLO) with chaotic noise fed as `eps`.
+    Surrogate,
+    /// The split path: `fwd_pre` → photonic machine simulator → `fwd_post`.
+    Photonic,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Stochastic forward passes per request (paper: N = 10).
+    pub n_samples: usize,
+    pub mode: ExecMode,
+    pub policy: UncertaintyPolicy,
+    /// Run feedback calibration on every kernel at load time.
+    pub calibrate: bool,
+    pub machine: MachineConfig,
+    /// Channel bandwidth used when drawing surrogate `eps` noise (GHz).
+    pub noise_bw_ghz: f64,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            n_samples: 10,
+            mode: ExecMode::Photonic,
+            policy: UncertaintyPolicy::ood_only(0.0185),
+            calibrate: true,
+            machine: MachineConfig::default(),
+            noise_bw_ghz: 150.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome for one classified image.
+#[derive(Debug, Clone)]
+pub struct ClassifyResult {
+    pub predictive: Predictive,
+    pub decision: Decision,
+    pub latency_us: f64,
+}
+
+/// The engine.  Owns non-`Send` PJRT state — confine to one thread (see
+/// [`super::service`]).
+pub struct Engine {
+    pub arts: ModelArtifacts,
+    pub params: ParamStore,
+    machine: PhotonicMachine,
+    noise: ChaoticLightSource,
+    cfg: EngineConfig,
+    pub metrics: super::metrics::EngineMetrics,
+}
+
+impl Engine {
+    /// Build an engine: loads the machine's kernel bank from the trained
+    /// probabilistic parameters (one 9-tap kernel per depthwise channel)
+    /// and optionally runs feedback calibration on each.
+    pub fn new(arts: ModelArtifacts, params: ParamStore, cfg: EngineConfig) -> Result<Self> {
+        let mut mcfg = cfg.machine.clone();
+        mcfg.scale_dac = arts.meta.scale_dac;
+        mcfg.scale_adc = arts.meta.scale_adc;
+        mcfg.seed = cfg.seed;
+        let mut machine = PhotonicMachine::new(mcfg);
+        let kernels = params.prob_kernels()?;
+        let t0 = Instant::now();
+        let opts = CalibrationOptions::default();
+        for targets in &kernels {
+            let idx = machine.load_kernel(targets);
+            if cfg.calibrate {
+                calibrate_kernel(&mut machine, idx, targets, &opts);
+            }
+        }
+        log_info!(
+            "engine[{}]: programmed {} kernels in {:.2}s (calibrate={})",
+            arts.meta.dataset,
+            kernels.len(),
+            t0.elapsed().as_secs_f64(),
+            cfg.calibrate
+        );
+        Ok(Self {
+            noise: ChaoticLightSource::with_defaults(cfg.seed.wrapping_add(77)),
+            machine,
+            arts,
+            params,
+            cfg,
+            metrics: Default::default(),
+        })
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.arts.meta.n_classes
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.arts.meta.image_size()
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.cfg.mode
+    }
+
+    /// Classify a batch of images (`images.len() == n * image_size`).
+    /// Returns one result per image.
+    pub fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<ClassifyResult>> {
+        if images.len() != n * self.image_size() {
+            return Err(anyhow!(
+                "batch buffer {} != {} images x {}",
+                images.len(),
+                n,
+                self.image_size()
+            ));
+        }
+        let t0 = Instant::now();
+        let logits = match self.cfg.mode {
+            ExecMode::Surrogate => self.forward_surrogate(images, n)?,
+            ExecMode::Photonic => self.forward_photonic(images, n)?,
+        };
+        // logits: per pass, per image
+        let per_image_latency = t0.elapsed().as_micros() as f64 / n as f64;
+        let nc = self.n_classes();
+        let results = (0..n)
+            .map(|i| {
+                let rows: Vec<Vec<f32>> = (0..self.cfg.n_samples)
+                    .map(|s| logits[s][i * nc..(i + 1) * nc].to_vec())
+                    .collect();
+                let predictive = Predictive::from_logits(&rows);
+                let decision = self.cfg.policy.decide(&predictive);
+                ClassifyResult {
+                    predictive,
+                    decision,
+                    latency_us: per_image_latency,
+                }
+            })
+            .collect::<Vec<_>>();
+        self.metrics.record_batch(n, t0.elapsed(), &results);
+        Ok(results)
+    }
+
+    /// Surrogate path: `n_samples` calls of `fwd_full` with fresh chaotic
+    /// noise as the `eps` operand.
+    fn forward_surrogate(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
+        let meta = &self.arts.meta;
+        let b = self.arts.pick_batch("fwd_full", n);
+        let f = self.arts.get(&format!("fwd_full_b{b}"))?;
+        let mut x = images.to_vec();
+        x.resize(b * meta.image_size(), 0.0);
+        let x_shape = [
+            b as i64,
+            meta.in_channels as i64,
+            meta.img_hw as i64,
+            meta.img_hw as i64,
+        ];
+        let eps_shape = [
+            b as i64,
+            meta.prob_ch as i64,
+            meta.prob_hw as i64,
+            meta.prob_hw as i64,
+            meta.num_taps as i64,
+        ];
+        let np = meta.num_params as i64;
+        let mut eps = vec![0.0f32; b * meta.eps_size()];
+        let mut passes = Vec::with_capacity(self.cfg.n_samples);
+        for _ in 0..self.cfg.n_samples {
+            self.noise.fill_eps(self.cfg.noise_bw_ghz, &mut eps);
+            let out = f.call(&[
+                Arg::F32(&self.params.theta, &[np]),
+                Arg::F32(&x, &x_shape),
+                Arg::F32(&eps, &eps_shape),
+            ])?;
+            passes.push(out.into_iter().next().unwrap());
+        }
+        Ok(passes)
+    }
+
+    /// Photonic path: one `fwd_pre`, then per pass a machine depthwise conv
+    /// per image and one `fwd_post`.
+    fn forward_photonic(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
+        let meta = &self.arts.meta;
+        let b = self.arts.pick_batch("fwd_pre", n);
+        let pre = self.arts.get(&format!("fwd_pre_b{b}"))?;
+        let post = self.arts.get(&format!("fwd_post_b{b}"))?;
+        let mut x = images.to_vec();
+        x.resize(b * meta.image_size(), 0.0);
+        let x_shape = [
+            b as i64,
+            meta.in_channels as i64,
+            meta.img_hw as i64,
+            meta.img_hw as i64,
+        ];
+        let np = meta.num_params as i64;
+        let x3q = pre
+            .call(&[Arg::F32(&self.params.theta, &[np]), Arg::F32(&x, &x_shape)])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let act = meta.act_size();
+        let act_shape = [
+            b as i64,
+            meta.prob_ch as i64,
+            meta.prob_hw as i64,
+            meta.prob_hw as i64,
+        ];
+        let mut passes = Vec::with_capacity(self.cfg.n_samples);
+        let mut d3 = vec![0.0f32; b * act];
+        for _ in 0..self.cfg.n_samples {
+            // the machine is the only source of randomness on this path
+            for i in 0..n {
+                let xi = &x3q[i * act..(i + 1) * act];
+                let di = self.machine.depthwise_conv(
+                    0,
+                    xi,
+                    meta.prob_ch,
+                    meta.prob_hw,
+                    meta.prob_hw,
+                );
+                d3[i * act..(i + 1) * act].copy_from_slice(&di);
+            }
+            let out = post.call(&[
+                Arg::F32(&self.params.theta, &[np]),
+                Arg::F32(&x3q, &act_shape),
+                Arg::F32(&d3, &act_shape),
+            ])?;
+            passes.push(out.into_iter().next().unwrap());
+        }
+        Ok(passes)
+    }
+
+    /// Simulated-optical-time + host telemetry line.
+    pub fn report(&self) -> String {
+        format!(
+            "{} | machine: {}",
+            self.metrics.report(),
+            self.machine.throughput_report()
+        )
+    }
+}

@@ -1,0 +1,154 @@
+//! Engine/serving telemetry: counters and latency histogram.
+
+use std::time::Duration;
+
+use crate::bnn::Decision;
+use crate::util::json::Json;
+
+use super::engine::ClassifyResult;
+
+/// Log-scaled latency histogram (1 us .. ~1 s, 2x buckets).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; 21],
+            count: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, us: f64) {
+        let b = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries (upper edge).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregated engine metrics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub accepted: u64,
+    pub rejected_ood: u64,
+    pub flagged_ambiguous: u64,
+    pub batch_latency: LatencyHistogram,
+    pub request_latency: LatencyHistogram,
+}
+
+impl EngineMetrics {
+    pub fn record_batch(&mut self, n: usize, elapsed: Duration, results: &[ClassifyResult]) {
+        self.requests += n as u64;
+        self.batches += 1;
+        self.batch_latency.record(elapsed.as_micros() as f64);
+        for r in results {
+            self.request_latency.record(r.latency_us);
+            match r.decision {
+                Decision::Accept { .. } => self.accepted += 1,
+                Decision::RejectOod { .. } => self.rejected_ood += 1,
+                Decision::FlagAmbiguous { .. } => self.flagged_ambiguous += 1,
+            }
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} accept={} reject_ood={} ambiguous={} mean_batch={:.0}us p95_batch={:.0}us",
+            self.requests,
+            self.batches,
+            self.accepted,
+            self.rejected_ood,
+            self.flagged_ambiguous,
+            self.batch_latency.mean_us(),
+            self.batch_latency.percentile_us(95.0),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected_ood", Json::Num(self.rejected_ood as f64)),
+            ("flagged_ambiguous", Json::Num(self.flagged_ambiguous as f64)),
+            ("mean_batch_us", Json::Num(self.batch_latency.mean_us())),
+            (
+                "p95_batch_us",
+                Json::Num(self.batch_latency.percentile_us(95.0)),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+        assert!(h.percentile_us(95.0) <= h.percentile_us(100.0) * 2.0);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn metrics_json_well_formed() {
+        let m = EngineMetrics::default();
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the systems half of the reproduction.
+//!
+//! Request lifecycle (`vLLM-router`-shaped, adapted to probabilistic
+//! inference):
+//!
+//! ```text
+//!   clients ──► Router ──► per-model queue ──► DynamicBatcher
+//!                                                    │ (max_batch / max_wait)
+//!                                                    ▼
+//!                                             Engine (dedicated thread)
+//!                    fwd_pre (PJRT) ─► photonic machine (N-sample fan-out,
+//!                    one probabilistic depthwise conv per pass) ─► fwd_post
+//!                    (PJRT) ─► Predictive aggregation ─► UncertaintyPolicy
+//! ```
+//!
+//! The engine thread owns all non-`Send` state (PJRT client/executables and
+//! the photonic machine); everything upstream communicates over MPMC
+//! channels.  Each request is expanded into `n_samples` stochastic forward
+//! passes (paper: N = 10) whose randomness comes from the machine's chaotic
+//! light — there is no PRNG on the photonic request path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::DynamicBatcher;
+pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
+pub use router::Router;
+pub use service::{ClassifyRequest, EngineHandle};

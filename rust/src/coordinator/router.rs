@@ -1,0 +1,57 @@
+//! Request router: dispatch by model/dataset name to the owning engine.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::service::{ClassifyRequest, EngineHandle};
+
+/// Routes requests to per-dataset engines.
+#[derive(Default)]
+pub struct Router {
+    engines: HashMap<String, EngineHandle>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, handle: EngineHandle) {
+        self.engines.insert(handle.dataset.clone(), handle);
+    }
+
+    pub fn datasets(&self) -> Vec<&str> {
+        self.engines.keys().map(String::as_str).collect()
+    }
+
+    pub fn get(&self, dataset: &str) -> Result<&EngineHandle> {
+        self.engines
+            .get(dataset)
+            .ok_or_else(|| anyhow!("unknown dataset '{dataset}' (have: {:?})", self.datasets()))
+    }
+
+    /// Route one request.
+    pub fn route(&self, dataset: &str, req: ClassifyRequest) -> Result<()> {
+        self.get(dataset)?.submit(req)
+    }
+
+    /// Shut down every engine.
+    pub fn shutdown(self) {
+        for (_, h) in self.engines {
+            h.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_dataset_is_error() {
+        let r = Router::new();
+        let (req, _rx) = ClassifyRequest::new(vec![0.0; 4]);
+        assert!(r.route("nope", req).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Engine service: confines the non-`Send` engine to a dedicated thread and
+//! exposes a channel-based request API.
+
+use std::path::Path;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::DynamicBatcher;
+use super::engine::{ClassifyResult, Engine, EngineConfig};
+use crate::exec::channel::{channel, Receiver, Sender};
+use crate::log_info;
+use crate::runtime::{ModelArtifacts, ParamStore};
+
+/// One classification request: an image plus a one-shot reply channel.
+pub struct ClassifyRequest {
+    pub image: Vec<f32>,
+    pub reply: Sender<Result<ClassifyResult>>,
+}
+
+impl ClassifyRequest {
+    /// Build a request + the receiver for its reply.
+    pub fn new(image: Vec<f32>) -> (Self, Receiver<Result<ClassifyResult>>) {
+        let (tx, rx) = channel(1);
+        (Self { image, reply: tx }, rx)
+    }
+}
+
+/// Handle to a running engine thread.
+pub struct EngineHandle {
+    pub dataset: String,
+    tx: Sender<ClassifyRequest>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// Batching knobs for the service loop.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn an engine thread for `dataset` under `artifacts_root`, loading
+    /// parameters from `params_path` (or `params_init.bin` if `None`).
+    pub fn spawn(
+        artifacts_root: &Path,
+        dataset: &str,
+        params_path: Option<&Path>,
+        engine_cfg: EngineConfig,
+        svc_cfg: ServiceConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
+        let dir = artifacts_root.join(dataset);
+        let params_path = params_path.map(|p| p.to_path_buf());
+        let dataset_name = dataset.to_string();
+        let thread = std::thread::Builder::new()
+            .name(format!("pbm-engine-{dataset}"))
+            .spawn(move || {
+                // all PJRT + machine state is created on this thread
+                let run = || -> Result<()> {
+                    let arts = ModelArtifacts::load(&dir)?;
+                    let params = match &params_path {
+                        Some(p) => ParamStore::load_bin(&arts.meta, p)?,
+                        None => ParamStore::load_init(&arts.meta, &dir)?,
+                    };
+                    let mut engine = Engine::new(arts, params, engine_cfg)?;
+                    let image_size = engine.image_size();
+                    let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
+                    while let Some(batch) = batcher.next_batch() {
+                        let mut images = Vec::with_capacity(batch.len() * image_size);
+                        let mut ok = Vec::with_capacity(batch.len());
+                        for req in batch {
+                            if req.image.len() == image_size {
+                                images.extend_from_slice(&req.image);
+                                ok.push(req.reply);
+                            } else {
+                                let _ = req.reply.send(Err(anyhow!(
+                                    "image size {} != expected {}",
+                                    req.image.len(),
+                                    image_size
+                                )));
+                            }
+                        }
+                        if ok.is_empty() {
+                            continue;
+                        }
+                        match engine.classify(&images, ok.len()) {
+                            Ok(results) => {
+                                for (reply, res) in ok.into_iter().zip(results) {
+                                    let _ = reply.send(Ok(res));
+                                }
+                            }
+                            Err(e) => {
+                                for reply in ok {
+                                    let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                                }
+                            }
+                        }
+                    }
+                    log_info!("engine thread exiting: {}", engine.report());
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    crate::log_error!("engine thread failed: {e:#}");
+                }
+            })
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        Ok(Self {
+            dataset: dataset_name,
+            tx,
+            thread: Some(thread),
+        })
+    }
+
+    /// Submit a request (non-blocking on the engine; blocks only if the
+    /// queue is full — backpressure).
+    pub fn submit(&self, req: ClassifyRequest) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow!("engine '{}' is shut down", self.dataset))
+    }
+
+    /// Convenience: classify one image synchronously.
+    pub fn classify_blocking(&self, image: Vec<f32>) -> Result<ClassifyResult> {
+        let (req, rx) = ClassifyRequest::new(image);
+        self.submit(req)?;
+        rx.recv().ok_or_else(|| anyhow!("engine dropped reply"))?
+    }
+
+    /// Shut the engine down and join its thread.
+    pub fn shutdown(mut self) {
+        self.tx.close();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        self.tx.close();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

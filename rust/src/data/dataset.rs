@@ -1,0 +1,166 @@
+//! Typed dataset handles over the `.npy` artifacts written by
+//! `python/compile/datasets.py`, with normalization and minibatching.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::npy;
+use crate::entropy::{BitSource, Xoshiro256pp};
+
+/// The evaluation roles the paper's datasets play.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// In-domain train/test data (digits, blood ID classes).
+    InDomain,
+    /// Aleatoric probe (Ambiguous-MNIST analogue).
+    Aleatoric,
+    /// Epistemic probe (Fashion-MNIST analogue / erythroblasts).
+    Epistemic,
+}
+
+/// An image-classification dataset in (N, C, H, W) layout, pixels in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub kind: DatasetKind,
+    pub images: Vec<f32>,
+    pub labels: Vec<i64>,
+    pub n: usize,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl Dataset {
+    /// Load `<stem>_x.npy` / `<stem>_y.npy` from the artifacts data dir.
+    pub fn load(data_dir: &Path, stem: &str, kind: DatasetKind) -> Result<Self> {
+        let x_path: PathBuf = data_dir.join(format!("{stem}_x.npy"));
+        let y_path: PathBuf = data_dir.join(format!("{stem}_y.npy"));
+        let x = npy::read(&x_path).context("loading images")?;
+        let y = npy::read(&y_path).context("loading labels")?;
+        if x.shape.len() != 4 {
+            bail!("expected (N, C, H, W) images, got {:?}", x.shape);
+        }
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        // labels may be (N,) or (N, 2) for ambiguous pairs; use first column
+        let labels_raw = y.to_i64();
+        let labels: Vec<i64> = if y.shape.len() == 2 {
+            labels_raw.chunks(y.shape[1]).map(|c| c[0]).collect()
+        } else {
+            labels_raw
+        };
+        if labels.len() != n {
+            bail!("label count {} != image count {}", labels.len(), n);
+        }
+        // normalize u8 -> [0, 1]; f32 data passes through
+        let images = match &x.data {
+            npy::NpyData::U8(v) => v.iter().map(|&p| p as f32 / 255.0).collect(),
+            _ => x.to_f32(),
+        };
+        Ok(Self {
+            name: stem.to_string(),
+            kind,
+            images,
+            labels,
+            n,
+            channels: c,
+            height: h,
+            width: w,
+        })
+    }
+
+    /// Pixels of sample `i` (length C*H*W).
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.channels * self.height * self.width;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    /// Gather a batch of samples by index into a contiguous buffer.
+    pub fn gather(&self, idxs: &[usize], out_x: &mut Vec<f32>, out_y: &mut Vec<i32>) {
+        out_x.clear();
+        out_y.clear();
+        for &i in idxs {
+            out_x.extend_from_slice(self.image(i));
+            out_y.push(self.labels[i] as i32);
+        }
+    }
+
+    /// An epoch's worth of shuffled batch index lists (last partial batch
+    /// dropped — the train-step HLO has a fixed batch dimension).
+    pub fn shuffled_batches(&self, batch: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        let mut rng = Xoshiro256pp::new(seed);
+        // Fisher–Yates
+        for i in (1..idx.len()).rev() {
+            let j = rng.next_below(i + 1);
+            idx.swap(i, j);
+        }
+        idx.chunks(batch)
+            .filter(|c| c.len() == batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Number of distinct labels (assumes labels 0..k-1 present).
+    pub fn num_classes(&self) -> usize {
+        self.labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::npy::write_f32;
+
+    fn tmp_dataset(n: usize, c: usize) -> (std::path::PathBuf, String) {
+        let dir = std::env::temp_dir().join(format!("pbm_ds_test_{n}_{c}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let imgs: Vec<f32> = (0..n * c * 4 * 4).map(|i| (i % 17) as f32 / 16.0).collect();
+        write_f32(&dir.join("toy_x.npy"), &[n, c, 4, 4], &imgs).unwrap();
+        let labels: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+        write_f32(&dir.join("toy_y.npy"), &[n], &labels).unwrap();
+        (dir, "toy".to_string())
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let (dir, stem) = tmp_dataset(10, 3);
+        let ds = Dataset::load(&dir, &stem, DatasetKind::InDomain).unwrap();
+        assert_eq!(ds.n, 10);
+        assert_eq!(ds.image_size(), 48);
+        assert_eq!(ds.image(2).len(), 48);
+        assert_eq!(ds.num_classes(), 3);
+    }
+
+    #[test]
+    fn gather_builds_contiguous_batch() {
+        let (dir, stem) = tmp_dataset(6, 1);
+        let ds = Dataset::load(&dir, &stem, DatasetKind::InDomain).unwrap();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        ds.gather(&[0, 3, 5], &mut x, &mut y);
+        assert_eq!(x.len(), 3 * 16);
+        assert_eq!(y, vec![0, 0, 2]);
+        assert_eq!(&x[16..32], ds.image(3));
+    }
+
+    #[test]
+    fn shuffled_batches_cover_and_fix_size() {
+        let (dir, stem) = tmp_dataset(25, 1);
+        let ds = Dataset::load(&dir, &stem, DatasetKind::InDomain).unwrap();
+        let batches = ds.shuffled_batches(8, 1);
+        assert_eq!(batches.len(), 3); // 25 / 8 = 3 full batches
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 24);
+        // deterministic per seed
+        assert_eq!(ds.shuffled_batches(8, 1), batches);
+        assert_ne!(ds.shuffled_batches(8, 2), batches);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dataset substrate: `.npy` interchange with the Python build path, typed
+//! dataset handles, batching, and Rust-side synthetic workload generation.
+
+pub mod dataset;
+pub mod npy;
+pub mod synth;
+
+pub use dataset::{Dataset, DatasetKind};

@@ -1,0 +1,255 @@
+//! Minimal NumPy `.npy` reader/writer (format version 1.0).
+//!
+//! Supports the dtypes the pipeline uses: `|u1` (uint8 images), `<i4`/`<i8`
+//! (labels), `<f4` (float tensors).  C-order only.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a loaded array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+}
+
+/// A loaded `.npy` array.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32, converting integer types (u8 stays 0..255 — callers
+    /// normalize images themselves).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::F32(v) => v.clone(),
+        }
+    }
+
+    /// View labels as i64 regardless of on-disk width.
+    pub fn to_i64(&self) -> Vec<i64> {
+        match &self.data {
+            NpyData::U8(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::I64(v) => v.clone(),
+            NpyData::F32(v) => v.iter().map(|&x| x as i64).collect(),
+        }
+    }
+}
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Read a `.npy` file.
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse `.npy` bytes.
+pub fn parse(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not a .npy file");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        ),
+        2 | 3 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12usize,
+        ),
+        v => bail!("unsupported .npy version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .map_err(|e| anyhow!("bad header utf8: {e}"))?;
+    let descr = dict_value(header, "descr").ok_or_else(|| anyhow!("no descr in header"))?;
+    let fortran = dict_value(header, "fortran_order")
+        .map(|v| v.contains("True"))
+        .unwrap_or(false);
+    if fortran {
+        bail!("fortran_order arrays unsupported");
+    }
+    let shape_str = dict_value(header, "shape").ok_or_else(|| anyhow!("no shape in header"))?;
+    let shape: Vec<usize> = shape_str
+        .trim_matches(|c| c == '(' || c == ')')
+        .split(',')
+        .filter_map(|s| s.trim().parse::<usize>().ok())
+        .collect();
+    let n: usize = shape.iter().product();
+    let body = &bytes[header_start + header_len..];
+    let descr = descr.trim_matches(|c| c == '\'' || c == '"');
+    let data = match descr {
+        "|u1" | "u1" => {
+            ensure_len(body, n, 1)?;
+            NpyData::U8(body[..n].to_vec())
+        }
+        "<i4" => {
+            ensure_len(body, n, 4)?;
+            NpyData::I32(
+                body[..4 * n]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<i8" => {
+            ensure_len(body, n, 8)?;
+            NpyData::I64(
+                body[..8 * n]
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        "<f4" => {
+            ensure_len(body, n, 4)?;
+            NpyData::F32(
+                body[..4 * n]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+fn ensure_len(body: &[u8], n: usize, width: usize) -> Result<()> {
+    if body.len() < n * width {
+        bail!("truncated body: want {} bytes, have {}", n * width, body.len());
+    }
+    Ok(())
+}
+
+/// Extract `'key': value` from the python-dict header (string values keep
+/// their quotes; tuple values keep parens).
+fn dict_value<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("'{key}':");
+    let start = header.find(&pat)? + pat.len();
+    let rest = header[start..].trim_start();
+    if rest.starts_with('(') {
+        let end = rest.find(')')?;
+        Some(&rest[..=end])
+    } else {
+        let end = rest.find(',').unwrap_or(rest.len());
+        Some(rest[..end].trim())
+    }
+}
+
+/// Write an f32 array as `.npy` v1.0.
+pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic+version+len+header is a multiple of 64, ending in \n
+    let base = MAGIC.len() + 2 + 2;
+    let total = (base + header.len() + 1 + 63) / 64 * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut f = fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("pbm_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.npy");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        write_f32(&p, &[2, 3, 4], &data).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![2, 3, 4]);
+        assert_eq!(arr.to_f32(), data);
+    }
+
+    #[test]
+    fn parse_handwritten_u8() {
+        // construct a v1.0 header by hand
+        let header = "{'descr': '|u1', 'fortran_order': False, 'shape': (3,), }          \n";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[7, 8, 9]);
+        let arr = parse(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+        assert_eq!(arr.data, NpyData::U8(vec![7, 8, 9]));
+        assert_eq!(arr.to_i64(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(b"not numpy at all").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (10,), }        \n";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 8]); // only 2 floats of 10
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn scalar_and_1d_shapes() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let dir = std::env::temp_dir().join("pbm_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("one_d.npy");
+        write_f32(&p, &[3], &data).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+    }
+}

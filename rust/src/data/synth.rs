@@ -1,0 +1,83 @@
+//! Rust-side synthetic workload generation (bench inputs, probe activations).
+//!
+//! These generators exist so the benches and the serving load generator do
+//! not depend on the Python-generated datasets being present: random
+//! activation maps with post-ReLU statistics, random kernels in the
+//! machine's native range, and Poisson arrival processes for the serving
+//! benchmarks.
+
+use crate::entropy::{BitSource, Xoshiro256pp};
+use crate::photonics::TapTarget;
+
+/// Random non-negative activation map in [0, scale) — the statistics that
+/// reach the photonic stage after ReLU + DAC quantization.
+pub fn random_activations(rng: &mut Xoshiro256pp, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            // sparse-ish, post-ReLU-looking: ~40 % zeros
+            if rng.next_f32() < 0.4 {
+                0.0
+            } else {
+                rng.next_f32() * scale
+            }
+        })
+        .collect()
+}
+
+/// Random 9-tap kernel targets within the machine's realizable range.
+pub fn random_kernel(rng: &mut Xoshiro256pp) -> Vec<TapTarget> {
+    (0..9)
+        .map(|_| {
+            let mu = rng.next_f32() * 2.0 - 1.0;
+            let rel = 0.4 + 0.55 * rng.next_f32();
+            TapTarget {
+                mu,
+                sigma: (mu.abs() * rel).max(0.05),
+            }
+        })
+        .collect()
+}
+
+/// Exponential inter-arrival times (Poisson process) for load generation.
+pub fn poisson_arrivals_us(rng: &mut Xoshiro256pp, rate_per_sec: f64, n: usize) -> Vec<f64> {
+    let mean_us = 1e6 / rate_per_sec;
+    (0..n)
+        .map(|_| -mean_us * (1.0 - rng.next_f64()).ln())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::mean;
+
+    #[test]
+    fn activations_nonnegative_and_bounded() {
+        let mut rng = Xoshiro256pp::new(1);
+        let a = random_activations(&mut rng, 10_000, 4.0);
+        assert!(a.iter().all(|&x| (0.0..4.0).contains(&x)));
+        let zeros = a.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > 3000 && zeros < 5000);
+    }
+
+    #[test]
+    fn kernels_have_nine_realizable_taps() {
+        let mut rng = Xoshiro256pp::new(2);
+        for _ in 0..100 {
+            let k = random_kernel(&mut rng);
+            assert_eq!(k.len(), 9);
+            for t in k {
+                assert!(t.sigma > 0.0);
+                assert!(t.mu.abs() <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Xoshiro256pp::new(3);
+        let gaps = poisson_arrivals_us(&mut rng, 1000.0, 50_000);
+        let m = mean(&gaps);
+        assert!((m - 1000.0).abs() < 20.0, "mean gap {m} us");
+    }
+}

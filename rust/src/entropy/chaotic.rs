@@ -1,0 +1,227 @@
+//! Chaotic-light entropy source model (erbium ASE).
+//!
+//! Models the broadband amplified-spontaneous-emission source the paper
+//! uses as a true random number generator (26): a spectrally-sliced channel
+//! with optical bandwidth `B`, integrated over a window `T`, yields an
+//! intensity `I ~ Gamma(M, P/M)` with `M = B·T + 1` speckle modes and mean
+//! power `P`.  Different spectral slices are statistically independent (12),
+//! which the simulator realizes with jump-decorrelated PRNG streams per
+//! channel.
+//!
+//! Besides powering the photonic machine simulator, the source doubles as
+//! the serving-time noise provider for the *surrogate* execution path: the
+//! normalized intensity `(I − P) / (P/√M)` is the physical analogue of the
+//! unit-variance `eps` operand of the L1 kernel.
+
+use super::gamma::sample_intensity;
+use super::gaussian::Gaussian;
+use super::xoshiro::Xoshiro256pp;
+
+
+/// Physical constants of the source (paper, System Architecture).
+#[derive(Debug, Clone)]
+pub struct SourceConfig {
+    /// Number of independent spectral channels (weights). Paper: 9.
+    pub channels: usize,
+    /// Integration window per symbol in ps (3 samples at 80 GSPS).
+    pub t_symbol_ps: f64,
+    /// Minimum programmable channel bandwidth (GHz). Paper: 25.
+    pub bw_min_ghz: f64,
+    /// Maximum programmable channel bandwidth (GHz). Paper: 150.
+    pub bw_max_ghz: f64,
+}
+
+impl Default for SourceConfig {
+    fn default() -> Self {
+        Self {
+            channels: 9,
+            t_symbol_ps: 37.5,
+            bw_min_ghz: 25.0,
+            bw_max_ghz: 150.0,
+        }
+    }
+}
+
+impl SourceConfig {
+    /// Speckle degrees of freedom for a channel bandwidth (GHz).
+    pub fn dof(&self, bw_ghz: f64) -> f64 {
+        1.0 + bw_ghz * 1e9 * self.t_symbol_ps * 1e-12
+    }
+
+    /// The smallest relative std the source can realize: `1/sqrt(dof_max)`.
+    pub fn min_rel_sigma(&self) -> f64 {
+        1.0 / self.dof(self.bw_max_ghz).sqrt()
+    }
+
+    /// The largest relative std (single rail): `1/sqrt(dof_min)`.
+    pub fn max_rel_sigma(&self) -> f64 {
+        1.0 / self.dof(self.bw_min_ghz).sqrt()
+    }
+}
+
+/// One independent spectral slice of the ASE source.
+#[derive(Debug, Clone)]
+struct Channel {
+    rng: Xoshiro256pp,
+    gauss: Gaussian,
+}
+
+/// The chaotic light source: independent per-channel intensity streams.
+#[derive(Debug, Clone)]
+pub struct ChaoticLightSource {
+    pub cfg: SourceConfig,
+    chans: Vec<Channel>,
+}
+
+impl ChaoticLightSource {
+    pub fn new(cfg: SourceConfig, seed: u64) -> Self {
+        let mut root = Xoshiro256pp::new(seed);
+        let chans = (0..cfg.channels)
+            .map(|_| Channel {
+                rng: root.fork(),
+                gauss: Gaussian::new(),
+            })
+            .collect();
+        Self { cfg, chans }
+    }
+
+    pub fn with_defaults(seed: u64) -> Self {
+        Self::new(SourceConfig::default(), seed)
+    }
+
+    /// One intensity sample from channel `ch` at mean power `power` and
+    /// bandwidth `bw_ghz`.  This is the physical weight-sampling primitive.
+    #[inline]
+    pub fn intensity(&mut self, ch: usize, power: f64, bw_ghz: f64) -> f64 {
+        let dof = self.cfg.dof(bw_ghz);
+        let c = &mut self.chans[ch];
+        sample_intensity(&mut c.rng, &mut c.gauss, power, dof)
+    }
+
+    /// One intensity sample with a precomputed degrees-of-freedom value
+    /// (hot-path variant: skips the bandwidth -> dof conversion).
+    #[inline]
+    pub fn intensity_dof(&mut self, ch: usize, power: f64, dof: f64) -> f64 {
+        let c = &mut self.chans[ch];
+        sample_intensity(&mut c.rng, &mut c.gauss, power, dof)
+    }
+
+    /// Normalized intensity: `(I - P) / (P/sqrt(M))` — zero mean, unit std.
+    /// The physical analogue of the surrogate's `eps` operand.
+    #[inline]
+    pub fn normalized(&mut self, ch: usize, bw_ghz: f64) -> f64 {
+        let dof = self.cfg.dof(bw_ghz);
+        let i = self.intensity_dof(ch, 1.0, dof);
+        (i - 1.0) * dof.sqrt()
+    }
+
+    /// Fill an `eps` buffer with normalized chaotic noise, cycling channels.
+    /// Used by the serving engine for the surrogate path and by the SVI
+    /// trainer for reparameterization noise.
+    pub fn fill_eps(&mut self, bw_ghz: f64, out: &mut [f32]) {
+        let nch = self.chans.len();
+        let dof = self.cfg.dof(bw_ghz);
+        let scale = dof.sqrt();
+        for (i, slot) in out.iter_mut().enumerate() {
+            let ch = i % nch;
+            let v = (self.intensity_dof(ch, 1.0, dof) - 1.0) * scale;
+            *slot = v as f32;
+        }
+    }
+
+    /// Extract unbiased random bits by comparing successive intensity
+    /// samples (exactly unbiased for i.i.d. draws).  This is the stream the
+    /// NIST SP800-22 battery is run on (paper: the ASE source passes it).
+    pub fn extract_bits(&mut self, bw_ghz: f64, nbits: usize) -> Vec<u8> {
+        let dof = self.cfg.dof(bw_ghz);
+        let nch = self.chans.len();
+        let mut bits = Vec::with_capacity(nbits);
+        let mut ch = 0;
+        while bits.len() < nbits {
+            let a = self.intensity_dof(ch, 1.0, dof);
+            let b = self.intensity_dof(ch, 1.0, dof);
+            if a != b {
+                bits.push(u8::from(a > b));
+            }
+            ch = (ch + 1) % nch;
+        }
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::Welford;
+
+    #[test]
+    fn config_dof_and_sigma_range() {
+        let cfg = SourceConfig::default();
+        assert!((cfg.dof(25.0) - 1.9375).abs() < 1e-9);
+        assert!((cfg.dof(150.0) - 6.625).abs() < 1e-9);
+        // the paper's "~68 % change in standard deviation" knob
+        let change = cfg.max_rel_sigma() / cfg.min_rel_sigma();
+        assert!(change > 1.5 && change < 2.2, "sigma range {change}");
+    }
+
+    #[test]
+    fn intensity_moments_follow_power_and_bandwidth() {
+        let mut src = ChaoticLightSource::with_defaults(1);
+        let mut w = Welford::new();
+        for _ in 0..50_000 {
+            w.push(src.intensity(0, 2.0, 150.0));
+        }
+        assert!((w.mean() - 2.0).abs() < 0.02, "mean {}", w.mean());
+        let expect_std = 2.0 / (6.625f64).sqrt();
+        assert!((w.std() - expect_std).abs() < 0.02, "std {}", w.std());
+    }
+
+    #[test]
+    fn channels_are_uncorrelated() {
+        let mut src = ChaoticLightSource::with_defaults(2);
+        let n = 20_000;
+        let a: Vec<f64> = (0..n).map(|_| src.normalized(0, 100.0)).collect();
+        let b: Vec<f64> = (0..n).map(|_| src.normalized(1, 100.0)).collect();
+        let corr: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum::<f64>() / n as f64;
+        assert!(corr.abs() < 0.02, "corr {corr}");
+    }
+
+    #[test]
+    fn normalized_has_unit_moments() {
+        let mut src = ChaoticLightSource::with_defaults(3);
+        let mut w = Welford::new();
+        for _ in 0..100_000 {
+            w.push(src.normalized(4, 150.0));
+        }
+        assert!(w.mean().abs() < 0.02, "mean {}", w.mean());
+        assert!((w.std() - 1.0).abs() < 0.02, "std {}", w.std());
+    }
+
+    #[test]
+    fn eps_fill_covers_buffer() {
+        let mut src = ChaoticLightSource::with_defaults(4);
+        let mut buf = vec![0.0f32; 5000];
+        src.fill_eps(150.0, &mut buf);
+        let m = crate::util::mathstat::mean_f32(&buf);
+        let s = crate::util::mathstat::std_f32(&buf);
+        assert!(m.abs() < 0.1 && (s - 1.0).abs() < 0.1, "m {m} s {s}");
+    }
+
+    #[test]
+    fn extracted_bits_balanced() {
+        let mut src = ChaoticLightSource::with_defaults(5);
+        let bits = src.extract_bits(100.0, 20_000);
+        let ones = bits.iter().map(|&b| b as usize).sum::<usize>();
+        let frac = ones as f64 / bits.len() as f64;
+        assert!((frac - 0.5).abs() < 0.02, "ones {frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ChaoticLightSource::with_defaults(7);
+        let mut b = ChaoticLightSource::with_defaults(7);
+        for ch in 0..9 {
+            assert_eq!(a.intensity(ch, 1.0, 80.0), b.intensity(ch, 1.0, 80.0));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Gamma-distributed sampling (Marsaglia–Tsang squeeze method).
+//!
+//! Filtered thermal/chaotic light has Gamma-distributed integrated intensity:
+//! a channel of optical bandwidth `B` integrated over a window `T` has
+//! `M ≈ B·T + 1` speckle degrees of freedom, giving shape `M` and mean power
+//! `P` — i.e. `I ~ Gamma(M, P/M)` with `std = P/√M`.  This is exactly the
+//! physical knob the paper uses: *power programs the mean, bandwidth the
+//! standard deviation* (Fig. 1(c), Fig. S2).
+
+use super::gaussian::Gaussian;
+use super::BitSource;
+
+/// Sample `Gamma(shape, scale)` (shape > 0).
+///
+/// Marsaglia & Tsang (2000): for shape >= 1 use the squeeze method; for
+/// shape < 1 use the boost `Gamma(a) = Gamma(a+1) * U^{1/a}`.
+pub fn sample_gamma<R: BitSource>(rng: &mut R, g: &mut Gaussian, shape: f64, scale: f64) -> f64 {
+    debug_assert!(shape > 0.0 && scale > 0.0);
+    if shape < 1.0 {
+        let u = rng.next_f64().max(1e-300);
+        return sample_gamma(rng, g, shape + 1.0, scale) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = g.sample(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.next_f64();
+        let x2 = x * x;
+        if u < 1.0 - 0.0331 * x2 * x2 {
+            return d * v3 * scale;
+        }
+        if u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln()) {
+            return d * v3 * scale;
+        }
+    }
+}
+
+/// Convenience: chaotic-light intensity sample with mean `power` and
+/// `dof = B·T + 1` degrees of freedom (std = power / sqrt(dof)).
+#[inline]
+pub fn sample_intensity<R: BitSource>(
+    rng: &mut R,
+    g: &mut Gaussian,
+    power: f64,
+    dof: f64,
+) -> f64 {
+    sample_gamma(rng, g, dof, power / dof)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Xoshiro256pp;
+    use crate::util::mathstat::Welford;
+
+    fn moments(shape: f64, scale: f64, n: usize) -> (f64, f64) {
+        let mut rng = Xoshiro256pp::new(12);
+        let mut g = Gaussian::new();
+        let mut w = Welford::new();
+        for _ in 0..n {
+            w.push(sample_gamma(&mut rng, &mut g, shape, scale));
+        }
+        (w.mean(), w.std())
+    }
+
+    #[test]
+    fn gamma_moments_shape_large() {
+        let (m, s) = moments(5.6, 2.0, 100_000);
+        assert!((m - 11.2).abs() < 0.1, "mean {m}");
+        assert!((s - (5.6f64).sqrt() * 2.0).abs() < 0.1, "std {s}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_below_one() {
+        let (m, s) = moments(0.94, 1.0, 200_000);
+        assert!((m - 0.94).abs() < 0.02, "mean {m}");
+        assert!((s - (0.94f64).sqrt()).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn gamma_is_positive() {
+        let mut rng = Xoshiro256pp::new(9);
+        let mut g = Gaussian::new();
+        for _ in 0..10_000 {
+            assert!(sample_gamma(&mut rng, &mut g, 1.9, 0.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn intensity_bandwidth_programs_std() {
+        // doubling the degrees of freedom shrinks relative std by sqrt(2):
+        // the paper's "bandwidth programs the standard deviation" knob.
+        let mut rng = Xoshiro256pp::new(4);
+        let mut g = Gaussian::new();
+        let mut w_lo = Welford::new();
+        let mut w_hi = Welford::new();
+        for _ in 0..100_000 {
+            w_lo.push(sample_intensity(&mut rng, &mut g, 1.0, 1.9375)); // B=25 GHz
+            w_hi.push(sample_intensity(&mut rng, &mut g, 1.0, 6.625)); // B=150 GHz
+        }
+        assert!((w_lo.mean() - 1.0).abs() < 0.01);
+        assert!((w_hi.mean() - 1.0).abs() < 0.01);
+        let ratio = w_lo.std() / w_hi.std();
+        let expect = (6.625f64 / 1.9375).sqrt();
+        assert!((ratio - expect).abs() < 0.05, "ratio {ratio} expect {expect}");
+    }
+}

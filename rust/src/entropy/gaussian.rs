@@ -1,0 +1,93 @@
+//! Standard normal sampling (polar Box–Muller with caching).
+
+use super::BitSource;
+
+/// Gaussian sampler wrapping any uniform [`BitSource`].
+///
+/// Uses the Marsaglia polar method; the spare deviate is cached so the cost
+/// amortizes to ~one uniform pair per two normals.
+#[derive(Debug, Clone)]
+pub struct Gaussian {
+    spare: Option<f64>,
+}
+
+impl Default for Gaussian {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gaussian {
+    pub fn new() -> Self {
+        Self { spare: None }
+    }
+
+    /// One standard normal deviate.
+    pub fn sample<R: BitSource>(&mut self, rng: &mut R) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Fill a slice with i.i.d. standard normals (f32).
+    pub fn fill_f32<R: BitSource>(&mut self, rng: &mut R, out: &mut [f32]) {
+        for slot in out {
+            *slot = self.sample(rng) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Xoshiro256pp;
+    use crate::util::mathstat::Welford;
+
+    #[test]
+    fn moments_match_standard_normal() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut g = Gaussian::new();
+        let mut w = Welford::new();
+        let mut third = 0.0;
+        let n = 200_000;
+        for _ in 0..n {
+            let x = g.sample(&mut rng);
+            w.push(x);
+            third += x * x * x;
+        }
+        assert!(w.mean().abs() < 0.01, "mean {}", w.mean());
+        assert!((w.std() - 1.0).abs() < 0.01, "std {}", w.std());
+        assert!((third / n as f64).abs() < 0.05, "skew-ish {}", third / n as f64);
+    }
+
+    #[test]
+    fn tail_mass_reasonable() {
+        let mut rng = Xoshiro256pp::new(2);
+        let mut g = Gaussian::new();
+        let n = 100_000;
+        let beyond2 = (0..n).filter(|_| g.sample(&mut rng).abs() > 2.0).count();
+        let frac = beyond2 as f64 / n as f64;
+        // P(|Z| > 2) = 0.0455
+        assert!((frac - 0.0455).abs() < 0.005, "frac {frac}");
+    }
+
+    #[test]
+    fn fill_writes_every_slot() {
+        let mut rng = Xoshiro256pp::new(3);
+        let mut g = Gaussian::new();
+        let mut buf = vec![0.0f32; 1001];
+        g.fill_f32(&mut rng, &mut buf);
+        // probability of an exact 0.0 is negligible
+        assert!(buf.iter().all(|&x| x != 0.0));
+    }
+}

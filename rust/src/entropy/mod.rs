@@ -1,0 +1,51 @@
+//! Entropy substrate: PRNGs, distribution samplers, the chaotic-light
+//! source model, and a NIST SP800-22 test battery.
+//!
+//! The paper's core hardware claim is that amplified spontaneous emission
+//! (ASE) in an erbium-doped fiber is a *true* random number generator whose
+//! filtered intensity directly realizes Gaussian-programmable stochastic
+//! weights (mean = optical power, std = optical bandwidth), removing the
+//! pseudo-random-number-generation bottleneck of digital Bayesian inference.
+//!
+//! This module builds that stack from scratch (the offline crate cache has
+//! no `rand`):
+//!
+//! * [`xoshiro`] — xoshiro256++ PRNG + SplitMix64 seeding (the *digital
+//!   baseline* the paper compares against, and the simulator's noise base),
+//! * [`gaussian`] — Box–Muller / polar-method standard normal sampler,
+//! * [`gamma`] — Marsaglia–Tsang Gamma sampler (filtered thermal light has
+//!   Gamma-distributed intensity with `M = B·T + 1` degrees of freedom),
+//! * [`chaotic`] — the ASE chaotic-light source model used by the photonic
+//!   machine simulator and as the serving-time noise provider,
+//! * [`nist`] — seven tests from NIST SP800-22 (the paper cites passing
+//!   this battery), runnable over any bit stream.
+
+pub mod chaotic;
+pub mod gamma;
+pub mod gaussian;
+pub mod nist;
+pub mod xoshiro;
+
+pub use chaotic::ChaoticLightSource;
+pub use xoshiro::Xoshiro256pp;
+
+/// Common interface for anything that yields uniform 64-bit words.
+pub trait BitSource {
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_f64() * n as f64) as usize % n
+    }
+}

@@ -1,0 +1,167 @@
+//! xoshiro256++ PRNG (Blackman & Vigna) with SplitMix64 seeding.
+//!
+//! This is the *digital baseline* RNG: the paper's argument is that photonic
+//! entropy removes exactly this component from the probabilistic hot path.
+//! The simulator also uses it as the underlying uniform source that drives
+//! the physically-shaped (Gamma / Gaussian) photonic noise models.
+
+use super::BitSource;
+
+/// SplitMix64 — used to expand a single `u64` seed into xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ — 256-bit state, period 2^256 − 1, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // avoid the all-zero state (probability ~2^-256, but be exact)
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Self { s }
+    }
+
+    /// Jump ahead 2^128 steps — gives independent parallel streams.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180EC6D33CFD0ABA,
+            0xD5A61266F0C9392C,
+            0xA9582618E03FC9AA,
+            0x39ABDC4529B1661C,
+        ];
+        let mut t = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    for (ti, si) in t.iter_mut().zip(self.s.iter()) {
+                        *ti ^= si;
+                    }
+                }
+                self.raw_next();
+            }
+        }
+        self.s = t;
+    }
+
+    /// A forked stream 2^128 steps away (safe for parallel workers).
+    pub fn fork(&mut self) -> Self {
+        let mut child = self.clone();
+        child.jump();
+        // advance self too so successive forks differ
+        self.jump();
+        self.jump();
+        child
+    }
+
+    #[inline]
+    fn raw_next(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+impl BitSource for Xoshiro256pp {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.raw_next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Xoshiro256pp::new(42);
+        let mut b = Xoshiro256pp::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Xoshiro256pp::new(1);
+        let mut b = Xoshiro256pp::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let m = sum / 10_000.0;
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn jump_decorrelates() {
+        let mut a = Xoshiro256pp::new(9);
+        let mut b = a.clone();
+        b.jump();
+        let matches = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(matches, 0);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Xoshiro256pp::new(5);
+        let mut c1 = root.fork();
+        let mut c2 = root.fork();
+        let matches = (0..1000).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(matches, 0);
+    }
+
+    #[test]
+    fn bit_balance() {
+        let mut r = Xoshiro256pp::new(3);
+        let ones: u32 = (0..1000).map(|_| r.next_u64().count_ones()).sum();
+        let frac = ones as f64 / 64_000.0;
+        assert!((frac - 0.5).abs() < 0.01, "ones frac {frac}");
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Xoshiro256pp::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,267 @@
+//! Bounded MPMC channel (Mutex + Condvar), with close semantics.
+//!
+//! `std::sync::mpsc` is single-consumer; the dynamic batcher needs multiple
+//! workers pulling from one queue, so this is a small MPMC built from std
+//! primitives.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Shared<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    capacity: usize,
+}
+
+/// Sending half (cloneable).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half (cloneable).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Self {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Self {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+/// Create a bounded MPMC channel.
+pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(State {
+            items: VecDeque::new(),
+            closed: false,
+            capacity: capacity.max(1),
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: shared.clone(),
+        },
+        Receiver { shared },
+    )
+}
+
+/// Error returned when sending to a closed channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+impl<T> Sender<T> {
+    /// Blocking send; errors if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError(item));
+            }
+            if st.items.len() < st.capacity {
+                st.items.push_back(item);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel: receivers drain remaining items then get `None`.
+    pub fn close(&self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with timeout; `Ok(None)` = closed, `Err(())` = timed out.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Option<T>, ()> {
+        let mut st = self.shared.queue.lock().unwrap();
+        let deadline = std::time::Instant::now() + dur;
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, res) = self
+                .shared
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking beyond the first.
+    pub fn recv_many(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        if let Some(first) = self.recv() {
+            out.push(first);
+            let mut st = self.shared.queue.lock().unwrap();
+            while out.len() < max {
+                match st.items.pop_front() {
+                    Some(x) => out.push(x),
+                    None => break,
+                }
+            }
+            self.shared.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = channel(10);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let (tx, rx) = channel(10);
+        tx.send(1).unwrap();
+        tx.close();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(tx.send(2), Err(SendError(2)));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = channel::<usize>(64);
+        let n = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        tx.send(p * (n / 4) + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = rx.recv() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        tx.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_capacity_blocks_until_drained() {
+        let (tx, rx) = channel(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let tx2 = tx.clone();
+        let h = thread::spawn(move || {
+            tx2.send(3).unwrap(); // blocks until rx drains
+            3
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = channel::<u8>(1);
+        assert!(rx.recv_timeout(Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn recv_many_batches() {
+        let (tx, rx) = channel(16);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let got = rx.recv_many(3);
+        assert_eq!(got, vec![0, 1, 2]);
+        let got = rx.recv_many(10);
+        assert_eq!(got, vec![3, 4]);
+    }
+}

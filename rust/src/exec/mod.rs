@@ -1,0 +1,12 @@
+//! Execution substrate: thread pool, MPMC channel, cancellation token.
+//!
+//! The offline crate cache carries no `tokio`; the coordinator's event loop
+//! is thread-based, built on these primitives.
+
+pub mod cancel;
+pub mod channel;
+pub mod pool;
+
+pub use cancel::CancelToken;
+pub use channel::{channel, Receiver, Sender};
+pub use pool::ThreadPool;

@@ -1,0 +1,156 @@
+//! Fixed-size worker thread pool.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::channel::{channel, Sender};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs.  Panicking jobs are
+/// caught and counted; the pool survives them.
+pub struct ThreadPool {
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicU64>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize) -> Self {
+        let (tx, rx) = channel::<Job>(1024);
+        let panics = Arc::new(AtomicU64::new(0));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let panics = panics.clone();
+                std::thread::Builder::new()
+                    .name(format!("pbm-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panics.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx,
+            workers,
+            panics,
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool is shut down"));
+    }
+
+    /// Run a closure over each item of a slice in parallel, blocking until
+    /// all complete (scoped fork-join over the pool).
+    pub fn scoped_for_each<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send + 'static,
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = channel::<()>(items.len().max(1));
+        let n = items.len();
+        for item in items {
+            let f = f.clone();
+            let done = done_tx.clone();
+            self.execute(move || {
+                f(item);
+                let _ = done.send(());
+            });
+        }
+        for _ in 0..n {
+            done_rx.recv();
+        }
+    }
+
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel::<()>(128);
+        for _ in 0..100 {
+            let c = counter.clone();
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn survives_panicking_jobs() {
+        let pool = ThreadPool::new(1); // single worker: panic job completes first
+        pool.execute(|| panic!("boom"));
+        let (tx, rx) = channel::<u8>(1);
+        pool.execute(move || {
+            let _ = tx.send(42);
+        });
+        assert_eq!(rx.recv(), Some(42));
+        assert!(pool.panic_count() >= 1);
+    }
+
+    #[test]
+    fn scoped_for_each_completes() {
+        let pool = ThreadPool::new(3);
+        let sum = Arc::new(AtomicUsize::new(0));
+        let s2 = sum.clone();
+        pool.scoped_for_each((1..=100usize).collect(), move |x| {
+            s2.fetch_add(x, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = c.clone();
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must block until queued jobs are done
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,9 @@
+//! Paper-experiment drivers: the code that regenerates every figure/table.
+//!
+//! Each function here corresponds to a row of DESIGN.md's experiment index
+//! and is callable from `pbm report ...`, the bench binaries, and the
+//! examples — one implementation, three surfaces.
+
+pub mod uncertainty;
+
+pub use uncertainty::{eval_split, SplitScores, UncertaintyReport};

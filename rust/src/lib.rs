@@ -1,0 +1,46 @@
+//! # photonic-bayes
+//!
+//! Reproduction of *"Uncertainty Reasoning with Photonic Bayesian Machines"*
+//! (Brückerhoff-Plückelmann et al., 2025) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L1** — a Pallas kernel modeling the machine's probabilistic nine-tap
+//!   convolution (build time, `python/compile/kernels/`),
+//! * **L2** — the hybrid Bayesian Neural Network and its SVI training step in
+//!   JAX, AOT-lowered to HLO text artifacts (`python/compile/model.py`),
+//! * **L3** — this crate: the serving coordinator, the photonic-hardware
+//!   simulator substrate, the SVI training driver, and the PJRT runtime that
+//!   executes the AOT artifacts.  Python never runs on the request path.
+//!
+//! The photonic Bayesian machine itself is simulated faithfully in
+//! [`photonics`]: a chaotic ASE light source whose per-channel filtered
+//! intensity is Gamma-distributed with `M = B·T + 1` degrees of freedom (so
+//! channel *power* programs a weight's mean and channel *bandwidth* its
+//! standard deviation), an 8-bit 80 GSPS DAC/EOM input path, a chirped
+//! grating applying a −93.1 ps/THz frequency-dependent group delay (one
+//! symbol per 403 GHz channel), and a photodetector + 8-bit ADC readout.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper figure/table to a bench target.
+
+pub mod benchkit;
+pub mod bnn;
+pub mod calibration;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod entropy;
+pub mod exec;
+pub mod experiments;
+pub mod photonics;
+pub mod proptest_mini;
+pub mod runtime;
+pub mod server;
+pub mod svi;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,513 @@
+//! `pbm` — the photonic-Bayesian-machine coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`      — SVI training via the AOT `train_step` HLO
+//! * `eval`       — accuracy of a trained model (surrogate or photonic)
+//! * `report`     — regenerate a paper figure/table (fig2, fig2e, fig4,
+//!                  fig5, headline, nist)
+//! * `calibrate`  — the Fig. 2(c,d) computation-error experiment
+//! * `nist`       — SP800-22 battery on the chaotic-light source
+//! * `serve`      — TCP serving gateway (router + dynamic batcher + engines)
+//! * `classify`   — client: classify a test image against a running server
+//! * `info`       — artifact inventory
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::calibration;
+use photonic_bayes::cli::Args;
+use photonic_bayes::coordinator::service::ServiceConfig;
+use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode, Router};
+use photonic_bayes::data::{Dataset, DatasetKind};
+use photonic_bayes::entropy::{nist, ChaoticLightSource};
+use photonic_bayes::exec::CancelToken;
+use photonic_bayes::experiments::uncertainty::{build_report, eval_split};
+use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
+use photonic_bayes::server::{serve, Client, ServerOptions};
+use photonic_bayes::svi::{self, TrainConfig};
+use photonic_bayes::util::mathstat::linfit;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("train") => cmd_train(args),
+        Some("eval") => cmd_eval(args),
+        Some("report") => cmd_report(args),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("nist") => cmd_nist(args),
+        Some("serve") => cmd_serve(args),
+        Some("classify") => cmd_classify(args),
+        Some("info") => cmd_info(args),
+        other => {
+            print_usage();
+            if other.is_none() {
+                Ok(())
+            } else {
+                Err(anyhow!("unknown subcommand {other:?}"))
+            }
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "pbm {} — photonic Bayesian machine coordinator
+
+USAGE: pbm <subcommand> [flags]
+
+  train     --dataset digits|blood [--epochs N --lr F --kl-scale F --warmup N
+            --seed N --eval-every N --out STEM]
+  eval      --dataset D [--params FILE --samples N --mode photonic|surrogate
+            --limit N --split test|ood|ambiguous|fashion]
+  report    fig2 | fig2e | fig4 | fig5 | headline | nist [--params FILE
+            --samples N --mode M --limit N]
+  calibrate [--kernels N --outputs M --seed N]
+  nist      [--bits N --bw GHZ]
+  serve     [--addr HOST:PORT --datasets digits,blood --mode M --samples N
+            --mi-threshold F --max-batch N --max-wait-ms N]
+  classify  [--addr HOST:PORT --dataset D --split S --index I]
+  info
+",
+        photonic_bayes::version()
+    );
+}
+
+/// Default parameter file for a dataset: the trained checkpoint if present,
+/// otherwise the init params (with a warning).
+fn default_params(root: &Path, dataset: &str) -> (PathBuf, bool) {
+    let trained = root.join(dataset).join("params_trained.bin");
+    if trained.exists() {
+        (trained, true)
+    } else {
+        (root.join(dataset).join("params_init.bin"), false)
+    }
+}
+
+fn parse_mode(s: &str) -> Result<ExecMode> {
+    match s {
+        "photonic" => Ok(ExecMode::Photonic),
+        "surrogate" => Ok(ExecMode::Surrogate),
+        other => Err(anyhow!("mode must be photonic|surrogate, got {other}")),
+    }
+}
+
+fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
+    let root = artifacts_root();
+    let arts = ModelArtifacts::load_dataset(&root, dataset)?;
+    let params_path = match args.get("params") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let (p, trained) = default_params(&root, dataset);
+            if !trained {
+                eprintln!(
+                    "warning: no trained checkpoint, using init params ({})",
+                    p.display()
+                );
+            }
+            p
+        }
+    };
+    let params = ParamStore::load_bin(&arts.meta, &params_path)?;
+    let cfg = EngineConfig {
+        n_samples: args.get_usize("samples", 10)?,
+        mode: parse_mode(&args.get_or("mode", "photonic"))?,
+        policy: UncertaintyPolicy::ood_only(args.get_f64("mi-threshold", 0.0185)?),
+        calibrate: !args.has("no-calibrate"),
+        machine: MachineConfig::default(),
+        noise_bw_ghz: args.get_f64("noise-bw", 150.0)?,
+        seed: args.get_u64("seed", 42)?,
+    };
+    Engine::new(arts, params, cfg)
+}
+
+fn load_split(dataset: &str, split: &str) -> Result<Dataset> {
+    let data_dir = artifacts_root().join("data");
+    let (stem, kind) = match (dataset, split) {
+        ("digits", "train") => ("digits_train", DatasetKind::InDomain),
+        ("digits", "test") => ("digits_test", DatasetKind::InDomain),
+        ("digits", "ambiguous") => ("ambiguous", DatasetKind::Aleatoric),
+        ("digits", "fashion") => ("fashion", DatasetKind::Epistemic),
+        ("blood", "train") => ("blood_train", DatasetKind::InDomain),
+        ("blood", "test") => ("blood_test", DatasetKind::InDomain),
+        ("blood", "ood") => ("blood_ood", DatasetKind::Epistemic),
+        _ => return Err(anyhow!("unknown split {dataset}/{split}")),
+    };
+    Dataset::load(&data_dir, stem, kind)
+}
+
+// ---------------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------------
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| anyhow!("--dataset required"))?
+        .to_string();
+    let root = artifacts_root();
+    let arts = ModelArtifacts::load_dataset(&root, &dataset)?;
+    let train_ds = load_split(&dataset, "train")?;
+    let test_ds = load_split(&dataset, "test")?;
+    let params = ParamStore::load_init(&arts.meta, &root.join(&dataset))?;
+
+    let cfg = TrainConfig {
+        epochs: args.get_usize("epochs", 12)?,
+        lr: args.get_f64("lr", 2e-3)? as f32,
+        kl_scale: args.get_f64("kl-scale", 1.0)? as f32,
+        kl_warmup_epochs: args.get_usize("warmup", 4)?,
+        seed: args.get_u64("seed", 1234)?,
+        eval_every: args.get_usize("eval-every", 0)?,
+        ..TrainConfig::default()
+    };
+    println!("training {dataset}: {cfg:?}");
+    let (params, log) = svi::train(&arts, &train_ds, Some(&test_ds), params, &cfg)?;
+
+    let eval = svi::evaluate(&arts, &test_ds, &params, 10, cfg.seed)?;
+    println!(
+        "final surrogate test accuracy: {:.2}% over {} inputs",
+        eval.accuracy * 100.0,
+        eval.n
+    );
+
+    let stem = args.get_or(
+        "out",
+        &format!("{}/{dataset}/params_trained", root.display()),
+    );
+    svi::checkpoint::save(Path::new(&stem), &params, &log)?;
+    println!("checkpoint: {stem}.bin / {stem}.log.json");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// eval
+// ---------------------------------------------------------------------------
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dataset = args
+        .get("dataset")
+        .ok_or_else(|| anyhow!("--dataset required"))?
+        .to_string();
+    let split = args.get_or("split", "test");
+    let limit = args.get_usize("limit", usize::MAX)?;
+    let ds = load_split(&dataset, &split)?;
+    let mut engine = build_engine(args, &dataset)?;
+    let scores = eval_split(&mut engine, &ds, limit)?;
+    println!(
+        "{dataset}/{split} ({} inputs, mode {:?}): accuracy {:.2}%  mean MI {:.4}  mean SE {:.4}",
+        scores.labels.len(),
+        engine.mode(),
+        scores.accuracy() * 100.0,
+        photonic_bayes::util::mathstat::mean(&scores.mi),
+        photonic_bayes::util::mathstat::mean(&scores.se),
+    );
+    println!("{}", engine.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// report — the paper figures
+// ---------------------------------------------------------------------------
+
+fn cmd_report(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("fig2") => report_fig2(args),
+        Some("fig2e") => report_fig2e(),
+        Some("fig4b") => report_fig4b(args),
+        Some("fig4") => report_uncertainty(args, "blood"),
+        Some("fig5") => report_uncertainty(args, "digits"),
+        Some("headline") => report_headline(),
+        Some("nist") => cmd_nist(args),
+        other => Err(anyhow!(
+            "report target {other:?}; want fig2|fig2e|fig4|fig5|headline|nist"
+        )),
+    }
+}
+
+fn report_fig2(args: &Args) -> Result<()> {
+    let kernels = args.get_usize("kernels", 25)?;
+    let outputs = args.get_usize("outputs", 1024)?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut machine = PhotonicMachine::with_defaults(seed);
+    let rep = calibration::computation_error_experiment(&mut machine, kernels, outputs, seed ^ 99);
+    println!(
+        "Fig. 2(c,d) — computation error over {} random kernels",
+        rep.kernels
+    );
+    println!("  mean error: {:.3}   [paper: 0.158]", rep.mean_error);
+    println!("  std  error: {:.3}   [paper: 0.266]", rep.std_error);
+    println!(
+        "  measured-vs-target slope: mean {:.3}, std {:.3} (ideal 1.0)",
+        rep.mean_slope, rep.std_slope
+    );
+    Ok(())
+}
+
+fn report_fig2e() -> Result<()> {
+    let grating = photonic_bayes::photonics::grating::ChirpedGrating::paper_device(9, 0.5, 7);
+    println!("Fig. 2(e) — group delay vs channel frequency");
+    let mut fs = Vec::new();
+    let mut ds = Vec::new();
+    for k in 0..9 {
+        let f = photonic_bayes::photonics::grating::channel_frequency_thz(k, 9);
+        let d = grating.channel_delay_ps(k);
+        println!("  ch {k}: f = {f:.3} THz, delay = {d:8.2} ps");
+        fs.push(f);
+        ds.push(d);
+    }
+    let (_, slope, r2) = linfit(&fs, &ds);
+    println!("  fitted dispersion: {slope:.1} ps/THz (r2 = {r2:.6})   [paper: -93.1 ps/THz]");
+    println!(
+        "  grating latency: {:.1} ns (sub-100 ns claim)",
+        grating.latency_ns()
+    );
+    Ok(())
+}
+
+/// Fig. 4(b): evolution of per-weight posterior sigma during SVI, read from
+/// the training log the checkpoint saver writes next to the parameters.
+fn report_fig4b(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "blood");
+    let default_log = format!(
+        "{}/{dataset}/params_trained.log.json",
+        artifacts_root().display()
+    );
+    let path = args.get_or("log", &default_log);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("{path}: {e} (run `pbm train --dataset {dataset}` first)"))?;
+    let j = photonic_bayes::util::json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let epochs = j
+        .req("epochs")
+        .map_err(|e| anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("bad log"))?;
+    println!("Fig. 4(b) — posterior sigma evolution of three tracked taps ({dataset}):");
+    println!("{:>6} {:>12} {:>12} {:>12} {:>10}", "epoch", "sigma[0]", "sigma[100]", "sigma[400]", "train acc");
+    for e in epochs {
+        let tr = e
+            .get("sigma_traces")
+            .and_then(|v| v.as_f64_vec())
+            .unwrap_or_default();
+        println!(
+            "{:>6} {:>12.5} {:>12.5} {:>12.5} {:>10.3}",
+            e.get("epoch").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+            tr.first().copied().unwrap_or(f64::NAN),
+            tr.get(1).copied().unwrap_or(f64::NAN),
+            tr.get(2).copied().unwrap_or(f64::NAN),
+            e.get("train_acc").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+        );
+    }
+    println!("(mean and std of each weight distribution are learned from the data — paper Fig. 4b)");
+    Ok(())
+}
+
+fn report_uncertainty(args: &Args, dataset: &str) -> Result<()> {
+    let limit = args.get_usize("limit", 1000)?;
+    let mut engine = build_engine(args, dataset)?;
+    let id = eval_split(&mut engine, &load_split(dataset, "test")?, limit)?;
+    let (epi, alea) = if dataset == "blood" {
+        (
+            eval_split(&mut engine, &load_split(dataset, "ood")?, limit)?,
+            None,
+        )
+    } else {
+        (
+            eval_split(&mut engine, &load_split(dataset, "fashion")?, limit)?,
+            Some(eval_split(
+                &mut engine,
+                &load_split(dataset, "ambiguous")?,
+                limit,
+            )?),
+        )
+    };
+    let n_classes = engine.n_classes();
+    let rep = build_report(id, epi, alea, n_classes);
+    let figure = if dataset == "blood" { "Fig. 4" } else { "Fig. 5" };
+    println!(
+        "{figure} — uncertainty evaluation on '{dataset}' (mode {:?})",
+        engine.mode()
+    );
+    print!("{}", rep.summary());
+    println!(
+        "\nconfusion matrix with rejection @ MI > {:.5}:",
+        rep.mi_threshold
+    );
+    let names: Vec<String> = (0..n_classes).map(|c| c.to_string()).collect();
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    println!("{}", rep.confusion.render(&name_refs));
+    println!("{}", engine.report());
+    Ok(())
+}
+
+fn report_headline() -> Result<()> {
+    let h = timing::headline();
+    println!("Headline metrics (derived from architecture constants):");
+    println!(
+        "  symbol period / conv latency: {:.1} ps      [paper: 37.5 ps]",
+        h.symbol_period_ps
+    );
+    println!(
+        "  probabilistic convolutions:   {:.2} G/s     [paper: 26.7 G/s]",
+        h.convolutions_per_sec / 1e9
+    );
+    println!("  probabilistic MACs:           {:.1} G/s", h.macs_per_sec / 1e9);
+    println!(
+        "  digital interface:            {:.2} Tbit/s  [paper: 1.28 Tbit/s]",
+        h.interface_tbit_per_sec
+    );
+    println!(
+        "  grating delay step:           {:.2} ps/ch   [paper: 1 symbol/403 GHz]",
+        h.channel_delay_step_ps
+    );
+    println!(
+        "  grating latency:              {:.1} ns      [paper: sub-100 ns]",
+        h.grating_latency_ns
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// calibrate / nist
+// ---------------------------------------------------------------------------
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    report_fig2(args)
+}
+
+fn cmd_nist(args: &Args) -> Result<()> {
+    let bits = args.get_usize("bits", 100_000)?;
+    let bw = args.get_f64("bw", 100.0)?;
+    let mut src = ChaoticLightSource::with_defaults(args.get_u64("seed", 2024)?);
+    println!("NIST SP800-22 battery over {bits} bits from the chaotic source (B = {bw} GHz):");
+    let stream = src.extract_bits(bw, bits);
+    let mut all_pass = true;
+    for r in nist::run_battery(&stream) {
+        println!(
+            "  {:<18} p = {:.4}  {}",
+            r.name,
+            r.p_value,
+            if r.pass { "PASS" } else { "FAIL" }
+        );
+        all_pass &= r.pass;
+    }
+    println!(
+        "overall: {}",
+        if all_pass { "PASS (alpha = 0.01)" } else { "FAIL" }
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve / classify
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = artifacts_root();
+    let datasets = args.get_or("datasets", "digits,blood");
+    let mut router = Router::new();
+    for ds in datasets.split(',') {
+        let (params_path, trained) = default_params(&root, ds);
+        if !trained {
+            eprintln!("warning: serving '{ds}' with untrained init params");
+        }
+        let engine_cfg = EngineConfig {
+            n_samples: args.get_usize("samples", 10)?,
+            mode: parse_mode(&args.get_or("mode", "photonic"))?,
+            policy: UncertaintyPolicy::ood_only(args.get_f64("mi-threshold", 0.0185)?),
+            calibrate: !args.has("no-calibrate"),
+            machine: MachineConfig::default(),
+            noise_bw_ghz: 150.0,
+            seed: args.get_u64("seed", 42)?,
+        };
+        let svc_cfg = ServiceConfig {
+            max_batch: args.get_usize("max-batch", 8)?,
+            max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+            queue_depth: 256,
+        };
+        router.register(photonic_bayes::coordinator::service::EngineHandle::spawn(
+            &root,
+            ds,
+            Some(&params_path),
+            engine_cfg,
+            svc_cfg,
+        )?);
+    }
+    let opts = ServerOptions {
+        addr: args.get_or("addr", "127.0.0.1:7878"),
+        workers: args.get_usize("workers", 8)?,
+    };
+    let cancel = CancelToken::new();
+    serve(router, opts, cancel, |addr| println!("listening on {addr}"))
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let dataset = args.get_or("dataset", "digits");
+    let split = args.get_or("split", "test");
+    let index = args.get_usize("index", 0)?;
+    let ds = load_split(&dataset, &split)?;
+    if index >= ds.n {
+        return Err(anyhow!("index {index} out of range ({} images)", ds.n));
+    }
+    let mut client = Client::connect(&addr)?;
+    let resp = client.classify(&dataset, ds.image(index))?;
+    println!("true label: {}", ds.labels[index]);
+    println!("response:   {}", resp.to_string_pretty());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// info
+// ---------------------------------------------------------------------------
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let root = artifacts_root();
+    println!("artifacts root: {}", root.display());
+    for ds in ["digits", "blood"] {
+        let dir = root.join(ds);
+        if !dir.join("meta.json").exists() {
+            println!("  {ds}: MISSING (run `make artifacts`)");
+            continue;
+        }
+        let arts = ModelArtifacts::load(&dir)?;
+        let m = &arts.meta;
+        let (params, trained) = default_params(&root, ds);
+        println!(
+            "  {ds}: {} classes, {}x{}x{} inputs, {} params, prob block {}ch@{}x{}, {} entry points, params: {} ({})",
+            m.n_classes,
+            m.in_channels,
+            m.img_hw,
+            m.img_hw,
+            m.num_params,
+            m.prob_ch,
+            m.prob_hw,
+            m.prob_hw,
+            arts.entry_points().len(),
+            params.file_name().unwrap().to_string_lossy(),
+            if trained { "trained" } else { "INIT ONLY" },
+        );
+    }
+    let h = timing::headline();
+    println!(
+        "machine: {} channels, {:.1} ps/conv, {:.2} Tbit/s interface",
+        timing::NUM_CHANNELS,
+        h.symbol_period_ps,
+        h.interface_tbit_per_sec
+    );
+    Ok(())
+}

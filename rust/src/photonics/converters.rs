@@ -1,0 +1,85 @@
+//! 8-bit DAC / ADC models (the machine's digital interface).
+//!
+//! Symmetric signed quantization on a full-scale range, mirroring the
+//! `fake_quant8` straight-through kernel of the L2 surrogate exactly: the
+//! training-time STE and the serving-time hardware must round identically,
+//! or the surrogate would be biased against the machine.
+
+/// Symmetric 8-bit quantizer: `q = clip(round(x/scale*127), -128, 127)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub scale: f32,
+}
+
+impl Quantizer {
+    pub fn new(scale: f32) -> Self {
+        assert!(scale > 0.0);
+        Self { scale }
+    }
+
+    /// Quantize to the integer code (-128..=127).
+    #[inline]
+    pub fn code(&self, x: f32) -> i16 {
+        let q = (x / self.scale * 127.0).round();
+        q.clamp(-128.0, 127.0) as i16
+    }
+
+    /// Quantize and reconstruct (the value the analog domain actually sees).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.code(x) as f32 * self.scale / 127.0
+    }
+
+    /// Quantization step size.
+    pub fn lsb(&self) -> f32 {
+        self.scale / 127.0
+    }
+
+    /// In-place quantization of a buffer (DAC feeding the EOM).
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_identity_on_grid() {
+        let q = Quantizer::new(4.0);
+        for code in -128i16..=127 {
+            let x = code as f32 * 4.0 / 127.0;
+            assert_eq!(q.code(x), code);
+            assert!((q.quantize(x) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let q = Quantizer::new(4.0);
+        assert_eq!(q.code(100.0), 127);
+        assert_eq!(q.code(-100.0), -128);
+    }
+
+    #[test]
+    fn error_bounded_by_half_lsb() {
+        let q = Quantizer::new(8.0);
+        for i in 0..1000 {
+            let x = -7.9 + 0.0158 * i as f32;
+            assert!((q.quantize(x) - x).abs() <= q.lsb() / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_python_fake_quant8() {
+        // identical formula as kernels/photonic_conv.py::fake_quant8
+        let q = Quantizer::new(4.0);
+        let cases = [(0.5f32, 0.503937f32), (-1.234, -1.228346), (3.99, 4.0)];
+        for (x, want) in cases {
+            assert!((q.quantize(x) - want).abs() < 1e-4, "{x}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Balanced photodetector + receiver-noise model.
+//!
+//! The detector incoherently sums the time-shifted channel powers; balanced
+//! (differential) detection of a plus- and minus-rail realizes signed
+//! weights.  Receiver noise lumps thermal noise, shot noise, and residual
+//! RIN into a single additive Gaussian term referred to the output, which is
+//! then quantized by the 8-bit ADC.
+
+use super::converters::Quantizer;
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::Xoshiro256pp;
+
+#[derive(Debug, Clone)]
+pub struct Detector {
+    adc: Quantizer,
+    /// RMS receiver noise referred to the output (same units as the result).
+    noise_rms: f32,
+    rng: Xoshiro256pp,
+    gauss: Gaussian,
+}
+
+impl Detector {
+    pub fn new(adc_full_scale: f32, noise_rms: f32, seed: u64) -> Self {
+        Self {
+            adc: Quantizer::new(adc_full_scale),
+            noise_rms,
+            rng: Xoshiro256pp::new(seed),
+            gauss: Gaussian::new(),
+        }
+    }
+
+    /// Read out one already-summed differential power value: add receiver
+    /// noise, then ADC-quantize.
+    #[inline]
+    pub fn read(&mut self, summed: f32) -> f32 {
+        let noisy = summed + self.noise_rms * self.gauss.sample(&mut self.rng) as f32;
+        self.adc.quantize(noisy)
+    }
+
+    pub fn adc_lsb(&self) -> f32 {
+        self.adc.lsb()
+    }
+
+    pub fn full_scale(&self) -> f32 {
+        self.adc.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::Welford;
+
+    #[test]
+    fn noiseless_detector_is_pure_quantizer() {
+        let mut d = Detector::new(8.0, 0.0, 1);
+        let q = Quantizer::new(8.0);
+        for i in 0..100 {
+            let x = -7.5 + 0.15 * i as f32;
+            assert_eq!(d.read(x), q.quantize(x));
+        }
+    }
+
+    #[test]
+    fn receiver_noise_has_programmed_rms() {
+        let mut d = Detector::new(100.0, 0.5, 2);
+        let mut w = Welford::new();
+        for _ in 0..50_000 {
+            w.push(d.read(3.0) as f64);
+        }
+        assert!((w.mean() - 3.0).abs() < 0.02);
+        // total std = receiver noise + ADC quantization noise (lsb^2 / 12)
+        let lsb = (100.0f64 / 127.0).powi(2) / 12.0;
+        let expect = (0.25 + lsb).sqrt();
+        assert!((w.std() - expect).abs() < 0.02, "std {} expect {expect}", w.std());
+    }
+
+    #[test]
+    fn output_clips_at_full_scale() {
+        let mut d = Detector::new(8.0, 0.0, 3);
+        assert!(d.read(20.0) <= 8.0);
+        assert!(d.read(-20.0) >= -8.1);
+    }
+}

@@ -1,0 +1,87 @@
+//! Broadband electro-optic modulator (EOM) input path.
+//!
+//! The EOM imprints the (DAC-quantized) input vector simultaneously onto all
+//! spectral channels as a transmission factor `t ∈ [0, 1]`.  Activations
+//! reaching the photonic stage are non-negative (post-ReLU) and already on
+//! the 8-bit DAC grid (`fwd_pre` ends in `fake_quant8`), so the modulator
+//! maps `x / full_scale` onto its linear transmission range.  A small static
+//! extinction floor models finite modulator extinction ratio.
+
+use super::converters::Quantizer;
+
+#[derive(Debug, Clone)]
+pub struct Eom {
+    dac: Quantizer,
+    /// Transmission floor from finite extinction ratio (e.g. 30 dB -> 1e-3).
+    extinction_floor: f32,
+}
+
+impl Eom {
+    pub fn new(full_scale: f32, extinction_db: f32) -> Self {
+        Self {
+            dac: Quantizer::new(full_scale),
+            extinction_floor: 10f32.powf(-extinction_db / 10.0),
+        }
+    }
+
+    /// Encode one activation into a channel transmission factor in [floor, 1].
+    #[inline]
+    pub fn transmission(&self, x: f32) -> f32 {
+        let xq = self.dac.quantize(x.max(0.0));
+        let t = xq / self.dac.scale;
+        t.clamp(self.extinction_floor, 1.0)
+    }
+
+    /// Encode a full input stream (time-major) into transmissions.
+    pub fn encode_stream(&self, xs: &[f32], out: &mut [f32]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.transmission(x);
+        }
+    }
+
+    pub fn full_scale(&self) -> f32 {
+        self.dac.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmission_is_normalized_and_clipped() {
+        let eom = Eom::new(4.0, 30.0);
+        assert!((eom.transmission(4.0) - 1.0).abs() < 1e-6);
+        assert!((eom.transmission(2.0) - 0.5).abs() < 0.01);
+        // negative inputs are floored (activations are non-negative by design)
+        assert!(eom.transmission(-3.0) <= 1e-3 + 1e-9);
+        // overdrive clips at full transmission
+        assert!((eom.transmission(40.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extinction_floor_applied() {
+        let eom = Eom::new(4.0, 30.0);
+        let t = eom.transmission(0.0);
+        assert!((t - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_encoding_matches_scalar() {
+        let eom = Eom::new(8.0, 25.0);
+        let xs = [0.0, 1.0, 7.5, 8.0];
+        let mut out = [0.0f32; 4];
+        eom.encode_stream(&xs, &mut out);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(out[i], eom.transmission(x));
+        }
+    }
+
+    #[test]
+    fn quantization_grid_visible() {
+        let eom = Eom::new(4.0, 30.0);
+        // two inputs inside the same LSB bucket map to the same transmission
+        assert_eq!(eom.transmission(1.000), eom.transmission(1.010));
+    }
+}

@@ -1,0 +1,133 @@
+//! Waveguide-integrated chirped grating (the frequency→time coupler).
+//!
+//! The grating's period is swept along a 5.68 cm SiN spiral so each spectral
+//! channel reflects at a different depth, inducing a frequency-dependent
+//! group delay of −93.1 ps/THz (paper Fig. 2(b,e)).  With a 403 GHz channel
+//! grid this shifts adjacent channels by exactly one symbol (37.5 ps), which
+//! is what turns the nine WDM channels into the nine taps of a sliding
+//! convolution window.
+
+use super::timing;
+
+#[derive(Debug, Clone)]
+pub struct ChirpedGrating {
+    /// Dispersion slope (ps/THz).
+    pub dispersion_ps_per_thz: f64,
+    /// Reference frequency (THz) whose delay is taken as zero.
+    pub f0_thz: f64,
+    /// Per-channel residual delay ripple (ps), a deterministic fabrication
+    /// signature (measured once, fixed thereafter).
+    ripple_ps: Vec<f64>,
+}
+
+impl ChirpedGrating {
+    /// Build the paper's grating for an `n_channels` grid.  `ripple_rms_ps`
+    /// sets the fabrication-ripple magnitude (0.0 for an ideal device).
+    pub fn paper_device(n_channels: usize, ripple_rms_ps: f64, seed: u64) -> Self {
+        use crate::entropy::{BitSource, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::new(seed);
+        let ripple = (0..n_channels)
+            .map(|_| (rng.next_f64() * 2.0 - 1.0) * ripple_rms_ps * 1.732)
+            .collect();
+        Self {
+            dispersion_ps_per_thz: timing::DISPERSION_PS_PER_THZ,
+            f0_thz: timing::CENTER_THZ,
+            ripple_ps: ripple,
+        }
+    }
+
+    /// Group delay (ps) at an optical frequency, relative to `f0`.
+    pub fn delay_ps(&self, f_thz: f64) -> f64 {
+        self.dispersion_ps_per_thz * (f_thz - self.f0_thz)
+    }
+
+    /// Group delay of channel `k` on the grid (including its ripple).
+    pub fn channel_delay_ps(&self, k: usize) -> f64 {
+        let f = channel_frequency_thz(k, self.ripple_ps.len());
+        self.delay_ps(f) + self.ripple_ps.get(k).copied().unwrap_or(0.0)
+    }
+
+    /// Integer symbol shift of channel `k` (the convolution tap index), and
+    /// the residual misalignment as a fraction of the symbol period.
+    pub fn channel_symbol_shift(&self, k: usize) -> (i64, f64) {
+        let t_sym = timing::headline().symbol_period_ps;
+        let d = self.channel_delay_ps(k) - self.channel_delay_ps(0);
+        let shift = (d / t_sym).round();
+        let resid = (d - shift * t_sym) / t_sym;
+        (shift as i64, resid)
+    }
+
+    /// Tap alignment factor in (0, 1]: eye-closure from residual timing
+    /// misalignment (linear model: a symbol sampled `|r|·T` off-center loses
+    /// `|r|` of its energy to the neighbor slots).
+    pub fn alignment_factor(&self, k: usize) -> f64 {
+        let (_, r) = self.channel_symbol_shift(k);
+        1.0 - r.abs()
+    }
+
+    /// Propagation latency through the spiral (ns).
+    pub fn latency_ns(&self) -> f64 {
+        timing::headline().grating_latency_ns
+    }
+}
+
+/// Frequency of channel `k` on the paper's grid (403 GHz spacing around
+/// 194 THz), `k = 0..n`.
+pub fn channel_frequency_thz(k: usize, n: usize) -> f64 {
+    let offset = k as f64 - (n as f64 - 1.0) / 2.0;
+    timing::CENTER_THZ + offset * timing::SPACING_GHZ / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::linfit;
+
+    #[test]
+    fn grid_is_centered() {
+        let f4 = channel_frequency_thz(4, 9);
+        assert!((f4 - 194.0).abs() < 1e-9);
+        let spacing = channel_frequency_thz(1, 9) - channel_frequency_thz(0, 9);
+        assert!((spacing - 0.403).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delay_slope_is_dispersion() {
+        // the Fig. 2(e) measurement: delay vs channel frequency slope
+        let g = ChirpedGrating::paper_device(9, 0.0, 0);
+        let f: Vec<f64> = (0..9).map(|k| channel_frequency_thz(k, 9)).collect();
+        let d: Vec<f64> = (0..9).map(|k| g.channel_delay_ps(k)).collect();
+        let (_a, slope, r2) = linfit(&f, &d);
+        assert!((slope - (-93.1)).abs() < 0.01, "slope {slope}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn one_symbol_shift_per_channel() {
+        let g = ChirpedGrating::paper_device(9, 0.0, 0);
+        for k in 0..9 {
+            let (shift, resid) = g.channel_symbol_shift(k);
+            // dispersion is negative: higher channel index -> earlier arrival
+            assert_eq!(shift, -(k as i64), "channel {k}");
+            assert!(resid.abs() < 0.02, "resid {resid}");
+        }
+    }
+
+    #[test]
+    fn ripple_reduces_alignment() {
+        let ideal = ChirpedGrating::paper_device(9, 0.0, 1);
+        let rough = ChirpedGrating::paper_device(9, 2.0, 1);
+        let a_ideal: f64 = (0..9).map(|k| ideal.alignment_factor(k)).sum();
+        let a_rough: f64 = (0..9).map(|k| rough.alignment_factor(k)).sum();
+        assert!(a_rough < a_ideal);
+        for k in 0..9 {
+            assert!(rough.alignment_factor(k) > 0.8);
+        }
+    }
+
+    #[test]
+    fn latency_is_sub_100ns() {
+        let g = ChirpedGrating::paper_device(9, 0.0, 0);
+        assert!(g.latency_ns() < 100.0);
+    }
+}

@@ -1,0 +1,657 @@
+//! The photonic Bayesian machine: composition of source, EOM, grating,
+//! detector — programmed with probabilistic weight kernels, streaming
+//! convolutions.
+//!
+//! ## Weight encoding (paper Fig. 1(c) / Fig. S2)
+//!
+//! Tap `k` is a differential pair of chaotic rails with mean powers
+//! `P⁺, P⁻` and shared speckle degrees of freedom `M = B·T + 1`:
+//!
+//! ```text
+//!   w_k(t) = g·a_k·(I⁺_k(t) − I⁻_k(t)),   I± ~ Gamma(M, P±/M)
+//!   E[w]   = g·a_k·(P⁺ − P⁻)              (power difference -> mean)
+//!   Std[w] = g·a_k·sqrt((P⁺² + P⁻²)/M)    (bandwidth -> std)
+//! ```
+//!
+//! where `g` is the transimpedance gain and `a_k` the grating alignment
+//! factor.  Programming inverts these relations; the bandwidth clamp
+//! `B ∈ [25, 150] GHz` makes small relative stds unrealizable — the same
+//! hardware floor the L2 surrogate's straight-through estimator applies.
+//!
+//! ## Actuator error and feedback calibration
+//!
+//! Loading a program into "hardware" applies multiplicative actuator error
+//! to the commanded powers/bandwidths (spectral-shaper inaccuracy).  The
+//! [`crate::calibration`] loop measures realized weight moments via probe
+//! convolutions and iteratively corrects the command — the paper's
+//! "iteratively program ... by computing test convolutions and calculating
+//! the difference between the target and programmed distributions".
+
+use super::converters::Quantizer;
+use super::detector::Detector;
+use super::eom::Eom;
+use super::grating::ChirpedGrating;
+use super::timing::{self, OpticalClock};
+use crate::entropy::chaotic::{ChaoticLightSource, SourceConfig};
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::Xoshiro256pp;
+
+/// Target distribution for one tap (what SVI learned).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TapTarget {
+    pub mu: f32,
+    pub sigma: f32,
+}
+
+/// Commanded + realized analog state of one tap.
+#[derive(Debug, Clone)]
+pub struct TapProgram {
+    /// Commanded plus/minus rail powers and degrees of freedom.
+    pub cmd_p_plus: f64,
+    pub cmd_p_minus: f64,
+    pub cmd_dof: f64,
+    /// Realized values after actuator error (what the light actually does).
+    real_p_plus: f64,
+    real_p_minus: f64,
+    real_dof: f64,
+    /// Effective gain: transimpedance x grating alignment for this channel.
+    pub gain_eff: f64,
+}
+
+impl TapProgram {
+    /// Expected weight mean of the *realized* program.
+    pub fn realized_mu(&self) -> f64 {
+        self.gain_eff * (self.real_p_plus - self.real_p_minus)
+    }
+
+    /// Expected weight std of the realized program.
+    pub fn realized_sigma(&self) -> f64 {
+        self.gain_eff
+            * ((self.real_p_plus.powi(2) + self.real_p_minus.powi(2)) / self.real_dof).sqrt()
+    }
+
+    /// Commanded bandwidth in GHz for a given symbol time.
+    pub fn bandwidth_ghz(&self, t_symbol_ps: f64) -> f64 {
+        (self.cmd_dof - 1.0) / (t_symbol_ps * 1e-12) / 1e9
+    }
+}
+
+/// One programmed 9-tap kernel (one 3x3 depthwise filter).
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    pub taps: Vec<TapProgram>,
+}
+
+/// Machine configuration. Defaults follow the paper's system architecture.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub source: SourceConfig,
+    /// Transimpedance gain mapping optical power to weight units.
+    pub gain: f64,
+    /// Total optical power budget per tap (both rails), weight units / gain.
+    pub power_budget: f64,
+    /// DAC full scale for input activations (must match L2 `SCALE_DAC`).
+    pub scale_dac: f32,
+    /// ADC full scale for readouts (must match L2 `SCALE_ADC`).
+    pub scale_adc: f32,
+    /// RMS receiver noise referred to the output.
+    pub rx_noise: f32,
+    /// EOM extinction ratio in dB.
+    pub extinction_db: f32,
+    /// Grating fabrication delay ripple RMS (ps).
+    pub ripple_rms_ps: f64,
+    /// Persistent per-channel actuator bias RMS (spectral-shaper transfer
+    /// error: fixed at fabrication, correctable by feedback calibration).
+    pub actuator_sigma: f64,
+    /// Fresh multiplicative jitter applied on every (re)load (shaper
+    /// settling noise: the irreducible floor of the calibration loop).
+    pub actuator_jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        Self {
+            source: SourceConfig::default(),
+            gain: 1.0,
+            power_budget: 6.0,
+            scale_dac: 4.0,
+            scale_adc: 8.0,
+            rx_noise: 0.02,
+            extinction_db: 30.0,
+            ripple_rms_ps: 0.5,
+            actuator_sigma: 0.05,
+            actuator_jitter: 0.01,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-run counters (throughput accounting + telemetry).
+#[derive(Debug, Clone, Default)]
+pub struct MachineStats {
+    pub convolutions: u64,
+    pub programs_loaded: u64,
+    pub clock: OpticalClock,
+}
+
+/// The photonic Bayesian machine simulator.
+pub struct PhotonicMachine {
+    pub cfg: MachineConfig,
+    eom: Eom,
+    grating: ChirpedGrating,
+    detector: Detector,
+    src: ChaoticLightSource,
+    actuator_rng: Xoshiro256pp,
+    actuator_gauss: Gaussian,
+    /// Persistent per-channel actuator biases: (plus-rail, minus-rail, dof)
+    /// multiplicative transfer errors, fixed at construction.
+    chan_bias: Vec<(f64, f64, f64)>,
+    bank: Vec<KernelProgram>,
+    pub stats: MachineStats,
+}
+
+impl PhotonicMachine {
+    pub fn new(cfg: MachineConfig) -> Self {
+        let eom = Eom::new(cfg.scale_dac, cfg.extinction_db);
+        let grating = ChirpedGrating::paper_device(cfg.source.channels, cfg.ripple_rms_ps, cfg.seed);
+        let detector = Detector::new(cfg.scale_adc, cfg.rx_noise, cfg.seed.wrapping_add(1));
+        let src = ChaoticLightSource::new(cfg.source.clone(), cfg.seed.wrapping_add(2));
+        let mut rng = Xoshiro256pp::new(cfg.seed.wrapping_add(3));
+        let mut gauss = Gaussian::new();
+        let chan_bias = (0..cfg.source.channels)
+            .map(|_| {
+                let mut b = || (1.0 + cfg.actuator_sigma * gauss.sample(&mut rng)).max(0.5);
+                (b(), b(), b())
+            })
+            .collect();
+        Self {
+            eom,
+            grating,
+            detector,
+            src,
+            actuator_rng: rng,
+            actuator_gauss: gauss,
+            chan_bias,
+            bank: Vec::new(),
+            stats: MachineStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn with_defaults(seed: u64) -> Self {
+        Self::new(MachineConfig {
+            seed,
+            ..MachineConfig::default()
+        })
+    }
+
+    /// Number of taps / spectral channels.
+    pub fn num_taps(&self) -> usize {
+        self.cfg.source.channels
+    }
+
+    // ------------------------------------------------------------------
+    // Programming
+    // ------------------------------------------------------------------
+
+    /// Physics inversion: compute the commanded program realizing `(mu, sigma)`
+    /// as closely as the hardware allows.  Pure — no actuator error.
+    pub fn solve_program(&self, k: usize, tgt: TapTarget) -> TapProgram {
+        let t_sym = self.cfg.source.t_symbol_ps;
+        let m_min = self.cfg.source.dof(self.cfg.source.bw_min_ghz);
+        let m_max = self.cfg.source.dof(self.cfg.source.bw_max_ghz);
+        let ge = self.cfg.gain * self.grating.alignment_factor(k);
+        let mu = tgt.mu as f64;
+        let sigma = (tgt.sigma as f64).max(0.0);
+        let d = mu.abs() / ge;
+
+        let (m, p_cm) = if sigma <= 1e-9 {
+            (m_max, 0.0)
+        } else {
+            let m_req = if d > 0.0 { (mu / sigma as f64).powi(2) } else { 0.0 };
+            if m_req >= m_max {
+                (m_max, 0.0) // sigma floor: hardware cannot be this quiet
+            } else if m_req <= m_min {
+                // boost sigma with common-mode power on both rails
+                let s = sigma * m_min.sqrt() / ge;
+                let disc = (2.0 * s * s - d * d).max(0.0);
+                ((m_min), (disc.sqrt() - d) / 2.0)
+            } else {
+                (m_req, 0.0)
+            }
+        };
+
+        let (mut p_plus, mut p_minus) = if mu >= 0.0 {
+            (d + p_cm, p_cm)
+        } else {
+            (p_cm, d + p_cm)
+        };
+        // power budget clamp (scales mean and std together)
+        let tot = p_plus + p_minus;
+        if tot > self.cfg.power_budget {
+            let r = self.cfg.power_budget / tot;
+            p_plus *= r;
+            p_minus *= r;
+        }
+        let _ = t_sym;
+        TapProgram {
+            cmd_p_plus: p_plus,
+            cmd_p_minus: p_minus,
+            cmd_dof: m,
+            real_p_plus: p_plus,
+            real_p_minus: p_minus,
+            real_dof: m,
+            gain_eff: ge,
+        }
+    }
+
+    /// Apply actuator error: the spectral shaper's persistent per-channel
+    /// transfer bias plus fresh settling jitter.  Called on every (re)load
+    /// of a program onto channel `k`.
+    fn actuate(&mut self, k: usize, tap: &mut TapProgram) {
+        let bias = self.chan_bias[k];
+        let mut draw = |base: f64, b: f64| -> f64 {
+            let e = 1.0 + self.cfg.actuator_jitter * self.actuator_gauss.sample(&mut self.actuator_rng);
+            (base * b * e).max(0.0)
+        };
+        tap.real_p_plus = draw(tap.cmd_p_plus, bias.0);
+        tap.real_p_minus = draw(tap.cmd_p_minus, bias.1);
+        let m_min = self.cfg.source.dof(self.cfg.source.bw_min_ghz);
+        let m_max = self.cfg.source.dof(self.cfg.source.bw_max_ghz);
+        // dof realization may exceed the nominal bandwidth range slightly via
+        // bias; clamp only below (physical positivity), not above, so the
+        // calibration loop can actually reach targets near the range edge.
+        tap.real_dof = draw(tap.cmd_dof, bias.2).max(m_min * 0.5);
+        let _ = m_max;
+    }
+
+    /// Program one kernel from targets (open loop) and load it into the
+    /// bank; returns its kernel index.
+    pub fn load_kernel(&mut self, targets: &[TapTarget]) -> usize {
+        assert_eq!(targets.len(), self.num_taps(), "need one target per channel");
+        let mut taps: Vec<TapProgram> = targets
+            .iter()
+            .enumerate()
+            .map(|(k, &t)| self.solve_program(k, t))
+            .collect();
+        for (k, tap) in taps.iter_mut().enumerate() {
+            self.actuate(k, tap);
+        }
+        self.bank.push(KernelProgram { taps });
+        self.stats.programs_loaded += 1;
+        self.bank.len() - 1
+    }
+
+    /// Replace the command of kernel `idx` (calibration update) and re-actuate.
+    pub fn reprogram_kernel(&mut self, idx: usize, cmds: Vec<(f64, f64, f64)>) {
+        let m_min = self.cfg.source.dof(self.cfg.source.bw_min_ghz);
+        let m_max = self.cfg.source.dof(self.cfg.source.bw_max_ghz);
+        // update commands first, then actuate (borrow discipline)
+        {
+            let kp = &mut self.bank[idx];
+            assert_eq!(cmds.len(), kp.taps.len());
+            for (tap, (pp, pm, dof)) in kp.taps.iter_mut().zip(cmds) {
+                tap.cmd_p_plus = pp.max(0.0);
+                tap.cmd_p_minus = pm.max(0.0);
+                tap.cmd_dof = dof.clamp(m_min, m_max);
+            }
+        }
+        let mut taps = std::mem::take(&mut self.bank[idx].taps);
+        for (k, tap) in taps.iter_mut().enumerate() {
+            self.actuate(k, tap);
+        }
+        self.bank[idx].taps = taps;
+        self.stats.programs_loaded += 1;
+    }
+
+    pub fn kernel(&self, idx: usize) -> &KernelProgram {
+        &self.bank[idx]
+    }
+
+    pub fn bank_len(&self) -> usize {
+        self.bank.len()
+    }
+
+    pub fn clear_bank(&mut self) {
+        self.bank.clear();
+    }
+
+    // ------------------------------------------------------------------
+    // Sampling + convolution (the hot path)
+    // ------------------------------------------------------------------
+
+    /// Draw one instantaneous weight sample of tap `k` of kernel `idx`
+    /// (a probe measurement: convolution with a one-hot patch).
+    pub fn sample_weight(&mut self, idx: usize, k: usize) -> f64 {
+        let tap = &self.bank[idx].taps[k];
+        let (pp, pm, dof, ge) = (tap.real_p_plus, tap.real_p_minus, tap.real_dof, tap.gain_eff);
+        let plus = if pp > 0.0 {
+            self.src.intensity_dof(k, pp, dof)
+        } else {
+            0.0
+        };
+        let minus = if pm > 0.0 {
+            self.src.intensity_dof(k, pm, dof)
+        } else {
+            0.0
+        };
+        ge * (plus - minus)
+    }
+
+    /// Convolve a stream of im2col patches (each `num_taps` activations)
+    /// with kernel `idx`.  Each patch occupies `num_taps` optical symbols;
+    /// the weight fluctuates per symbol (fresh chaos every 37.5 ps).
+    ///
+    /// `patches.len()` must be a multiple of `num_taps`; writes one output
+    /// per patch into `out`.
+    pub fn conv_patches(&mut self, idx: usize, patches: &[f32], out: &mut [f32]) {
+        let nt = self.num_taps();
+        assert_eq!(patches.len() % nt, 0);
+        let n = patches.len() / nt;
+        assert!(out.len() >= n);
+        let scale_dac = self.cfg.scale_dac;
+        // copy the per-tap program parameters into a flat scratch (avoids
+        // re-borrowing self.bank inside the sampling loop)
+        let kp = &self.bank[idx];
+        let mut prog: Vec<(f64, f64, f64, f64)> = Vec::with_capacity(nt);
+        for tap in &kp.taps {
+            prog.push((tap.real_p_plus, tap.real_p_minus, tap.real_dof, tap.gain_eff));
+        }
+        // Symbols at the modulator's extinction floor carry <= 1e-3 of a
+        // tap's weight; skipping their Gamma draws changes the output by
+        // less than the receiver noise floor and saves ~40 % of sampling on
+        // post-ReLU activations (see EXPERIMENTS.md §Perf).
+        let t_floor = 1.5e-3f64;
+        for (p, o) in out.iter_mut().take(n).enumerate() {
+            let patch = &patches[p * nt..(p + 1) * nt];
+            let mut acc = 0.0f64;
+            for (k, &(pp, pm, dof, ge)) in prog.iter().enumerate() {
+                let t = self.eom.transmission(patch[k]) as f64;
+                if t <= t_floor {
+                    continue;
+                }
+                let plus = if pp > 0.0 {
+                    self.src.intensity_dof(k, pp, dof)
+                } else {
+                    0.0
+                };
+                let minus = if pm > 0.0 {
+                    self.src.intensity_dof(k, pm, dof)
+                } else {
+                    0.0
+                };
+                acc += ge * (plus - minus) * t;
+            }
+            *o = self.detector.read((acc * scale_dac as f64) as f32);
+        }
+        self.stats.convolutions += n as u64;
+        self.stats.clock.advance_symbols((n * nt) as u64);
+    }
+
+    /// Full probabilistic depthwise 3x3 convolution over a (C, H, W) map:
+    /// channel `c` uses kernel `bank_base + c`.  SAME padding; im2col
+    /// streaming per channel.  Returns a (C, H, W) row-major buffer.
+    pub fn depthwise_conv(
+        &mut self,
+        bank_base: usize,
+        x: &[f32],
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), c * h * w);
+        let nt = self.num_taps();
+        assert_eq!(nt, 9, "depthwise path assumes 3x3 kernels");
+        let mut out = vec![0.0f32; c * h * w];
+        let mut patches = vec![0.0f32; h * w * nt];
+        for ch in 0..c {
+            let plane = &x[ch * h * w..(ch + 1) * h * w];
+            im2col_3x3(plane, h, w, &mut patches);
+            let out_plane = &mut out[ch * h * w..(ch + 1) * h * w];
+            self.conv_patches(bank_base + ch, &patches, out_plane);
+        }
+        out
+    }
+
+    /// The detector's ADC quantizer (exposed for parity tests with L2).
+    pub fn adc(&self) -> Quantizer {
+        Quantizer::new(self.cfg.scale_adc)
+    }
+
+    /// Simulated-optical-time throughput report.
+    pub fn throughput_report(&self) -> String {
+        let h = timing::headline();
+        format!(
+            "convolutions={} optical_time={:.1} ns wall-equivalent optical rate={:.2} Gconv/s",
+            self.stats.convolutions,
+            self.stats.clock.elapsed_ns(),
+            h.convolutions_per_sec / 1e9
+        )
+    }
+}
+
+/// im2col for SAME-padded 3x3 windows: patches[(i*w + j)*9 + k] =
+/// x[i+dy-1, j+dx-1] with (dy, dx) = divmod(k, 3), zero outside.
+pub fn im2col_3x3(x: &[f32], h: usize, w: usize, patches: &mut [f32]) {
+    assert_eq!(x.len(), h * w);
+    assert!(patches.len() >= h * w * 9);
+    for i in 0..h {
+        for j in 0..w {
+            let base = (i * w + j) * 9;
+            for k in 0..9 {
+                let (dy, dx) = (k / 3, k % 3);
+                let y = i as isize + dy as isize - 1;
+                let xx = j as isize + dx as isize - 1;
+                patches[base + k] = if y >= 0 && y < h as isize && xx >= 0 && xx < w as isize {
+                    x[y as usize * w + xx as usize]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::{mean_f32, std_f32, Welford};
+
+    fn quiet_machine(seed: u64) -> PhotonicMachine {
+        PhotonicMachine::new(MachineConfig {
+            rx_noise: 0.0,
+            actuator_sigma: 0.0,
+            actuator_jitter: 0.0,
+            ripple_rms_ps: 0.0,
+            seed,
+            ..MachineConfig::default()
+        })
+    }
+
+    fn targets9(mu: f32, sigma: f32) -> Vec<TapTarget> {
+        vec![TapTarget { mu, sigma }; 9]
+    }
+
+    #[test]
+    fn solve_program_recovers_moments_in_range() {
+        let m = quiet_machine(1);
+        // sigma/|mu| within [1/sqrt(M_max), 1/sqrt(M_min)] -> exactly realizable
+        let tgt = TapTarget { mu: 0.8, sigma: 0.5 };
+        let p = m.solve_program(0, tgt);
+        assert!((p.realized_mu() - 0.8).abs() < 1e-6);
+        assert!((p.realized_sigma() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solve_program_negative_mu_uses_minus_rail() {
+        let m = quiet_machine(1);
+        let p = m.solve_program(0, TapTarget { mu: -0.6, sigma: 0.4 });
+        assert!(p.cmd_p_minus > p.cmd_p_plus);
+        assert!((p.realized_mu() + 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigma_floor_is_enforced() {
+        let m = quiet_machine(1);
+        // ask for far less noise than the hardware can do
+        let p = m.solve_program(0, TapTarget { mu: 1.0, sigma: 0.01 });
+        let floor = 1.0 / m.cfg.source.dof(m.cfg.source.bw_max_ghz).sqrt();
+        assert!((p.realized_sigma() - floor).abs() < 1e-6);
+    }
+
+    #[test]
+    fn common_mode_boosts_sigma_beyond_single_rail() {
+        let m = quiet_machine(1);
+        // sigma larger than |mu| / sqrt(M_min): needs common-mode power
+        let p = m.solve_program(0, TapTarget { mu: 0.1, sigma: 0.5 });
+        assert!(p.cmd_p_minus > 0.0, "needs minus-rail common mode");
+        assert!((p.realized_mu() - 0.1).abs() < 1e-6);
+        assert!((p.realized_sigma() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_mu_pure_noise_tap() {
+        let m = quiet_machine(1);
+        let p = m.solve_program(0, TapTarget { mu: 0.0, sigma: 0.3 });
+        assert!((p.realized_mu()).abs() < 1e-6);
+        assert!((p.realized_sigma() - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampled_weights_match_program_moments() {
+        let mut m = quiet_machine(2);
+        let idx = m.load_kernel(&targets9(0.7, 0.45));
+        let mut w = Welford::new();
+        for _ in 0..40_000 {
+            w.push(m.sample_weight(idx, 3));
+        }
+        assert!((w.mean() - 0.7).abs() < 0.02, "mean {}", w.mean());
+        assert!((w.std() - 0.45).abs() < 0.02, "std {}", w.std());
+    }
+
+    #[test]
+    fn conv_patch_computes_weighted_sum() {
+        let mut m = quiet_machine(3);
+        // near-deterministic taps (sigma at the floor)
+        let idx = m.load_kernel(&targets9(0.5, 0.0));
+        let patch: Vec<f32> = (0..9).map(|i| 0.25 * (i % 4) as f32).collect();
+        let mut outs = Vec::new();
+        let mut out = [0.0f32];
+        for _ in 0..3000 {
+            m.conv_patches(idx, &patch, &mut out);
+            outs.push(out[0]);
+        }
+        let want: f32 = patch.iter().map(|&x| 0.5 * x).sum();
+        let got = mean_f32(&outs) as f32;
+        // sigma floor (~0.19 per tap) leaves noise on each draw; the mean
+        // converges to the deterministic weighted sum
+        assert!((got - want).abs() < 0.05, "got {got} want {want}");
+        assert!(std_f32(&outs) > 0.0);
+    }
+
+    #[test]
+    fn output_variance_scales_with_target_sigma() {
+        let mut m = quiet_machine(4);
+        let lo = m.load_kernel(&targets9(0.4, 0.2));
+        let hi = m.load_kernel(&targets9(0.4, 0.6));
+        let patch = [1.0f32; 9];
+        let mut out = [0.0f32];
+        let run = |m: &mut PhotonicMachine, idx: usize, out: &mut [f32; 1]| {
+            let mut v = Vec::with_capacity(2000);
+            for _ in 0..2000 {
+                m.conv_patches(idx, &patch, out);
+                v.push(out[0]);
+            }
+            std_f32(&v)
+        };
+        let s_lo = run(&mut m, lo, &mut out);
+        let s_hi = run(&mut m, hi, &mut out);
+        assert!(s_hi > 2.0 * s_lo, "lo {s_lo} hi {s_hi}");
+    }
+
+    #[test]
+    fn im2col_matches_manual_window() {
+        let h = 3;
+        let w = 4;
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut p = vec![0.0f32; h * w * 9];
+        im2col_3x3(&x, h, w, &mut p);
+        // center pixel (1,1): window rows [0..3) x [0..3)
+        let base = (1 * w + 1) * 9;
+        let want = [0.0, 1.0, 2.0, 4.0, 5.0, 6.0, 8.0, 9.0, 10.0];
+        assert_eq!(&p[base..base + 9], &want);
+        // corner (0,0): top-left padding
+        let want0 = [0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 4.0, 5.0];
+        assert_eq!(&p[..9], &want0);
+    }
+
+    #[test]
+    fn depthwise_conv_mean_matches_reference() {
+        let mut m = quiet_machine(5);
+        let (c, h, w) = (2usize, 5usize, 5usize);
+        let taps = [
+            targets9(0.3, 0.0),
+            targets9(-0.2, 0.0),
+        ];
+        for t in &taps {
+            m.load_kernel(t);
+        }
+        let x: Vec<f32> = (0..c * h * w).map(|i| ((i % 7) as f32) * 0.3).collect();
+        // average many stochastic runs -> converges to deterministic conv
+        let reps = 600;
+        let mut acc = vec![0.0f64; c * h * w];
+        for _ in 0..reps {
+            let y = m.depthwise_conv(0, &x, c, h, w);
+            for (a, v) in acc.iter_mut().zip(y) {
+                *a += v as f64;
+            }
+        }
+        let mut patches = vec![0.0f32; h * w * 9];
+        for ch in 0..c {
+            im2col_3x3(&x[ch * h * w..(ch + 1) * h * w], h, w, &mut patches);
+            let wk = if ch == 0 { 0.3f32 } else { -0.2 };
+            for p in 0..h * w {
+                let want: f32 = patches[p * 9..(p + 1) * 9].iter().map(|&v| wk * v).sum();
+                let got = (acc[ch * h * w + p] / reps as f64) as f32;
+                assert!(
+                    (got - want).abs() < 0.12,
+                    "ch {ch} p {p}: got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_track_optical_time() {
+        let mut m = quiet_machine(6);
+        let idx = m.load_kernel(&targets9(0.1, 0.1));
+        let patches = vec![0.5f32; 9 * 100];
+        let mut out = vec![0.0f32; 100];
+        m.conv_patches(idx, &patches, &mut out);
+        assert_eq!(m.stats.convolutions, 100);
+        assert_eq!(m.stats.clock.symbols(), 900);
+        assert!((m.stats.clock.elapsed_ns() - 900.0 * 0.0375).abs() < 1e-6);
+    }
+
+    #[test]
+    fn actuator_error_perturbs_realization() {
+        let mut m = PhotonicMachine::new(MachineConfig {
+            actuator_sigma: 0.05,
+            actuator_jitter: 0.01,
+            rx_noise: 0.0,
+            seed: 8,
+            ..MachineConfig::default()
+        });
+        let idx = m.load_kernel(&targets9(0.8, 0.4));
+        let kp = m.kernel(idx);
+        let off: f64 = kp
+            .taps
+            .iter()
+            .map(|t| (t.realized_mu() - 0.8).abs())
+            .sum::<f64>()
+            / 9.0;
+        assert!(off > 1e-4, "actuator error should shift realization");
+        assert!(off < 0.2, "but not wildly: {off}");
+    }
+}

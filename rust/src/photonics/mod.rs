@@ -1,0 +1,39 @@
+//! Photonic Bayesian machine simulator (the paper's hardware, in software).
+//!
+//! Faithful functional model of the analog datapath of Fig. 2(a):
+//!
+//! ```text
+//!  ASE chaotic source ──► spectral shaper (9 channels: power = weight mean,
+//!        │                  bandwidth = weight std)
+//!        ▼
+//!  EOM + 8-bit 80 GSPS DAC (input vector time-encoded on all channels,
+//!        │                   3 samples per symbol)
+//!        ▼
+//!  chirped grating (−93.1 ps/THz ⇒ one-symbol delay per 403 GHz channel)
+//!        ▼
+//!  photodetector (incoherent power sum + receiver noise)
+//!        ▼
+//!  8-bit 80 GSPS ADC ──► y[t] = Σ_k w_k(t) · x[t−k]
+//! ```
+//!
+//! Negative weights are realized with *differential (balanced) detection*:
+//! each tap owns a plus-rail and a minus-rail intensity whose difference is
+//! the signed weight (see DESIGN.md substitution table).  Because the rails
+//! are chaotic, the tap's mean is programmed by the rail power difference
+//! and its standard deviation by the channel bandwidth (speckle degrees of
+//! freedom `M = B·T + 1`) plus optional common-mode power.
+//!
+//! [`timing`] derives the paper's headline numbers (37.5 ps per probabilistic
+//! convolution, 26.7 G convolutions/s, 1.28 Tbit/s digital interface,
+//! sub-100 ns latency) from the architecture constants, and the machine
+//! keeps a simulated optical clock so benches can report both simulated
+//! optical throughput and simulator wall-clock throughput.
+
+pub mod converters;
+pub mod detector;
+pub mod eom;
+pub mod grating;
+pub mod machine;
+pub mod timing;
+
+pub use machine::{KernelProgram, MachineConfig, PhotonicMachine, TapTarget};

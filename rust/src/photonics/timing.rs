@@ -1,0 +1,110 @@
+//! Architecture timing constants and the paper's headline-number derivations.
+//!
+//! Every number in the paper's abstract is a *derived* quantity of the
+//! architecture constants below; `headline()` recomputes them so the
+//! `paper_tables -- headline` bench can print paper-vs-derived side by side.
+
+/// Sample rate of the DAC and ADC (samples/s). Paper: 80 GSPS.
+pub const SAMPLE_RATE_GSPS: f64 = 80.0;
+/// Resolution of DAC and ADC in bits. Paper: 8 bit.
+pub const CONVERTER_BITS: u32 = 8;
+/// Samples per encoded vector component. Paper: 3.
+pub const SAMPLES_PER_SYMBOL: f64 = 3.0;
+/// Number of spectral weight channels. Paper: 9.
+pub const NUM_CHANNELS: usize = 9;
+/// Channel grid center (THz). Paper: 194 THz.
+pub const CENTER_THZ: f64 = 194.0;
+/// Channel spacing (GHz). Paper: 403 GHz.
+pub const SPACING_GHZ: f64 = 403.0;
+/// Grating dispersion (ps/THz). Paper: −93.1.
+pub const DISPERSION_PS_PER_THZ: f64 = -93.1;
+/// Chirped grating length (cm). Paper: 5.68 cm.
+pub const GRATING_LENGTH_CM: f64 = 5.68;
+/// Group index of the SiN spiral waveguide (typical thin-film Si3N4).
+pub const GROUP_INDEX: f64 = 2.1;
+
+/// Derived headline metrics.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    /// Symbol period = one probabilistic convolution (ps). Paper: 37.5.
+    pub symbol_period_ps: f64,
+    /// Probabilistic convolutions per second. Paper: ~26.7 G.
+    pub convolutions_per_sec: f64,
+    /// Probabilistic MACs per second (9 taps per convolution).
+    pub macs_per_sec: f64,
+    /// Digital interface bandwidth, DAC + ADC (Tbit/s). Paper: 1.28.
+    pub interface_tbit_per_sec: f64,
+    /// Per-channel delay step from the grating (ps); should equal the symbol
+    /// period so adjacent channels shift by exactly one symbol.
+    pub channel_delay_step_ps: f64,
+    /// Grating propagation latency (ns); the "sub-100 ns" claim.
+    pub grating_latency_ns: f64,
+}
+
+/// Recompute every abstract number from the constants.
+pub fn headline() -> Headline {
+    let symbol_period_ps = SAMPLES_PER_SYMBOL / SAMPLE_RATE_GSPS * 1000.0;
+    let convolutions_per_sec = SAMPLE_RATE_GSPS * 1e9 / SAMPLES_PER_SYMBOL;
+    let interface = 2.0 * SAMPLE_RATE_GSPS * 1e9 * CONVERTER_BITS as f64 / 1e12;
+    let delay_step = DISPERSION_PS_PER_THZ.abs() * SPACING_GHZ / 1000.0;
+    let latency_ns = GRATING_LENGTH_CM * 1e-2 * GROUP_INDEX / 2.998e8 * 1e9;
+    Headline {
+        symbol_period_ps,
+        convolutions_per_sec,
+        macs_per_sec: convolutions_per_sec * NUM_CHANNELS as f64,
+        interface_tbit_per_sec: interface,
+        channel_delay_step_ps: delay_step,
+        grating_latency_ns: latency_ns,
+    }
+}
+
+/// Simulated optical clock: tracks how much *optical* time the simulated
+/// machine has consumed (symbols processed x symbol period), independent of
+/// host wall-clock.
+#[derive(Debug, Clone, Default)]
+pub struct OpticalClock {
+    symbols: u64,
+}
+
+impl OpticalClock {
+    pub fn advance_symbols(&mut self, n: u64) {
+        self.symbols += n;
+    }
+
+    pub fn symbols(&self) -> u64 {
+        self.symbols
+    }
+
+    pub fn elapsed_ps(&self) -> f64 {
+        self.symbols as f64 * headline().symbol_period_ps
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.elapsed_ps() / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_matches_paper() {
+        let h = headline();
+        assert!((h.symbol_period_ps - 37.5).abs() < 1e-9);
+        assert!((h.convolutions_per_sec - 26.67e9).abs() < 0.05e9);
+        assert!((h.interface_tbit_per_sec - 1.28).abs() < 1e-9);
+        // 93.1 ps/THz * 0.403 THz = 37.5 ps -> exactly one symbol per channel
+        assert!((h.channel_delay_step_ps - 37.5).abs() < 0.1);
+        assert!(h.grating_latency_ns < 100.0, "sub-100 ns claim");
+        assert!(h.grating_latency_ns > 0.1);
+    }
+
+    #[test]
+    fn optical_clock_accumulates() {
+        let mut c = OpticalClock::default();
+        c.advance_symbols(1000);
+        assert!((c.elapsed_ps() - 37_500.0).abs() < 1e-6);
+        assert!((c.elapsed_ns() - 37.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal property-based testing harness (proptest substitute).
+//!
+//! Seeded generators + a case runner that, on failure, reports the seed and
+//! the failing case index so the exact input can be reproduced by rerunning
+//! with `PBM_PROPTEST_SEED`.  Used by the L3 invariant tests (routing,
+//! batching, uncertainty-metric invariants).
+
+use crate::entropy::{BitSource, Xoshiro256pp};
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PBM_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases: 64, seed }
+    }
+}
+
+/// A seeded input generator.
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Output;
+}
+
+impl<T, F: Fn(&mut Xoshiro256pp) -> T> Gen for F {
+    type Output = T;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with seed/case info
+/// on the first failure.
+pub fn check<G, P>(name: &str, cfg: &Config, gen: G, prop: P)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug,
+    P: Fn(&G::Output) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {}):\n  input: {:?}\n  {msg}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Uniform f32 in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> impl Fn(&mut Xoshiro256pp) -> f32 {
+    move |rng| lo + rng.next_f32() * (hi - lo)
+}
+
+/// usize in [lo, hi).
+pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Xoshiro256pp) -> usize {
+    move |rng| lo + rng.next_below(hi - lo)
+}
+
+/// Vector of f32s with random length in [min_len, max_len).
+pub fn vec_f32(
+    min_len: usize,
+    max_len: usize,
+    lo: f32,
+    hi: f32,
+) -> impl Fn(&mut Xoshiro256pp) -> Vec<f32> {
+    move |rng| {
+        let n = min_len + rng.next_below(max_len - min_len);
+        (0..n).map(|_| lo + rng.next_f32() * (hi - lo)).collect()
+    }
+}
+
+/// Random probability matrix (n_samples x n_classes), rows sum to 1.
+pub fn prob_matrix(
+    max_samples: usize,
+    max_classes: usize,
+) -> impl Fn(&mut Xoshiro256pp) -> Vec<Vec<f32>> {
+    move |rng| {
+        let n = 1 + rng.next_below(max_samples);
+        let c = 2 + rng.next_below(max_classes.saturating_sub(2).max(1));
+        (0..n)
+            .map(|_| {
+                let mut row: Vec<f32> = (0..c).map(|_| rng.next_f32() + 1e-4).collect();
+                let s: f32 = row.iter().sum();
+                row.iter_mut().for_each(|x| *x /= s);
+                row
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config {
+            cases: 50,
+            seed: 1,
+        };
+        check("sum-commutes", &cfg, vec_f32(1, 20, -5.0, 5.0), |v| {
+            let a: f32 = v.iter().sum();
+            let b: f32 = v.iter().rev().sum();
+            if (a - b).abs() < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        let cfg = Config { cases: 5, seed: 2 };
+        check("always-fails", &cfg, usize_in(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prob_matrix_rows_normalized() {
+        let cfg = Config { cases: 30, seed: 3 };
+        check("rows-sum-1", &cfg, prob_matrix(12, 10), |m| {
+            for row in m {
+                let s: f32 = row.iter().sum();
+                if (s - 1.0).abs() > 1e-4 {
+                    return Err(format!("row sums to {s}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Xoshiro256pp::new(9);
+        let mut r2 = Xoshiro256pp::new(9);
+        let g = vec_f32(1, 10, 0.0, 1.0);
+        assert_eq!(g(&mut r1), g(&mut r2));
+    }
+}

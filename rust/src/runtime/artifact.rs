@@ -1,0 +1,304 @@
+//! Artifact metadata + lazy-compiled executable registry for one model.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::executable::CompiledFn;
+use crate::util::json::{self};
+
+/// One named parameter region in the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Parsed `artifacts/<dataset>/meta.json` — the L2 ↔ L3 contract.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dataset: String,
+    pub in_channels: usize,
+    pub n_classes: usize,
+    pub img_hw: usize,
+    pub prob_ch: usize,
+    pub prob_hw: usize,
+    pub num_taps: usize,
+    pub feat_ch: usize,
+    pub num_params: usize,
+    pub scale_dac: f32,
+    pub scale_adc: f32,
+    pub prior_sigma: f32,
+    pub min_rel_sigma: f32,
+    pub train_batch: usize,
+    pub pre_batches: Vec<usize>,
+    pub post_batches: Vec<usize>,
+    pub full_batches: Vec<usize>,
+    pub param_layout: Vec<ParamSpec>,
+    pub artifact_files: HashMap<String, String>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let num = |k: &str| -> Result<usize> {
+            j.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{k} not a number"))
+        };
+        let fnum = |k: &str| -> Result<f32> {
+            Ok(j.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_f64()
+                .ok_or_else(|| anyhow!("{k} not a number"))? as f32)
+        };
+        let batches = j.req("batch_sizes").map_err(|e| anyhow!(e))?;
+        let bvec = |k: &str| -> Result<Vec<usize>> {
+            batches
+                .req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("batch_sizes.{k} malformed"))
+        };
+        let layout = j
+            .req("param_layout")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_layout not an array"))?
+            .iter()
+            .map(|s| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: s
+                        .req("name")
+                        .map_err(|e| anyhow!(e))?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("name"))?
+                        .to_string(),
+                    shape: s
+                        .req("shape")
+                        .map_err(|e| anyhow!(e))?
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("shape"))?,
+                    offset: s
+                        .req("offset")
+                        .map_err(|e| anyhow!(e))?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("offset"))?,
+                    size: s
+                        .req("size")
+                        .map_err(|e| anyhow!(e))?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("size"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifact_files = j
+            .req("artifacts")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect();
+        Ok(Self {
+            dataset: j
+                .req("dataset")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            in_channels: num("in_channels")?,
+            n_classes: num("n_classes")?,
+            img_hw: num("img_hw")?,
+            prob_ch: num("prob_ch")?,
+            prob_hw: num("prob_hw")?,
+            num_taps: num("num_taps")?,
+            feat_ch: num("feat_ch")?,
+            num_params: num("num_params")?,
+            scale_dac: fnum("scale_dac")?,
+            scale_adc: fnum("scale_adc")?,
+            prior_sigma: fnum("prior_sigma")?,
+            min_rel_sigma: fnum("min_rel_sigma")?,
+            train_batch: batches
+                .req("train")
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("train batch"))?,
+            pre_batches: bvec("pre")?,
+            post_batches: bvec("post")?,
+            full_batches: bvec("full")?,
+            param_layout: layout,
+            artifact_files,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.param_layout.iter().find(|s| s.name == name)
+    }
+
+    /// Image pixel count per sample.
+    pub fn image_size(&self) -> usize {
+        self.in_channels * self.img_hw * self.img_hw
+    }
+
+    /// Size of the activation tensor entering the photonic stage.
+    pub fn act_size(&self) -> usize {
+        self.prob_ch * self.prob_hw * self.prob_hw
+    }
+
+    /// Size of one eps noise tensor per sample.
+    pub fn eps_size(&self) -> usize {
+        self.act_size() * self.num_taps
+    }
+}
+
+/// Lazily-compiled executable registry for one model directory.
+pub struct ModelArtifacts {
+    pub meta: ModelMeta,
+    pub dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<CompiledFn>>>,
+}
+
+impl ModelArtifacts {
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self {
+            meta: ModelMeta::load(dir)?,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load the artifacts for dataset `name` under `artifacts_root`.
+    pub fn load_dataset(artifacts_root: &Path, name: &str) -> Result<Self> {
+        Self::load(&artifacts_root.join(name))
+    }
+
+    /// Fetch (compiling on first use) the entry point `name`, e.g.
+    /// `fwd_full_b8` or `train_step`.
+    pub fn get(&self, name: &str) -> Result<Arc<CompiledFn>> {
+        if let Some(f) = self.cache.lock().unwrap().get(name) {
+            return Ok(f.clone());
+        }
+        let fname = self
+            .meta
+            .artifact_files
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}' in meta.json"))?;
+        let compiled = Arc::new(CompiledFn::load(&self.dir.join(fname), name)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// The smallest compiled batch size >= `n` for an entry-point family
+    /// (`fwd_pre` / `fwd_post` / `fwd_full`); falls back to the largest.
+    pub fn pick_batch(&self, family: &str, n: usize) -> usize {
+        let sizes = match family {
+            "fwd_pre" => &self.meta.pre_batches,
+            "fwd_post" => &self.meta.post_batches,
+            "fwd_full" => &self.meta.full_batches,
+            _ => panic!("unknown family {family}"),
+        };
+        *sizes
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| sizes.last().expect("no batch sizes"))
+    }
+
+    /// Names of all entry points.
+    pub fn entry_points(&self) -> Vec<String> {
+        self.meta.artifact_files.keys().cloned().collect()
+    }
+}
+
+/// Resolve the default artifacts root: `$PBM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("PBM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("digits/meta.json").exists()
+    }
+
+    #[test]
+    fn meta_parses_and_is_consistent() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let meta = ModelMeta::load(&artifacts_root().join("digits")).unwrap();
+        assert_eq!(meta.dataset, "digits");
+        assert_eq!(meta.n_classes, 10);
+        assert_eq!(meta.num_taps, 9);
+        let last = meta.param_layout.last().unwrap();
+        assert_eq!(last.offset + last.size, meta.num_params);
+        assert!(meta.param("prob_mu").is_some());
+        assert!(meta.param("prob_rho").is_some());
+        assert_eq!(meta.eps_size(), meta.act_size() * 9);
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        if !have_artifacts() {
+            return;
+        }
+        let arts = ModelArtifacts::load(&artifacts_root().join("digits")).unwrap();
+        assert_eq!(arts.pick_batch("fwd_full", 1), 1);
+        assert_eq!(arts.pick_batch("fwd_full", 2), 8);
+        assert_eq!(arts.pick_batch("fwd_full", 9), 32);
+        assert_eq!(arts.pick_batch("fwd_full", 5000), 100);
+    }
+
+    #[test]
+    fn compiles_and_runs_fwd_full() {
+        if !have_artifacts() {
+            return;
+        }
+        let arts = ModelArtifacts::load(&artifacts_root().join("digits")).unwrap();
+        let f = arts.get("fwd_full_b1").unwrap();
+        let meta = &arts.meta;
+        let theta = vec![0.01f32; meta.num_params];
+        let x = vec![0.5f32; meta.image_size()];
+        let eps = vec![0.0f32; meta.eps_size()];
+        let out = f
+            .call(&[
+                super::super::Arg::F32(&theta, &[meta.num_params as i64]),
+                super::super::Arg::F32(
+                    &x,
+                    &[1, meta.in_channels as i64, meta.img_hw as i64, meta.img_hw as i64],
+                ),
+                super::super::Arg::F32(
+                    &eps,
+                    &[
+                        1,
+                        meta.prob_ch as i64,
+                        meta.prob_hw as i64,
+                        meta.prob_hw as i64,
+                        meta.num_taps as i64,
+                    ],
+                ),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), meta.n_classes);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+        // cached second fetch
+        let f2 = arts.get("fwd_full_b1").unwrap();
+        assert!(Arc::ptr_eq(&f, &f2));
+    }
+}

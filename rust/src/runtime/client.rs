@@ -1,0 +1,50 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is an `Rc`-based handle — neither `Send`
+//! nor `Sync` — so there is no process-global client.  Instead each thread
+//! that touches XLA gets a thread-local client, and the architecture keeps
+//! the number of such threads at one: the coordinator confines all PJRT
+//! work to a dedicated engine thread (see `coordinator::service`), which is
+//! also the right shape for the CPU backend (executables parallelize
+//! internally via their own thread pool; concurrent dispatch buys nothing).
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's CPU client (created on first use).
+pub fn thread_client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+            *slot = Some(client);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu() {
+        let c = thread_client().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(c.platform_name().to_lowercase().contains("cpu")
+            || c.platform_name().to_lowercase().contains("host"));
+    }
+
+    #[test]
+    fn reuse_within_thread() {
+        // both calls must succeed and be cheap (same underlying client)
+        let _a = thread_client().unwrap();
+        let _b = thread_client().unwrap();
+    }
+}

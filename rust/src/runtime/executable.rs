@@ -1,0 +1,186 @@
+//! Compiled-executable wrapper: typed arguments in, flat f32 tensors out.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::thread_client;
+
+/// A typed input argument for a compiled function.
+pub enum Arg<'a> {
+    /// f32 tensor with shape.
+    F32(&'a [f32], &'a [i64]),
+    /// i32 tensor with shape.
+    I32(&'a [i32], &'a [i64]),
+    /// f32 scalar.
+    ScalarF32(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::F32(data, shape) => {
+                let expect: i64 = shape.iter().product();
+                if expect != data.len() as i64 {
+                    return Err(anyhow!(
+                        "arg shape {:?} wants {} elements, got {}",
+                        shape,
+                        expect,
+                        data.len()
+                    ));
+                }
+                Ok(xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?)
+            }
+            Arg::I32(data, shape) => {
+                let expect: i64 = shape.iter().product();
+                if expect != data.len() as i64 {
+                    return Err(anyhow!("arg shape mismatch"));
+                }
+                Ok(xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?)
+            }
+            Arg::ScalarF32(x) => Ok(xla::Literal::scalar(*x)),
+        }
+    }
+}
+
+/// One compiled HLO entry point (compile once, execute many).
+pub struct CompiledFn {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execute() wall time (telemetry).
+    pub exec_ns: std::sync::atomic::AtomicU64,
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl CompiledFn {
+    /// Load HLO text from `path` and compile it on this thread's CPU client.
+    pub fn load(path: &Path, name: &str) -> Result<Self> {
+        let client = thread_client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Self {
+            name: name.to_string(),
+            exe,
+            exec_ns: Default::default(),
+            exec_count: Default::default(),
+        })
+    }
+
+    /// Execute with typed args; returns each tuple element flattened to f32.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the single output is
+    /// a tuple whose elements we decompose and convert.
+    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()
+            .context("building input literals")?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let elems = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for el in elems {
+            let el_f32 = match el.ty().map_err(|e| anyhow!("{e:?}"))? {
+                xla::ElementType::F32 => el,
+                _ => el
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("convert: {e:?}"))?,
+            };
+            out.push(el_f32.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        self.exec_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Mean execute latency so far (telemetry).
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.exec_count.load(std::sync::atomic::Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.exec_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// A tiny hand-written HLO module: f(x, y) = (x + y, x * y) over f32[4].
+    const HLO: &str = r#"
+HloModule tiny.0
+
+ENTRY main {
+  x = f32[4] parameter(0)
+  y = f32[4] parameter(1)
+  add = f32[4] add(x, y)
+  mul = f32[4] multiply(x, y)
+  ROOT out = (f32[4], f32[4]) tuple(add, mul)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pbm_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_and_executes_hlo_text() {
+        let p = write_tmp("tiny.hlo.txt", HLO);
+        let f = CompiledFn::load(&p, "tiny").unwrap();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let out = f
+            .call(&[Arg::F32(&x, &[4]), Arg::F32(&y, &[4])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(out[1], vec![10.0, 40.0, 90.0, 160.0]);
+        assert!(f.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let p = write_tmp("tiny2.hlo.txt", HLO);
+        let f = CompiledFn::load(&p, "tiny2").unwrap();
+        let x = [1.0f32, 2.0];
+        let err = f.call(&[Arg::F32(&x, &[4]), Arg::F32(&x, &[2])]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let err = CompiledFn::load(Path::new("/nonexistent/x.hlo.txt"), "x");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! serving/training hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API bindings, xla_extension 0.5.1):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  HLO **text** is the interchange format —
+//! jax ≥ 0.5 serialized protos use 64-bit instruction ids the 0.5.1 parser
+//! rejects, while the text parser reassigns ids (see aot.py).
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod params;
+
+pub use artifact::{ModelArtifacts, ModelMeta};
+pub use executable::{Arg, CompiledFn};
+pub use params::ParamStore;

@@ -1,0 +1,175 @@
+//! Flat parameter store: the single f32 vector holding every trainable
+//! parameter, addressed through the meta.json layout.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::ModelMeta;
+use crate::photonics::TapTarget;
+
+/// Parameter vector + layout.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub theta: Vec<f32>,
+    meta: ModelMeta,
+}
+
+/// Numerically-stable softplus.
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+impl ParamStore {
+    pub fn new(meta: &ModelMeta, theta: Vec<f32>) -> Result<Self> {
+        if theta.len() != meta.num_params {
+            return Err(anyhow!(
+                "theta length {} != meta.num_params {}",
+                theta.len(),
+                meta.num_params
+            ));
+        }
+        Ok(Self {
+            theta,
+            meta: meta.clone(),
+        })
+    }
+
+    /// Load a raw little-endian f32 file (`params_init.bin` or a checkpoint).
+    pub fn load_bin(meta: &ModelMeta, path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != meta.num_params * 4 {
+            return Err(anyhow!(
+                "{}: {} bytes, want {}",
+                path.display(),
+                bytes.len(),
+                meta.num_params * 4
+            ));
+        }
+        let theta = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::new(meta, theta)
+    }
+
+    /// The freshly-initialized parameters exported by aot.py.
+    pub fn load_init(meta: &ModelMeta, model_dir: &Path) -> Result<Self> {
+        Self::load_bin(meta, &model_dir.join("params_init.bin"))
+    }
+
+    pub fn save_bin(&self, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.theta.len() * 4);
+        for x in &self.theta {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Slice of a named parameter region.
+    pub fn slice(&self, name: &str) -> Result<&[f32]> {
+        let spec = self
+            .meta
+            .param(name)
+            .ok_or_else(|| anyhow!("no parameter '{name}'"))?;
+        Ok(&self.theta[spec.offset..spec.offset + spec.size])
+    }
+
+    /// The probabilistic taps as machine targets: `mu` straight from
+    /// `prob_mu`, `sigma = max(softplus(prob_rho), min_rel_sigma * |mu|)` —
+    /// the same straight-through floor the L2 surrogate applies, so the
+    /// machine is programmed with exactly the distribution trained against.
+    ///
+    /// Returns `prob_ch` kernels of `num_taps` targets each.
+    pub fn prob_kernels(&self) -> Result<Vec<Vec<TapTarget>>> {
+        let mu = self.slice("prob_mu")?;
+        let rho = self.slice("prob_rho")?;
+        let nt = self.meta.num_taps;
+        let floor = self.meta.min_rel_sigma;
+        Ok(mu
+            .chunks(nt)
+            .zip(rho.chunks(nt))
+            .map(|(mus, rhos)| {
+                mus.iter()
+                    .zip(rhos)
+                    .map(|(&m, &r)| TapTarget {
+                        mu: m,
+                        sigma: softplus(r).max(floor * m.abs()),
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.theta.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::artifacts_root;
+
+    #[test]
+    fn softplus_properties() {
+        assert!((softplus(0.0) - (2f32).ln()).abs() < 1e-6);
+        assert!((softplus(-3.0) - 0.048587).abs() < 1e-5);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-5);
+        assert!(softplus(-30.0) > 0.0);
+    }
+
+    #[test]
+    fn loads_init_params_and_prob_kernels() {
+        let root = artifacts_root().join("digits");
+        if !root.join("meta.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let meta = ModelMeta::load(&root).unwrap();
+        let ps = ParamStore::load_init(&meta, &root).unwrap();
+        assert_eq!(ps.num_params(), meta.num_params);
+        let kernels = ps.prob_kernels().unwrap();
+        assert_eq!(kernels.len(), meta.prob_ch);
+        assert_eq!(kernels[0].len(), meta.num_taps);
+        // rho init -3 -> sigma ~= softplus(-3) = 0.04859, or the rel floor
+        for kern in &kernels {
+            for t in kern {
+                let expect = softplus(-3.0).max(meta.min_rel_sigma * t.mu.abs());
+                assert!((t.sigma - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let root = artifacts_root().join("digits");
+        if !root.join("meta.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&root).unwrap();
+        let mut ps = ParamStore::load_init(&meta, &root).unwrap();
+        ps.theta[3] = 42.5;
+        let tmp = std::env::temp_dir().join("pbm_params_rt.bin");
+        ps.save_bin(&tmp).unwrap();
+        let ps2 = ParamStore::load_bin(&meta, &tmp).unwrap();
+        assert_eq!(ps.theta, ps2.theta);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let root = artifacts_root().join("digits");
+        if !root.join("meta.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&root).unwrap();
+        assert!(ParamStore::new(&meta, vec![0.0; 10]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! TCP serving gateway: newline-delimited JSON over TCP.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"op":"classify","dataset":"blood","image":[...C*H*W floats in 0..1]}
+//! <- {"ok":true,"class":4,"decision":"accept","confidence":0.93,
+//!     "mi":0.004,"se":0.12,"h":0.124,"mean_probs":[...],"latency_us":812}
+//! -> {"op":"info"}
+//! <- {"ok":true,"datasets":["digits","blood"],"version":"0.1.0"}
+//! -> {"op":"ping"}   <- {"ok":true,"pong":true}
+//! ```
+
+pub mod protocol;
+pub mod tcp;
+
+pub use tcp::{serve, Client, ServerOptions};

@@ -1,0 +1,173 @@
+//! Wire protocol: request parsing and response encoding.
+
+use anyhow::{anyhow, Result};
+
+use crate::bnn::Decision;
+use crate::coordinator::engine::ClassifyResult;
+use crate::util::json::{self, Json};
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Classify { dataset: String, image: Vec<f32> },
+    Info,
+    Ping,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
+    match j.req("op").map_err(|e| anyhow!(e))?.as_str() {
+        Some("classify") => {
+            let dataset = j
+                .req("dataset")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .ok_or_else(|| anyhow!("dataset must be a string"))?
+                .to_string();
+            let image = j
+                .req("image")
+                .map_err(|e| anyhow!(e))?
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("image must be a numeric array"))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect();
+            Ok(Request::Classify { dataset, image })
+        }
+        Some("info") => Ok(Request::Info),
+        Some("ping") => Ok(Request::Ping),
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+/// Encode a classification result.
+pub fn encode_result(r: &ClassifyResult) -> String {
+    let (decision, class, extra): (&str, Option<usize>, Vec<(&str, Json)>) = match &r.decision {
+        Decision::Accept { class, confidence } => (
+            "accept",
+            Some(*class),
+            vec![("confidence", Json::Num(*confidence as f64))],
+        ),
+        Decision::RejectOod { mutual_information } => (
+            "reject_ood",
+            None,
+            vec![("mi_trigger", Json::Num(*mutual_information))],
+        ),
+        Decision::FlagAmbiguous {
+            class,
+            softmax_entropy,
+        } => (
+            "flag_ambiguous",
+            Some(*class),
+            vec![("se_trigger", Json::Num(*softmax_entropy))],
+        ),
+    };
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("decision", Json::Str(decision.into()));
+    if let Some(c) = class {
+        o.set("class", Json::Num(c as f64));
+    }
+    o.set("predicted", Json::Num(r.predictive.predicted as f64));
+    o.set("mi", Json::Num(r.predictive.mutual_information));
+    o.set("se", Json::Num(r.predictive.softmax_entropy));
+    o.set("h", Json::Num(r.predictive.shannon_entropy));
+    o.set("agreement", Json::Num(r.predictive.agreement));
+    o.set("mean_probs", Json::arr_f32(&r.predictive.mean_probs));
+    o.set("latency_us", Json::Num(r.latency_us));
+    for (k, v) in extra {
+        o.set(k, v);
+    }
+    o.to_string_compact()
+}
+
+/// Encode an error response.
+pub fn encode_error(msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("error", Json::Str(msg.into()));
+    o.to_string_compact()
+}
+
+/// Encode the `info` response.
+pub fn encode_info(datasets: &[&str]) -> String {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set(
+        "datasets",
+        Json::Arr(datasets.iter().map(|d| Json::Str(d.to_string())).collect()),
+    );
+    o.set("version", Json::Str(crate::version().into()));
+    o.to_string_compact()
+}
+
+/// Encode the `ping` response.
+pub fn encode_pong() -> String {
+    "{\"ok\":true,\"pong\":true}".to_string()
+}
+
+/// Client-side: encode a classify request.
+pub fn encode_classify(dataset: &str, image: &[f32]) -> String {
+    let mut o = Json::obj();
+    o.set("op", Json::Str("classify".into()));
+    o.set("dataset", Json::Str(dataset.into()));
+    o.set("image", Json::arr_f32(image));
+    o.to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::Predictive;
+
+    #[test]
+    fn parse_classify_roundtrip() {
+        let line = encode_classify("digits", &[0.0, 0.5, 1.0]);
+        match parse_request(&line).unwrap() {
+            Request::Classify { dataset, image } => {
+                assert_eq!(dataset, "digits");
+                assert_eq!(image, vec![0.0, 0.5, 1.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_info_and_ping() {
+        assert_eq!(parse_request("{\"op\":\"info\"}").unwrap(), Request::Info);
+        assert_eq!(parse_request("{\"op\":\"ping\"}").unwrap(), Request::Ping);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("{\"op\":\"classify\"}").is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{\"op\":\"classify\",\"dataset\":\"d\",\"image\":\"x\"}").is_err());
+    }
+
+    #[test]
+    fn encode_result_has_metrics() {
+        let pred = Predictive::from_logits(&vec![vec![3.0, 0.0]; 5]);
+        let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
+        let r = ClassifyResult {
+            predictive: pred,
+            decision,
+            latency_us: 123.0,
+        };
+        let line = encode_result(&r);
+        let j = crate::util::json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("decision").unwrap().as_str(), Some("accept"));
+        assert_eq!(j.get("class").unwrap().as_usize(), Some(0));
+        assert!(j.get("mi").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn encode_error_flagged_not_ok() {
+        let j = crate::util::json::parse(&encode_error("boom")).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+}

@@ -1,0 +1,170 @@
+//! TCP gateway: accept loop + per-connection workers over the router.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::protocol::{self, Request};
+use crate::coordinator::service::ClassifyRequest;
+use crate::coordinator::Router;
+use crate::exec::{CancelToken, ThreadPool};
+use crate::log_info;
+
+/// Server options.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    pub addr: String,
+    pub workers: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            workers: 8,
+        }
+    }
+}
+
+/// Serve the router over TCP until `cancel` fires.  Returns the bound local
+/// address via the `on_bound` callback (useful with port 0 in tests).
+pub fn serve(
+    router: Router,
+    opts: ServerOptions,
+    cancel: CancelToken,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(&opts.addr).with_context(|| format!("bind {}", opts.addr))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    log_info!("serving on {}", listener.local_addr()?);
+    let router = Arc::new(router);
+    let pool = ThreadPool::new(opts.workers);
+    while !cancel.is_cancelled() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let router = router.clone();
+                let cancel = cancel.clone();
+                pool.execute(move || {
+                    if let Err(e) = handle_conn(stream, &router, &cancel) {
+                        crate::log_debug!("conn {peer}: {e}");
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(anyhow!("accept: {e}")),
+        }
+    }
+    drop(pool); // join workers
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => {}
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if cancel.is_cancelled() {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {
+                let resp = respond(router, &line);
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Compute the response line for one request line (transport-independent —
+/// also used by unit tests without sockets).
+pub fn respond(router: &Router, line: &str) -> String {
+    match protocol::parse_request(line) {
+        Err(e) => protocol::encode_error(&format!("{e}")),
+        Ok(Request::Ping) => protocol::encode_pong(),
+        Ok(Request::Info) => protocol::encode_info(&router.datasets()),
+        Ok(Request::Classify { dataset, image }) => {
+            let (req, rx) = ClassifyRequest::new(image);
+            match router.route(&dataset, req) {
+                Err(e) => protocol::encode_error(&format!("{e}")),
+                Ok(()) => match rx.recv() {
+                    Some(Ok(result)) => protocol::encode_result(&result),
+                    Some(Err(e)) => protocol::encode_error(&format!("{e}")),
+                    None => protocol::encode_error("engine dropped request"),
+                },
+            }
+        }
+    }
+}
+
+/// Simple blocking client for the gateway (used by examples and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Send one request line; wait for one response line.
+    pub fn call(&mut self, line: &str) -> Result<crate::util::json::Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        crate::util::json::parse(&resp).map_err(|e| anyhow!("bad response: {e} ({resp:?})"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let j = self.call("{\"op\":\"ping\"}")?;
+        Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    pub fn classify(&mut self, dataset: &str, image: &[f32]) -> Result<crate::util::json::Json> {
+        self.call(&protocol::encode_classify(dataset, image))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respond_handles_ping_info_and_errors_without_engines() {
+        let router = Router::new();
+        let pong = respond(&router, "{\"op\":\"ping\"}");
+        assert!(pong.contains("pong"));
+        let info = respond(&router, "{\"op\":\"info\"}");
+        assert!(info.contains("datasets"));
+        let err = respond(&router, "{\"op\":\"classify\",\"dataset\":\"x\",\"image\":[1]}");
+        assert!(err.contains("\"ok\":false"));
+        let bad = respond(&router, "garbage");
+        assert!(bad.contains("\"ok\":false"));
+    }
+}

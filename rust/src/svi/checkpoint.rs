@@ -1,0 +1,75 @@
+//! Checkpointing: parameters (raw f32) + training log (JSON).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::trainer::TrainLog;
+use crate::runtime::ParamStore;
+use crate::util::json::Json;
+
+/// Save parameters and the training log next to each other:
+/// `<stem>.bin` and `<stem>.log.json`.
+pub fn save(stem: &Path, params: &ParamStore, log: &TrainLog) -> Result<()> {
+    params.save_bin(&stem.with_extension("bin"))?;
+    std::fs::write(
+        stem.with_extension("log.json"),
+        log_to_json(log).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+/// Serialize the training log (consumed by EXPERIMENTS.md tooling and the
+/// Fig. 4(b) sigma-trace report).
+pub fn log_to_json(log: &TrainLog) -> Json {
+    Json::from_pairs(vec![(
+        "epochs",
+        Json::Arr(
+            log.epochs
+                .iter()
+                .map(|e| {
+                    let mut o = Json::obj();
+                    o.set("epoch", Json::Num(e.epoch as f64));
+                    o.set("loss", Json::Num(e.loss));
+                    o.set("nll", Json::Num(e.nll));
+                    o.set("kl", Json::Num(e.kl));
+                    o.set("train_acc", Json::Num(e.train_acc));
+                    o.set("sigma_traces", Json::arr_f32(&e.sigma_traces));
+                    o.set("wall_s", Json::Num(e.wall_s));
+                    if let Some(a) = e.eval_acc {
+                        o.set("eval_acc", Json::Num(a));
+                    }
+                    o
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svi::trainer::EpochLog;
+
+    #[test]
+    fn log_serializes_roundtrip() {
+        let log = TrainLog {
+            epochs: vec![EpochLog {
+                epoch: 0,
+                loss: 2.3,
+                nll: 2.1,
+                kl: 40.0,
+                train_acc: 0.4,
+                sigma_traces: vec![0.05, 0.06],
+                wall_s: 1.5,
+                eval_acc: Some(0.5),
+            }],
+        };
+        let j = log_to_json(&log);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        let e0 = &back.get("epochs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e0.get("loss").unwrap().as_f64(), Some(2.3));
+        assert_eq!(e0.get("eval_acc").unwrap().as_f64(), Some(0.5));
+    }
+}

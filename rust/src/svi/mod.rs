@@ -1,0 +1,13 @@
+//! Stochastic Variational Inference training driver (L3 side).
+//!
+//! The entire training computation — surrogate forward with the L1 Pallas
+//! kernel, beta-ELBO, gradients, Adam — lives in one AOT-exported
+//! `train_step` HLO; this module owns the *loop*: epoch shuffling,
+//! minibatch assembly, reparameterization noise, KL annealing, metric
+//! logging (including the Fig. 4(b) per-weight sigma traces), checkpoints,
+//! and surrogate-mode evaluation.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use trainer::{evaluate, train, EvalSummary, TrainConfig, TrainLog};

@@ -1,0 +1,275 @@
+//! The SVI training loop.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::Xoshiro256pp;
+use crate::log_info;
+use crate::runtime::params::softplus;
+use crate::runtime::{Arg, ModelArtifacts, ParamStore};
+use crate::util::mathstat::mean;
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Final KL scale; the effective beta-ELBO weight is `kl_scale / n_train`
+    /// (standard minibatch ELBO scaling), annealed linearly over
+    /// `kl_warmup_epochs`.
+    pub kl_scale: f32,
+    pub kl_warmup_epochs: usize,
+    pub seed: u64,
+    /// Flat tap indices whose posterior sigma is traced per epoch (Fig. 4b).
+    pub sigma_track: Vec<usize>,
+    /// Evaluate on the test set every `eval_every` epochs (0 = only at end).
+    pub eval_every: usize,
+    /// Stochastic forward passes per test input at evaluation time.
+    pub eval_samples: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 12,
+            lr: 2e-3,
+            kl_scale: 1.0,
+            kl_warmup_epochs: 4,
+            seed: 1234,
+            sigma_track: vec![0, 100, 400],
+            eval_every: 0,
+            eval_samples: 4,
+        }
+    }
+}
+
+/// Per-epoch record.
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub loss: f64,
+    pub nll: f64,
+    pub kl: f64,
+    pub train_acc: f64,
+    pub sigma_traces: Vec<f32>,
+    pub wall_s: f64,
+    pub eval_acc: Option<f64>,
+}
+
+/// Full training log.
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub epochs: Vec<EpochLog>,
+}
+
+/// Evaluation result in surrogate mode.
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Train the BNN with SVI, driving the `train_step` HLO from Rust.
+pub fn train(
+    arts: &ModelArtifacts,
+    train_ds: &Dataset,
+    test_ds: Option<&Dataset>,
+    mut params: ParamStore,
+    cfg: &TrainConfig,
+) -> Result<(ParamStore, TrainLog)> {
+    let meta = &arts.meta;
+    let step_fn = arts.get("train_step")?;
+    let b = meta.train_batch;
+    if train_ds.image_size() != meta.image_size() {
+        return Err(anyhow!(
+            "dataset image size {} != model {}",
+            train_ds.image_size(),
+            meta.image_size()
+        ));
+    }
+
+    let mut m = vec![0.0f32; meta.num_params];
+    let mut v = vec![0.0f32; meta.num_params];
+    let mut step = 0.0f32;
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut gauss = Gaussian::new();
+
+    let n_train = train_ds.n as f32;
+    let mut log = TrainLog::default();
+
+    let mut batch_x: Vec<f32> = Vec::with_capacity(b * meta.image_size());
+    let mut batch_y: Vec<i32> = Vec::with_capacity(b);
+    let mut eps = vec![0.0f32; b * meta.eps_size()];
+
+    let x_shape = [
+        b as i64,
+        meta.in_channels as i64,
+        meta.img_hw as i64,
+        meta.img_hw as i64,
+    ];
+    let eps_shape = [
+        b as i64,
+        meta.prob_ch as i64,
+        meta.prob_hw as i64,
+        meta.prob_hw as i64,
+        meta.num_taps as i64,
+    ];
+    let np = meta.num_params as i64;
+
+    let rho_off = meta
+        .param("prob_rho")
+        .ok_or_else(|| anyhow!("no prob_rho"))?
+        .offset;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let anneal = if cfg.kl_warmup_epochs == 0 {
+            1.0
+        } else {
+            ((epoch + 1) as f32 / cfg.kl_warmup_epochs as f32).min(1.0)
+        };
+        let kl_scale = cfg.kl_scale * anneal / n_train;
+
+        let mut losses = Vec::new();
+        let mut nlls = Vec::new();
+        let mut kls = Vec::new();
+        let mut accs = Vec::new();
+
+        for batch in train_ds.shuffled_batches(b, cfg.seed ^ (epoch as u64 + 1)) {
+            train_ds.gather(&batch, &mut batch_x, &mut batch_y);
+            gauss.fill_f32(&mut rng, &mut eps);
+            let out = step_fn.call(&[
+                Arg::F32(&params.theta, &[np]),
+                Arg::F32(&m, &[np]),
+                Arg::F32(&v, &[np]),
+                Arg::ScalarF32(step),
+                Arg::F32(&batch_x, &x_shape),
+                Arg::I32(&batch_y, &[b as i64]),
+                Arg::F32(&eps, &eps_shape),
+                Arg::ScalarF32(kl_scale),
+                Arg::ScalarF32(cfg.lr),
+            ])?;
+            // outputs: theta', m', v', loss, nll, kl, acc
+            params.theta = out[0].clone();
+            m = out[1].clone();
+            v = out[2].clone();
+            losses.push(out[3][0] as f64);
+            nlls.push(out[4][0] as f64);
+            kls.push(out[5][0] as f64);
+            accs.push(out[6][0] as f64);
+            step += 1.0;
+        }
+
+        let sigma_traces: Vec<f32> = cfg
+            .sigma_track
+            .iter()
+            .map(|&i| softplus(params.theta[rho_off + i]))
+            .collect();
+
+        let eval_acc = if test_ds.is_some()
+            && cfg.eval_every > 0
+            && (epoch + 1) % cfg.eval_every == 0
+        {
+            Some(evaluate(arts, test_ds.unwrap(), &params, cfg.eval_samples, cfg.seed)?.accuracy)
+        } else {
+            None
+        };
+
+        let el = EpochLog {
+            epoch,
+            loss: mean(&losses),
+            nll: mean(&nlls),
+            kl: mean(&kls),
+            train_acc: mean(&accs),
+            sigma_traces,
+            wall_s: t0.elapsed().as_secs_f64(),
+            eval_acc,
+        };
+        log_info!(
+            "epoch {:>3}: loss {:.4} nll {:.4} kl {:.1} acc {:.3}{} ({:.1}s)",
+            el.epoch,
+            el.loss,
+            el.nll,
+            el.kl,
+            el.train_acc,
+            el.eval_acc
+                .map(|a| format!(" eval {a:.3}"))
+                .unwrap_or_default(),
+            el.wall_s
+        );
+        log.epochs.push(el);
+    }
+    Ok((params, log))
+}
+
+/// Surrogate-mode evaluation: `n_samples` stochastic passes per input via
+/// the `fwd_full` entry points, majority vote on the mean predictive.
+pub fn evaluate(
+    arts: &ModelArtifacts,
+    ds: &Dataset,
+    params: &ParamStore,
+    n_samples: usize,
+    seed: u64,
+) -> Result<EvalSummary> {
+    let meta = &arts.meta;
+    let bsize = *meta.full_batches.last().unwrap();
+    let f = arts.get(&format!("fwd_full_b{bsize}"))?;
+    let mut rng = Xoshiro256pp::new(seed.wrapping_add(0x5EED));
+    let mut gauss = Gaussian::new();
+    let np = meta.num_params as i64;
+    let x_shape = [
+        bsize as i64,
+        meta.in_channels as i64,
+        meta.img_hw as i64,
+        meta.img_hw as i64,
+    ];
+    let eps_shape = [
+        bsize as i64,
+        meta.prob_ch as i64,
+        meta.prob_hw as i64,
+        meta.prob_hw as i64,
+        meta.num_taps as i64,
+    ];
+    let mut eps = vec![0.0f32; bsize * meta.eps_size()];
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut batch_x = Vec::new();
+    let mut batch_y = Vec::new();
+
+    let full_batches = ds.n / bsize;
+    for bi in 0..full_batches {
+        let idxs: Vec<usize> = (bi * bsize..(bi + 1) * bsize).collect();
+        ds.gather(&idxs, &mut batch_x, &mut batch_y);
+        // mean probs over n_samples passes
+        let mut mean_logit_probs = vec![0.0f32; bsize * meta.n_classes];
+        for _ in 0..n_samples {
+            gauss.fill_f32(&mut rng, &mut eps);
+            let out = f.call(&[
+                Arg::F32(&params.theta, &[np]),
+                Arg::F32(&batch_x, &x_shape),
+                Arg::F32(&eps, &eps_shape),
+            ])?;
+            for (i, chunk) in out[0].chunks(meta.n_classes).enumerate() {
+                let p = crate::util::mathstat::softmax(chunk);
+                for (j, &pj) in p.iter().enumerate() {
+                    mean_logit_probs[i * meta.n_classes + j] += pj / n_samples as f32;
+                }
+            }
+        }
+        for i in 0..bsize {
+            let row = &mean_logit_probs[i * meta.n_classes..(i + 1) * meta.n_classes];
+            let pred = crate::bnn::aggregate::argmax(row);
+            if pred as i32 == batch_y[i] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(EvalSummary {
+        accuracy: correct as f64 / total.max(1) as f64,
+        n: total,
+    })
+}

@@ -1,0 +1,142 @@
+//! Iterative radix-2 FFT (for the NIST SP800-22 spectral test).
+//!
+//! In-place Cooley–Tukey over interleaved (re, im) f64 pairs; no external
+//! dependencies.  Only power-of-two lengths are supported — callers truncate
+//! (the NIST spectral test does exactly that).
+
+use std::f64::consts::PI;
+
+/// Complex number as a (re, im) pair.
+pub type C64 = (f64, f64);
+
+#[inline]
+fn c_mul(a: C64, b: C64) -> C64 {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+#[inline]
+fn c_add(a: C64, b: C64) -> C64 {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+#[inline]
+fn c_sub(a: C64, b: C64) -> C64 {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+/// In-place forward FFT. `data.len()` must be a power of two.
+pub fn fft_in_place(data: &mut [C64]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // butterflies
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = c_mul(data[i + k + len / 2], w);
+                data[i + k] = c_add(u, v);
+                data[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Magnitudes of the first n/2 bins of the FFT of a real signal.
+pub fn real_fft_magnitudes(signal: &[f64]) -> Vec<f64> {
+    let n = signal.len().next_power_of_two() >> usize::from(!signal.len().is_power_of_two());
+    // truncate to the largest power of two <= len
+    let n = if signal.len().is_power_of_two() {
+        signal.len()
+    } else {
+        n
+    };
+    let mut buf: Vec<C64> = signal[..n].iter().map(|&x| (x, 0.0)).collect();
+    fft_in_place(&mut buf);
+    buf[..n / 2]
+        .iter()
+        .map(|&(re, im)| (re * re + im * im).sqrt())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut d = vec![(0.0, 0.0); 8];
+        d[0] = (1.0, 0.0);
+        fft_in_place(&mut d);
+        for &(re, im) in &d {
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_constant_is_delta() {
+        let mut d = vec![(1.0, 0.0); 16];
+        fft_in_place(&mut d);
+        assert!((d[0].0 - 16.0).abs() < 1e-9);
+        for &(re, im) in &d[1..] {
+            assert!(re.abs() < 1e-9 && im.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let signal: Vec<f64> = (0..32).map(|i| ((i * 7 + 3) % 11) as f64 - 5.0).collect();
+        let mut d: Vec<C64> = signal.iter().map(|&x| (x, 0.0)).collect();
+        fft_in_place(&mut d);
+        // naive DFT comparison at a few bins
+        for k in [0usize, 1, 5, 16, 31] {
+            let mut acc = (0.0f64, 0.0f64);
+            for (t, &x) in signal.iter().enumerate() {
+                let ang = -2.0 * PI * (k * t) as f64 / 32.0;
+                acc.0 += x * ang.cos();
+                acc.1 += x * ang.sin();
+            }
+            assert!((acc.0 - d[k].0).abs() < 1e-8, "re bin {k}");
+            assert!((acc.1 - d[k].1).abs() < 1e-8, "im bin {k}");
+        }
+    }
+
+    #[test]
+    fn sine_concentrates_in_one_bin() {
+        let n = 64;
+        let signal: Vec<f64> = (0..n)
+            .map(|i| (2.0 * PI * 5.0 * i as f64 / n as f64).sin())
+            .collect();
+        let mags = real_fft_magnitudes(&signal);
+        let peak = mags
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, 5);
+    }
+}

@@ -1,0 +1,321 @@
+//! Descriptive statistics, special functions, and small numeric helpers.
+//!
+//! Shared by the entropy tests (NIST p-values need `erfc` / the regularized
+//! incomplete gamma), the calibration loop (moment estimates), the benchmark
+//! harness (robust summaries), and the Fig. 2(e) delay fit (least squares).
+
+/// Streaming mean/variance (Welford).  Numerically stable for long streams.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for fewer than two samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn mean_f32(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    w.std()
+}
+
+pub fn std_f32(xs: &[f32]) -> f64 {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x as f64);
+    }
+    w.std()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Ordinary least squares fit `y = a + b*x`; returns (intercept, slope, r2).
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "linfit needs >= 2 points");
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Softmax over a slice (numerically stabilized).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Special functions (for NIST p-values)
+// ---------------------------------------------------------------------------
+
+/// Complementary error function, Numerical-Recipes-style Chebyshev fit.
+/// Absolute error < 1.2e-7 — ample for test thresholds at alpha = 0.01.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Regularized upper incomplete gamma Q(a, x) = Γ(a, x)/Γ(a).
+/// Series for x < a+1, continued fraction otherwise (Numerical Recipes).
+pub fn igamc(a: f64, x: f64) -> f64 {
+    if x <= 0.0 || a <= 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_series(a, x)
+    } else {
+        gamma_cf(a, x)
+    }
+}
+
+fn ln_gamma(x: f64) -> f64 {
+    // Lanczos approximation (g = 5, n = 6)
+    const COF: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for c in COF {
+        y += 1.0;
+        ser += c / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+fn gamma_series(a: f64, x: f64) -> f64 {
+    let gln = ln_gamma(a);
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - gln).exp()
+}
+
+fn gamma_cf(a: f64, x: f64) -> f64 {
+    let gln = ln_gamma(a);
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - gln).exp() * h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 6.2).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 6.2) * (x - 6.2)).sum::<f64>() / 4.0;
+        assert!((w.var() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 - 2.0 * v).collect();
+        let (a, b, r2) = linfit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b + 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[1000.0, 0.0, -1000.0]);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        // from Abramowitz & Stegun tables
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(0.5) - 0.4795001).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.1572992).abs() < 1e-6);
+        assert!((erfc(2.0) - 0.0046777).abs() < 1e-6);
+        assert!((erfc(-1.0) - 1.8427008).abs() < 1e-6);
+    }
+
+    #[test]
+    fn igamc_reference_values() {
+        // Q(a, x) checks: Q(0.5, x) = erfc(sqrt(x))
+        for x in [0.1, 0.5, 1.0, 2.0, 5.0] {
+            let q = igamc(0.5, x);
+            let e = erfc(x.sqrt());
+            assert!((q - e).abs() < 1e-6, "x={x}: {q} vs {e}");
+        }
+        // Q(1, x) = exp(-x)
+        for x in [0.1, 1.0, 3.0] {
+            assert!((igamc(1.0, x) - (-x as f64).exp()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn igamc_monotone_in_x() {
+        let mut prev = 1.0;
+        for i in 1..50 {
+            let q = igamc(2.5, i as f64 * 0.3);
+            assert!(q <= prev + 1e-12);
+            prev = q;
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Small shared substrates: JSON, descriptive statistics, logging.
+
+pub mod fft;
+pub mod json;
+pub mod logging;
+pub mod mathstat;

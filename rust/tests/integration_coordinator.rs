@@ -1,0 +1,224 @@
+//! Integration: coordinator service + router + property-based L3 invariants.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::coordinator::service::{ClassifyRequest, EngineHandle, ServiceConfig};
+use photonic_bayes::coordinator::{DynamicBatcher, EngineConfig, ExecMode, Router};
+use photonic_bayes::entropy::BitSource;
+use photonic_bayes::exec::channel::channel;
+use photonic_bayes::photonics::MachineConfig;
+use photonic_bayes::proptest_mini as pt;
+use photonic_bayes::runtime::artifact::artifacts_root;
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("digits/meta.json").exists()
+}
+
+fn fast_engine_cfg() -> EngineConfig {
+    EngineConfig {
+        n_samples: 3,
+        mode: ExecMode::Surrogate,
+        policy: UncertaintyPolicy::ood_only(0.05),
+        calibrate: false,
+        machine: MachineConfig::default(),
+        noise_bw_ghz: 150.0,
+        seed: 5,
+    }
+}
+
+#[test]
+fn engine_service_answers_concurrent_clients() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let handle = EngineHandle::spawn(
+        &artifacts_root(),
+        "digits",
+        None,
+        fast_engine_cfg(),
+        ServiceConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+    let handle = Arc::new(handle);
+    let image_size = 28 * 28;
+
+    let results: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut clients = Vec::new();
+    for c in 0..4 {
+        let handle = handle.clone();
+        let results = results.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..6 {
+                let image = vec![0.1 * (c as f32 + 1.0); image_size];
+                let r = handle.classify_blocking(image).unwrap();
+                assert_eq!(r.predictive.n_classes(), 10);
+                assert!(r.predictive.mutual_information >= 0.0);
+                results.lock().unwrap().push(c * 10 + i);
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(results.lock().unwrap().len(), 24);
+}
+
+#[test]
+fn engine_service_rejects_wrong_image_size() {
+    if !have_artifacts() {
+        return;
+    }
+    let handle = EngineHandle::spawn(
+        &artifacts_root(),
+        "digits",
+        None,
+        fast_engine_cfg(),
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let err = handle.classify_blocking(vec![0.0; 12]);
+    assert!(err.is_err());
+    // and the engine must still be healthy afterwards
+    let ok = handle.classify_blocking(vec![0.5; 28 * 28]);
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn router_routes_and_errors() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut router = Router::new();
+    router.register(
+        EngineHandle::spawn(
+            &artifacts_root(),
+            "digits",
+            None,
+            fast_engine_cfg(),
+            ServiceConfig::default(),
+        )
+        .unwrap(),
+    );
+    assert!(router.get("digits").is_ok());
+    assert!(router.get("nope").is_err());
+    let (req, rx) = ClassifyRequest::new(vec![0.3; 28 * 28]);
+    router.route("digits", req).unwrap();
+    let res = rx.recv().unwrap().unwrap();
+    assert!(res.predictive.n_samples() == 3);
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Property-based L3 invariants (proptest_mini)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_never_drops() {
+    let cfg = pt::Config { cases: 30, ..Default::default() };
+    pt::check(
+        "batcher-bounds",
+        &cfg,
+        |rng: &mut photonic_bayes::entropy::Xoshiro256pp| {
+            let n_items = 1 + rng.next_below(40);
+            let max_batch = 1 + rng.next_below(9);
+            (n_items, max_batch)
+        },
+        |&(n_items, max_batch)| {
+            let (tx, rx) = channel(64);
+            for i in 0..n_items {
+                tx.send(i).unwrap();
+            }
+            tx.close();
+            let b = DynamicBatcher::new(rx, max_batch, Duration::from_millis(1));
+            let mut seen = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                if batch.len() > max_batch {
+                    return Err(format!("batch {} > max {max_batch}", batch.len()));
+                }
+                seen.extend(batch);
+            }
+            if seen != (0..n_items).collect::<Vec<_>>() {
+                return Err(format!("items lost or reordered: {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_uncertainty_metrics_invariants() {
+    // H = SE + MI with MI >= 0 for arbitrary prob matrices (the quantities
+    // the policy thresholds act on must be well-formed for any engine output)
+    let cfg = pt::Config { cases: 200, ..Default::default() };
+    pt::check(
+        "entropy-decomposition",
+        &cfg,
+        pt::prob_matrix(16, 12),
+        |m| {
+            let pred = photonic_bayes::bnn::Predictive::from_probs(m.clone());
+            let h = pred.shannon_entropy;
+            let se = pred.softmax_entropy;
+            let mi = pred.mutual_information;
+            if mi < 0.0 {
+                return Err(format!("MI {mi} < 0"));
+            }
+            if (h - (se + mi)).abs() > 1e-6 && h >= se {
+                return Err(format!("H {h} != SE {se} + MI {mi}"));
+            }
+            if !(0.0..=1.0 + 1e-9).contains(&pred.agreement) {
+                return Err("agreement out of range".into());
+            }
+            let s: f32 = pred.mean_probs.iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(format!("mean probs sum {s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_policy_decisions_partition() {
+    // every predictive gets exactly one decision, consistent with thresholds
+    let cfg = pt::Config { cases: 100, ..Default::default() };
+    pt::check(
+        "policy-partition",
+        &cfg,
+        pt::prob_matrix(12, 8),
+        |m| {
+            let pred = photonic_bayes::bnn::Predictive::from_probs(m.clone());
+            let pol = UncertaintyPolicy::full(0.05, 0.9);
+            match pol.decide(&pred) {
+                photonic_bayes::bnn::Decision::RejectOod { mutual_information } => {
+                    if mutual_information <= 0.05 {
+                        return Err("rejected below threshold".into());
+                    }
+                }
+                photonic_bayes::bnn::Decision::FlagAmbiguous { softmax_entropy, .. } => {
+                    if pred.mutual_information > 0.05 {
+                        return Err("should have rejected first".into());
+                    }
+                    if softmax_entropy <= 0.9 {
+                        return Err("flagged below threshold".into());
+                    }
+                }
+                photonic_bayes::bnn::Decision::Accept { class, .. } => {
+                    if pred.mutual_information > 0.05 || pred.softmax_entropy > 0.9 {
+                        return Err("accepted above thresholds".into());
+                    }
+                    if class != pred.predicted {
+                        return Err("accept class != argmax".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

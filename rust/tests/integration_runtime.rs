@@ -1,0 +1,196 @@
+//! Integration: AOT artifacts ↔ PJRT runtime ↔ the L2 contract.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! message) otherwise so `cargo test` stays green on a fresh checkout.
+
+use photonic_bayes::photonics::converters::Quantizer;
+use photonic_bayes::photonics::machine::im2col_3x3;
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{Arg, ModelArtifacts, ParamStore};
+
+fn arts(ds: &str) -> Option<ModelArtifacts> {
+    let root = artifacts_root().join(ds);
+    if !root.join("meta.json").exists() {
+        eprintln!("skipping: artifacts for {ds} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelArtifacts::load(&root).unwrap())
+}
+
+fn init_params(a: &ModelArtifacts) -> ParamStore {
+    ParamStore::load_init(&a.meta, &artifacts_root().join(&a.meta.dataset)).unwrap()
+}
+
+#[test]
+fn fwd_full_is_deterministic_given_inputs() {
+    let Some(a) = arts("digits") else { return };
+    let meta = &a.meta;
+    let f = a.get("fwd_full_b1").unwrap();
+    let ps = init_params(&a);
+    let x = vec![0.3f32; meta.image_size()];
+    let eps = vec![0.7f32; meta.eps_size()];
+    let np = meta.num_params as i64;
+    let shape_x = [1, meta.in_channels as i64, 28, 28];
+    let shape_e = [1, meta.prob_ch as i64, 7, 7, 9];
+    let o1 = f
+        .call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &shape_x), Arg::F32(&eps, &shape_e)])
+        .unwrap();
+    let o2 = f
+        .call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &shape_x), Arg::F32(&eps, &shape_e)])
+        .unwrap();
+    assert_eq!(o1[0], o2[0]);
+}
+
+/// The serving split (`fwd_pre` -> probabilistic depthwise conv -> ADC
+/// quantization -> `fwd_post`) must agree with the monolithic surrogate
+/// (`fwd_full`) when the noise is zero: with eps = 0 the sampled taps
+/// collapse to their means regardless of the sigma floor, so the conv can
+/// be reproduced exactly in Rust from the parameter vector.
+#[test]
+fn split_path_matches_fwd_full_at_zero_noise() {
+    let Some(a) = arts("digits") else { return };
+    let meta = a.meta.clone();
+    let ps = init_params(&a);
+    let np = meta.num_params as i64;
+
+    // a smooth but non-trivial input
+    let x: Vec<f32> = (0..meta.image_size())
+        .map(|i| ((i % 29) as f32 / 29.0))
+        .collect();
+    let shape_x = [1, meta.in_channels as i64, 28, 28];
+
+    // reference: fwd_full with eps = 0
+    let eps = vec![0.0f32; meta.eps_size()];
+    let full = a.get("fwd_full_b1").unwrap();
+    let want = full
+        .call(&[
+            Arg::F32(&ps.theta, &[np]),
+            Arg::F32(&x, &shape_x),
+            Arg::F32(&eps, &[1, meta.prob_ch as i64, 7, 7, 9]),
+        ])
+        .unwrap()[0]
+        .clone();
+
+    // split path: pre -> rust depthwise(mu) -> quant -> post
+    let pre = a.get("fwd_pre_b1").unwrap();
+    let post = a.get("fwd_post_b1").unwrap();
+    let x3q = pre
+        .call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &shape_x)])
+        .unwrap()[0]
+        .clone();
+    let mu = ps.slice("prob_mu").unwrap();
+    let (c, h, w) = (meta.prob_ch, meta.prob_hw, meta.prob_hw);
+    let mut d3 = vec![0.0f32; c * h * w];
+    let mut patches = vec![0.0f32; h * w * 9];
+    for ch in 0..c {
+        im2col_3x3(&x3q[ch * h * w..(ch + 1) * h * w], h, w, &mut patches);
+        for p in 0..h * w {
+            let mut acc = 0.0f32;
+            for k in 0..9 {
+                acc += mu[ch * 9 + k] * patches[p * 9 + k];
+            }
+            d3[ch * h * w + p] = acc;
+        }
+    }
+    let q = Quantizer::new(meta.scale_adc);
+    for v in &mut d3 {
+        *v = q.quantize(*v);
+    }
+    let act_shape = [1, c as i64, h as i64, w as i64];
+    let got = post
+        .call(&[
+            Arg::F32(&ps.theta, &[np]),
+            Arg::F32(&x3q, &act_shape),
+            Arg::F32(&d3, &act_shape),
+        ])
+        .unwrap()[0]
+        .clone();
+
+    assert_eq!(got.len(), want.len());
+    for (g, w_) in got.iter().zip(&want) {
+        assert!((g - w_).abs() < 1e-3, "split {g} vs full {w_}");
+    }
+}
+
+#[test]
+fn train_step_memorizes_fixed_batch() {
+    let Some(a) = arts("digits") else { return };
+    let meta = a.meta.clone();
+    let f = a.get("train_step").unwrap();
+    let mut ps = init_params(&a);
+    let np = meta.num_params as i64;
+    let b = meta.train_batch;
+
+    // deterministic pseudo-batch
+    let x: Vec<f32> = (0..b * meta.image_size())
+        .map(|i| ((i * 2654435761usize) % 256) as f32 / 255.0)
+        .collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % meta.n_classes) as i32).collect();
+    let eps: Vec<f32> = (0..b * meta.eps_size())
+        .map(|i| (((i * 97 + 13) % 200) as f32 / 100.0) - 1.0)
+        .collect();
+
+    let mut m = vec![0.0f32; meta.num_params];
+    let mut v = vec![0.0f32; meta.num_params];
+    let mut losses = Vec::new();
+    for step in 0..25 {
+        let out = f
+            .call(&[
+                Arg::F32(&ps.theta, &[np]),
+                Arg::F32(&m, &[np]),
+                Arg::F32(&v, &[np]),
+                Arg::ScalarF32(step as f32),
+                Arg::F32(&x, &[b as i64, meta.in_channels as i64, 28, 28]),
+                Arg::I32(&y, &[b as i64]),
+                Arg::F32(&eps, &[b as i64, meta.prob_ch as i64, 7, 7, 9]),
+                Arg::ScalarF32(1e-5),
+                Arg::ScalarF32(3e-3),
+            ])
+            .unwrap();
+        ps.theta = out[0].clone();
+        m = out[1].clone();
+        v = out[2].clone();
+        losses.push(out[3][0]);
+        assert!(out[5][0] >= 0.0, "KL must be nonnegative");
+    }
+    assert!(
+        losses[24] < losses[0] * 0.8,
+        "loss should drop: {} -> {}",
+        losses[0],
+        losses[24]
+    );
+}
+
+#[test]
+fn all_entry_points_compile_and_declare_consistent_shapes() {
+    for ds in ["digits", "blood"] {
+        let Some(a) = arts(ds) else { return };
+        // compile the small ones (the rest are covered by other tests)
+        for ep in ["fwd_pre_b1", "fwd_post_b1", "fwd_full_b1"] {
+            a.get(ep).unwrap();
+        }
+        assert!(a.meta.num_params > 1000);
+        assert_eq!(a.meta.prob_hw, 7);
+    }
+}
+
+#[test]
+fn eps_zero_vs_eps_nonzero_differ() {
+    let Some(a) = arts("digits") else { return };
+    let meta = &a.meta;
+    let f = a.get("fwd_full_b1").unwrap();
+    let ps = init_params(&a);
+    let np = meta.num_params as i64;
+    let x = vec![0.5f32; meta.image_size()];
+    let shape_x = [1, meta.in_channels as i64, 28, 28];
+    let shape_e = [1, meta.prob_ch as i64, 7, 7, 9];
+    let e0 = vec![0.0f32; meta.eps_size()];
+    let e1 = vec![2.0f32; meta.eps_size()];
+    let o0 = f
+        .call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &shape_x), Arg::F32(&e0, &shape_e)])
+        .unwrap();
+    let o1 = f
+        .call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&x, &shape_x), Arg::F32(&e1, &shape_e)])
+        .unwrap();
+    assert_ne!(o0[0], o1[0], "noise must influence the logits");
+}

@@ -1,0 +1,103 @@
+//! Integration: full TCP round trip through the gateway.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::coordinator::service::{EngineHandle, ServiceConfig};
+use photonic_bayes::coordinator::{EngineConfig, ExecMode, Router};
+use photonic_bayes::exec::CancelToken;
+use photonic_bayes::photonics::MachineConfig;
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::server::{serve, Client, ServerOptions};
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("digits/meta.json").exists()
+}
+
+#[test]
+fn tcp_round_trip_ping_info_classify() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut router = Router::new();
+    router.register(
+        EngineHandle::spawn(
+            &artifacts_root(),
+            "digits",
+            None,
+            EngineConfig {
+                n_samples: 3,
+                mode: ExecMode::Surrogate,
+                policy: UncertaintyPolicy::ood_only(0.5),
+                calibrate: false,
+                machine: MachineConfig::default(),
+                noise_bw_ghz: 150.0,
+                seed: 3,
+            },
+            ServiceConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 32,
+            },
+        )
+        .unwrap(),
+    );
+
+    let cancel = CancelToken::new();
+    let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::new(Mutex::new(None));
+    let b2 = bound.clone();
+    let c2 = cancel.clone();
+    let server = std::thread::spawn(move || {
+        serve(
+            router,
+            ServerOptions {
+                addr: "127.0.0.1:0".into(),
+                workers: 4,
+            },
+            c2,
+            move |a| {
+                *b2.lock().unwrap() = Some(a);
+            },
+        )
+    });
+    let addr = loop {
+        if let Some(a) = *bound.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    // ping
+    assert!(client.ping().unwrap());
+    // info
+    let info = client.call("{\"op\":\"info\"}").unwrap();
+    assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+    let ds: Vec<String> = info
+        .get("datasets")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    assert!(ds.contains(&"digits".to_string()));
+    // classify a synthetic image
+    let image = vec![0.4f32; 28 * 28];
+    let resp = client.classify("digits", &image).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert!(resp.get("mi").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(resp.get("mean_probs").unwrap().as_arr().unwrap().len() == 10);
+    // malformed request -> structured error, connection stays usable
+    let err = client.call("{\"op\":\"classify\"}").unwrap();
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+    assert!(client.ping().unwrap());
+    // unknown dataset -> error
+    let err = client.classify("nope", &image).unwrap();
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+
+    cancel.cancel();
+    server.join().unwrap().unwrap();
+}
