@@ -43,7 +43,7 @@ fn main() -> Result<()> {
         params,
         EngineConfig {
             n_samples: 10,
-            mode: ExecMode::Photonic,
+            mode: ExecMode::photonic(),
             policy: UncertaintyPolicy::ood_only(0.0185), // paper's threshold
             calibrate: true,
             machine: MachineConfig::default(),

@@ -2,15 +2,17 @@
 //!
 //! ```bash
 //! make artifacts && cargo build --release
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart [-- photonic|digital|mean]
 //! ```
 //!
-//! Loads the AOT artifacts, builds a photonic engine (machine simulator +
-//! PJRT executables), classifies a few test digits with N = 10 stochastic
-//! passes, and prints the per-input uncertainty breakdown — plus a taste of
-//! the entropy source that powers it.
+//! Loads the AOT artifacts, builds an engine on the chosen sampling backend
+//! (default: the photonic machine simulator + PJRT executables), classifies
+//! a few test digits with N = 10 stochastic passes, and prints the
+//! per-input uncertainty breakdown — plus a taste of the entropy source
+//! that powers it.
 
 use anyhow::Result;
+use photonic_bayes::backend::BackendKind;
 use photonic_bayes::bnn::{Decision, UncertaintyPolicy};
 use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
 use photonic_bayes::data::{Dataset, DatasetKind};
@@ -21,6 +23,10 @@ use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
 
 fn main() -> Result<()> {
     let root = artifacts_root();
+    let backend = match std::env::args().nth(1) {
+        Some(s) => BackendKind::parse(&s)?,
+        None => BackendKind::Photonic,
+    };
 
     // --- 1. the machine's headline numbers, derived from its constants ----
     let h = timing::headline();
@@ -51,7 +57,7 @@ fn main() -> Result<()> {
         params,
         EngineConfig {
             n_samples: 10,
-            mode: ExecMode::Photonic,
+            mode: ExecMode::Split(backend),
             policy: UncertaintyPolicy::full(0.02, 1.2),
             calibrate: true,
             machine: MachineConfig::default(),
@@ -67,7 +73,11 @@ fn main() -> Result<()> {
     for i in 0..n {
         batch.extend_from_slice(ds.image(i));
     }
-    println!("classifying {n} test digits with N = 10 photonic passes each:");
+    println!(
+        "classifying {n} test digits with N = {} '{}' passes each:",
+        engine.samples_per_request(),
+        engine.backend_kind()
+    );
     for (i, r) in engine.classify(&batch, n)?.iter().enumerate() {
         let verdict = match &r.decision {
             Decision::Accept { class, confidence } => {

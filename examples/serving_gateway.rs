@@ -43,7 +43,7 @@ fn main() -> Result<()> {
     // --- spin up the router with one photonic engine ----------------------
     let engine_cfg = EngineConfig {
         n_samples: 10,
-        mode: ExecMode::Photonic,
+        mode: ExecMode::photonic(),
         policy: UncertaintyPolicy::ood_only(0.00308),
         calibrate: false, // load-time speed; calibration is exercised elsewhere
         machine: MachineConfig::default(),

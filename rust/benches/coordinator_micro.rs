@@ -4,10 +4,11 @@
 
 use std::time::Duration;
 
+use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
 use photonic_bayes::benchkit::{black_box, section, Bench};
 use photonic_bayes::bnn::UncertaintyPolicy;
 use photonic_bayes::coordinator::{DynamicBatcher, Engine, EngineConfig, ExecMode};
-use photonic_bayes::data::synth::random_activations;
+use photonic_bayes::data::synth::{random_activations, random_kernel};
 use photonic_bayes::entropy::Xoshiro256pp;
 use photonic_bayes::exec::channel::channel;
 use photonic_bayes::photonics::MachineConfig;
@@ -18,6 +19,34 @@ use photonic_bayes::server::protocol;
 fn main() {
     let bench = Bench::default();
     let quick = Bench::quick();
+
+    section("BACKEND — batched sample plan (N = 10, batch 8, 8ch@7x7)");
+    {
+        let plan = SamplePlan::new(10, 8, 8, 7, 7);
+        let mut rng = Xoshiro256pp::new(3);
+        let kernels: Vec<_> = (0..8).map(|_| random_kernel(&mut rng)).collect();
+        let mcfg = MachineConfig::default();
+        let x = random_activations(&mut rng, plan.sample_size(), mcfg.scale_dac);
+        for kind in [BackendKind::Photonic, BackendKind::Digital, BackendKind::MeanField] {
+            let mut be = backend::build(kind, &mcfg);
+            be.program(&kernels, false).unwrap();
+            let eff = SamplePlan {
+                n_samples: if be.is_deterministic() { 1 } else { plan.n_samples },
+                ..plan
+            };
+            let mut out = vec![0.0f32; eff.total_size()];
+            let s = quick.run(&format!("sample_conv backend={}", kind.name()), || {
+                be.sample_conv(&eff, &x, &mut out).unwrap();
+                black_box(&out);
+            });
+            println!(
+                "{}   ({:.2} M conv/s)",
+                s.row(),
+                s.throughput(eff.convolutions() as f64) / 1e6
+            );
+        }
+    }
+
     let root = artifacts_root();
     if !root.join("digits/meta.json").exists() {
         eprintln!("artifacts missing; run `make artifacts` first");
@@ -99,7 +128,12 @@ fn main() {
 
     section("END-TO-END classify (N = 10 passes, batch 8)");
     {
-        for (name, mode) in [("surrogate", ExecMode::Surrogate), ("photonic", ExecMode::Photonic)] {
+        for (name, mode) in [
+            ("surrogate", ExecMode::Surrogate),
+            ("photonic", ExecMode::photonic()),
+            ("digital", ExecMode::Split(BackendKind::Digital)),
+            ("mean", ExecMode::Split(BackendKind::MeanField)),
+        ] {
             let arts = ModelArtifacts::load_dataset(&root, "digits").unwrap();
             let params = ParamStore::load_init(&arts.meta, &root.join("digits")).unwrap();
             let image_size = arts.meta.image_size();

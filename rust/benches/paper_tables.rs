@@ -2,17 +2,19 @@
 //! and figure of the paper's evaluation section (DESIGN.md experiment
 //! index).  Each section prints the paper's value next to the measured one.
 //!
-//! Sections: headline, fig2_error, fig2_delay, nist, fig4_roc,
+//! Sections: headline, backends, fig2_error, fig2_delay, nist, fig4_roc,
 //! fig4_confusion, fig5_scatter, fig5_auroc, ablations.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
 //! reduced sample count + a warning when only init params exist.
 
-use photonic_bayes::benchkit::section;
+use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
+use photonic_bayes::benchkit::{black_box, section, Bench};
 use photonic_bayes::bnn::UncertaintyPolicy;
 use photonic_bayes::calibration::computation_error_experiment;
 use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
+use photonic_bayes::data::synth::{random_activations, random_kernel};
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource};
 use photonic_bayes::experiments::uncertainty::{build_report, eval_split};
@@ -33,6 +35,9 @@ fn main() {
 
     if run("headline") {
         headline();
+    }
+    if run("backends") {
+        backends();
     }
     if run("fig2_error") {
         fig2_error();
@@ -65,6 +70,63 @@ fn headline() {
     println!("{:<38} {:>12.2} {:>12}", "Tbit/s digital interface", h.interface_tbit_per_sec, "1.28");
     println!("{:<38} {:>12.2} {:>12}", "grating delay step (ps/channel)", h.channel_delay_step_ps, "37.5");
     println!("{:<38} {:>12.2} {:>12}", "grating latency (ns, sub-100 claim)", h.grating_latency_ns, "<100");
+}
+
+/// Photonic-vs-digital sampling throughput — the paper's core systems
+/// claim, measured through the one `ProbConvBackend` API.  Runs on a
+/// synthetic workload, so it needs no artifacts.
+fn backends() {
+    section("BACKENDS — sampling throughput, photonic vs digital vs mean-field");
+    let (n_samples, batch, channels, hw) = (10usize, 8usize, 8usize, 7usize);
+    let plan = SamplePlan::new(n_samples, batch, channels, hw, hw);
+    let mut rng = photonic_bayes::entropy::Xoshiro256pp::new(17);
+    let kernels: Vec<_> = (0..channels).map(|_| random_kernel(&mut rng)).collect();
+    let mcfg = photonic_bayes::photonics::MachineConfig {
+        seed: 17,
+        ..photonic_bayes::photonics::MachineConfig::default()
+    };
+    let x = random_activations(&mut rng, plan.sample_size(), mcfg.scale_dac);
+    let bench = Bench::quick();
+    println!(
+        "plan: N = {n_samples} samples x B = {batch} items x {channels}ch@{hw}x{hw} = {} probabilistic convolutions/call",
+        plan.convolutions()
+    );
+    println!(
+        "{:<12} {:>16} {:>16} {:>14}",
+        "backend", "call latency", "conv/s (sim)", "vs digital"
+    );
+    let mut per_kind = Vec::new();
+    for kind in [BackendKind::Photonic, BackendKind::Digital, BackendKind::MeanField] {
+        let mut be = backend::build(kind, &mcfg);
+        be.program(&kernels, false).unwrap();
+        let mut out = vec![0.0f32; plan.total_size()];
+        let eff = SamplePlan {
+            // the mean-field fast path executes a single deterministic pass
+            n_samples: if be.is_deterministic() { 1 } else { n_samples },
+            ..plan
+        };
+        let s = bench.run(kind.name(), || {
+            be.sample_conv(&eff, &x, &mut out).unwrap();
+            black_box(&out);
+        });
+        per_kind.push((kind, s.mean_ns, eff.convolutions()));
+    }
+    let digital_ns_per_conv = per_kind
+        .iter()
+        .find(|(k, _, _)| *k == BackendKind::Digital)
+        .map(|&(_, ns, convs)| ns / convs as f64)
+        .unwrap();
+    for (kind, ns, convs) in per_kind {
+        let ns_per_conv = ns / convs as f64;
+        println!(
+            "{:<12} {:>16} {:>16.2e} {:>13.2}x",
+            kind.name(),
+            photonic_bayes::benchkit::fmt_ns(ns),
+            1e9 / ns_per_conv,
+            digital_ns_per_conv / ns_per_conv
+        );
+    }
+    println!("(simulator wall-clock; the machine's *optical* rate is the 26.7 Gconv/s headline)");
 }
 
 fn fig2_error() {
@@ -145,7 +207,7 @@ fn load_split(stem: &str, kind: DatasetKind) -> Option<Dataset> {
 
 fn fig4() {
     section("FIG 4 — blood cells: OOD ROC, accuracy with rejection, confusion");
-    let Some((mut engine, trained)) = load_engine("blood", ExecMode::Photonic, 10, 7) else {
+    let Some((mut engine, trained)) = load_engine("blood", ExecMode::photonic(), 10, 7) else {
         return;
     };
     let limit = if trained { 300 } else { 96 };
@@ -169,7 +231,7 @@ fn fig4() {
 
 fn fig5() {
     section("FIG 5 — uncertainty disentanglement (digits / ambiguous / fashion)");
-    let Some((mut engine, trained)) = load_engine("digits", ExecMode::Photonic, 10, 11) else {
+    let Some((mut engine, trained)) = load_engine("digits", ExecMode::photonic(), 10, 11) else {
         return;
     };
     let limit = if trained { 300 } else { 96 };
@@ -198,7 +260,7 @@ fn ablations() {
     section("ABLATIONS — design choices called out in DESIGN.md");
 
     // (a) surrogate vs photonic agreement on predictions
-    if let Some((mut photonic, _)) = load_engine("digits", ExecMode::Photonic, 10, 21) {
+    if let Some((mut photonic, _)) = load_engine("digits", ExecMode::photonic(), 10, 21) {
         if let Some((mut surrogate, _)) = load_engine("digits", ExecMode::Surrogate, 10, 21) {
             let ds = load_split("digits_test", DatasetKind::InDomain).unwrap();
             let a = eval_split(&mut photonic, &ds, 120).unwrap();
@@ -218,7 +280,7 @@ fn ablations() {
     // (b) N-sample sweep: MI resolution vs sampling cost
     println!("\n(b) N-sample sweep (mean OOD MI - mean ID MI gap, digits/fashion):");
     for n in [3, 5, 10, 20] {
-        if let Some((mut e, _)) = load_engine("digits", ExecMode::Photonic, n, 31) {
+        if let Some((mut e, _)) = load_engine("digits", ExecMode::photonic(), n, 31) {
             let id = eval_split(&mut e, &load_split("digits_test", DatasetKind::InDomain).unwrap(), 100).unwrap();
             let fa = eval_split(&mut e, &load_split("fashion", DatasetKind::Epistemic).unwrap(), 100).unwrap();
             println!(

@@ -1,0 +1,183 @@
+//! [`DigitalBaselineBackend`] — the paper's digital comparison point.
+//!
+//! Every weight of every output symbol is drawn from `N(mu, sigma)` with a
+//! xoshiro256++ PRNG and a Box–Muller (polar) Gaussian transform — the exact
+//! pseudo-random-number pipeline the paper argues chaotic light removes from
+//! the Bayesian hot path.  The signal chain around the draws mirrors the
+//! photonic datapath's digital interface (8-bit DAC on activations, 8-bit
+//! ADC on readouts) so throughput and accuracy comparisons isolate the
+//! sampling substrate, not the quantization.
+//!
+//! The backend deliberately draws all `num_taps` weights per output pixel,
+//! including pixels whose activations are zero: a digital sampler has to
+//! materialize the weight tensor before it can know what the data looks
+//! like, and that PRNG volume is precisely the cost being measured.
+
+use anyhow::Result;
+
+use super::{BackendKind, ProbConvBackend, SamplePlan};
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::Xoshiro256pp;
+use crate::photonics::converters::Quantizer;
+use crate::photonics::machine::im2col_3x3;
+use crate::photonics::TapTarget;
+
+/// PRNG + Box–Muller sampling substrate.
+pub struct DigitalBaselineBackend {
+    kernels: Vec<Vec<TapTarget>>,
+    rng: Xoshiro256pp,
+    gauss: Gaussian,
+    dac: Quantizer,
+    adc: Quantizer,
+    patches: Vec<f32>,
+    /// Output pixels computed (one probabilistic convolution each).
+    pub convolutions: u64,
+    /// Gaussian weight draws consumed (the PRNG bottleneck being measured).
+    pub weight_draws: u64,
+}
+
+impl DigitalBaselineBackend {
+    pub fn new(scale_dac: f32, scale_adc: f32, seed: u64) -> Self {
+        Self {
+            kernels: Vec::new(),
+            rng: Xoshiro256pp::new(seed),
+            gauss: Gaussian::new(),
+            dac: Quantizer::new(scale_dac),
+            adc: Quantizer::new(scale_adc),
+            patches: Vec::new(),
+            convolutions: 0,
+            weight_draws: 0,
+        }
+    }
+}
+
+impl ProbConvBackend for DigitalBaselineBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Digital
+    }
+
+    fn program(&mut self, kernels: &[Vec<TapTarget>], _calibrate: bool) -> Result<()> {
+        // an exact substrate: programming realizes targets perfectly, so the
+        // calibrate flag is a no-op
+        super::validate_kernels9("digital", kernels)?;
+        self.kernels = kernels.to_vec();
+        Ok(())
+    }
+
+    fn num_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    fn sample_weight(&mut self, kernel: usize, tap: usize) -> f64 {
+        let t = self.kernels[kernel][tap];
+        self.weight_draws += 1;
+        t.mu as f64 + t.sigma as f64 * self.gauss.sample(&mut self.rng)
+    }
+
+    fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
+        plan.check(x.len(), out.len(), self.kernels.len())?;
+        let (c, h, w) = (plan.channels, plan.height, plan.width);
+        let item = plan.item_size();
+        self.patches.resize(h * w * 9, 0.0);
+        // im2col once per (item, channel); only the weight draws repeat per
+        // sample — the measured digital cost is the sampling, not the
+        // patch extraction
+        for b in 0..plan.batch {
+            let xi = &x[b * item..(b + 1) * item];
+            for ch in 0..c {
+                im2col_3x3(&xi[ch * h * w..(ch + 1) * h * w], h, w, &mut self.patches);
+                let kern = &self.kernels[ch];
+                for s in 0..plan.n_samples {
+                    let oi = (s * plan.batch + b) * item + ch * h * w;
+                    super::conv_plane_quantized(
+                        &self.patches,
+                        h * w,
+                        &self.dac,
+                        &self.adc,
+                        |tap| {
+                            kern[tap].mu as f64
+                                + kern[tap].sigma as f64 * self.gauss.sample(&mut self.rng)
+                        },
+                        &mut out[oi..oi + h * w],
+                    );
+                }
+            }
+        }
+        let pixels = plan.convolutions();
+        self.convolutions += pixels;
+        self.weight_draws += pixels * 9;
+        Ok(())
+    }
+
+    fn report(&self) -> String {
+        format!(
+            "convolutions={} weight_draws={} (xoshiro256++ / Box-Muller)",
+            self.convolutions, self.weight_draws
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::{std_f32, Welford};
+
+    fn targets9(mu: f32, sigma: f32) -> Vec<TapTarget> {
+        vec![TapTarget { mu, sigma }; 9]
+    }
+
+    #[test]
+    fn rejects_non_nine_tap_kernels() {
+        let mut be = DigitalBaselineBackend::new(4.0, 8.0, 1);
+        assert!(be.program(&[vec![TapTarget { mu: 0.0, sigma: 0.1 }; 5]], false).is_err());
+        assert!(be.program(&[targets9(0.0, 0.1)], false).is_ok());
+    }
+
+    #[test]
+    fn sampled_weights_have_programmed_moments() {
+        let mut be = DigitalBaselineBackend::new(4.0, 8.0, 7);
+        be.program(&[targets9(-0.4, 0.22)], false).unwrap();
+        let mut w = Welford::new();
+        for _ in 0..50_000 {
+            w.push(be.sample_weight(0, 8));
+        }
+        assert!((w.mean() + 0.4).abs() < 0.01, "mean {}", w.mean());
+        assert!((w.std() - 0.22).abs() < 0.01, "std {}", w.std());
+        assert_eq!(be.weight_draws, 50_000);
+    }
+
+    #[test]
+    fn conv_output_variance_tracks_sigma() {
+        let mut be = DigitalBaselineBackend::new(4.0, 8.0, 3);
+        be.program(&[targets9(0.4, 0.1), targets9(0.4, 0.5)], false).unwrap();
+        let plan = SamplePlan::new(1500, 1, 1, 1, 1);
+        // height/width 1: a single-pixel map isolates one patch per sample
+        let x = vec![1.0f32];
+        let mut lo = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, &x, &mut lo).unwrap();
+        let mut be_hi = DigitalBaselineBackend::new(4.0, 8.0, 3);
+        be_hi
+            .program(&[targets9(0.4, 0.5)], false)
+            .unwrap();
+        let mut hi = vec![0.0f32; plan.total_size()];
+        be_hi.sample_conv(&plan, &x, &mut hi).unwrap();
+        assert!(
+            std_f32(&hi) > 2.0 * std_f32(&lo),
+            "lo {} hi {}",
+            std_f32(&lo),
+            std_f32(&hi)
+        );
+    }
+
+    #[test]
+    fn counters_account_for_plan_volume() {
+        let mut be = DigitalBaselineBackend::new(4.0, 8.0, 2);
+        be.program(&[targets9(0.1, 0.1), targets9(0.1, 0.1)], false).unwrap();
+        let plan = SamplePlan::new(4, 3, 2, 5, 5);
+        let x = vec![0.3f32; plan.sample_size()];
+        let mut out = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, &x, &mut out).unwrap();
+        assert_eq!(be.convolutions, plan.convolutions());
+        assert_eq!(be.weight_draws, plan.convolutions() * 9);
+    }
+}

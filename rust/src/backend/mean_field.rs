@@ -1,0 +1,135 @@
+//! [`MeanFieldBackend`] — deterministic mean-weight serving.
+//!
+//! Collapses every programmed weight distribution to its mean, so a request
+//! needs exactly one forward pass (N = 1): the engine detects
+//! [`ProbConvBackend::is_deterministic`] and skips the sample fan-out
+//! entirely.  No uncertainty estimates survive (MI and sample variance are
+//! identically zero) — this is the fast path for traffic that only wants
+//! the point prediction, and the control in photonic-vs-digital ablations
+//! (how much accuracy/uncertainty the stochastic passes actually buy).
+
+use anyhow::Result;
+
+use super::{BackendKind, ProbConvBackend, SamplePlan};
+use crate::photonics::converters::Quantizer;
+use crate::photonics::machine::im2col_3x3;
+use crate::photonics::TapTarget;
+
+/// Deterministic mean-weight substrate.
+pub struct MeanFieldBackend {
+    kernels: Vec<Vec<TapTarget>>,
+    dac: Quantizer,
+    adc: Quantizer,
+    patches: Vec<f32>,
+    pub convolutions: u64,
+}
+
+impl MeanFieldBackend {
+    pub fn new(scale_dac: f32, scale_adc: f32) -> Self {
+        Self {
+            kernels: Vec::new(),
+            dac: Quantizer::new(scale_dac),
+            adc: Quantizer::new(scale_adc),
+            patches: Vec::new(),
+            convolutions: 0,
+        }
+    }
+}
+
+impl ProbConvBackend for MeanFieldBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::MeanField
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+
+    fn program(&mut self, kernels: &[Vec<TapTarget>], _calibrate: bool) -> Result<()> {
+        super::validate_kernels9("mean-field", kernels)?;
+        self.kernels = kernels.to_vec();
+        Ok(())
+    }
+
+    fn num_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    fn sample_weight(&mut self, kernel: usize, tap: usize) -> f64 {
+        self.kernels[kernel][tap].mu as f64
+    }
+
+    fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
+        plan.check(x.len(), out.len(), self.kernels.len())?;
+        let (c, h, w) = (plan.channels, plan.height, plan.width);
+        let item = plan.item_size();
+        self.patches.resize(h * w * 9, 0.0);
+        // compute the first sample, then replicate: identical by definition
+        for b in 0..plan.batch {
+            let xi = &x[b * item..(b + 1) * item];
+            for ch in 0..c {
+                im2col_3x3(&xi[ch * h * w..(ch + 1) * h * w], h, w, &mut self.patches);
+                let kern = &self.kernels[ch];
+                let oi = b * item + ch * h * w;
+                super::conv_plane_quantized(
+                    &self.patches,
+                    h * w,
+                    &self.dac,
+                    &self.adc,
+                    |tap| kern[tap].mu as f64,
+                    &mut out[oi..oi + h * w],
+                );
+            }
+        }
+        let sample = plan.sample_size();
+        for s in 1..plan.n_samples {
+            out.copy_within(0..sample, s * sample);
+        }
+        self.convolutions += plan.sample_size() as u64;
+        Ok(())
+    }
+
+    fn report(&self) -> String {
+        format!("convolutions={} (deterministic mean weights, N = 1)", self.convolutions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn targets9(mu: f32, sigma: f32) -> Vec<TapTarget> {
+        vec![TapTarget { mu, sigma }; 9]
+    }
+
+    #[test]
+    fn is_deterministic_and_ignores_sigma() {
+        let mut be = MeanFieldBackend::new(4.0, 8.0);
+        be.program(&[targets9(0.7, 0.9)], false).unwrap();
+        assert!(be.is_deterministic());
+        assert_eq!(be.sample_weight(0, 0), be.sample_weight(0, 0));
+        assert!((be.sample_weight(0, 3) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicated_samples_are_identical() {
+        let mut be = MeanFieldBackend::new(4.0, 8.0);
+        be.program(&[targets9(0.3, 0.4)], false).unwrap();
+        let plan = SamplePlan::new(5, 2, 1, 4, 4);
+        let x: Vec<f32> = (0..plan.sample_size()).map(|i| 0.1 * (i % 7) as f32).collect();
+        let mut out = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, &x, &mut out).unwrap();
+        let first = &out[..plan.sample_size()];
+        for s in 1..plan.n_samples {
+            assert_eq!(first, &out[s * plan.sample_size()..(s + 1) * plan.sample_size()]);
+        }
+        // only the first sample's pixels are counted as real convolutions
+        assert_eq!(be.convolutions, plan.sample_size() as u64);
+    }
+
+    #[test]
+    fn rejects_non_nine_tap_kernels() {
+        let mut be = MeanFieldBackend::new(4.0, 8.0);
+        assert!(be.program(&[vec![TapTarget { mu: 0.0, sigma: 0.0 }; 4]], false).is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Backend-agnostic probabilistic-convolution API.
+//!
+//! The paper's central comparison — chaotic light vs a digital PRNG as the
+//! sampling substrate of Bayesian inference — needs a seam where the two can
+//! be swapped without touching the serving coordinator.  [`ProbConvBackend`]
+//! is that seam: the single API for programming a Gaussian-weight kernel
+//! bank and executing a **batched sample plan** (all `N` stochastic samples
+//! × `B` batch items of one request in a single call, replacing the
+//! coordinator's old per-sample loops).
+//!
+//! Three implementations ship:
+//!
+//! | backend | substrate | randomness | when to use |
+//! |---------|-----------|------------|-------------|
+//! | [`PhotonicSimBackend`] | photonic machine simulator | chaotic light (Gamma speckle) | paper-faithful serving, calibration studies |
+//! | [`DigitalBaselineBackend`] | CPU | xoshiro256++ + Box–Muller | the paper's digital comparison point |
+//! | [`MeanFieldBackend`] | CPU | none (mean weights) | uncertainty-free fast serving, N = 1 |
+//!
+//! [`EpsSource`] is the same seam for the *surrogate* execution path and the
+//! SVI trainer: a pluggable provider of the unit-variance `eps` noise
+//! operand, backed by either the chaotic source or the digital PRNG.
+
+pub mod digital;
+pub mod mean_field;
+pub mod photonic;
+
+use anyhow::{anyhow, Result};
+
+use crate::entropy::chaotic::ChaoticLightSource;
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::Xoshiro256pp;
+use crate::photonics::{MachineConfig, TapTarget};
+
+pub use digital::DigitalBaselineBackend;
+pub use mean_field::MeanFieldBackend;
+pub use photonic::PhotonicSimBackend;
+
+/// Which probabilistic-convolution substrate to serve from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The photonic Bayesian machine simulator (chaotic-light sampling).
+    Photonic,
+    /// xoshiro256++ + Box–Muller weight draws — the digital baseline.
+    Digital,
+    /// Deterministic mean weights — the uncertainty-free fast path.
+    MeanField,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Photonic => "photonic",
+            BackendKind::Digital => "digital",
+            BackendKind::MeanField => "mean",
+        }
+    }
+
+    /// Parse a CLI/config token (`photonic|digital|mean`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "photonic" => Ok(BackendKind::Photonic),
+            "digital" => Ok(BackendKind::Digital),
+            "mean" | "mean-field" | "meanfield" => Ok(BackendKind::MeanField),
+            other => Err(anyhow!("backend must be photonic|digital|mean, got {other}")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A batched sampling plan: `n_samples` stochastic forward samples of a
+/// `batch`-item depthwise-convolution workload over `(channels, height,
+/// width)` activation maps.
+///
+/// Input layout: `(batch, channels, height, width)` row-major, length
+/// [`SamplePlan::sample_size`].  Output layout: `(n_samples, batch,
+/// channels, height, width)` row-major, length [`SamplePlan::total_size`] —
+/// sample-major so each sample block can feed one `fwd_post` call directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SamplePlan {
+    pub n_samples: usize,
+    pub batch: usize,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl SamplePlan {
+    pub fn new(
+        n_samples: usize,
+        batch: usize,
+        channels: usize,
+        height: usize,
+        width: usize,
+    ) -> Self {
+        Self {
+            n_samples,
+            batch,
+            channels,
+            height,
+            width,
+        }
+    }
+
+    /// Activations per batch item.
+    pub fn item_size(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    /// Input buffer length (one full batch).
+    pub fn sample_size(&self) -> usize {
+        self.batch * self.item_size()
+    }
+
+    /// Output buffer length (all samples of all batch items).
+    pub fn total_size(&self) -> usize {
+        self.n_samples * self.sample_size()
+    }
+
+    /// Total probe convolutions (output pixels) the plan executes.
+    pub fn convolutions(&self) -> u64 {
+        (self.total_size()) as u64
+    }
+
+    /// Validate buffer shapes against this plan and a backend's kernel bank.
+    pub fn check(&self, x_len: usize, out_len: usize, bank_len: usize) -> Result<()> {
+        if self.n_samples == 0 || self.batch == 0 {
+            return Err(anyhow!("empty sample plan: {self:?}"));
+        }
+        if x_len != self.sample_size() {
+            return Err(anyhow!(
+                "plan input {} != batch {} x item {}",
+                x_len,
+                self.batch,
+                self.item_size()
+            ));
+        }
+        if out_len < self.total_size() {
+            return Err(anyhow!(
+                "plan output {} < required {}",
+                out_len,
+                self.total_size()
+            ));
+        }
+        if bank_len < self.channels {
+            return Err(anyhow!(
+                "kernel bank has {} kernels, plan needs {}",
+                bank_len,
+                self.channels
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The single API every sampling substrate implements: program a bank of
+/// Gaussian weight kernels, then execute batched sample plans against it.
+///
+/// Implementations are used from the engine's dedicated thread and need not
+/// be `Send`; all state (PRNGs, simulated hardware) is owned by the backend.
+pub trait ProbConvBackend {
+    fn kind(&self) -> BackendKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// A deterministic backend produces identical samples, so the engine
+    /// collapses a request's `N` passes to a single one.
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+
+    /// Program the kernel bank (one 9-tap kernel per depthwise channel),
+    /// replacing any previous program.  `calibrate` requests feedback
+    /// calibration where the substrate has actuator error; exact substrates
+    /// ignore it.
+    fn program(&mut self, kernels: &[Vec<TapTarget>], calibrate: bool) -> Result<()>;
+
+    /// Number of kernels currently programmed.
+    fn num_kernels(&self) -> usize;
+
+    /// Draw one instantaneous weight sample of tap `tap` of kernel `kernel`
+    /// (a probe measurement; statistical-equivalence tests are built on it).
+    fn sample_weight(&mut self, kernel: usize, tap: usize) -> f64;
+
+    /// Execute a batched sample plan: all `plan.n_samples` × `plan.batch`
+    /// depthwise probabilistic convolutions in one call.  See [`SamplePlan`]
+    /// for buffer layouts.
+    fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()>;
+
+    /// One-line substrate telemetry (counters, simulated optical time, ...).
+    fn report(&self) -> String;
+}
+
+/// Reject kernels the 3x3 depthwise conv path cannot execute.
+pub(crate) fn validate_kernels9(backend: &str, kernels: &[Vec<TapTarget>]) -> Result<()> {
+    for (i, k) in kernels.iter().enumerate() {
+        if k.len() != 9 {
+            return Err(anyhow!(
+                "kernel {i}: {backend} backend needs 9 taps, got {}",
+                k.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Shared inner loop of the CPU substrates: convolve one im2col'd plane
+/// with per-tap weights from `weight(tap)` (called fresh for every output
+/// pixel), mirroring the photonic signal chain's digital interface — DAC
+/// quantization on the (post-ReLU) activations, ADC quantization on the
+/// readout.  Keeping digital and mean-field on this one code path is what
+/// the `digital_and_mean_conv_agree_in_expectation` test relies on.
+pub(crate) fn conv_plane_quantized<W: FnMut(usize) -> f64>(
+    patches: &[f32],
+    n_pixels: usize,
+    dac: &crate::photonics::converters::Quantizer,
+    adc: &crate::photonics::converters::Quantizer,
+    mut weight: W,
+    out: &mut [f32],
+) {
+    for (p, o) in out.iter_mut().take(n_pixels).enumerate() {
+        let patch = &patches[p * 9..(p + 1) * 9];
+        let mut acc = 0.0f64;
+        for (k, &xv) in patch.iter().enumerate() {
+            acc += weight(k) * dac.quantize(xv.max(0.0)) as f64;
+        }
+        *o = adc.quantize(acc as f32);
+    }
+}
+
+/// Build a backend of `kind` from a machine configuration.  Digital backends
+/// reuse the config's DAC/ADC scales and seed so all substrates see the same
+/// quantized signal chain.
+pub fn build(kind: BackendKind, cfg: &MachineConfig) -> Box<dyn ProbConvBackend> {
+    match kind {
+        BackendKind::Photonic => Box::new(PhotonicSimBackend::new(cfg.clone())),
+        BackendKind::Digital => Box::new(DigitalBaselineBackend::new(
+            cfg.scale_dac,
+            cfg.scale_adc,
+            cfg.seed,
+        )),
+        BackendKind::MeanField => Box::new(MeanFieldBackend::new(cfg.scale_dac, cfg.scale_adc)),
+    }
+}
+
+/// Pluggable provider of the unit-variance `eps` operand used by the AOT
+/// surrogate path and the SVI trainer's serving-time evaluation — the same
+/// photonic-vs-digital seam as [`ProbConvBackend`], for the reparameterized
+/// noise instead of the convolution.
+pub enum EpsSource {
+    /// Normalized chaotic-light intensity at a given channel bandwidth.
+    Chaotic { src: ChaoticLightSource, bw_ghz: f64 },
+    /// xoshiro256++ + Box–Muller standard normals.
+    Digital { rng: Xoshiro256pp, gauss: Gaussian },
+}
+
+impl EpsSource {
+    pub fn chaotic(seed: u64, bw_ghz: f64) -> Self {
+        EpsSource::Chaotic {
+            src: ChaoticLightSource::with_defaults(seed),
+            bw_ghz,
+        }
+    }
+
+    pub fn digital(seed: u64) -> Self {
+        EpsSource::Digital {
+            rng: Xoshiro256pp::new(seed),
+            gauss: Gaussian::new(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EpsSource::Chaotic { .. } => "chaotic",
+            EpsSource::Digital { .. } => "digital",
+        }
+    }
+
+    /// Fill `out` with zero-mean, unit-std noise.
+    pub fn fill(&mut self, out: &mut [f32]) {
+        match self {
+            EpsSource::Chaotic { src, bw_ghz } => src.fill_eps(*bw_ghz, out),
+            EpsSource::Digital { rng, gauss } => gauss.fill_f32(rng, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::photonics::machine::im2col_3x3;
+    use crate::photonics::PhotonicMachine;
+    use crate::util::mathstat::Welford;
+
+    fn quiet_cfg(seed: u64) -> MachineConfig {
+        MachineConfig {
+            rx_noise: 0.0,
+            actuator_sigma: 0.0,
+            actuator_jitter: 0.0,
+            ripple_rms_ps: 0.0,
+            seed,
+            ..MachineConfig::default()
+        }
+    }
+
+    fn targets9(mu: f32, sigma: f32) -> Vec<TapTarget> {
+        vec![TapTarget { mu, sigma }; 9]
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [BackendKind::Photonic, BackendKind::Digital, BackendKind::MeanField] {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(BackendKind::parse("quantum").is_err());
+        assert_eq!(BackendKind::parse("mean-field").unwrap(), BackendKind::MeanField);
+    }
+
+    #[test]
+    fn plan_sizes_and_validation() {
+        let plan = SamplePlan::new(10, 8, 8, 7, 7);
+        assert_eq!(plan.item_size(), 8 * 49);
+        assert_eq!(plan.sample_size(), 8 * 8 * 49);
+        assert_eq!(plan.total_size(), 10 * 8 * 8 * 49);
+        assert!(plan.check(plan.sample_size(), plan.total_size(), 8).is_ok());
+        assert!(plan.check(plan.sample_size() - 1, plan.total_size(), 8).is_err());
+        assert!(plan.check(plan.sample_size(), plan.total_size() - 1, 8).is_err());
+        assert!(plan.check(plan.sample_size(), plan.total_size(), 7).is_err());
+        let empty = SamplePlan::new(0, 8, 8, 7, 7);
+        assert!(empty.check(0, 0, 8).is_err());
+    }
+
+    /// Satellite acceptance: sampled weight moments of the photonic and the
+    /// digital backend both match the programmed `TapTarget` within
+    /// tolerance — the statistical contract that makes the photonic-vs-
+    /// digital throughput comparison apples-to-apples.
+    #[test]
+    fn backends_statistically_equivalent_on_programmed_targets() {
+        let tgt = TapTarget { mu: 0.6, sigma: 0.3 }; // rel sigma 0.5: realizable
+        let kernels = vec![targets9(tgt.mu, tgt.sigma); 2];
+        let cfg = quiet_cfg(21);
+        for kind in [BackendKind::Photonic, BackendKind::Digital] {
+            let mut be = build(kind, &cfg);
+            be.program(&kernels, false).unwrap();
+            assert_eq!(be.num_kernels(), 2);
+            let mut w = Welford::new();
+            for _ in 0..40_000 {
+                w.push(be.sample_weight(1, 4));
+            }
+            assert!(
+                (w.mean() - tgt.mu as f64).abs() < 0.02,
+                "{kind}: mean {}",
+                w.mean()
+            );
+            assert!(
+                (w.std() - tgt.sigma as f64).abs() < 0.02,
+                "{kind}: std {}",
+                w.std()
+            );
+        }
+    }
+
+    /// Satellite acceptance: the batched `sample_conv` matches the old
+    /// per-sample `depthwise_conv` loop bit-for-bit on a fixed seed.
+    #[test]
+    fn batched_sample_conv_matches_per_sample_loop_bitwise() {
+        let (c, h, w) = (2usize, 5usize, 5usize);
+        let kernels = vec![targets9(0.4, 0.3), targets9(-0.2, 0.25)];
+        let cfg = quiet_cfg(33);
+        let x: Vec<f32> = (0..2 * c * h * w).map(|i| ((i % 9) as f32) * 0.35).collect();
+        let plan = SamplePlan::new(3, 2, c, h, w);
+
+        // new API: one batched call
+        let mut be = PhotonicSimBackend::new(cfg.clone());
+        be.program(&kernels, false).unwrap();
+        let mut batched = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, &x, &mut batched).unwrap();
+
+        // old API: identically-seeded machine, per-sample per-item loop
+        let mut m = PhotonicMachine::new(cfg);
+        for t in &kernels {
+            m.load_kernel(t);
+        }
+        let item = plan.item_size();
+        let mut looped = vec![0.0f32; plan.total_size()];
+        for s in 0..plan.n_samples {
+            for b in 0..plan.batch {
+                let y = m.depthwise_conv(0, &x[b * item..(b + 1) * item], c, h, w);
+                looped[(s * plan.batch + b) * item..(s * plan.batch + b + 1) * item]
+                    .copy_from_slice(&y);
+            }
+        }
+        assert_eq!(batched, looped);
+    }
+
+    #[test]
+    fn digital_and_mean_conv_agree_in_expectation() {
+        let (c, h, w) = (1usize, 4usize, 4usize);
+        let kernels = vec![targets9(0.3, 0.2)];
+        let cfg = quiet_cfg(5);
+        let x: Vec<f32> = (0..c * h * w).map(|i| 0.2 * (i % 5) as f32).collect();
+        let plan = SamplePlan::new(400, 1, c, h, w);
+
+        let mut dig = build(BackendKind::Digital, &cfg);
+        dig.program(&kernels, false).unwrap();
+        let mut outs = vec![0.0f32; plan.total_size()];
+        dig.sample_conv(&plan, &x, &mut outs).unwrap();
+        let mut acc = vec![0.0f64; plan.item_size()];
+        for s in 0..plan.n_samples {
+            for (a, &v) in acc.iter_mut().zip(&outs[s * plan.item_size()..]) {
+                *a += v as f64 / plan.n_samples as f64;
+            }
+        }
+
+        let mut mf = build(BackendKind::MeanField, &cfg);
+        mf.program(&kernels, false).unwrap();
+        assert!(mf.is_deterministic());
+        let one = SamplePlan::new(1, 1, c, h, w);
+        let mut mean_out = vec![0.0f32; one.total_size()];
+        mf.sample_conv(&one, &x, &mut mean_out).unwrap();
+
+        for (p, (&m, a)) in mean_out.iter().zip(&acc).enumerate() {
+            assert!(
+                (m as f64 - a).abs() < 0.08,
+                "pixel {p}: mean-field {m} vs digital mean {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_field_matches_reference_dot_product() {
+        let (c, h, w) = (1usize, 3usize, 3usize);
+        let mu = 0.5f32;
+        let kernels = vec![targets9(mu, 0.0)];
+        let cfg = quiet_cfg(1);
+        let x: Vec<f32> = (0..9).map(|i| 0.3 * i as f32).collect();
+        let mut mf = build(BackendKind::MeanField, &cfg);
+        mf.program(&kernels, false).unwrap();
+        let plan = SamplePlan::new(1, 1, c, h, w);
+        let mut out = vec![0.0f32; plan.total_size()];
+        mf.sample_conv(&plan, &x, &mut out).unwrap();
+
+        let dac = crate::photonics::converters::Quantizer::new(cfg.scale_dac);
+        let mut patches = vec![0.0f32; h * w * 9];
+        im2col_3x3(&x, h, w, &mut patches);
+        for p in 0..h * w {
+            let want: f32 = patches[p * 9..(p + 1) * 9]
+                .iter()
+                .map(|&v| mu * dac.quantize(v.max(0.0)))
+                .sum();
+            assert!(
+                (out[p] - want).abs() < 0.1,
+                "pixel {p}: got {} want {want}",
+                out[p]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_backends_repeat_stochastic_differ() {
+        let kernels = vec![targets9(0.4, 0.3)];
+        let cfg = quiet_cfg(9);
+        let plan = SamplePlan::new(2, 1, 1, 3, 3);
+        let x = vec![0.5f32; plan.sample_size()];
+
+        let mut mf = build(BackendKind::MeanField, &cfg);
+        mf.program(&kernels, false).unwrap();
+        let mut out = vec![0.0f32; plan.total_size()];
+        mf.sample_conv(&plan, &x, &mut out).unwrap();
+        assert_eq!(out[..plan.sample_size()], out[plan.sample_size()..]);
+
+        let mut dig = build(BackendKind::Digital, &cfg);
+        dig.program(&kernels, false).unwrap();
+        let mut out = vec![0.0f32; plan.total_size()];
+        dig.sample_conv(&plan, &x, &mut out).unwrap();
+        assert_ne!(out[..plan.sample_size()], out[plan.sample_size()..]);
+    }
+
+    #[test]
+    fn eps_sources_produce_unit_noise() {
+        for mut src in [EpsSource::chaotic(4, 150.0), EpsSource::digital(4)] {
+            let mut buf = vec![0.0f32; 20_000];
+            src.fill(&mut buf);
+            let m = crate::util::mathstat::mean_f32(&buf);
+            let s = crate::util::mathstat::std_f32(&buf);
+            assert!(m.abs() < 0.05, "{}: mean {m}", src.name());
+            assert!((s - 1.0).abs() < 0.05, "{}: std {s}", src.name());
+        }
+    }
+}

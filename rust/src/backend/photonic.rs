@@ -1,0 +1,170 @@
+//! [`PhotonicSimBackend`] — the photonic Bayesian machine simulator behind
+//! the backend-agnostic probabilistic-convolution API.
+//!
+//! Randomness comes from the machine's chaotic light (Gamma-distributed
+//! speckle intensity per tap per symbol); there is no PRNG on the request
+//! path.  Programming goes through the physics inversion plus, optionally,
+//! the feedback-calibration loop that corrects spectral-shaper actuator
+//! error (paper, Supplement).
+
+use anyhow::Result;
+
+use super::{BackendKind, ProbConvBackend, SamplePlan};
+use crate::calibration::{calibrate_kernel, CalibrationOptions};
+use crate::photonics::{MachineConfig, PhotonicMachine, TapTarget};
+
+/// The chaotic-light substrate (simulator).
+pub struct PhotonicSimBackend {
+    machine: PhotonicMachine,
+    calibration: CalibrationOptions,
+}
+
+impl PhotonicSimBackend {
+    pub fn new(cfg: MachineConfig) -> Self {
+        Self {
+            machine: PhotonicMachine::new(cfg),
+            calibration: CalibrationOptions::default(),
+        }
+    }
+
+    pub fn with_defaults(seed: u64) -> Self {
+        Self::new(MachineConfig {
+            seed,
+            ..MachineConfig::default()
+        })
+    }
+
+    /// Override the feedback-calibration options used by [`ProbConvBackend::program`].
+    pub fn set_calibration_options(&mut self, opts: CalibrationOptions) {
+        self.calibration = opts;
+    }
+
+    /// Direct access to the simulated hardware (calibration experiments,
+    /// telemetry).  The kernel bank it holds is owned by this backend.
+    pub fn machine(&mut self) -> &mut PhotonicMachine {
+        &mut self.machine
+    }
+}
+
+impl ProbConvBackend for PhotonicSimBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Photonic
+    }
+
+    fn program(&mut self, kernels: &[Vec<TapTarget>], calibrate: bool) -> Result<()> {
+        self.machine.clear_bank();
+        for targets in kernels {
+            let idx = self.machine.load_kernel(targets);
+            if calibrate {
+                calibrate_kernel(&mut self.machine, idx, targets, &self.calibration);
+            }
+        }
+        Ok(())
+    }
+
+    fn num_kernels(&self) -> usize {
+        self.machine.bank_len()
+    }
+
+    fn sample_weight(&mut self, kernel: usize, tap: usize) -> f64 {
+        self.machine.sample_weight(kernel, tap)
+    }
+
+    fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
+        plan.check(x.len(), out.len(), self.machine.bank_len())?;
+        let item = plan.item_size();
+        // Sample-major, batch-minor: the exact machine-RNG consumption order
+        // of the old per-sample engine loop, so outputs are bit-identical.
+        for s in 0..plan.n_samples {
+            for b in 0..plan.batch {
+                let y = self.machine.depthwise_conv(
+                    0,
+                    &x[b * item..(b + 1) * item],
+                    plan.channels,
+                    plan.height,
+                    plan.width,
+                );
+                out[(s * plan.batch + b) * item..(s * plan.batch + b + 1) * item]
+                    .copy_from_slice(&y);
+            }
+        }
+        Ok(())
+    }
+
+    fn report(&self) -> String {
+        self.machine.throughput_report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathstat::Welford;
+
+    fn quiet(seed: u64) -> PhotonicSimBackend {
+        PhotonicSimBackend::new(MachineConfig {
+            rx_noise: 0.0,
+            actuator_sigma: 0.0,
+            actuator_jitter: 0.0,
+            ripple_rms_ps: 0.0,
+            seed,
+            ..MachineConfig::default()
+        })
+    }
+
+    #[test]
+    fn program_replaces_bank() {
+        let mut be = quiet(3);
+        let k1 = vec![vec![TapTarget { mu: 0.2, sigma: 0.2 }; 9]; 3];
+        be.program(&k1, false).unwrap();
+        assert_eq!(be.num_kernels(), 3);
+        let k2 = vec![vec![TapTarget { mu: -0.1, sigma: 0.3 }; 9]; 2];
+        be.program(&k2, false).unwrap();
+        assert_eq!(be.num_kernels(), 2);
+    }
+
+    #[test]
+    fn calibration_improves_noisy_realization() {
+        let cfg = MachineConfig {
+            actuator_sigma: 0.05,
+            actuator_jitter: 0.005,
+            rx_noise: 0.0,
+            seed: 12,
+            ..MachineConfig::default()
+        };
+        let targets = vec![vec![TapTarget { mu: 0.5, sigma: 0.25 }; 9]];
+        let measure = |be: &mut PhotonicSimBackend| -> f64 {
+            let mut w = Welford::new();
+            for _ in 0..4000 {
+                w.push(be.sample_weight(0, 2));
+            }
+            (w.mean() - 0.5).abs()
+        };
+        let mut open_loop = PhotonicSimBackend::new(cfg.clone());
+        open_loop.program(&targets, false).unwrap();
+        let mut closed_loop = PhotonicSimBackend::new(cfg);
+        closed_loop.program(&targets, true).unwrap();
+        // identical machines, so any improvement is the feedback loop's
+        let err_open = measure(&mut open_loop);
+        let err_closed = measure(&mut closed_loop);
+        assert!(
+            err_closed < err_open + 0.01,
+            "open {err_open} closed {err_closed}"
+        );
+    }
+
+    #[test]
+    fn sample_conv_rejects_bad_shapes() {
+        let mut be = quiet(4);
+        be.program(&[vec![TapTarget { mu: 0.1, sigma: 0.2 }; 9]], false)
+            .unwrap();
+        let plan = SamplePlan::new(2, 1, 1, 3, 3);
+        let x = vec![0.1f32; plan.sample_size()];
+        let mut small = vec![0.0f32; plan.total_size() - 1];
+        assert!(be.sample_conv(&plan, &x, &mut small).is_err());
+        let wide = SamplePlan::new(2, 1, 2, 3, 3); // needs 2 kernels, bank has 1
+        let x2 = vec![0.1f32; wide.sample_size()];
+        let mut out = vec![0.0f32; wide.total_size()];
+        assert!(be.sample_conv(&wide, &x2, &mut out).is_err());
+    }
+}

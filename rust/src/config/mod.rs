@@ -11,7 +11,8 @@
 //! [engine]
 //! datasets = "digits,blood"
 //! n_samples = 10
-//! mode = "photonic"
+//! # sampling substrate: photonic | digital | mean | surrogate
+//! backend = "photonic"
 //! mi_threshold = 0.0185
 //! calibrate = true
 //!
@@ -24,6 +25,8 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::ExecMode;
 
 /// Parsed config: section -> key -> raw string value.
 #[derive(Debug, Clone, Default)]
@@ -98,6 +101,15 @@ impl Config {
         }
     }
 
+    /// Typed accessor for an execution-mode / backend key
+    /// (`photonic|digital|mean|surrogate`).
+    pub fn get_mode(&self, section: &str, key: &str, default: ExecMode) -> Result<ExecMode> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => ExecMode::parse(v).map_err(|e| anyhow!("[{section}] {key}: {e}")),
+        }
+    }
+
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(String::as_str)
     }
@@ -116,6 +128,7 @@ workers = 4
 [engine]
 n_samples = 10
 mode = photonic
+backend = digital
 mi_threshold = 0.0185
 calibrate = true
 "#;
@@ -128,6 +141,29 @@ calibrate = true
         assert_eq!(c.get_f64("engine", "mi_threshold", 0.0).unwrap(), 0.0185);
         assert!(c.get_bool("engine", "calibrate", false).unwrap());
         assert_eq!(c.get_or("engine", "mode", "surrogate"), "photonic");
+    }
+
+    #[test]
+    fn mode_key_is_typed() {
+        use crate::backend::BackendKind;
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(
+            c.get_mode("engine", "mode", ExecMode::Surrogate).unwrap(),
+            ExecMode::photonic()
+        );
+        assert_eq!(
+            c.get_mode("engine", "backend", ExecMode::Surrogate).unwrap(),
+            ExecMode::Split(BackendKind::Digital)
+        );
+        // missing key -> default; bad value -> error
+        assert_eq!(
+            c.get_mode("engine", "nope", ExecMode::Surrogate).unwrap(),
+            ExecMode::Surrogate
+        );
+        assert!(Config::parse("[e]\nmode = quantum")
+            .unwrap()
+            .get_mode("e", "mode", ExecMode::Surrogate)
+            .is_err());
     }
 
     #[test]

@@ -1,15 +1,15 @@
-//! The inference engine: PJRT for deterministic layers, the photonic
-//! machine for the probabilistic block, uncertainty aggregation on top.
+//! The inference engine: PJRT for deterministic layers, a pluggable
+//! [`ProbConvBackend`] for the probabilistic block, uncertainty aggregation
+//! on top.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{self, BackendKind, EpsSource, ProbConvBackend, SamplePlan};
 use crate::bnn::{Decision, Predictive, UncertaintyPolicy};
-use crate::calibration::{calibrate_kernel, CalibrationOptions};
-use crate::entropy::chaotic::ChaoticLightSource;
 use crate::log_info;
-use crate::photonics::{MachineConfig, PhotonicMachine};
+use crate::photonics::MachineConfig;
 use crate::runtime::{Arg, ModelArtifacts, ParamStore};
 
 /// Where the probabilistic block executes.
@@ -17,14 +17,42 @@ use crate::runtime::{Arg, ModelArtifacts, ParamStore};
 pub enum ExecMode {
     /// The AOT surrogate (`fwd_full` HLO) with chaotic noise fed as `eps`.
     Surrogate,
-    /// The split path: `fwd_pre` → photonic machine simulator → `fwd_post`.
-    Photonic,
+    /// The split path: `fwd_pre` → batched [`ProbConvBackend`] sample plan
+    /// → `fwd_post`, on the chosen sampling substrate.
+    Split(BackendKind),
+}
+
+impl ExecMode {
+    /// The paper's serving configuration: split path on the photonic machine.
+    pub fn photonic() -> Self {
+        ExecMode::Split(BackendKind::Photonic)
+    }
+
+    /// Parse a CLI/config token: `photonic|digital|mean|surrogate`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "surrogate" => Ok(ExecMode::Surrogate),
+            other => Ok(ExecMode::Split(BackendKind::parse(other).map_err(|_| {
+                anyhow!("mode must be photonic|digital|mean|surrogate, got {other}")
+            })?)),
+        }
+    }
+
+    /// The backend kind the split path would use (the photonic machine is
+    /// also kept programmed behind the surrogate, for parity probes).
+    pub fn backend_kind(&self) -> BackendKind {
+        match self {
+            ExecMode::Surrogate => BackendKind::Photonic,
+            ExecMode::Split(kind) => *kind,
+        }
+    }
 }
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Stochastic forward passes per request (paper: N = 10).
+    /// Stochastic forward passes per request (paper: N = 10).  A
+    /// deterministic backend collapses this to 1 at serving time.
     pub n_samples: usize,
     pub mode: ExecMode,
     pub policy: UncertaintyPolicy,
@@ -40,7 +68,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         Self {
             n_samples: 10,
-            mode: ExecMode::Photonic,
+            mode: ExecMode::photonic(),
             policy: UncertaintyPolicy::ood_only(0.0185),
             calibrate: true,
             machine: MachineConfig::default(),
@@ -63,41 +91,39 @@ pub struct ClassifyResult {
 pub struct Engine {
     pub arts: ModelArtifacts,
     pub params: ParamStore,
-    machine: PhotonicMachine,
-    noise: ChaoticLightSource,
+    backend: Box<dyn ProbConvBackend>,
+    noise: EpsSource,
     cfg: EngineConfig,
     pub metrics: super::metrics::EngineMetrics,
 }
 
 impl Engine {
-    /// Build an engine: loads the machine's kernel bank from the trained
+    /// Build an engine: programs the backend's kernel bank from the trained
     /// probabilistic parameters (one 9-tap kernel per depthwise channel)
     /// and optionally runs feedback calibration on each.
     pub fn new(arts: ModelArtifacts, params: ParamStore, cfg: EngineConfig) -> Result<Self> {
+        if cfg.n_samples == 0 {
+            return Err(anyhow!("n_samples must be >= 1"));
+        }
         let mut mcfg = cfg.machine.clone();
         mcfg.scale_dac = arts.meta.scale_dac;
         mcfg.scale_adc = arts.meta.scale_adc;
         mcfg.seed = cfg.seed;
-        let mut machine = PhotonicMachine::new(mcfg);
+        let mut backend = backend::build(cfg.mode.backend_kind(), &mcfg);
         let kernels = params.prob_kernels()?;
         let t0 = Instant::now();
-        let opts = CalibrationOptions::default();
-        for targets in &kernels {
-            let idx = machine.load_kernel(targets);
-            if cfg.calibrate {
-                calibrate_kernel(&mut machine, idx, targets, &opts);
-            }
-        }
+        backend.program(&kernels, cfg.calibrate)?;
         log_info!(
-            "engine[{}]: programmed {} kernels in {:.2}s (calibrate={})",
+            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={})",
             arts.meta.dataset,
             kernels.len(),
+            backend.name(),
             t0.elapsed().as_secs_f64(),
             cfg.calibrate
         );
         Ok(Self {
-            noise: ChaoticLightSource::with_defaults(cfg.seed.wrapping_add(77)),
-            machine,
+            noise: EpsSource::chaotic(cfg.seed.wrapping_add(77), cfg.noise_bw_ghz),
+            backend,
             arts,
             params,
             cfg,
@@ -117,6 +143,21 @@ impl Engine {
         self.cfg.mode
     }
 
+    /// The sampling substrate behind the probabilistic block.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// Stochastic passes actually executed per request: 1 on a
+    /// deterministic backend, `n_samples` otherwise.
+    pub fn samples_per_request(&self) -> usize {
+        if matches!(self.cfg.mode, ExecMode::Split(_)) && self.backend.is_deterministic() {
+            1
+        } else {
+            self.cfg.n_samples
+        }
+    }
+
     /// Classify a batch of images (`images.len() == n * image_size`).
     /// Returns one result per image.
     pub fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<ClassifyResult>> {
@@ -128,18 +169,22 @@ impl Engine {
                 self.image_size()
             ));
         }
+        if n == 0 {
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
         let logits = match self.cfg.mode {
             ExecMode::Surrogate => self.forward_surrogate(images, n)?,
-            ExecMode::Photonic => self.forward_photonic(images, n)?,
+            ExecMode::Split(_) => self.forward_split(images, n)?,
         };
         // logits: per pass, per image
         let per_image_latency = t0.elapsed().as_micros() as f64 / n as f64;
         let nc = self.n_classes();
         let results = (0..n)
             .map(|i| {
-                let rows: Vec<Vec<f32>> = (0..self.cfg.n_samples)
-                    .map(|s| logits[s][i * nc..(i + 1) * nc].to_vec())
+                let rows: Vec<Vec<f32>> = logits
+                    .iter()
+                    .map(|pass| pass[i * nc..(i + 1) * nc].to_vec())
                     .collect();
                 let predictive = Predictive::from_logits(&rows);
                 let decision = self.cfg.policy.decide(&predictive);
@@ -179,7 +224,7 @@ impl Engine {
         let mut eps = vec![0.0f32; b * meta.eps_size()];
         let mut passes = Vec::with_capacity(self.cfg.n_samples);
         for _ in 0..self.cfg.n_samples {
-            self.noise.fill_eps(self.cfg.noise_bw_ghz, &mut eps);
+            self.noise.fill(&mut eps);
             let out = f.call(&[
                 Arg::F32(&self.params.theta, &[np]),
                 Arg::F32(&x, &x_shape),
@@ -190,9 +235,9 @@ impl Engine {
         Ok(passes)
     }
 
-    /// Photonic path: one `fwd_pre`, then per pass a machine depthwise conv
-    /// per image and one `fwd_post`.
-    fn forward_photonic(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
+    /// Split path: one `fwd_pre`, then a single batched backend sample plan
+    /// (all passes × all images in one call), then one `fwd_post` per pass.
+    fn forward_split(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
         let meta = &self.arts.meta;
         let b = self.arts.pick_batch("fwd_pre", n);
         let pre = self.arts.get(&format!("fwd_pre_b{b}"))?;
@@ -218,21 +263,16 @@ impl Engine {
             meta.prob_hw as i64,
             meta.prob_hw as i64,
         ];
-        let mut passes = Vec::with_capacity(self.cfg.n_samples);
+        let passes_n = self.samples_per_request();
+        let plan = SamplePlan::new(passes_n, n, meta.prob_ch, meta.prob_hw, meta.prob_hw);
+        // the backend is the only source of randomness on this path; all
+        // N x B stochastic convolutions happen in this one call
+        let mut d_all = vec![0.0f32; plan.total_size()];
+        self.backend.sample_conv(&plan, &x3q[..n * act], &mut d_all)?;
+        let mut passes = Vec::with_capacity(passes_n);
         let mut d3 = vec![0.0f32; b * act];
-        for _ in 0..self.cfg.n_samples {
-            // the machine is the only source of randomness on this path
-            for i in 0..n {
-                let xi = &x3q[i * act..(i + 1) * act];
-                let di = self.machine.depthwise_conv(
-                    0,
-                    xi,
-                    meta.prob_ch,
-                    meta.prob_hw,
-                    meta.prob_hw,
-                );
-                d3[i * act..(i + 1) * act].copy_from_slice(&di);
-            }
+        for s in 0..passes_n {
+            d3[..n * act].copy_from_slice(&d_all[s * n * act..(s + 1) * n * act]);
             let out = post.call(&[
                 Arg::F32(&self.params.theta, &[np]),
                 Arg::F32(&x3q, &act_shape),
@@ -243,12 +283,13 @@ impl Engine {
         Ok(passes)
     }
 
-    /// Simulated-optical-time + host telemetry line.
+    /// Simulated-optical-time / substrate + host telemetry line.
     pub fn report(&self) -> String {
         format!(
-            "{} | machine: {}",
+            "{} | backend[{}]: {}",
             self.metrics.report(),
-            self.machine.throughput_report()
+            self.backend.name(),
+            self.backend.report()
         )
     }
 }

@@ -14,10 +14,14 @@
 //! ```
 //!
 //! The engine thread owns all non-`Send` state (PJRT client/executables and
-//! the photonic machine); everything upstream communicates over MPMC
+//! the sampling backend); everything upstream communicates over MPMC
 //! channels.  Each request is expanded into `n_samples` stochastic forward
-//! passes (paper: N = 10) whose randomness comes from the machine's chaotic
-//! light — there is no PRNG on the photonic request path.
+//! passes (paper: N = 10) executed as one batched
+//! [`crate::backend::SamplePlan`] on the configured
+//! [`crate::backend::ProbConvBackend`] — chaotic light on the photonic
+//! backend (no PRNG on the request path), xoshiro256++ + Box–Muller on the
+//! digital baseline, or a single deterministic pass on the mean-field
+//! backend.
 
 pub mod batcher;
 pub mod engine;
@@ -25,6 +29,7 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use crate::backend::BackendKind;
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
 pub use router::Router;

@@ -20,9 +20,32 @@
 //! grating applying a −93.1 ps/THz frequency-dependent group delay (one
 //! symbol per 403 GHz channel), and a photodetector + 8-bit ADC readout.
 //!
+//! ## Sampling backends
+//!
+//! The serving coordinator is generic over the *sampling substrate* of the
+//! probabilistic block through [`backend::ProbConvBackend`]: one API for
+//! programming a Gaussian-weight kernel bank and executing a batched
+//! [`backend::SamplePlan`] (all N stochastic samples × B batch items per
+//! call).  Pick a backend with `--backend` on the CLI, `backend = ...` in a
+//! serving config, or [`coordinator::ExecMode::Split`] in code:
+//!
+//! | `--backend` | implementation | randomness | N passes | use it for |
+//! |-------------|----------------|------------|----------|------------|
+//! | `photonic` | [`backend::PhotonicSimBackend`] | chaotic light (Gamma speckle per symbol) | `n_samples` | paper-faithful serving; calibration + hardware-floor studies |
+//! | `digital` | [`backend::DigitalBaselineBackend`] | xoshiro256++ + Box–Muller per weight per symbol | `n_samples` | the paper's digital comparison point; PRNG-bottleneck throughput measurements |
+//! | `mean` | [`backend::MeanFieldBackend`] | none (mean weights) | 1 | uncertainty-free fast serving; ablation control |
+//!
+//! `--mode surrogate` bypasses the split path entirely and runs the AOT
+//! `fwd_full` HLO with [`backend::EpsSource`] noise — the same
+//! photonic-vs-digital seam, applied to the reparameterized `eps` operand
+//! instead of the convolution.  `paper_tables` (`backends` section) and
+//! `coordinator_micro` report photonic-vs-digital sampling throughput
+//! side by side.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 
+pub mod backend;
 pub mod benchkit;
 pub mod bnn;
 pub mod calibration;

@@ -19,8 +19,9 @@ use anyhow::{anyhow, Result};
 use photonic_bayes::bnn::UncertaintyPolicy;
 use photonic_bayes::calibration;
 use photonic_bayes::cli::Args;
+use photonic_bayes::config::Config;
 use photonic_bayes::coordinator::service::ServiceConfig;
-use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode, Router};
+use photonic_bayes::coordinator::{BackendKind, Engine, EngineConfig, ExecMode, Router};
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource};
 use photonic_bayes::exec::CancelToken;
@@ -73,15 +74,17 @@ USAGE: pbm <subcommand> [flags]
 
   train     --dataset digits|blood [--epochs N --lr F --kl-scale F --warmup N
             --seed N --eval-every N --out STEM]
-  eval      --dataset D [--params FILE --samples N --mode photonic|surrogate
-            --limit N --split test|ood|ambiguous|fashion]
+  eval      --dataset D [--params FILE --samples N --backend photonic|digital|mean
+            --mode M|surrogate --limit N --split test|ood|ambiguous|fashion]
   report    fig2 | fig2e | fig4 | fig5 | headline | nist [--params FILE
-            --samples N --mode M --limit N]
+            --samples N --backend B --mode M --limit N]
   calibrate [--kernels N --outputs M --seed N]
   nist      [--bits N --bw GHZ]
-  serve     [--addr HOST:PORT --datasets digits,blood --mode M --samples N
-            --mi-threshold F --max-batch N --max-wait-ms N]
+  serve     [--config FILE --addr HOST:PORT --datasets digits,blood
+            --backend B --mode M --samples N --mi-threshold F
+            --max-batch N --max-wait-ms N]
   classify  [--addr HOST:PORT --dataset D --split S --index I]
+            [--local --backend B]   (serve one image in-process, no server)
   info
 ",
         photonic_bayes::version()
@@ -99,12 +102,13 @@ fn default_params(root: &Path, dataset: &str) -> (PathBuf, bool) {
     }
 }
 
-fn parse_mode(s: &str) -> Result<ExecMode> {
-    match s {
-        "photonic" => Ok(ExecMode::Photonic),
-        "surrogate" => Ok(ExecMode::Surrogate),
-        other => Err(anyhow!("mode must be photonic|surrogate, got {other}")),
+/// Resolve the execution mode from `--backend` (photonic|digital|mean,
+/// always the split path) or `--mode` (adds `surrogate`); `--backend` wins.
+fn parse_mode(args: &Args) -> Result<ExecMode> {
+    if let Some(b) = args.get("backend") {
+        return Ok(ExecMode::Split(BackendKind::parse(b)?));
     }
+    ExecMode::parse(&args.get_or("mode", "photonic"))
 }
 
 fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
@@ -126,7 +130,7 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
     let params = ParamStore::load_bin(&arts.meta, &params_path)?;
     let cfg = EngineConfig {
         n_samples: args.get_usize("samples", 10)?,
-        mode: parse_mode(&args.get_or("mode", "photonic"))?,
+        mode: parse_mode(args)?,
         policy: UncertaintyPolicy::ood_only(args.get_f64("mi-threshold", 0.0185)?),
         calibrate: !args.has("no-calibrate"),
         machine: MachineConfig::default(),
@@ -417,8 +421,21 @@ fn cmd_nist(args: &Args) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // layered configuration: built-in defaults < --config file < CLI flags
+    let file = match args.get("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
     let root = artifacts_root();
-    let datasets = args.get_or("datasets", "digits,blood");
+    let datasets = args.get_or(
+        "datasets",
+        &file.get_or("engine", "datasets", "digits,blood"),
+    );
+    let mode = if args.has("backend") || args.has("mode") {
+        parse_mode(args)?
+    } else {
+        file.get_mode("engine", "backend", ExecMode::photonic())?
+    };
     let mut router = Router::new();
     for ds in datasets.split(',') {
         let (params_path, trained) = default_params(&root, ds);
@@ -426,18 +443,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eprintln!("warning: serving '{ds}' with untrained init params");
         }
         let engine_cfg = EngineConfig {
-            n_samples: args.get_usize("samples", 10)?,
-            mode: parse_mode(&args.get_or("mode", "photonic"))?,
-            policy: UncertaintyPolicy::ood_only(args.get_f64("mi-threshold", 0.0185)?),
-            calibrate: !args.has("no-calibrate"),
+            n_samples: args.get_usize("samples", file.get_usize("engine", "n_samples", 10)?)?,
+            mode,
+            policy: UncertaintyPolicy::ood_only(
+                args.get_f64("mi-threshold", file.get_f64("engine", "mi_threshold", 0.0185)?)?,
+            ),
+            calibrate: !args.has("no-calibrate") && file.get_bool("engine", "calibrate", true)?,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
             seed: args.get_u64("seed", 42)?,
         };
         let svc_cfg = ServiceConfig {
-            max_batch: args.get_usize("max-batch", 8)?,
-            max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
-            queue_depth: 256,
+            max_batch: args.get_usize("max-batch", file.get_usize("batcher", "max_batch", 8)?)?,
+            max_wait: std::time::Duration::from_millis(
+                args.get_u64("max-wait-ms", file.get_usize("batcher", "max_wait_ms", 2)? as u64)?,
+            ),
+            queue_depth: file.get_usize("batcher", "queue_depth", 256)?,
         };
         router.register(photonic_bayes::coordinator::service::EngineHandle::spawn(
             &root,
@@ -448,15 +469,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?);
     }
     let opts = ServerOptions {
-        addr: args.get_or("addr", "127.0.0.1:7878"),
-        workers: args.get_usize("workers", 8)?,
+        addr: args.get_or("addr", &file.get_or("server", "addr", "127.0.0.1:7878")),
+        workers: args.get_usize("workers", file.get_usize("server", "workers", 8)?)?,
     };
     let cancel = CancelToken::new();
     serve(router, opts, cancel, |addr| println!("listening on {addr}"))
 }
 
 fn cmd_classify(args: &Args) -> Result<()> {
-    let addr = args.get_or("addr", "127.0.0.1:7878");
     let dataset = args.get_or("dataset", "digits");
     let split = args.get_or("split", "test");
     let index = args.get_usize("index", 0)?;
@@ -464,6 +484,41 @@ fn cmd_classify(args: &Args) -> Result<()> {
     if index >= ds.n {
         return Err(anyhow!("index {index} out of range ({} images)", ds.n));
     }
+    // `--local` (or a `--backend` with no gateway address) serves the image
+    // in-process through the ProbConvBackend trait instead of a running
+    // gateway — the quickest way to compare sampling substrates end-to-end.
+    // With a gateway address the backend is the *server's* choice, so
+    // `--backend` alongside `--addr` is ignored with a warning, and
+    // `--local` alongside `--addr` is a hard conflict.
+    if args.has("local") && args.has("addr") {
+        return Err(anyhow!("--local and --addr conflict: pick in-process or gateway"));
+    }
+    let local = args.has("local") || (args.has("backend") && args.get("addr").is_none());
+    if !local && args.has("backend") {
+        eprintln!("warning: --backend is ignored when classifying against a gateway (use --local)");
+    }
+    if local {
+        let mut engine = build_engine(args, &dataset)?;
+        let r = engine
+            .classify(ds.image(index), 1)?
+            .into_iter()
+            .next()
+            .unwrap();
+        println!("true label: {}", ds.labels[index]);
+        println!(
+            "backend {} ({} passes): predicted {} | MI {:.4} SE {:.3} agreement {:.0}% | {:?}",
+            engine.backend_kind(),
+            engine.samples_per_request(),
+            r.predictive.predicted,
+            r.predictive.mutual_information,
+            r.predictive.softmax_entropy,
+            r.predictive.agreement * 100.0,
+            r.decision,
+        );
+        println!("{}", engine.report());
+        return Ok(());
+    }
+    let addr = args.get_or("addr", "127.0.0.1:7878");
     let mut client = Client::connect(&addr)?;
     let resp = client.classify(&dataset, ds.image(index))?;
     println!("true label: {}", ds.labels[index]);

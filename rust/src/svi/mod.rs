@@ -10,4 +10,4 @@
 pub mod checkpoint;
 pub mod trainer;
 
-pub use trainer::{evaluate, train, EvalSummary, TrainConfig, TrainLog};
+pub use trainer::{evaluate, evaluate_with, train, EvalSummary, TrainConfig, TrainLog};

@@ -4,6 +4,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::EpsSource;
 use crate::data::Dataset;
 use crate::entropy::gaussian::Gaussian;
 use crate::entropy::Xoshiro256pp;
@@ -207,6 +208,11 @@ pub fn train(
 
 /// Surrogate-mode evaluation: `n_samples` stochastic passes per input via
 /// the `fwd_full` entry points, majority vote on the mean predictive.
+///
+/// Draws the reparameterization noise from the digital PRNG — the training
+/// default.  Use [`evaluate_with`] to evaluate under a different serving
+/// noise source (e.g. the chaotic-light [`EpsSource`] the engine serves
+/// with), closing the train/serve noise gap in ablations.
 pub fn evaluate(
     arts: &ModelArtifacts,
     ds: &Dataset,
@@ -214,11 +220,21 @@ pub fn evaluate(
     n_samples: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
+    let mut noise = EpsSource::digital(seed.wrapping_add(0x5EED));
+    evaluate_with(arts, ds, params, n_samples, &mut noise)
+}
+
+/// [`evaluate`] with an explicit serving-time noise source.
+pub fn evaluate_with(
+    arts: &ModelArtifacts,
+    ds: &Dataset,
+    params: &ParamStore,
+    n_samples: usize,
+    noise: &mut EpsSource,
+) -> Result<EvalSummary> {
     let meta = &arts.meta;
     let bsize = *meta.full_batches.last().unwrap();
     let f = arts.get(&format!("fwd_full_b{bsize}"))?;
-    let mut rng = Xoshiro256pp::new(seed.wrapping_add(0x5EED));
-    let mut gauss = Gaussian::new();
     let np = meta.num_params as i64;
     let x_shape = [
         bsize as i64,
@@ -246,7 +262,7 @@ pub fn evaluate(
         // mean probs over n_samples passes
         let mut mean_logit_probs = vec![0.0f32; bsize * meta.n_classes];
         for _ in 0..n_samples {
-            gauss.fill_f32(&mut rng, &mut eps);
+            noise.fill(&mut eps);
             let out = f.call(&[
                 Arg::F32(&params.theta, &[np]),
                 Arg::F32(&batch_x, &x_shape),
