@@ -48,6 +48,7 @@ fn main() -> Result<()> {
             calibrate: true,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            threads: 1,
             seed: 7,
         },
     )?;

@@ -39,7 +39,10 @@ fn main() -> Result<()> {
     let mut src = ChaoticLightSource::with_defaults(7);
     let bits = src.extract_bits(100.0, 20_000);
     let passed = nist::run_battery(&bits).iter().filter(|r| r.pass).count();
-    println!("entropy source: {passed}/{} NIST SP800-22 tests pass on 20 kbit\n", nist::run_battery(&bits).len());
+    println!(
+        "entropy source: {passed}/{} NIST SP800-22 tests pass on 20 kbit\n",
+        nist::run_battery(&bits).len()
+    );
 
     // --- 3. load artifacts + (trained, if available) parameters ----------
     let arts = ModelArtifacts::load_dataset(&root, "digits")?;
@@ -62,6 +65,8 @@ fn main() -> Result<()> {
             calibrate: true,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            // shard sampling across 4 workers; fix (seed, threads) to replay
+            threads: 4,
             seed: 42,
         },
     )?;

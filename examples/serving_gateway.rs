@@ -48,6 +48,7 @@ fn main() -> Result<()> {
         calibrate: false, // load-time speed; calibration is exercised elsewhere
         machine: MachineConfig::default(),
         noise_bw_ghz: 150.0,
+        threads: 0, // one sampling worker per core: gateway throughput first
         seed: 42,
     };
     let svc_cfg = ServiceConfig {

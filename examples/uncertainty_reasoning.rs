@@ -45,6 +45,7 @@ fn main() -> Result<()> {
             calibrate: true,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            threads: 1,
             seed: 11,
         },
     )?;
@@ -62,7 +63,10 @@ fn main() -> Result<()> {
 
     // --- the three clusters of Fig. 5(e) ----------------------------------
     println!("\n== Fig. 5(e) cluster statistics (MI = epistemic, SE = aleatoric) ==");
-    println!("{:<22} {:>10} {:>10} {:>10} {:>10}", "split", "mean MI", "med MI", "mean SE", "med SE");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10}",
+        "split", "mean MI", "med MI", "mean SE", "med SE"
+    );
     for s in [&id_s, &amb_s, &fash_s] {
         println!(
             "{:<22} {:>10.4} {:>10.4} {:>10.3} {:>10.3}",

@@ -2,6 +2,7 @@
 //! decomposition: PJRT entry points per batch size, end-to-end classify in
 //! both execution modes, batching/channel overhead, protocol costs.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
@@ -11,6 +12,7 @@ use photonic_bayes::coordinator::{DynamicBatcher, Engine, EngineConfig, ExecMode
 use photonic_bayes::data::synth::{random_activations, random_kernel};
 use photonic_bayes::entropy::Xoshiro256pp;
 use photonic_bayes::exec::channel::channel;
+use photonic_bayes::exec::ThreadPool;
 use photonic_bayes::photonics::MachineConfig;
 use photonic_bayes::runtime::artifact::artifacts_root;
 use photonic_bayes::runtime::{Arg, ModelArtifacts, ParamStore};
@@ -28,22 +30,33 @@ fn main() {
         let mcfg = MachineConfig::default();
         let x = random_activations(&mut rng, plan.sample_size(), mcfg.scale_dac);
         for kind in [BackendKind::Photonic, BackendKind::Digital, BackendKind::MeanField] {
-            let mut be = backend::build(kind, &mcfg);
-            be.program(&kernels, false).unwrap();
-            let eff = SamplePlan {
-                n_samples: if be.is_deterministic() { 1 } else { plan.n_samples },
-                ..plan
+            let threads: &[usize] = if kind == BackendKind::MeanField {
+                &[1]
+            } else {
+                &[1, 4] // sequential vs sharded-across-the-pool
             };
-            let mut out = vec![0.0f32; eff.total_size()];
-            let s = quick.run(&format!("sample_conv backend={}", kind.name()), || {
-                be.sample_conv(&eff, &x, &mut out).unwrap();
-                black_box(&out);
-            });
-            println!(
-                "{}   ({:.2} M conv/s)",
-                s.row(),
-                s.throughput(eff.convolutions() as f64) / 1e6
-            );
+            for &t in threads {
+                let pool = (t > 1).then(|| Arc::new(ThreadPool::new(t)));
+                let mut be = backend::build_with_pool(kind, &mcfg, pool);
+                be.program(&kernels, false).unwrap();
+                let eff = SamplePlan {
+                    n_samples: if be.is_deterministic() { 1 } else { plan.n_samples },
+                    ..plan
+                };
+                let mut out = vec![0.0f32; eff.total_size()];
+                let s = quick.run(
+                    &format!("sample_conv backend={} threads={t}", kind.name()),
+                    || {
+                        be.sample_conv(&eff, &x, &mut out).unwrap();
+                        black_box(&out);
+                    },
+                );
+                println!(
+                    "{}   ({:.2} M conv/s)",
+                    s.row(),
+                    s.throughput(eff.convolutions() as f64) / 1e6
+                );
+            }
         }
     }
 
@@ -118,8 +131,12 @@ fn main() {
             let a_s = [b as i64, meta.prob_ch as i64, 7, 7];
             let s = quick.run(&format!("fwd_post b={b}"), || {
                 black_box(
-                    g.call(&[Arg::F32(&ps.theta, &[np]), Arg::F32(&act, &a_s), Arg::F32(&act, &a_s)])
-                        .unwrap(),
+                    g.call(&[
+                        Arg::F32(&ps.theta, &[np]),
+                        Arg::F32(&act, &a_s),
+                        Arg::F32(&act, &a_s),
+                    ])
+                    .unwrap(),
                 );
             });
             println!("{}", s.row());
@@ -147,6 +164,7 @@ fn main() {
                     calibrate: false,
                     machine: MachineConfig::default(),
                     noise_bw_ghz: 150.0,
+                    threads: 1,
                     seed: 7,
                 },
             )

@@ -9,14 +9,17 @@
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
 //! reduced sample count + a warning when only init params exist.
 
+use std::sync::Arc;
+
 use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
-use photonic_bayes::benchkit::{black_box, section, Bench};
+use photonic_bayes::benchkit::{black_box, section, Bench, JsonSink};
 use photonic_bayes::bnn::UncertaintyPolicy;
 use photonic_bayes::calibration::computation_error_experiment;
 use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
 use photonic_bayes::data::synth::{random_activations, random_kernel};
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource};
+use photonic_bayes::exec::ThreadPool;
 use photonic_bayes::experiments::uncertainty::{build_report, eval_split};
 use photonic_bayes::photonics::grating::{channel_frequency_thz, ChirpedGrating};
 use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
@@ -26,18 +29,26 @@ use photonic_bayes::util::mathstat::{linfit, mean, median};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let filter = args
-        .iter()
-        .find(|a| !a.starts_with("--"))
-        .cloned()
-        .unwrap_or_default();
+    // the filter is the first bare token that is not the value of `--json`
+    let mut filter = String::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--json" {
+            i += 1; // skip the path value
+        } else if !a.starts_with("--") && filter.is_empty() {
+            filter = a.clone();
+        }
+        i += 1;
+    }
+    let mut sink = JsonSink::from_args(&args, "paper_tables");
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
 
     if run("headline") {
         headline();
     }
     if run("backends") {
-        backends();
+        backends(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -57,6 +68,12 @@ fn main() {
     if run("ablations") {
         ablations();
     }
+    if let Some(s) = &sink {
+        match s.write() {
+            Ok(()) => println!("\nwrote {}", s.path().display()),
+            Err(e) => eprintln!("\nfailed writing {}: {e}", s.path().display()),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -65,19 +82,34 @@ fn headline() {
     section("HEADLINE — abstract numbers derived from architecture constants");
     let h = timing::headline();
     println!("{:<38} {:>12} {:>12}", "metric", "measured", "paper");
-    println!("{:<38} {:>12.1} {:>12}", "ps per probabilistic convolution", h.symbol_period_ps, "37.5");
+    println!(
+        "{:<38} {:>12.1} {:>12}",
+        "ps per probabilistic convolution", h.symbol_period_ps, "37.5"
+    );
     println!("{:<38} {:>12.2} {:>12}", "G convolutions / s", h.convolutions_per_sec / 1e9, "26.7");
-    println!("{:<38} {:>12.2} {:>12}", "Tbit/s digital interface", h.interface_tbit_per_sec, "1.28");
-    println!("{:<38} {:>12.2} {:>12}", "grating delay step (ps/channel)", h.channel_delay_step_ps, "37.5");
-    println!("{:<38} {:>12.2} {:>12}", "grating latency (ns, sub-100 claim)", h.grating_latency_ns, "<100");
+    println!(
+        "{:<38} {:>12.2} {:>12}",
+        "Tbit/s digital interface", h.interface_tbit_per_sec, "1.28"
+    );
+    println!(
+        "{:<38} {:>12.2} {:>12}",
+        "grating delay step (ps/channel)", h.channel_delay_step_ps, "37.5"
+    );
+    println!(
+        "{:<38} {:>12.2} {:>12}",
+        "grating latency (ns, sub-100 claim)", h.grating_latency_ns, "<100"
+    );
 }
 
 /// Photonic-vs-digital sampling throughput — the paper's core systems
-/// claim, measured through the one `ProbConvBackend` API.  Runs on a
-/// synthetic workload, so it needs no artifacts.
-fn backends() {
+/// claim, measured through the one `ProbConvBackend` API across thread
+/// counts.  Runs on a synthetic workload, so it needs no artifacts.  With
+/// `--json <path>` the rows are also written machine-readably (the perf
+/// trajectory file `BENCH_backends.json`).
+fn backends(sink: &mut Option<JsonSink>) {
     section("BACKENDS — sampling throughput, photonic vs digital vs mean-field");
-    let (n_samples, batch, channels, hw) = (10usize, 8usize, 8usize, 7usize);
+    // N x B = 128 >= 64: enough grid rows for every shard at 8 threads
+    let (n_samples, batch, channels, hw) = (16usize, 8usize, 8usize, 7usize);
     let plan = SamplePlan::new(n_samples, batch, channels, hw, hw);
     let mut rng = photonic_bayes::entropy::Xoshiro256pp::new(17);
     let kernels: Vec<_> = (0..channels).map(|_| random_kernel(&mut rng)).collect();
@@ -92,41 +124,59 @@ fn backends() {
         plan.convolutions()
     );
     println!(
-        "{:<12} {:>16} {:>16} {:>14}",
-        "backend", "call latency", "conv/s (sim)", "vs digital"
+        "{:<12} {:>8} {:>16} {:>16} {:>12} {:>12}",
+        "backend", "threads", "call latency", "conv/s (sim)", "vs 1-thread", "vs digital"
     );
-    let mut per_kind = Vec::new();
-    for kind in [BackendKind::Photonic, BackendKind::Digital, BackendKind::MeanField] {
-        let mut be = backend::build(kind, &mcfg);
-        be.program(&kernels, false).unwrap();
-        let mut out = vec![0.0f32; plan.total_size()];
-        let eff = SamplePlan {
-            // the mean-field fast path executes a single deterministic pass
-            n_samples: if be.is_deterministic() { 1 } else { n_samples },
-            ..plan
+    let mut digital_1t_ns_per_conv = f64::NAN;
+    for kind in [BackendKind::Digital, BackendKind::Photonic, BackendKind::MeanField] {
+        let threads: &[usize] = if kind == BackendKind::MeanField {
+            &[1] // deterministic single pass: nothing to shard
+        } else {
+            &[1, 2, 4, 8]
         };
-        let s = bench.run(kind.name(), || {
-            be.sample_conv(&eff, &x, &mut out).unwrap();
-            black_box(&out);
-        });
-        per_kind.push((kind, s.mean_ns, eff.convolutions()));
-    }
-    let digital_ns_per_conv = per_kind
-        .iter()
-        .find(|(k, _, _)| *k == BackendKind::Digital)
-        .map(|&(_, ns, convs)| ns / convs as f64)
-        .unwrap();
-    for (kind, ns, convs) in per_kind {
-        let ns_per_conv = ns / convs as f64;
-        println!(
-            "{:<12} {:>16} {:>16.2e} {:>13.2}x",
-            kind.name(),
-            photonic_bayes::benchkit::fmt_ns(ns),
-            1e9 / ns_per_conv,
-            digital_ns_per_conv / ns_per_conv
-        );
+        let mut base_ns = f64::NAN;
+        for &t in threads {
+            let pool = (t > 1).then(|| Arc::new(ThreadPool::new(t)));
+            let mut be = backend::build_with_pool(kind, &mcfg, pool);
+            be.program(&kernels, false).unwrap();
+            let eff = SamplePlan {
+                // the mean-field fast path executes a single deterministic pass
+                n_samples: if be.is_deterministic() { 1 } else { n_samples },
+                ..plan
+            };
+            let mut out = vec![0.0f32; eff.total_size()];
+            let s = bench.run(&format!("{} t{}", kind.name(), t), || {
+                be.sample_conv(&eff, &x, &mut out).unwrap();
+                black_box(&out);
+            });
+            let ns_per_conv = s.mean_ns / eff.convolutions() as f64;
+            if t == 1 {
+                base_ns = s.mean_ns;
+                if kind == BackendKind::Digital {
+                    digital_1t_ns_per_conv = ns_per_conv;
+                }
+            }
+            println!(
+                "{:<12} {:>8} {:>16} {:>16.2e} {:>11.2}x {:>11.2}x",
+                kind.name(),
+                t,
+                photonic_bayes::benchkit::fmt_ns(s.mean_ns),
+                1e9 / ns_per_conv,
+                base_ns / s.mean_ns,
+                digital_1t_ns_per_conv / ns_per_conv
+            );
+            if let Some(sink) = sink {
+                sink.push(
+                    &format!("backends/sample_conv/{}/t{}", kind.name(), t),
+                    s.mean_ns,
+                    1e9 / ns_per_conv,
+                );
+            }
+        }
     }
     println!("(simulator wall-clock; the machine's *optical* rate is the 26.7 Gconv/s headline)");
+    println!("(speedup columns: per-call latency vs the same backend at 1 thread, and");
+    println!(" ns/conv vs the digital backend at 1 thread — the PR 2 baseline)");
 }
 
 fn fig2_error() {
@@ -169,7 +219,12 @@ fn nist_table() {
 
 // ---------------------------------------------------------------------------
 
-fn load_engine(dataset: &str, mode: ExecMode, n_samples: usize, seed: u64) -> Option<(Engine, bool)> {
+fn load_engine(
+    dataset: &str,
+    mode: ExecMode,
+    n_samples: usize,
+    seed: u64,
+) -> Option<(Engine, bool)> {
     let root = artifacts_root();
     if !root.join(dataset).join("meta.json").exists() {
         println!("  !! artifacts for {dataset} missing; run `make artifacts`");
@@ -194,6 +249,7 @@ fn load_engine(dataset: &str, mode: ExecMode, n_samples: usize, seed: u64) -> Op
             calibrate: true,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            threads: 1,
             seed,
         },
     )
@@ -211,13 +267,20 @@ fn fig4() {
         return;
     };
     let limit = if trained { 300 } else { 96 };
-    let id = eval_split(&mut engine, &load_split("blood_test", DatasetKind::InDomain).unwrap(), limit).unwrap();
-    let ood = eval_split(&mut engine, &load_split("blood_ood", DatasetKind::Epistemic).unwrap(), limit).unwrap();
+    let id_split = load_split("blood_test", DatasetKind::InDomain).unwrap();
+    let id = eval_split(&mut engine, &id_split, limit).unwrap();
+    let ood_split = load_split("blood_ood", DatasetKind::Epistemic).unwrap();
+    let ood = eval_split(&mut engine, &ood_split, limit).unwrap();
     let rep = build_report(id, ood, None, 7);
     println!("{:<38} {:>12} {:>12}", "quantity", "measured", "paper");
     println!("{:<38} {:>11.2}% {:>12}", "OOD AUROC (MI)", rep.ood_auroc * 100.0, "91.16%");
     println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (plain)", rep.acc_plain * 100.0, "90.26%");
-    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (MI rejection)", rep.acc_reject * 100.0, "94.62%");
+    println!(
+        "{:<38} {:>11.2}% {:>12}",
+        "ID accuracy (MI rejection)",
+        rep.acc_reject * 100.0,
+        "94.62%"
+    );
     println!("{:<38} {:>12.5} {:>12}", "optimal MI threshold", rep.mi_threshold, "0.0185");
     println!("\nROC curve (threshold sweep, 10 sample points):");
     let pts = &rep.ood_roc;
@@ -235,9 +298,12 @@ fn fig5() {
         return;
     };
     let limit = if trained { 300 } else { 96 };
-    let id = eval_split(&mut engine, &load_split("digits_test", DatasetKind::InDomain).unwrap(), limit).unwrap();
-    let amb = eval_split(&mut engine, &load_split("ambiguous", DatasetKind::Aleatoric).unwrap(), limit).unwrap();
-    let fash = eval_split(&mut engine, &load_split("fashion", DatasetKind::Epistemic).unwrap(), limit).unwrap();
+    let id_split = load_split("digits_test", DatasetKind::InDomain).unwrap();
+    let id = eval_split(&mut engine, &id_split, limit).unwrap();
+    let amb_split = load_split("ambiguous", DatasetKind::Aleatoric).unwrap();
+    let amb = eval_split(&mut engine, &amb_split, limit).unwrap();
+    let fash_split = load_split("fashion", DatasetKind::Epistemic).unwrap();
+    let fash = eval_split(&mut engine, &fash_split, limit).unwrap();
 
     println!("Fig 5(e) cluster medians:");
     println!("{:<14} {:>10} {:>10}", "split", "med MI", "med SE");
@@ -248,9 +314,24 @@ fn fig5() {
     let rep = build_report(id, fash, Some(amb), 10);
     println!("\n{:<38} {:>12} {:>12}", "quantity", "measured", "paper");
     println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (plain)", rep.acc_plain * 100.0, "96.01%");
-    println!("{:<38} {:>11.2}% {:>12}", "ID accuracy (MI rejection)", rep.acc_reject * 100.0, "99.7%");
-    println!("{:<38} {:>11.2}% {:>12}", "epistemic AUROC (MI, fashion)", rep.ood_auroc * 100.0, "84.42%");
-    println!("{:<38} {:>11.2}% {:>12}", "aleatoric AUROC (SE, ambiguous)", rep.aleatoric_auroc.unwrap_or(0.0) * 100.0, "88.03%");
+    println!(
+        "{:<38} {:>11.2}% {:>12}",
+        "ID accuracy (MI rejection)",
+        rep.acc_reject * 100.0,
+        "99.7%"
+    );
+    println!(
+        "{:<38} {:>11.2}% {:>12}",
+        "epistemic AUROC (MI, fashion)",
+        rep.ood_auroc * 100.0,
+        "84.42%"
+    );
+    println!(
+        "{:<38} {:>11.2}% {:>12}",
+        "aleatoric AUROC (SE, ambiguous)",
+        rep.aleatoric_auroc.unwrap_or(0.0) * 100.0,
+        "88.03%"
+    );
     println!("{:<38} {:>12.5} {:>12}", "optimal MI threshold", rep.mi_threshold, "0.00308");
 }
 
@@ -273,7 +354,11 @@ fn ablations() {
                 .count() as f64
                 / a.predicted.len() as f64;
             println!("(a) photonic-vs-surrogate prediction agreement: {:.1}%", agree * 100.0);
-            println!("    accuracy photonic {:.2}%  surrogate {:.2}%", a.accuracy() * 100.0, b.accuracy() * 100.0);
+            println!(
+                "    accuracy photonic {:.2}%  surrogate {:.2}%",
+                a.accuracy() * 100.0,
+                b.accuracy() * 100.0
+            );
         }
     }
 
@@ -281,8 +366,10 @@ fn ablations() {
     println!("\n(b) N-sample sweep (mean OOD MI - mean ID MI gap, digits/fashion):");
     for n in [3, 5, 10, 20] {
         if let Some((mut e, _)) = load_engine("digits", ExecMode::photonic(), n, 31) {
-            let id = eval_split(&mut e, &load_split("digits_test", DatasetKind::InDomain).unwrap(), 100).unwrap();
-            let fa = eval_split(&mut e, &load_split("fashion", DatasetKind::Epistemic).unwrap(), 100).unwrap();
+            let id_split = load_split("digits_test", DatasetKind::InDomain).unwrap();
+            let id = eval_split(&mut e, &id_split, 100).unwrap();
+            let fa_split = load_split("fashion", DatasetKind::Epistemic).unwrap();
+            let fa = eval_split(&mut e, &fa_split, 100).unwrap();
             println!(
                 "    N = {n:>2}: MI gap = {:.4} (id {:.4}, fashion {:.4})",
                 mean(&fa.mi) - mean(&id.mi),

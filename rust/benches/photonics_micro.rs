@@ -95,7 +95,10 @@ fn main() {
         });
         let macs = 64.0 * 49.0 * 9.0;
         println!("{}   ({:.1} M MAC/s wall)", s.row(), s.throughput(macs) / 1e6);
-        println!("  one BNN pass (N=10) costs 10 such layers: ~{:.1} ms wall", s.mean_ns * 10.0 / 1e6);
+        println!(
+            "  one BNN pass (N=10) costs 10 such layers: ~{:.1} ms wall",
+            s.mean_ns * 10.0 / 1e6
+        );
     }
 
     section("CALIBRATION");

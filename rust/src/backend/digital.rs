@@ -12,15 +12,79 @@
 //! including pixels whose activations are zero: a digital sampler has to
 //! materialize the weight tensor before it can know what the data looks
 //! like, and that PRNG volume is precisely the cost being measured.
+//!
+//! ## Threading and determinism
+//!
+//! With a worker pool attached, `sample_conv` shards the flattened
+//! `n_samples x batch` grid across the workers.  Each shard owns a
+//! xoshiro256++ stream forked (2^128-jump) from the backend seed at
+//! construction, so outputs are bitwise-deterministic for a fixed
+//! `(seed, n_threads)` and statistically equivalent across thread counts.
+//! Weight draws happen in bulk — one plane of normals per (item, channel,
+//! sample) via [`Gaussian::fill_f64`] — into per-shard scratch, so the
+//! steady-state loop performs no heap allocation.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::{BackendKind, ProbConvBackend, SamplePlan};
 use crate::entropy::gaussian::Gaussian;
 use crate::entropy::Xoshiro256pp;
+use crate::exec::scratch::{grow, ScratchArena};
+use crate::exec::ThreadPool;
 use crate::photonics::converters::Quantizer;
 use crate::photonics::machine::im2col_3x3;
 use crate::photonics::TapTarget;
+
+/// One worker's private entropy stream + draw scratch.
+struct DigitalShard {
+    rng: Xoshiro256pp,
+    gauss: Gaussian,
+    scratch: ScratchArena,
+}
+
+impl DigitalShard {
+    /// Convolve rows `[g0, g0 + out.len()/item)` of the flattened
+    /// `(sample, batch)` grid, reading shared im2col planes and writing the
+    /// shard's disjoint output window.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &mut self,
+        kernels: &[Vec<TapTarget>],
+        patches: &[f32],
+        c: usize,
+        hw: usize,
+        batch: usize,
+        g0: usize,
+        dac: &Quantizer,
+        adc: &Quantizer,
+        out: &mut [f32],
+    ) {
+        let hw9 = hw * 9;
+        let item = c * hw;
+        let rows = out.len() / item;
+        for r in 0..rows {
+            let b = (g0 + r) % batch;
+            for (ch, kern) in kernels.iter().enumerate().take(c) {
+                let plane = &patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9];
+                // bulk-draw the whole weight plane up front: the PRNG cost
+                // stays (that is the measured quantity), the per-symbol
+                // call overhead goes
+                let z = grow(&mut self.scratch.draws, hw9);
+                self.gauss.fill_f64(&mut self.rng, z);
+                super::conv_plane_quantized(
+                    plane,
+                    hw,
+                    dac,
+                    adc,
+                    |p, tap| kern[tap].mu as f64 + kern[tap].sigma as f64 * z[p * 9 + tap],
+                    &mut out[r * item + ch * hw..r * item + (ch + 1) * hw],
+                );
+            }
+        }
+    }
+}
 
 /// PRNG + Box–Muller sampling substrate.
 pub struct DigitalBaselineBackend {
@@ -29,7 +93,9 @@ pub struct DigitalBaselineBackend {
     gauss: Gaussian,
     dac: Quantizer,
     adc: Quantizer,
-    patches: Vec<f32>,
+    pool: Option<Arc<ThreadPool>>,
+    shards: Vec<DigitalShard>,
+    arena: ScratchArena,
     /// Output pixels computed (one probabilistic convolution each).
     pub convolutions: u64,
     /// Gaussian weight draws consumed (the PRNG bottleneck being measured).
@@ -38,13 +104,38 @@ pub struct DigitalBaselineBackend {
 
 impl DigitalBaselineBackend {
     pub fn new(scale_dac: f32, scale_adc: f32, seed: u64) -> Self {
+        Self::with_pool(scale_dac, scale_adc, seed, None)
+    }
+
+    /// Backend whose `sample_conv` shards plans across `pool` (sequential
+    /// when `None` or single-worker).  Shard streams are forked from the
+    /// seed at construction and persist across calls, so a fixed
+    /// `(seed, n_threads)` replays bit-identically.
+    pub fn with_pool(
+        scale_dac: f32,
+        scale_adc: f32,
+        seed: u64,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
+        let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
+        // offset the fork root so shard streams never alias the probe rng
+        let mut root = Xoshiro256pp::new(seed ^ 0xD161_7A15_7EAD_5EED);
+        let shards = (0..n_shards)
+            .map(|_| DigitalShard {
+                rng: root.fork(),
+                gauss: Gaussian::new(),
+                scratch: ScratchArena::default(),
+            })
+            .collect();
         Self {
             kernels: Vec::new(),
             rng: Xoshiro256pp::new(seed),
             gauss: Gaussian::new(),
             dac: Quantizer::new(scale_dac),
             adc: Quantizer::new(scale_adc),
-            patches: Vec::new(),
+            pool,
+            shards,
+            arena: ScratchArena::default(),
             convolutions: 0,
             weight_draws: 0,
         }
@@ -77,30 +168,50 @@ impl ProbConvBackend for DigitalBaselineBackend {
     fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
         plan.check(x.len(), out.len(), self.kernels.len())?;
         let (c, h, w) = (plan.channels, plan.height, plan.width);
+        let hw = h * w;
+        let hw9 = hw * 9;
         let item = plan.item_size();
-        self.patches.resize(h * w * 9, 0.0);
-        // im2col once per (item, channel); only the weight draws repeat per
-        // sample — the measured digital cost is the sampling, not the
-        // patch extraction
+        // im2col once per (item, channel) into the shared read-only arena;
+        // only the weight draws repeat per sample — the measured digital
+        // cost is the sampling, not the patch extraction
+        let patches = grow(&mut self.arena.patches, plan.batch * c * hw9);
         for b in 0..plan.batch {
-            let xi = &x[b * item..(b + 1) * item];
             for ch in 0..c {
-                im2col_3x3(&xi[ch * h * w..(ch + 1) * h * w], h, w, &mut self.patches);
-                let kern = &self.kernels[ch];
-                for s in 0..plan.n_samples {
-                    let oi = (s * plan.batch + b) * item + ch * h * w;
-                    super::conv_plane_quantized(
-                        &self.patches,
-                        h * w,
-                        &self.dac,
-                        &self.adc,
-                        |tap| {
-                            kern[tap].mu as f64
-                                + kern[tap].sigma as f64 * self.gauss.sample(&mut self.rng)
-                        },
-                        &mut out[oi..oi + h * w],
-                    );
+                im2col_3x3(
+                    &x[b * item + ch * hw..b * item + (ch + 1) * hw],
+                    h,
+                    w,
+                    &mut patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9],
+                );
+            }
+        }
+        let patches: &[f32] = patches;
+        let grid = plan.n_samples * plan.batch;
+        let out = &mut out[..grid * item];
+        let kernels = &self.kernels;
+        let (dac, adc) = (&self.dac, &self.adc);
+        let batch = plan.batch;
+        match &self.pool {
+            Some(pool) if self.shards.len() > 1 => {
+                let ranges = super::shard_ranges(grid, self.shards.len());
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(self.shards.len());
+                let mut rest = out;
+                for (shard, range) in self.shards.iter_mut().zip(ranges) {
+                    if range.is_empty() {
+                        continue;
+                    }
+                    let (head, tail) = rest.split_at_mut(range.len() * item);
+                    rest = tail;
+                    let g0 = range.start;
+                    jobs.push(Box::new(move || {
+                        shard.run(kernels, patches, c, hw, batch, g0, dac, adc, head);
+                    }));
                 }
+                pool.scope_run(jobs);
+            }
+            _ => {
+                self.shards[0].run(kernels, patches, c, hw, batch, 0, dac, adc, out);
             }
         }
         let pixels = plan.convolutions();
@@ -111,8 +222,10 @@ impl ProbConvBackend for DigitalBaselineBackend {
 
     fn report(&self) -> String {
         format!(
-            "convolutions={} weight_draws={} (xoshiro256++ / Box-Muller)",
-            self.convolutions, self.weight_draws
+            "convolutions={} weight_draws={} shards={} (xoshiro256++ / Box-Muller)",
+            self.convolutions,
+            self.weight_draws,
+            self.shards.len()
         )
     }
 }
@@ -179,5 +292,26 @@ mod tests {
         be.sample_conv(&plan, &x, &mut out).unwrap();
         assert_eq!(be.convolutions, plan.convolutions());
         assert_eq!(be.weight_draws, plan.convolutions() * 9);
+    }
+
+    #[test]
+    fn repeated_calls_continue_the_stream() {
+        // two calls on one backend must differ (the shard streams advance),
+        // while two identically-seeded backends replay bit-identically
+        let plan = SamplePlan::new(2, 1, 1, 3, 3);
+        let x = vec![0.5f32; plan.sample_size()];
+        let mut a = DigitalBaselineBackend::new(4.0, 8.0, 9);
+        a.program(&[targets9(0.3, 0.3)], false).unwrap();
+        let mut first = vec![0.0f32; plan.total_size()];
+        a.sample_conv(&plan, &x, &mut first).unwrap();
+        let mut second = vec![0.0f32; plan.total_size()];
+        a.sample_conv(&plan, &x, &mut second).unwrap();
+        assert_ne!(first, second);
+
+        let mut b = DigitalBaselineBackend::new(4.0, 8.0, 9);
+        b.program(&[targets9(0.3, 0.3)], false).unwrap();
+        let mut replay = vec![0.0f32; plan.total_size()];
+        b.sample_conv(&plan, &x, &mut replay).unwrap();
+        assert_eq!(first, replay);
     }
 }

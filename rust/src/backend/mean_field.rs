@@ -11,6 +11,7 @@
 use anyhow::Result;
 
 use super::{BackendKind, ProbConvBackend, SamplePlan};
+use crate::exec::scratch::{grow, ScratchArena};
 use crate::photonics::converters::Quantizer;
 use crate::photonics::machine::im2col_3x3;
 use crate::photonics::TapTarget;
@@ -20,7 +21,7 @@ pub struct MeanFieldBackend {
     kernels: Vec<Vec<TapTarget>>,
     dac: Quantizer,
     adc: Quantizer,
-    patches: Vec<f32>,
+    arena: ScratchArena,
     pub convolutions: u64,
 }
 
@@ -30,7 +31,7 @@ impl MeanFieldBackend {
             kernels: Vec::new(),
             dac: Quantizer::new(scale_dac),
             adc: Quantizer::new(scale_adc),
-            patches: Vec::new(),
+            arena: ScratchArena::default(),
             convolutions: 0,
         }
     }
@@ -63,20 +64,20 @@ impl ProbConvBackend for MeanFieldBackend {
         plan.check(x.len(), out.len(), self.kernels.len())?;
         let (c, h, w) = (plan.channels, plan.height, plan.width);
         let item = plan.item_size();
-        self.patches.resize(h * w * 9, 0.0);
+        let patches = grow(&mut self.arena.patches, h * w * 9);
         // compute the first sample, then replicate: identical by definition
         for b in 0..plan.batch {
             let xi = &x[b * item..(b + 1) * item];
             for ch in 0..c {
-                im2col_3x3(&xi[ch * h * w..(ch + 1) * h * w], h, w, &mut self.patches);
+                im2col_3x3(&xi[ch * h * w..(ch + 1) * h * w], h, w, patches);
                 let kern = &self.kernels[ch];
                 let oi = b * item + ch * h * w;
                 super::conv_plane_quantized(
-                    &self.patches,
+                    patches,
                     h * w,
                     &self.dac,
                     &self.adc,
-                    |tap| kern[tap].mu as f64,
+                    |_, tap| kern[tap].mu as f64,
                     &mut out[oi..oi + h * w],
                 );
             }

@@ -24,11 +24,14 @@ pub mod digital;
 pub mod mean_field;
 pub mod photonic;
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::entropy::chaotic::ChaoticLightSource;
 use crate::entropy::gaussian::Gaussian;
 use crate::entropy::Xoshiro256pp;
+use crate::exec::ThreadPool;
 use crate::photonics::{MachineConfig, TapTarget};
 
 pub use digital::DigitalBaselineBackend;
@@ -121,17 +124,44 @@ impl SamplePlan {
         self.n_samples * self.sample_size()
     }
 
+    /// Overflow-checked [`Self::item_size`] — plans can arrive from
+    /// untrusted request fields, so size math must not wrap.
+    pub fn checked_item_size(&self) -> Option<usize> {
+        self.channels
+            .checked_mul(self.height)?
+            .checked_mul(self.width)
+    }
+
+    /// Overflow-checked [`Self::sample_size`].
+    pub fn checked_sample_size(&self) -> Option<usize> {
+        self.batch.checked_mul(self.checked_item_size()?)
+    }
+
+    /// Overflow-checked [`Self::total_size`].
+    pub fn checked_total_size(&self) -> Option<usize> {
+        self.n_samples.checked_mul(self.checked_sample_size()?)
+    }
+
     /// Total probe convolutions (output pixels) the plan executes.
     pub fn convolutions(&self) -> u64 {
         (self.total_size()) as u64
     }
 
     /// Validate buffer shapes against this plan and a backend's kernel bank.
+    /// All size math is overflow-checked: a hostile plan is rejected with a
+    /// clear error instead of wrapping into a tiny (or enormous) buffer.
     pub fn check(&self, x_len: usize, out_len: usize, bank_len: usize) -> Result<()> {
         if self.n_samples == 0 || self.batch == 0 {
             return Err(anyhow!("empty sample plan: {self:?}"));
         }
-        if x_len != self.sample_size() {
+        if self.channels == 0 || self.height == 0 || self.width == 0 {
+            return Err(anyhow!("degenerate sample plan (zero-sized item): {self:?}"));
+        }
+        let total = self
+            .checked_total_size()
+            .ok_or_else(|| anyhow!("sample plan size overflows usize: {self:?}"))?;
+        let sample = self.sample_size(); // safe: total checked above
+        if x_len != sample {
             return Err(anyhow!(
                 "plan input {} != batch {} x item {}",
                 x_len,
@@ -139,12 +169,8 @@ impl SamplePlan {
                 self.item_size()
             ));
         }
-        if out_len < self.total_size() {
-            return Err(anyhow!(
-                "plan output {} < required {}",
-                out_len,
-                self.total_size()
-            ));
+        if out_len < total {
+            return Err(anyhow!("plan output {} < required {}", out_len, total));
         }
         if bank_len < self.channels {
             return Err(anyhow!(
@@ -155,6 +181,26 @@ impl SamplePlan {
         }
         Ok(())
     }
+}
+
+/// Split `0..n` into at most `shards` contiguous near-equal ranges (the
+/// leading ranges absorb the remainder; trailing ranges may be empty).
+/// Deterministic: the same `(n, shards)` always yields the same partition —
+/// one half of the `(seed, n_threads)` reproducibility contract of sharded
+/// sampling.
+pub(crate) fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.max(1);
+    let base = n / shards;
+    let rem = n % shards;
+    let mut start = 0usize;
+    (0..shards)
+        .map(|i| {
+            let len = base + usize::from(i < rem);
+            let r = start..start + len;
+            start += len;
+            r
+        })
+        .collect()
 }
 
 /// The single API every sampling substrate implements: program a bank of
@@ -211,12 +257,13 @@ pub(crate) fn validate_kernels9(backend: &str, kernels: &[Vec<TapTarget>]) -> Re
 }
 
 /// Shared inner loop of the CPU substrates: convolve one im2col'd plane
-/// with per-tap weights from `weight(tap)` (called fresh for every output
-/// pixel), mirroring the photonic signal chain's digital interface — DAC
-/// quantization on the (post-ReLU) activations, ADC quantization on the
-/// readout.  Keeping digital and mean-field on this one code path is what
-/// the `digital_and_mean_conv_agree_in_expectation` test relies on.
-pub(crate) fn conv_plane_quantized<W: FnMut(usize) -> f64>(
+/// with per-tap weights from `weight(pixel, tap)`, mirroring the photonic
+/// signal chain's digital interface — DAC quantization on the (post-ReLU)
+/// activations, ADC quantization on the readout.  Keeping digital and
+/// mean-field on this one code path is what the
+/// `digital_and_mean_conv_agree_in_expectation` test relies on; the digital
+/// backend reads pre-drawn bulk normals indexed by `(pixel, tap)`.
+pub(crate) fn conv_plane_quantized<W: FnMut(usize, usize) -> f64>(
     patches: &[f32],
     n_pixels: usize,
     dac: &crate::photonics::converters::Quantizer,
@@ -228,7 +275,7 @@ pub(crate) fn conv_plane_quantized<W: FnMut(usize) -> f64>(
         let patch = &patches[p * 9..(p + 1) * 9];
         let mut acc = 0.0f64;
         for (k, &xv) in patch.iter().enumerate() {
-            acc += weight(k) * dac.quantize(xv.max(0.0)) as f64;
+            acc += weight(p, k) * dac.quantize(xv.max(0.0)) as f64;
         }
         *o = adc.quantize(acc as f32);
     }
@@ -236,15 +283,30 @@ pub(crate) fn conv_plane_quantized<W: FnMut(usize) -> f64>(
 
 /// Build a backend of `kind` from a machine configuration.  Digital backends
 /// reuse the config's DAC/ADC scales and seed so all substrates see the same
-/// quantized signal chain.
+/// quantized signal chain.  No worker pool: `sample_conv` runs sequentially
+/// on the caller (bit-compatible with the pre-pool engine).
 pub fn build(kind: BackendKind, cfg: &MachineConfig) -> Box<dyn ProbConvBackend> {
+    build_with_pool(kind, cfg, None)
+}
+
+/// Build a backend that shards every [`SamplePlan`] across `pool`'s workers
+/// (one deterministic entropy stream per worker; see the crate README's
+/// Performance section for the `(seed, n_threads)` contract).  `None` — or
+/// a single-worker pool — selects the sequential path.
+pub fn build_with_pool(
+    kind: BackendKind,
+    cfg: &MachineConfig,
+    pool: Option<Arc<ThreadPool>>,
+) -> Box<dyn ProbConvBackend> {
     match kind {
-        BackendKind::Photonic => Box::new(PhotonicSimBackend::new(cfg.clone())),
-        BackendKind::Digital => Box::new(DigitalBaselineBackend::new(
+        BackendKind::Photonic => Box::new(PhotonicSimBackend::with_pool(cfg.clone(), pool)),
+        BackendKind::Digital => Box::new(DigitalBaselineBackend::with_pool(
             cfg.scale_dac,
             cfg.scale_adc,
             cfg.seed,
+            pool,
         )),
+        // a deterministic single pass: nothing worth sharding
         BackendKind::MeanField => Box::new(MeanFieldBackend::new(cfg.scale_dac, cfg.scale_adc)),
     }
 }
@@ -328,12 +390,52 @@ mod tests {
         assert_eq!(plan.item_size(), 8 * 49);
         assert_eq!(plan.sample_size(), 8 * 8 * 49);
         assert_eq!(plan.total_size(), 10 * 8 * 8 * 49);
+        assert_eq!(plan.checked_total_size(), Some(plan.total_size()));
         assert!(plan.check(plan.sample_size(), plan.total_size(), 8).is_ok());
         assert!(plan.check(plan.sample_size() - 1, plan.total_size(), 8).is_err());
         assert!(plan.check(plan.sample_size(), plan.total_size() - 1, 8).is_err());
         assert!(plan.check(plan.sample_size(), plan.total_size(), 7).is_err());
         let empty = SamplePlan::new(0, 8, 8, 7, 7);
         assert!(empty.check(0, 0, 8).is_err());
+        // zero-sized items would divide-by-zero downstream shard math
+        for degenerate in [
+            SamplePlan::new(1, 1, 0, 5, 5),
+            SamplePlan::new(1, 1, 2, 0, 5),
+            SamplePlan::new(1, 1, 2, 5, 0),
+        ] {
+            assert!(degenerate.check(0, 0, 8).is_err(), "{degenerate:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_plans_rejected_without_overflow() {
+        // attacker-shaped dimensions whose products wrap usize must be
+        // rejected with an error, not a panic or a tiny wrapped allocation
+        let huge = SamplePlan::new(usize::MAX, 2, 3, 5, 7);
+        assert_eq!(huge.checked_total_size(), None);
+        let err = huge.check(2 * 3 * 5 * 7, 1024, 3).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+
+        let wide = SamplePlan::new(2, usize::MAX / 2, 3, 5, 7);
+        assert!(wide.checked_sample_size().is_none());
+        assert!(wide.check(0, 0, 3).is_err());
+    }
+
+    #[test]
+    fn shard_ranges_cover_grid_exactly() {
+        for (n, shards) in [(0, 4), (1, 4), (7, 3), (64, 4), (10, 16), (100, 1)] {
+            let ranges = shard_ranges(n, shards);
+            assert_eq!(ranges.len(), shards.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "contiguous at n={n} shards={shards}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "covers 0..{n} with {shards} shards");
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "near-equal split: {lens:?}");
+        }
     }
 
     /// Satellite acceptance: sampled weight moments of the photonic and the

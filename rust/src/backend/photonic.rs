@@ -6,24 +6,126 @@
 //! path.  Programming goes through the physics inversion plus, optionally,
 //! the feedback-calibration loop that corrects spectral-shaper actuator
 //! error (paper, Supplement).
+//!
+//! ## Threading and determinism
+//!
+//! With a worker pool attached, `sample_conv` shards the flattened
+//! `n_samples x batch` grid across the workers.  Each shard owns an
+//! independent [`ChaoticLightSource`] (its own 9 decorrelated spectral
+//! streams) and receiver, seeded deterministically from the machine seed —
+//! the software analogue of splitting the ASE spectrum across parallel
+//! readout channels.  Outputs are bitwise-deterministic for a fixed
+//! `(seed, n_threads)` and statistically equivalent across thread counts.
+//! Without a pool the machine's own streams are used, bit-identical to the
+//! historical per-sample loop.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::{BackendKind, ProbConvBackend, SamplePlan};
 use crate::calibration::{calibrate_kernel, CalibrationOptions};
+use crate::entropy::chaotic::ChaoticLightSource;
+use crate::entropy::xoshiro::splitmix64;
+use crate::exec::scratch::{grow, ScratchArena};
+use crate::exec::ThreadPool;
+use crate::photonics::detector::Detector;
+use crate::photonics::eom::Eom;
+use crate::photonics::machine::{conv_patches_core, im2col_3x3};
 use crate::photonics::{MachineConfig, PhotonicMachine, TapTarget};
+
+/// One worker's private optical front-end: an independent chaotic source,
+/// receiver, and conv scratch.  The kernel bank stays shared (read-only).
+struct PhotonicShard {
+    eom: Eom,
+    src: ChaoticLightSource,
+    det: Detector,
+    scratch: ScratchArena,
+}
+
+impl PhotonicShard {
+    /// Convolve rows `[g0, g0 + out.len()/item)` of the flattened
+    /// `(sample, batch)` grid against the machine's programmed bank.
+    fn run(
+        &mut self,
+        machine: &PhotonicMachine,
+        patches: &[f32],
+        plan: SamplePlan,
+        g0: usize,
+        out: &mut [f32],
+    ) {
+        let c = plan.channels;
+        let hw = plan.height * plan.width;
+        let hw9 = hw * 9;
+        let item = c * hw;
+        let rows = out.len() / item;
+        let scale_dac = machine.cfg.scale_dac;
+        for r in 0..rows {
+            let b = (g0 + r) % plan.batch;
+            for ch in 0..c {
+                conv_patches_core(
+                    machine.kernel(ch).flat(),
+                    &patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9],
+                    9,
+                    scale_dac,
+                    &self.eom,
+                    &mut self.src,
+                    &mut self.det,
+                    &mut self.scratch,
+                    &mut out[r * item + ch * hw..r * item + (ch + 1) * hw],
+                );
+            }
+        }
+    }
+}
+
+/// Deterministic per-shard optical front-ends for a machine configuration.
+fn build_shards(cfg: &MachineConfig, n: usize) -> Vec<PhotonicShard> {
+    let mut st = cfg.seed ^ 0x5EED_0F_C0A7_1C57;
+    (0..n)
+        .map(|_| {
+            let src_seed = splitmix64(&mut st);
+            let det_seed = splitmix64(&mut st);
+            PhotonicShard {
+                eom: Eom::new(cfg.scale_dac, cfg.extinction_db),
+                src: ChaoticLightSource::new(cfg.source.clone(), src_seed),
+                det: Detector::new(cfg.scale_adc, cfg.rx_noise, det_seed),
+                scratch: ScratchArena::default(),
+            }
+        })
+        .collect()
+}
 
 /// The chaotic-light substrate (simulator).
 pub struct PhotonicSimBackend {
     machine: PhotonicMachine,
     calibration: CalibrationOptions,
+    pool: Option<Arc<ThreadPool>>,
+    shards: Vec<PhotonicShard>,
+    arena: ScratchArena,
 }
 
 impl PhotonicSimBackend {
     pub fn new(cfg: MachineConfig) -> Self {
+        Self::with_pool(cfg, None)
+    }
+
+    /// Backend whose `sample_conv` shards plans across `pool` (sequential
+    /// and bit-identical to the historical loop when `None` or
+    /// single-worker).
+    pub fn with_pool(cfg: MachineConfig, pool: Option<Arc<ThreadPool>>) -> Self {
+        let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
+        let shards = if n_shards > 1 {
+            build_shards(&cfg, n_shards)
+        } else {
+            Vec::new()
+        };
         Self {
             machine: PhotonicMachine::new(cfg),
             calibration: CalibrationOptions::default(),
+            pool,
+            shards,
+            arena: ScratchArena::default(),
         }
     }
 
@@ -73,26 +175,72 @@ impl ProbConvBackend for PhotonicSimBackend {
     fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
         plan.check(x.len(), out.len(), self.machine.bank_len())?;
         let item = plan.item_size();
-        // Sample-major, batch-minor: the exact machine-RNG consumption order
-        // of the old per-sample engine loop, so outputs are bit-identical.
-        for s in 0..plan.n_samples {
-            for b in 0..plan.batch {
-                let y = self.machine.depthwise_conv(
-                    0,
-                    &x[b * item..(b + 1) * item],
-                    plan.channels,
-                    plan.height,
-                    plan.width,
+        if self.shards.len() <= 1 || self.pool.is_none() {
+            // Sample-major, batch-minor on the machine's own streams: the
+            // exact RNG consumption order of the old per-sample engine
+            // loop, so outputs are bit-identical.
+            for s in 0..plan.n_samples {
+                for b in 0..plan.batch {
+                    self.machine.depthwise_conv_into(
+                        0,
+                        &x[b * item..(b + 1) * item],
+                        plan.channels,
+                        plan.height,
+                        plan.width,
+                        &mut out[(s * plan.batch + b) * item..(s * plan.batch + b + 1) * item],
+                    );
+                }
+            }
+            return Ok(());
+        }
+        let (c, h, w) = (plan.channels, plan.height, plan.width);
+        let hw = h * w;
+        let hw9 = hw * 9;
+        // shared read-only im2col planes, one per (item, channel)
+        let patches = grow(&mut self.arena.patches, plan.batch * c * hw9);
+        for b in 0..plan.batch {
+            for ch in 0..c {
+                im2col_3x3(
+                    &x[b * item + ch * hw..b * item + (ch + 1) * hw],
+                    h,
+                    w,
+                    &mut patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9],
                 );
-                out[(s * plan.batch + b) * item..(s * plan.batch + b + 1) * item]
-                    .copy_from_slice(&y);
             }
         }
+        let patches: &[f32] = patches;
+        let grid = plan.n_samples * plan.batch;
+        let machine = &self.machine;
+        let plan_v = *plan;
+        let ranges = super::shard_ranges(grid, self.shards.len());
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.shards.len());
+        let mut rest = &mut out[..grid * item];
+        for (shard, range) in self.shards.iter_mut().zip(ranges) {
+            if range.is_empty() {
+                continue;
+            }
+            let (head, tail) = rest.split_at_mut(range.len() * item);
+            rest = tail;
+            let g0 = range.start;
+            jobs.push(Box::new(move || {
+                shard.run(machine, patches, plan_v, g0, head);
+            }));
+        }
+        self.pool.as_ref().unwrap().scope_run(jobs);
+        // account the sharded work on the machine's optical clock
+        let convs = (grid * item) as u64;
+        let nt = self.machine.num_taps() as u64;
+        self.machine.stats.convolutions += convs;
+        self.machine.stats.clock.advance_symbols(convs * nt);
         Ok(())
     }
 
     fn report(&self) -> String {
-        self.machine.throughput_report()
+        format!(
+            "{} shards={}",
+            self.machine.throughput_report(),
+            self.shards.len().max(1)
+        )
     }
 }
 

@@ -4,9 +4,15 @@
 //! module: warmup, fixed-duration measurement, outlier-trimmed statistics,
 //! and aligned table output so the paper-table benches print rows directly
 //! comparable to the paper's evaluation section.
+//!
+//! Passing `--json <path>` to a bench binary that wires up a [`JsonSink`]
+//! additionally writes the measured rows as machine-readable JSON, making
+//! the perf trajectory diffable across PRs (see `BENCH_backends.json`).
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::mathstat::{mean, percentile, std};
 
 /// Robust summary of one benchmark.
@@ -117,6 +123,93 @@ impl Bench {
     }
 }
 
+/// One emitted JSON row: a bench name plus its latency and throughput.
+#[derive(Debug, Clone)]
+pub struct JsonRow {
+    pub name: String,
+    pub ns_per_iter: f64,
+    pub ops_per_sec: f64,
+}
+
+/// Machine-readable bench emission, enabled by `--json <path>` on a bench
+/// binary.  Collect rows with [`JsonSink::push`] / [`JsonSink::push_stats`]
+/// and call [`JsonSink::write`] once at the end.
+#[derive(Debug)]
+pub struct JsonSink {
+    path: PathBuf,
+    bench: String,
+    rows: Vec<JsonRow>,
+}
+
+impl JsonSink {
+    pub fn new(path: impl Into<PathBuf>, bench: &str) -> Self {
+        Self {
+            path: path.into(),
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Build a sink from a bench binary's raw argument list if it contains
+    /// `--json <path>` or `--json=<path>`.
+    pub fn from_args(args: &[String], bench: &str) -> Option<Self> {
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            if let Some(p) = a.strip_prefix("--json=") {
+                return Some(Self::new(p, bench));
+            }
+            if a == "--json" {
+                return it.next().map(|p| Self::new(p, bench));
+            }
+        }
+        None
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    pub fn push(&mut self, name: &str, ns_per_iter: f64, ops_per_sec: f64) {
+        self.rows.push(JsonRow {
+            name: name.to_string(),
+            ns_per_iter,
+            ops_per_sec,
+        });
+    }
+
+    pub fn push_stats(&mut self, stats: &BenchStats, ops_per_iter: f64) {
+        self.push(&stats.name, stats.mean_ns, stats.throughput(ops_per_iter));
+    }
+
+    /// Serialize all rows to the sink path.
+    pub fn write(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, self.render())
+    }
+
+    /// The JSON document this sink would write.
+    pub fn render(&self) -> String {
+        let mut doc = Json::obj();
+        doc.set("version", Json::Num(1.0));
+        doc.set("bench", Json::Str(self.bench.clone()));
+        doc.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        let mut o = Json::obj();
+                        o.set("name", Json::Str(r.name.clone()));
+                        o.set("ns_per_iter", Json::Num(r.ns_per_iter));
+                        o.set("ops_per_s", Json::Num(r.ops_per_sec));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        doc.to_string_pretty()
+    }
+}
+
 /// Prevent the optimizer from discarding a value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -169,5 +262,32 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("us"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2e9).contains('s'));
+    }
+
+    #[test]
+    fn json_sink_parses_args_and_renders_valid_json() {
+        let args: Vec<String> = ["backends", "--json", "/tmp/b.json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut sink = JsonSink::from_args(&args, "paper_tables").unwrap();
+        assert_eq!(sink.path(), std::path::Path::new("/tmp/b.json"));
+        sink.push("backends/sample_conv/digital/t4", 1234.5, 1e6);
+
+        let doc = crate::util::json::parse(&sink.render()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("paper_tables"));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(
+            rows[0].get("name").unwrap().as_str(),
+            Some("backends/sample_conv/digital/t4")
+        );
+        assert!(rows[0].get("ops_per_s").unwrap().as_f64().unwrap() > 0.0);
+
+        // equals form and absence
+        let eq: Vec<String> = vec!["--json=x.json".into()];
+        assert!(JsonSink::from_args(&eq, "b").is_some());
+        let none: Vec<String> = vec!["backends".into()];
+        assert!(JsonSink::from_args(&none, "b").is_none());
     }
 }

@@ -15,6 +15,9 @@
 //! backend = "photonic"
 //! mi_threshold = 0.0185
 //! calibrate = true
+//! # sampling worker threads per engine: 1 = sequential, 0 = one per core;
+//! # results are deterministic for a fixed (seed, threads)
+//! threads = 4
 //!
 //! [batcher]
 //! max_batch = 8
@@ -131,6 +134,7 @@ mode = photonic
 backend = digital
 mi_threshold = 0.0185
 calibrate = true
+threads = 8
 "#;
 
     #[test]
@@ -141,6 +145,7 @@ calibrate = true
         assert_eq!(c.get_f64("engine", "mi_threshold", 0.0).unwrap(), 0.0185);
         assert!(c.get_bool("engine", "calibrate", false).unwrap());
         assert_eq!(c.get_or("engine", "mode", "surrogate"), "photonic");
+        assert_eq!(c.get_usize("engine", "threads", 1).unwrap(), 8);
     }
 
     #[test]
@@ -182,6 +187,9 @@ calibrate = true
     #[test]
     fn malformed_line_is_error() {
         assert!(Config::parse("[s]\nnot a kv line").is_err());
-        assert!(Config::parse("[e]\nbad_bool = maybe").unwrap().get_bool("e", "bad_bool", true).is_err());
+        assert!(Config::parse("[e]\nbad_bool = maybe")
+            .unwrap()
+            .get_bool("e", "bad_bool", true)
+            .is_err());
     }
 }

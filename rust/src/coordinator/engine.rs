@@ -2,12 +2,15 @@
 //! [`ProbConvBackend`] for the probabilistic block, uncertainty aggregation
 //! on top.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::{self, BackendKind, EpsSource, ProbConvBackend, SamplePlan};
 use crate::bnn::{Decision, Predictive, UncertaintyPolicy};
+use crate::exec::scratch::{grow, ScratchArena};
+use crate::exec::ThreadPool;
 use crate::log_info;
 use crate::photonics::MachineConfig;
 use crate::runtime::{Arg, ModelArtifacts, ParamStore};
@@ -61,6 +64,13 @@ pub struct EngineConfig {
     pub machine: MachineConfig,
     /// Channel bandwidth used when drawing surrogate `eps` noise (GHz).
     pub noise_bw_ghz: f64,
+    /// Worker threads for the sampling hot path.  Each `SamplePlan` is
+    /// sharded across this many pool workers, each with its own
+    /// deterministic entropy stream: results are reproducible for a fixed
+    /// `(seed, threads)` and statistically equivalent across thread counts.
+    /// `1` = sequential in-thread sampling (bit-compatible with the
+    /// pre-pool engine); `0` = one worker per available core.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -73,7 +83,20 @@ impl Default for EngineConfig {
             calibrate: true,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            threads: 1,
             seed: 42,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Resolve `threads` to a concrete worker count (`0` = auto).
+    pub fn resolved_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
         }
     }
 }
@@ -94,6 +117,9 @@ pub struct Engine {
     backend: Box<dyn ProbConvBackend>,
     noise: EpsSource,
     cfg: EngineConfig,
+    /// Reusable request buffers (padded input, eps, sample plans, pass
+    /// staging): steady-state classification allocates only its results.
+    scratch: ScratchArena,
     pub metrics: super::metrics::EngineMetrics,
 }
 
@@ -109,17 +135,20 @@ impl Engine {
         mcfg.scale_dac = arts.meta.scale_dac;
         mcfg.scale_adc = arts.meta.scale_adc;
         mcfg.seed = cfg.seed;
-        let mut backend = backend::build(cfg.mode.backend_kind(), &mcfg);
+        let threads = cfg.resolved_threads();
+        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        let mut backend = backend::build_with_pool(cfg.mode.backend_kind(), &mcfg, pool);
         let kernels = params.prob_kernels()?;
         let t0 = Instant::now();
         backend.program(&kernels, cfg.calibrate)?;
         log_info!(
-            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={})",
+            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={}, threads={})",
             arts.meta.dataset,
             kernels.len(),
             backend.name(),
             t0.elapsed().as_secs_f64(),
-            cfg.calibrate
+            cfg.calibrate,
+            threads
         );
         Ok(Self {
             noise: EpsSource::chaotic(cfg.seed.wrapping_add(77), cfg.noise_bw_ghz),
@@ -127,6 +156,7 @@ impl Engine {
             arts,
             params,
             cfg,
+            scratch: ScratchArena::default(),
             metrics: Default::default(),
         })
     }
@@ -205,8 +235,11 @@ impl Engine {
         let meta = &self.arts.meta;
         let b = self.arts.pick_batch("fwd_full", n);
         let f = self.arts.get(&format!("fwd_full_b{b}"))?;
-        let mut x = images.to_vec();
-        x.resize(b * meta.image_size(), 0.0);
+        // scratch-arena input staging: copy the batch, zero the padding
+        // (previous requests leave residue past `images.len()`)
+        let x = grow(&mut self.scratch.input, b * meta.image_size());
+        x[..images.len()].copy_from_slice(images);
+        x[images.len()..].fill(0.0);
         let x_shape = [
             b as i64,
             meta.in_channels as i64,
@@ -221,14 +254,14 @@ impl Engine {
             meta.num_taps as i64,
         ];
         let np = meta.num_params as i64;
-        let mut eps = vec![0.0f32; b * meta.eps_size()];
+        let eps = grow(&mut self.scratch.noise, b * meta.eps_size());
         let mut passes = Vec::with_capacity(self.cfg.n_samples);
         for _ in 0..self.cfg.n_samples {
-            self.noise.fill(&mut eps);
+            self.noise.fill(eps);
             let out = f.call(&[
                 Arg::F32(&self.params.theta, &[np]),
-                Arg::F32(&x, &x_shape),
-                Arg::F32(&eps, &eps_shape),
+                Arg::F32(x, &x_shape),
+                Arg::F32(eps, &eps_shape),
             ])?;
             passes.push(out.into_iter().next().unwrap());
         }
@@ -242,8 +275,10 @@ impl Engine {
         let b = self.arts.pick_batch("fwd_pre", n);
         let pre = self.arts.get(&format!("fwd_pre_b{b}"))?;
         let post = self.arts.get(&format!("fwd_post_b{b}"))?;
-        let mut x = images.to_vec();
-        x.resize(b * meta.image_size(), 0.0);
+        // scratch-arena input staging: copy the batch, zero the padding
+        let x = grow(&mut self.scratch.input, b * meta.image_size());
+        x[..images.len()].copy_from_slice(images);
+        x[images.len()..].fill(0.0);
         let x_shape = [
             b as i64,
             meta.in_channels as i64,
@@ -252,7 +287,7 @@ impl Engine {
         ];
         let np = meta.num_params as i64;
         let x3q = pre
-            .call(&[Arg::F32(&self.params.theta, &[np]), Arg::F32(&x, &x_shape)])?
+            .call(&[Arg::F32(&self.params.theta, &[np]), Arg::F32(x, &x_shape)])?
             .into_iter()
             .next()
             .unwrap();
@@ -266,17 +301,19 @@ impl Engine {
         let passes_n = self.samples_per_request();
         let plan = SamplePlan::new(passes_n, n, meta.prob_ch, meta.prob_hw, meta.prob_hw);
         // the backend is the only source of randomness on this path; all
-        // N x B stochastic convolutions happen in this one call
-        let mut d_all = vec![0.0f32; plan.total_size()];
-        self.backend.sample_conv(&plan, &x3q[..n * act], &mut d_all)?;
+        // N x B stochastic convolutions happen in this one call, sharded
+        // across the worker pool and written into reusable arena lanes
+        let d_all = grow(&mut self.scratch.samples, plan.total_size());
+        self.backend.sample_conv(&plan, &x3q[..n * act], d_all)?;
         let mut passes = Vec::with_capacity(passes_n);
-        let mut d3 = vec![0.0f32; b * act];
+        let d3 = grow(&mut self.scratch.pass, b * act);
+        d3[n * act..].fill(0.0); // zero the batch padding once per request
         for s in 0..passes_n {
             d3[..n * act].copy_from_slice(&d_all[s * n * act..(s + 1) * n * act]);
             let out = post.call(&[
                 Arg::F32(&self.params.theta, &[np]),
                 Arg::F32(&x3q, &act_shape),
-                Arg::F32(&d3, &act_shape),
+                Arg::F32(d3, &act_shape),
             ])?;
             passes.push(out.into_iter().next().unwrap());
         }

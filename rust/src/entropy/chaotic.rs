@@ -106,6 +106,37 @@ impl ChaoticLightSource {
         sample_intensity(&mut c.rng, &mut c.gauss, power, dof)
     }
 
+    /// Bulk intensity draws from channel `ch` — the fill-style variant of
+    /// [`Self::intensity_dof`] for the conv inner loop: one Gamma draw per
+    /// slot from the channel's own decorrelated stream, identical values in
+    /// identical order to the scalar calls.
+    pub fn fill_intensity_dof(&mut self, ch: usize, power: f64, dof: f64, out: &mut [f64]) {
+        let c = &mut self.chans[ch];
+        for slot in out {
+            *slot = sample_intensity(&mut c.rng, &mut c.gauss, power, dof);
+        }
+    }
+
+    /// Bulk *differential-pair* draws from channel `ch`: per slot, one draw
+    /// at `p_plus` then one at `p_minus` — the exact stream consumption
+    /// order of the scalar plus-then-minus rail sampling in the conv loop,
+    /// so the bulk refactor stays bit-identical for two-rail taps.
+    pub fn fill_intensity_pair_dof(
+        &mut self,
+        ch: usize,
+        p_plus: f64,
+        p_minus: f64,
+        dof: f64,
+        plus: &mut [f64],
+        minus: &mut [f64],
+    ) {
+        let c = &mut self.chans[ch];
+        for (pl, mi) in plus.iter_mut().zip(minus.iter_mut()) {
+            *pl = sample_intensity(&mut c.rng, &mut c.gauss, p_plus, dof);
+            *mi = sample_intensity(&mut c.rng, &mut c.gauss, p_minus, dof);
+        }
+    }
+
     /// Normalized intensity: `(I - P) / (P/sqrt(M))` — zero mean, unit std.
     /// The physical analogue of the surrogate's `eps` operand.
     #[inline]
@@ -118,14 +149,23 @@ impl ChaoticLightSource {
     /// Fill an `eps` buffer with normalized chaotic noise, cycling channels.
     /// Used by the serving engine for the surrogate path and by the SVI
     /// trainer for reparameterization noise.
+    ///
+    /// Channel-outer with strided writes: the old per-element `i % nch`
+    /// channel select is hoisted out of the inner loop.  Because every
+    /// channel owns an independent stream, the emitted values are identical
+    /// to the historical interleaved order.
     pub fn fill_eps(&mut self, bw_ghz: f64, out: &mut [f32]) {
         let nch = self.chans.len();
         let dof = self.cfg.dof(bw_ghz);
         let scale = dof.sqrt();
-        for (i, slot) in out.iter_mut().enumerate() {
-            let ch = i % nch;
-            let v = (self.intensity_dof(ch, 1.0, dof) - 1.0) * scale;
-            *slot = v as f32;
+        for (ch, c) in self.chans.iter_mut().enumerate() {
+            if ch >= out.len() {
+                break;
+            }
+            for slot in out[ch..].iter_mut().step_by(nch) {
+                let i = sample_intensity(&mut c.rng, &mut c.gauss, 1.0, dof);
+                *slot = ((i - 1.0) * scale) as f32;
+            }
         }
     }
 
@@ -214,6 +254,49 @@ mod tests {
         let ones = bits.iter().map(|&b| b as usize).sum::<usize>();
         let frac = ones as f64 / bits.len() as f64;
         assert!((frac - 0.5).abs() < 0.02, "ones {frac}");
+    }
+
+    #[test]
+    fn fill_eps_matches_interleaved_scalar_order() {
+        // the hoisted channel-outer fill must emit exactly what the old
+        // `i % nch` interleaved scalar loop emitted
+        let mut bulk_src = ChaoticLightSource::with_defaults(11);
+        let mut buf = vec![0.0f32; 1003]; // non-multiple of nch on purpose
+        bulk_src.fill_eps(150.0, &mut buf);
+
+        let mut scalar_src = ChaoticLightSource::with_defaults(11);
+        let nch = scalar_src.cfg.channels;
+        for (i, &v) in buf.iter().enumerate() {
+            let want = scalar_src.normalized(i % nch, 150.0) as f32;
+            assert_eq!(v, want, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn bulk_intensity_matches_scalar_stream() {
+        let mut a = ChaoticLightSource::with_defaults(13);
+        let mut bulk = vec![0.0f64; 500];
+        a.fill_intensity_dof(3, 2.0, 5.0, &mut bulk);
+
+        let mut b = ChaoticLightSource::with_defaults(13);
+        for (i, &v) in bulk.iter().enumerate() {
+            assert_eq!(v, b.intensity_dof(3, 2.0, 5.0), "draw {i}");
+        }
+    }
+
+    #[test]
+    fn paired_bulk_matches_interleaved_scalar_stream() {
+        let (pp, pm, dof) = (1.4, 0.6, 4.0);
+        let mut a = ChaoticLightSource::with_defaults(19);
+        let mut plus = vec![0.0f64; 300];
+        let mut minus = vec![0.0f64; 300];
+        a.fill_intensity_pair_dof(2, pp, pm, dof, &mut plus, &mut minus);
+
+        let mut b = ChaoticLightSource::with_defaults(19);
+        for i in 0..300 {
+            assert_eq!(plus[i], b.intensity_dof(2, pp, dof), "plus {i}");
+            assert_eq!(minus[i], b.intensity_dof(2, pm, dof), "minus {i}");
+        }
     }
 
     #[test]

@@ -347,7 +347,11 @@ mod tests {
         // is the n = 10 example extended; use the documented 100-bit example).
         let eps = "11001001000011111101101010100010001000010110100011\
                    00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps.chars().filter(|c| !c.is_whitespace()).map(|c| c as u8 - b'0').collect();
+        let bits: Vec<u8> = eps
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .map(|c| c as u8 - b'0')
+            .collect();
         let r = frequency(&bits);
         assert!((r.p_value - 0.109599).abs() < 1e-4, "p {}", r.p_value);
     }
@@ -357,7 +361,11 @@ mod tests {
         // §2.3.8 example: 100-bit pi expansion, P-value = 0.500798
         let eps = "11001001000011111101101010100010001000010110100011\
                    00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps.chars().filter(|c| !c.is_whitespace()).map(|c| c as u8 - b'0').collect();
+        let bits: Vec<u8> = eps
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .map(|c| c as u8 - b'0')
+            .collect();
         let r = runs(&bits);
         assert!((r.p_value - 0.500798).abs() < 1e-4, "p {}", r.p_value);
     }
@@ -367,7 +375,11 @@ mod tests {
         // §2.13.8 example: same 100-bit stream, forward P-value = 0.219194
         let eps = "11001001000011111101101010100010001000010110100011\
                    00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps.chars().filter(|c| !c.is_whitespace()).map(|c| c as u8 - b'0').collect();
+        let bits: Vec<u8> = eps
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .map(|c| c as u8 - b'0')
+            .collect();
         let r = cusum(&bits, false);
         assert!((r.p_value - 0.219194).abs() < 1e-3, "p {}", r.p_value);
     }

@@ -6,7 +6,9 @@
 pub mod cancel;
 pub mod channel;
 pub mod pool;
+pub mod scratch;
 
 pub use cancel::CancelToken;
 pub use channel::{channel, Receiver, Sender};
-pub use pool::ThreadPool;
+pub use pool::{PoolShutDown, ThreadPool};
+pub use scratch::ScratchArena;

@@ -1,4 +1,4 @@
-//! Fixed-size worker thread pool.
+//! Fixed-size worker thread pool with scoped fork-join.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -7,7 +7,32 @@ use std::thread::JoinHandle;
 
 use super::channel::{channel, Sender};
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A boxed unit of work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Error: the pool's queue is closed (the pool is draining / shut down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolShutDown;
+
+impl std::fmt::Display for PoolShutDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("thread pool is shut down")
+    }
+}
+
+impl std::error::Error for PoolShutDown {}
+
+/// Signals a completion channel when dropped — even if the job panics, the
+/// scoped fork-join barrier still advances (workers catch the panic).
+struct DoneGuard(Option<Sender<()>>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        if let Some(tx) = self.0.take() {
+            let _ = tx.send(());
+        }
+    }
+}
 
 /// A fixed pool of worker threads executing boxed jobs.  Panicking jobs are
 /// caught and counted; the pool survives them.
@@ -44,15 +69,68 @@ impl ThreadPool {
         }
     }
 
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .send(Box::new(f))
-            .unwrap_or_else(|_| panic!("pool is shut down"));
+    /// Submit a boxed job; a shut-down pool hands the job back to the
+    /// caller, which can run it inline or drop it.
+    pub fn try_execute(&self, job: Job) -> Result<(), Job> {
+        self.tx.send(job).map_err(|e| e.0)
+    }
+
+    /// Submit a job.  A draining pool returns [`PoolShutDown`] instead of
+    /// panicking, so a closing server cannot take down the coordinator; the
+    /// rejected job is dropped.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolShutDown> {
+        self.try_execute(Box::new(f)).map_err(|_| PoolShutDown)
+    }
+
+    /// Scoped fork-join: run every job on the pool and block until all have
+    /// finished.  Jobs may borrow from the caller's stack — the barrier
+    /// guarantees every borrow ends before this frame returns.  If the pool
+    /// is shutting down, rejected jobs run inline on the caller so no work
+    /// is lost.  A panicking job is caught — on a worker or inline — and
+    /// counted (see [`Self::panic_count`]); its output buffers are left
+    /// as-is.
+    ///
+    /// Do not call from a pool worker thread: jobs queued behind the caller
+    /// would deadlock the barrier.
+    pub fn scope_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (done_tx, done_rx) = channel::<()>(n);
+        for job in jobs {
+            // SAFETY: the barrier below waits for every job's DoneGuard
+            // before returning, so borrows with lifetime 'env cannot outlive
+            // this frame; the guard fires even on unwind, and nothing
+            // between a submission and the barrier can itself unwind —
+            // inline fallbacks run under catch_unwind exactly like jobs on
+            // a worker, so the barrier is always reached while earlier jobs
+            // may still be running.  The transmute only erases the
+            // lifetime — fat-pointer layout is unchanged.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let done = DoneGuard(Some(done_tx.clone()));
+            let wrapped: Job = Box::new(move || {
+                let _done = done;
+                job();
+            });
+            if let Err(rejected) = self.try_execute(wrapped) {
+                // draining pool: run on the caller, still signaling the
+                // guard; contain panics so they cannot unwind past the
+                // barrier while workers hold 'env borrows
+                if std::panic::catch_unwind(AssertUnwindSafe(rejected)).is_err() {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        for _ in 0..n {
+            done_rx.recv();
+        }
     }
 
     /// Run a closure over each item of a slice in parallel, blocking until
-    /// all complete (scoped fork-join over the pool).
+    /// all complete (scoped fork-join over the pool).  Items rejected by a
+    /// draining pool run inline on the caller, with panics contained the
+    /// same way the workers contain them.
     pub fn scoped_for_each<T, F>(&self, items: Vec<T>, f: F)
     where
         T: Send + 'static,
@@ -63,11 +141,16 @@ impl ThreadPool {
         let n = items.len();
         for item in items {
             let f = f.clone();
-            let done = done_tx.clone();
-            self.execute(move || {
+            let done = DoneGuard(Some(done_tx.clone()));
+            let job: Job = Box::new(move || {
+                let _done = done;
                 f(item);
-                let _ = done.send(());
             });
+            if let Err(rejected) = self.try_execute(job) {
+                if std::panic::catch_unwind(AssertUnwindSafe(rejected)).is_err() {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         for _ in 0..n {
             done_rx.recv();
@@ -108,7 +191,8 @@ mod tests {
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
                 let _ = tx.send(());
-            });
+            })
+            .unwrap();
         }
         for _ in 0..100 {
             rx.recv();
@@ -119,13 +203,23 @@ mod tests {
     #[test]
     fn survives_panicking_jobs() {
         let pool = ThreadPool::new(1); // single worker: panic job completes first
-        pool.execute(|| panic!("boom"));
+        pool.execute(|| panic!("boom")).unwrap();
         let (tx, rx) = channel::<u8>(1);
         pool.execute(move || {
             let _ = tx.send(42);
-        });
+        })
+        .unwrap();
         assert_eq!(rx.recv(), Some(42));
         assert!(pool.panic_count() >= 1);
+    }
+
+    #[test]
+    fn execute_on_shut_down_pool_errors_instead_of_panicking() {
+        let pool = ThreadPool::new(1);
+        pool.tx.close(); // simulate a draining server
+        assert_eq!(pool.execute(|| {}), Err(PoolShutDown));
+        let job: Job = Box::new(|| {});
+        assert!(pool.try_execute(job).is_err());
     }
 
     #[test]
@@ -140,6 +234,64 @@ mod tests {
     }
 
     #[test]
+    fn scoped_for_each_runs_inline_when_shut_down() {
+        let pool = ThreadPool::new(2);
+        pool.tx.close();
+        let sum = Arc::new(AtomicUsize::new(0));
+        let s2 = sum.clone();
+        pool.scoped_for_each((1..=10usize).collect(), move |x| {
+            s2.fetch_add(x, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 55, "no work lost on drain");
+    }
+
+    #[test]
+    fn scope_run_borrows_caller_buffers() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0u64; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest: &mut [u64] = &mut buf;
+            let mut base = 0u64;
+            while !rest.is_empty() {
+                let take = rest.len().min(16);
+                let (head, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let start = base;
+                jobs.push(Box::new(move || {
+                    for (i, slot) in head.iter_mut().enumerate() {
+                        *slot = start + i as u64;
+                    }
+                }));
+                base += take as u64;
+            }
+            pool.scope_run(jobs);
+        }
+        let want: Vec<u64> = (0..64).collect();
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn scope_run_survives_a_panicking_shard() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = done.clone();
+        let d3 = done.clone();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(move || {
+                d2.fetch_add(1, Ordering::SeqCst);
+            }),
+            Box::new(|| panic!("shard boom")),
+            Box::new(move || {
+                d3.fetch_add(1, Ordering::SeqCst);
+            }),
+        ];
+        pool.scope_run(jobs); // must not hang on the panicked job
+        assert_eq!(done.load(Ordering::SeqCst), 2);
+        assert!(pool.panic_count() >= 1);
+    }
+
+    #[test]
     fn drop_joins_workers() {
         let pool = ThreadPool::new(2);
         let c = Arc::new(AtomicUsize::new(0));
@@ -148,7 +300,8 @@ mod tests {
             pool.execute(move || {
                 std::thread::sleep(std::time::Duration::from_millis(1));
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // must block until queued jobs are done
         assert_eq!(c.load(Ordering::SeqCst), 10);

@@ -1,0 +1,108 @@
+//! Grow-only scratch arenas for the sampling hot path.
+//!
+//! Every steady-state request used to allocate: the engine built fresh
+//! `eps`/`d_all`/`d3` buffers per call, the backends re-allocated im2col
+//! patch planes, and the photonic conv loop rebuilt a per-kernel program
+//! vector.  At serving rates those allocations dominate the digital-backend
+//! latency the paper's photonic-vs-digital comparison is supposed to
+//! isolate.  [`ScratchArena`] replaces them: one arena per engine / backend
+//! / worker shard, with named grow-only lanes that reach a high-water mark
+//! after the first request and never touch the allocator again.
+//!
+//! Lanes are plain `pub` fields so callers can borrow several of them
+//! simultaneously (the borrow checker splits disjoint field borrows); the
+//! [`grow`] helper returns an exactly-sized slice, growing the lane only
+//! when a larger request arrives.
+
+/// Grow `buf` to at least `len` elements and return the `[..len]` slice.
+///
+/// Never shrinks: after the first request at a given size, subsequent calls
+/// are allocation-free.  The slice is returned as-is (previous contents up
+/// to the high-water mark survive), so callers that need zeroed memory must
+/// `fill` it — see the stale-data test in `tests/parallel_determinism.rs`.
+pub fn grow<T: Copy + Default>(buf: &mut Vec<T>, len: usize) -> &mut [T] {
+    if buf.len() < len {
+        buf.resize(len, T::default());
+    }
+    &mut buf[..len]
+}
+
+/// Named reusable buffers for the probabilistic-convolution hot path.
+///
+/// One arena lives in each [`crate::coordinator::Engine`], each
+/// [`crate::backend::ProbConvBackend`], and each parallel worker shard, so
+/// concurrent shards never contend for scratch memory.
+#[derive(Debug, Clone, Default)]
+pub struct ScratchArena {
+    /// im2col patch planes (`pixels x 9` f32 per (item, channel) plane).
+    pub patches: Vec<f32>,
+    /// Bulk standard-normal draws (digital backend weight sampling).
+    pub draws: Vec<f64>,
+    /// Per-pixel accumulators (photonic conv core).
+    pub acc: Vec<f64>,
+    /// EOM transmissions for one channel (photonic conv core).
+    pub trans: Vec<f32>,
+    /// Plus-rail bulk intensity draws (photonic conv core).
+    pub rail_plus: Vec<f64>,
+    /// Minus-rail bulk intensity draws (photonic conv core).
+    pub rail_minus: Vec<f64>,
+    /// Padded engine input batch (`x` resized to the artifact batch size).
+    pub input: Vec<f32>,
+    /// Surrogate-path `eps` noise operand.
+    pub noise: Vec<f32>,
+    /// All-samples backend output (split path `d_all`).
+    pub samples: Vec<f32>,
+    /// Per-pass staging buffer (split path `d3`).
+    pub pass: Vec<f32>,
+}
+
+impl ScratchArena {
+    /// Total resident scratch bytes across all lanes (telemetry).
+    pub fn resident_bytes(&self) -> usize {
+        self.patches.capacity() * 4
+            + self.draws.capacity() * 8
+            + self.acc.capacity() * 8
+            + self.trans.capacity() * 4
+            + self.rail_plus.capacity() * 8
+            + self.rail_minus.capacity() * 8
+            + self.input.capacity() * 4
+            + self.noise.capacity() * 4
+            + self.samples.capacity() * 4
+            + self.pass.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_reaches_and_keeps_high_water_mark() {
+        let mut arena = ScratchArena::default();
+        assert_eq!(grow(&mut arena.patches, 100).len(), 100);
+        // a smaller request returns a shorter slice without shrinking
+        assert_eq!(grow(&mut arena.patches, 10).len(), 10);
+        assert!(arena.patches.len() >= 100);
+        // steady state: same size means no reallocation (pointer is stable)
+        let p0 = arena.patches.as_ptr();
+        let _ = grow(&mut arena.patches, 100);
+        assert_eq!(arena.patches.as_ptr(), p0);
+    }
+
+    #[test]
+    fn grow_preserves_contents_up_to_len() {
+        let mut buf: Vec<f64> = Vec::new();
+        grow(&mut buf, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let s = grow(&mut buf, 8);
+        assert_eq!(&s[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&s[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn resident_bytes_tracks_capacity() {
+        let mut arena = ScratchArena::default();
+        assert_eq!(arena.resident_bytes(), 0);
+        let _ = grow(&mut arena.acc, 128);
+        assert!(arena.resident_bytes() >= 128 * 8);
+    }
+}

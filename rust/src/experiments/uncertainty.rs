@@ -194,7 +194,13 @@ impl UncertaintyReport {
 mod tests {
     use super::*;
 
-    fn scores(name: &str, mi: Vec<f64>, se: Vec<f64>, pred: Vec<usize>, lab: Vec<i64>) -> SplitScores {
+    fn scores(
+        name: &str,
+        mi: Vec<f64>,
+        se: Vec<f64>,
+        pred: Vec<usize>,
+        lab: Vec<i64>,
+    ) -> SplitScores {
         SplitScores {
             name: name.into(),
             mi,

@@ -75,16 +75,19 @@ USAGE: pbm <subcommand> [flags]
   train     --dataset digits|blood [--epochs N --lr F --kl-scale F --warmup N
             --seed N --eval-every N --out STEM]
   eval      --dataset D [--params FILE --samples N --backend photonic|digital|mean
-            --mode M|surrogate --limit N --split test|ood|ambiguous|fashion]
+            --mode M|surrogate --limit N --split test|ood|ambiguous|fashion
+            --threads N]
   report    fig2 | fig2e | fig4 | fig5 | headline | nist [--params FILE
-            --samples N --backend B --mode M --limit N]
+            --samples N --backend B --mode M --limit N --threads N]
   calibrate [--kernels N --outputs M --seed N]
   nist      [--bits N --bw GHZ]
   serve     [--config FILE --addr HOST:PORT --datasets digits,blood
             --backend B --mode M --samples N --mi-threshold F
-            --max-batch N --max-wait-ms N]
+            --max-batch N --max-wait-ms N --threads N]
+            (--threads: sampling workers per engine; 1 = sequential,
+             0 = one per core; results are deterministic per (seed, threads))
   classify  [--addr HOST:PORT --dataset D --split S --index I]
-            [--local --backend B]   (serve one image in-process, no server)
+            [--local --backend B --threads N]   (in-process, no server)
   info
 ",
         photonic_bayes::version()
@@ -135,6 +138,7 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
         calibrate: !args.has("no-calibrate"),
         machine: MachineConfig::default(),
         noise_bw_ghz: args.get_f64("noise-bw", 150.0)?,
+        threads: args.get_usize("threads", 1)?,
         seed: args.get_u64("seed", 42)?,
     };
     Engine::new(arts, params, cfg)
@@ -301,7 +305,10 @@ fn report_fig4b(args: &Args) -> Result<()> {
         .as_arr()
         .ok_or_else(|| anyhow!("bad log"))?;
     println!("Fig. 4(b) — posterior sigma evolution of three tracked taps ({dataset}):");
-    println!("{:>6} {:>12} {:>12} {:>12} {:>10}", "epoch", "sigma[0]", "sigma[100]", "sigma[400]", "train acc");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>10}",
+        "epoch", "sigma[0]", "sigma[100]", "sigma[400]", "train acc"
+    );
     for e in epochs {
         let tr = e
             .get("sigma_traces")
@@ -316,7 +323,9 @@ fn report_fig4b(args: &Args) -> Result<()> {
             e.get("train_acc").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
         );
     }
-    println!("(mean and std of each weight distribution are learned from the data — paper Fig. 4b)");
+    println!(
+        "(mean and std of each weight distribution are learned from the data — paper Fig. 4b)"
+    );
     Ok(())
 }
 
@@ -451,6 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             calibrate: !args.has("no-calibrate") && file.get_bool("engine", "calibrate", true)?,
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
+            threads: args.get_usize("threads", file.get_usize("engine", "threads", 1)?)?,
             seed: args.get_u64("seed", 42)?,
         };
         let svc_cfg = ServiceConfig {

@@ -35,6 +35,7 @@ use super::timing::{self, OpticalClock};
 use crate::entropy::chaotic::{ChaoticLightSource, SourceConfig};
 use crate::entropy::gaussian::Gaussian;
 use crate::entropy::Xoshiro256pp;
+use crate::exec::scratch::{grow, ScratchArena};
 
 /// Target distribution for one tap (what SVI learned).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -76,10 +77,51 @@ impl TapProgram {
     }
 }
 
+/// Flattened realized sampling parameters of one tap — the dense cache the
+/// conv hot path reads instead of chasing [`TapProgram`] fields.  Plain
+/// `Copy` data so parallel worker shards can sample from a shared
+/// `&KernelProgram` without synchronization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlatTap {
+    pub p_plus: f64,
+    pub p_minus: f64,
+    pub dof: f64,
+    pub gain_eff: f64,
+}
+
 /// One programmed 9-tap kernel (one 3x3 depthwise filter).
 #[derive(Debug, Clone)]
 pub struct KernelProgram {
     pub taps: Vec<TapProgram>,
+    /// Realized-parameter cache, rebuilt whenever the taps (re)actuate —
+    /// hoists the per-call program-tuple copy out of `conv_patches`.
+    flat: Vec<FlatTap>,
+}
+
+impl KernelProgram {
+    fn from_taps(taps: Vec<TapProgram>) -> Self {
+        let mut kp = Self {
+            taps,
+            flat: Vec::new(),
+        };
+        kp.rebuild_flat();
+        kp
+    }
+
+    fn rebuild_flat(&mut self) {
+        self.flat.clear();
+        self.flat.extend(self.taps.iter().map(|t| FlatTap {
+            p_plus: t.real_p_plus,
+            p_minus: t.real_p_minus,
+            dof: t.real_dof,
+            gain_eff: t.gain_eff,
+        }));
+    }
+
+    /// The dense realized parameters, one entry per tap.
+    pub fn flat(&self) -> &[FlatTap] {
+        &self.flat
+    }
 }
 
 /// Machine configuration. Defaults follow the paper's system architecture.
@@ -148,13 +190,17 @@ pub struct PhotonicMachine {
     /// multiplicative transfer errors, fixed at construction.
     chan_bias: Vec<(f64, f64, f64)>,
     bank: Vec<KernelProgram>,
+    /// Reusable hot-path buffers (im2col planes, conv accumulators, bulk
+    /// draws) — steady-state convolutions allocate nothing.
+    scratch: ScratchArena,
     pub stats: MachineStats,
 }
 
 impl PhotonicMachine {
     pub fn new(cfg: MachineConfig) -> Self {
         let eom = Eom::new(cfg.scale_dac, cfg.extinction_db);
-        let grating = ChirpedGrating::paper_device(cfg.source.channels, cfg.ripple_rms_ps, cfg.seed);
+        let grating =
+            ChirpedGrating::paper_device(cfg.source.channels, cfg.ripple_rms_ps, cfg.seed);
         let detector = Detector::new(cfg.scale_adc, cfg.rx_noise, cfg.seed.wrapping_add(1));
         let src = ChaoticLightSource::new(cfg.source.clone(), cfg.seed.wrapping_add(2));
         let mut rng = Xoshiro256pp::new(cfg.seed.wrapping_add(3));
@@ -174,6 +220,7 @@ impl PhotonicMachine {
             actuator_gauss: gauss,
             chan_bias,
             bank: Vec::new(),
+            scratch: ScratchArena::default(),
             stats: MachineStats::default(),
             cfg,
         }
@@ -252,7 +299,8 @@ impl PhotonicMachine {
     fn actuate(&mut self, k: usize, tap: &mut TapProgram) {
         let bias = self.chan_bias[k];
         let mut draw = |base: f64, b: f64| -> f64 {
-            let e = 1.0 + self.cfg.actuator_jitter * self.actuator_gauss.sample(&mut self.actuator_rng);
+            let e =
+                1.0 + self.cfg.actuator_jitter * self.actuator_gauss.sample(&mut self.actuator_rng);
             (base * b * e).max(0.0)
         };
         tap.real_p_plus = draw(tap.cmd_p_plus, bias.0);
@@ -278,7 +326,7 @@ impl PhotonicMachine {
         for (k, tap) in taps.iter_mut().enumerate() {
             self.actuate(k, tap);
         }
-        self.bank.push(KernelProgram { taps });
+        self.bank.push(KernelProgram::from_taps(taps));
         self.stats.programs_loaded += 1;
         self.bank.len() - 1
     }
@@ -302,6 +350,7 @@ impl PhotonicMachine {
             self.actuate(k, tap);
         }
         self.bank[idx].taps = taps;
+        self.bank[idx].rebuild_flat();
         self.stats.programs_loaded += 1;
     }
 
@@ -350,41 +399,17 @@ impl PhotonicMachine {
         assert_eq!(patches.len() % nt, 0);
         let n = patches.len() / nt;
         assert!(out.len() >= n);
-        let scale_dac = self.cfg.scale_dac;
-        // copy the per-tap program parameters into a flat scratch (avoids
-        // re-borrowing self.bank inside the sampling loop)
-        let kp = &self.bank[idx];
-        let mut prog: Vec<(f64, f64, f64, f64)> = Vec::with_capacity(nt);
-        for tap in &kp.taps {
-            prog.push((tap.real_p_plus, tap.real_p_minus, tap.real_dof, tap.gain_eff));
-        }
-        // Symbols at the modulator's extinction floor carry <= 1e-3 of a
-        // tap's weight; skipping their Gamma draws changes the output by
-        // less than the receiver noise floor and saves ~40 % of sampling on
-        // post-ReLU activations (see EXPERIMENTS.md §Perf).
-        let t_floor = 1.5e-3f64;
-        for (p, o) in out.iter_mut().take(n).enumerate() {
-            let patch = &patches[p * nt..(p + 1) * nt];
-            let mut acc = 0.0f64;
-            for (k, &(pp, pm, dof, ge)) in prog.iter().enumerate() {
-                let t = self.eom.transmission(patch[k]) as f64;
-                if t <= t_floor {
-                    continue;
-                }
-                let plus = if pp > 0.0 {
-                    self.src.intensity_dof(k, pp, dof)
-                } else {
-                    0.0
-                };
-                let minus = if pm > 0.0 {
-                    self.src.intensity_dof(k, pm, dof)
-                } else {
-                    0.0
-                };
-                acc += ge * (plus - minus) * t;
-            }
-            *o = self.detector.read((acc * scale_dac as f64) as f32);
-        }
+        conv_patches_core(
+            &self.bank[idx].flat,
+            patches,
+            nt,
+            self.cfg.scale_dac,
+            &self.eom,
+            &mut self.src,
+            &mut self.detector,
+            &mut self.scratch,
+            out,
+        );
         self.stats.convolutions += n as u64;
         self.stats.clock.advance_symbols((n * nt) as u64);
     }
@@ -400,18 +425,41 @@ impl PhotonicMachine {
         h: usize,
         w: usize,
     ) -> Vec<f32> {
+        let mut out = vec![0.0f32; c * h * w];
+        self.depthwise_conv_into(bank_base, x, c, h, w, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Self::depthwise_conv`]: writes into a caller-owned
+    /// buffer and reuses the machine's im2col scratch.  This is the serving
+    /// hot path; RNG consumption order is identical to `depthwise_conv`.
+    pub fn depthwise_conv_into(
+        &mut self,
+        bank_base: usize,
+        x: &[f32],
+        c: usize,
+        h: usize,
+        w: usize,
+        out: &mut [f32],
+    ) {
         assert_eq!(x.len(), c * h * w);
+        assert!(out.len() >= c * h * w);
         let nt = self.num_taps();
         assert_eq!(nt, 9, "depthwise path assumes 3x3 kernels");
-        let mut out = vec![0.0f32; c * h * w];
-        let mut patches = vec![0.0f32; h * w * nt];
+        // take the scratch plane out so conv_patches can borrow &mut self
+        let mut patches = std::mem::take(&mut self.scratch.patches);
+        if patches.len() < h * w * nt {
+            patches.resize(h * w * nt, 0.0);
+        }
         for ch in 0..c {
             let plane = &x[ch * h * w..(ch + 1) * h * w];
             im2col_3x3(plane, h, w, &mut patches);
             let out_plane = &mut out[ch * h * w..(ch + 1) * h * w];
-            self.conv_patches(bank_base + ch, &patches, out_plane);
+            // slice to this call's plane: the grow-only scratch may be
+            // longer than h*w*9 after a larger earlier request
+            self.conv_patches(bank_base + ch, &patches[..h * w * nt], out_plane);
         }
-        out
+        self.scratch.patches = patches;
     }
 
     /// The detector's ADC quantizer (exposed for parity tests with L2).
@@ -428,6 +476,91 @@ impl PhotonicMachine {
             self.stats.clock.elapsed_ns(),
             h.convolutions_per_sec / 1e9
         )
+    }
+}
+
+/// Symbols at the modulator's extinction floor carry <= 1e-3 of a tap's
+/// weight; skipping their Gamma draws changes the output by less than the
+/// receiver noise floor and saves ~40 % of sampling on post-ReLU
+/// activations (see EXPERIMENTS.md §Perf).
+pub(crate) const T_FLOOR: f64 = 1.5e-3;
+
+/// The photonic conv inner loop, callable with any entropy streams — the
+/// machine's own, or an independently seeded worker shard's (parallel
+/// `sample_conv`).  Channel-outer with bulk per-channel Gamma draws: each
+/// spectral channel owns an independent stream and two-rail taps use the
+/// paired fill (plus-then-minus per symbol), so per-channel stream
+/// consumption order — and therefore every output bit — matches the
+/// historical pixel-outer scalar loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_patches_core(
+    flat: &[FlatTap],
+    patches: &[f32],
+    nt: usize,
+    scale_dac: f32,
+    eom: &Eom,
+    src: &mut ChaoticLightSource,
+    detector: &mut Detector,
+    scratch: &mut ScratchArena,
+    out: &mut [f32],
+) {
+    let n = patches.len() / nt;
+    let acc = grow(&mut scratch.acc, n);
+    acc.fill(0.0);
+    let trans = grow(&mut scratch.trans, n);
+    let plus = grow(&mut scratch.rail_plus, n);
+    let minus = grow(&mut scratch.rail_minus, n);
+    for (k, tap) in flat.iter().enumerate().take(nt) {
+        // transmissions for this channel; count symbols above the
+        // extinction floor — only those consume Gamma draws
+        let mut m = 0usize;
+        for (p, t) in trans.iter_mut().enumerate() {
+            *t = eom.transmission(patches[p * nt + k]);
+            if (*t as f64) > T_FLOOR {
+                m += 1;
+            }
+        }
+        if m == 0 {
+            continue;
+        }
+        match (tap.p_plus > 0.0, tap.p_minus > 0.0) {
+            (true, true) => {
+                // both rails lit: draw plus-then-minus per symbol, the
+                // scalar loop's exact stream order
+                src.fill_intensity_pair_dof(
+                    k,
+                    tap.p_plus,
+                    tap.p_minus,
+                    tap.dof,
+                    &mut plus[..m],
+                    &mut minus[..m],
+                );
+            }
+            (true, false) => {
+                src.fill_intensity_dof(k, tap.p_plus, tap.dof, &mut plus[..m]);
+                minus[..m].fill(0.0);
+            }
+            (false, true) => {
+                plus[..m].fill(0.0);
+                src.fill_intensity_dof(k, tap.p_minus, tap.dof, &mut minus[..m]);
+            }
+            (false, false) => {
+                plus[..m].fill(0.0);
+                minus[..m].fill(0.0);
+            }
+        }
+        let mut j = 0usize;
+        for (p, a) in acc.iter_mut().enumerate() {
+            let t = trans[p] as f64;
+            if t <= T_FLOOR {
+                continue;
+            }
+            *a += tap.gain_eff * (plus[j] - minus[j]) * t;
+            j += 1;
+        }
+    }
+    for (p, o) in out.iter_mut().take(n).enumerate() {
+        *o = detector.read((acc[p] * scale_dac as f64) as f32);
     }
 }
 
@@ -619,6 +752,63 @@ mod tests {
                     "ch {ch} p {p}: got {got} want {want}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn flat_cache_tracks_realized_taps() {
+        let mut m = quiet_machine(12);
+        let idx = m.load_kernel(&targets9(0.5, 0.3));
+        let kp = m.kernel(idx);
+        assert_eq!(kp.flat().len(), 9);
+        for (tap, flat) in kp.taps.iter().zip(kp.flat()) {
+            assert_eq!(flat.gain_eff, tap.gain_eff);
+            let mu_err = (flat.p_plus - flat.p_minus) * flat.gain_eff - tap.realized_mu();
+            assert!(mu_err.abs() < 1e-12);
+        }
+        // reprogramming rebuilds the cache
+        let cmds: Vec<(f64, f64, f64)> = kp
+            .taps
+            .iter()
+            .map(|t| (t.cmd_p_plus * 0.5, t.cmd_p_minus, t.cmd_dof))
+            .collect();
+        let before = kp.flat()[0];
+        m.reprogram_kernel(idx, cmds);
+        let after = m.kernel(idx).flat()[0];
+        assert!(after.p_plus < before.p_plus, "{after:?} vs {before:?}");
+    }
+
+    #[test]
+    fn depthwise_conv_handles_shrinking_dims_after_scratch_growth() {
+        // the grow-only im2col scratch must not leak a larger previous
+        // request's length into a smaller one
+        let mut m = quiet_machine(17);
+        m.load_kernel(&targets9(0.3, 0.2));
+        let big: Vec<f32> = (0..36).map(|i| 0.1 * (i % 5) as f32).collect();
+        let _ = m.depthwise_conv(0, &big, 1, 6, 6);
+        let small: Vec<f32> = (0..9).map(|i| 0.1 * (i % 5) as f32).collect();
+        let y = m.depthwise_conv(0, &small, 1, 3, 3); // must not panic
+        assert_eq!(y.len(), 9);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn depthwise_conv_into_matches_allocating_variant() {
+        let (c, h, w) = (2usize, 4usize, 4usize);
+        let targets = targets9(0.3, 0.2);
+        let x: Vec<f32> = (0..c * h * w).map(|i| 0.2 * (i % 5) as f32).collect();
+
+        let mut a = quiet_machine(21);
+        let mut b = quiet_machine(21);
+        for _ in 0..c {
+            a.load_kernel(&targets);
+            b.load_kernel(&targets);
+        }
+        for _ in 0..3 {
+            let ya = a.depthwise_conv(0, &x, c, h, w);
+            let mut yb = vec![0.0f32; c * h * w];
+            b.depthwise_conv_into(0, &x, c, h, w, &mut yb);
+            assert_eq!(ya, yb, "identical machines, identical streams");
         }
     }
 

@@ -36,4 +36,4 @@ pub mod grating;
 pub mod machine;
 pub mod timing;
 
-pub use machine::{KernelProgram, MachineConfig, PhotonicMachine, TapTarget};
+pub use machine::{FlatTap, KernelProgram, MachineConfig, PhotonicMachine, TapTarget};

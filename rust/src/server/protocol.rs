@@ -6,6 +6,15 @@ use crate::bnn::Decision;
 use crate::coordinator::engine::ClassifyResult;
 use crate::util::json::{self, Json};
 
+/// Largest accepted `image` array (elements).  Image sizes are set by model
+/// metadata; 2^18 = 262,144 elements admits anything up to a 512x512
+/// single-channel (or 360x360 multi-channel-ish) input while staying well
+/// inside the gateway's 8 MiB request-line cap.  The cap exists so an
+/// attacker-controlled request cannot drive the downstream `SamplePlan`
+/// size math or engine buffers into overflow/OOM territory before the
+/// shape check even runs.
+pub const MAX_IMAGE_LEN: usize = 1 << 18;
+
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -25,7 +34,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .as_str()
                 .ok_or_else(|| anyhow!("dataset must be a string"))?
                 .to_string();
-            let image = j
+            let image: Vec<f32> = j
                 .req("image")
                 .map_err(|e| anyhow!(e))?
                 .as_f64_vec()
@@ -33,6 +42,13 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .into_iter()
                 .map(|x| x as f32)
                 .collect();
+            if image.len() > MAX_IMAGE_LEN {
+                return Err(anyhow!(
+                    "image has {} elements, exceeding the protocol cap of {}",
+                    image.len(),
+                    MAX_IMAGE_LEN
+                ));
+            }
             Ok(Request::Classify { dataset, image })
         }
         Some("info") => Ok(Request::Info),
@@ -145,6 +161,17 @@ mod tests {
         assert!(parse_request("{\"op\":\"classify\"}").is_err());
         assert!(parse_request("not json").is_err());
         assert!(parse_request("{\"op\":\"classify\",\"dataset\":\"d\",\"image\":\"x\"}").is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_image_with_clear_error() {
+        let image = vec![0.0f32; MAX_IMAGE_LEN + 1];
+        let line = encode_classify("digits", &image);
+        let err = parse_request(&line).unwrap_err();
+        assert!(err.to_string().contains("protocol cap"), "{err}");
+        // the boundary itself is accepted
+        let ok = encode_classify("digits", &vec![0.0f32; 784]);
+        assert!(parse_request(&ok).is_ok());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! TCP gateway: accept loop + per-connection workers over the router.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
@@ -47,11 +47,16 @@ pub fn serve(
             Ok((stream, peer)) => {
                 let router = router.clone();
                 let cancel = cancel.clone();
-                pool.execute(move || {
+                let submitted = pool.execute(move || {
                     if let Err(e) = handle_conn(stream, &router, &cancel) {
                         crate::log_debug!("conn {peer}: {e}");
                     }
                 });
+                if submitted.is_err() {
+                    // a draining pool refuses new connections instead of
+                    // panicking the accept loop
+                    crate::log_debug!("worker pool shut down; dropping connection from {peer}");
+                }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -67,6 +72,12 @@ pub fn serve(
     Ok(())
 }
 
+/// Largest accepted request line (bytes).  Bounds per-connection memory at
+/// the transport boundary — a hostile client cannot make the gateway buffer
+/// an unbounded "line".  Generous enough for a [`protocol::MAX_IMAGE_LEN`]
+/// image in JSON text.
+const MAX_LINE_BYTES: usize = 8 << 20;
+
 fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
@@ -76,14 +87,33 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
         if cancel.is_cancelled() {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // peer closed
-            Ok(_) => {
+        if line.len() >= MAX_LINE_BYTES {
+            let resp =
+                protocol::encode_error(&format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+            return Ok(()); // close: the rest of the oversized line is garbage
+        }
+        // cap the read; partial lines (timeout or cap) accumulate in `line`
+        let budget = (MAX_LINE_BYTES - line.len()) as u64;
+        match (&mut reader).take(budget).read_line(&mut line) {
+            Ok(0) => {
+                // peer closed; a buffered newline-less final request still
+                // gets its response before we hang up
+                if !line.is_empty() {
+                    let resp = respond(router, &line);
+                    writer.write_all(resp.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                return Ok(());
+            }
+            Ok(_) if line.ends_with('\n') => {
                 let resp = respond(router, &line);
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n")?;
+                line.clear();
             }
+            Ok(_) => {} // mid-line: keep accumulating (next loop re-budgets)
             Err(ref e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>

@@ -24,6 +24,7 @@ fn fast_engine_cfg() -> EngineConfig {
         calibrate: false,
         machine: MachineConfig::default(),
         noise_bw_ghz: 150.0,
+        threads: 1,
         seed: 5,
     }
 }

@@ -1,0 +1,169 @@
+//! Integration: sharded `sample_conv` determinism + scratch-arena hygiene.
+//!
+//! The threading contract (README §Performance): for a fixed
+//! `(seed, n_threads)` a backend replays bit-identically; across thread
+//! counts outputs differ bitwise (different stream interleaving) but are
+//! statistically equivalent.  None of these tests need model artifacts.
+
+use std::sync::Arc;
+
+use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
+use photonic_bayes::exec::ThreadPool;
+use photonic_bayes::photonics::{MachineConfig, TapTarget};
+use photonic_bayes::util::mathstat::{mean_f32, std_f32};
+
+fn quiet_cfg(seed: u64) -> MachineConfig {
+    MachineConfig {
+        rx_noise: 0.0,
+        actuator_sigma: 0.0,
+        actuator_jitter: 0.0,
+        ripple_rms_ps: 0.0,
+        seed,
+        ..MachineConfig::default()
+    }
+}
+
+fn kernels(c: usize) -> Vec<Vec<TapTarget>> {
+    (0..c)
+        .map(|i| {
+            let mu = 0.2 + 0.1 * i as f32;
+            vec![TapTarget { mu, sigma: 0.5 * mu }; 9]
+        })
+        .collect()
+}
+
+fn run_once(
+    kind: BackendKind,
+    threads: usize,
+    plan: &SamplePlan,
+    x: &[f32],
+    seed: u64,
+) -> Vec<f32> {
+    let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+    let mut be = backend::build_with_pool(kind, &quiet_cfg(seed), pool);
+    be.program(&kernels(plan.channels), false).unwrap();
+    let mut out = vec![0.0f32; plan.total_size()];
+    be.sample_conv(plan, x, &mut out).unwrap();
+    out
+}
+
+fn test_input(plan: &SamplePlan) -> Vec<f32> {
+    (0..plan.sample_size())
+        .map(|i| 0.3 * ((i % 11) as f32) / 3.0)
+        .collect()
+}
+
+#[test]
+fn sharded_sample_conv_is_bitwise_deterministic_per_thread_count() {
+    let plan = SamplePlan::new(6, 4, 2, 5, 5);
+    let x = test_input(&plan);
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        for threads in [1, 2, 4] {
+            let a = run_once(kind, threads, &plan, &x, 33);
+            let b = run_once(kind, threads, &plan, &x, 33);
+            assert_eq!(a, b, "{kind} at {threads} threads must replay bitwise");
+        }
+    }
+}
+
+#[test]
+fn thread_counts_are_statistically_equivalent() {
+    // a large grid so per-thread-count moments are tight
+    let plan = SamplePlan::new(64, 4, 2, 5, 5);
+    let x = test_input(&plan);
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        let reference = run_once(kind, 1, &plan, &x, 7);
+        let (m_ref, s_ref) = (mean_f32(&reference), std_f32(&reference));
+        assert!(s_ref > 0.0, "{kind}: stochastic backend must fluctuate");
+        for threads in [2, 4] {
+            let out = run_once(kind, threads, &plan, &x, 7);
+            let (m, s) = (mean_f32(&out), std_f32(&out));
+            assert!(
+                (m - m_ref).abs() < 0.02 + 0.05 * s_ref,
+                "{kind} t={threads}: mean {m} vs sequential {m_ref}"
+            );
+            assert!(
+                (s - s_ref).abs() < 0.1 * s_ref + 0.01,
+                "{kind} t={threads}: std {s} vs sequential {s_ref}"
+            );
+        }
+    }
+}
+
+#[test]
+fn more_workers_than_grid_rows_is_sound() {
+    // 2 grid rows sharded over 4 workers: trailing shards get empty ranges
+    let plan = SamplePlan::new(2, 1, 1, 3, 3);
+    let x = test_input(&plan);
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        let a = run_once(kind, 4, &plan, &x, 5);
+        let b = run_once(kind, 4, &plan, &x, 5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn parallel_writes_stay_inside_the_plan_region() {
+    let plan = SamplePlan::new(5, 3, 2, 4, 4);
+    let x = test_input(&plan);
+    let pool = Some(Arc::new(ThreadPool::new(4)));
+    let mut be = backend::build_with_pool(BackendKind::Digital, &quiet_cfg(2), pool);
+    be.program(&kernels(plan.channels), false).unwrap();
+    const SENTINEL: f32 = 777.25;
+    let mut out = vec![SENTINEL; plan.total_size() + 32];
+    be.sample_conv(&plan, &x, &mut out).unwrap();
+    assert!(
+        out[..plan.total_size()].iter().all(|v| v.is_finite() && *v != SENTINEL),
+        "plan region fully written"
+    );
+    assert!(
+        out[plan.total_size()..].iter().all(|&v| v == SENTINEL),
+        "tail beyond the plan untouched"
+    );
+}
+
+#[test]
+fn scratch_arena_reuse_leaves_no_stale_data() {
+    // two consecutive requests on one (deterministic) backend: the second,
+    // smaller request must match a fresh backend exactly even though the
+    // arena still holds the first request's larger buffers
+    let big = SamplePlan::new(8, 4, 2, 6, 6);
+    let small = SamplePlan::new(2, 1, 2, 3, 3);
+    let cfg = quiet_cfg(4);
+
+    let mut warm = backend::build(BackendKind::MeanField, &cfg);
+    warm.program(&kernels(2), false).unwrap();
+    let xb = test_input(&big);
+    let mut sink = vec![0.0f32; big.total_size()];
+    warm.sample_conv(&big, &xb, &mut sink).unwrap();
+
+    let xs = test_input(&small);
+    let mut warm_out = vec![0.0f32; small.total_size()];
+    warm.sample_conv(&small, &xs, &mut warm_out).unwrap();
+
+    let mut fresh = backend::build(BackendKind::MeanField, &cfg);
+    fresh.program(&kernels(2), false).unwrap();
+    let mut fresh_out = vec![0.0f32; small.total_size()];
+    fresh.sample_conv(&small, &xs, &mut fresh_out).unwrap();
+
+    assert_eq!(warm_out, fresh_out, "arena reuse must not leak request state");
+}
+
+#[test]
+fn sequential_pool_free_backends_match_single_worker_pool() {
+    // a 1-worker pool must take the sequential path (photonic stays
+    // bit-identical to the machine's own streams)
+    let plan = SamplePlan::new(3, 2, 1, 4, 4);
+    let x = test_input(&plan);
+    let none = run_once(BackendKind::Photonic, 1, &plan, &x, 9);
+    let one = {
+        let pool = Some(Arc::new(ThreadPool::new(1)));
+        let mut be = backend::build_with_pool(BackendKind::Photonic, &quiet_cfg(9), pool);
+        be.program(&kernels(plan.channels), false).unwrap();
+        let mut out = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, &x, &mut out).unwrap();
+        out
+    };
+    assert_eq!(none, one);
+}
