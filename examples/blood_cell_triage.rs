@@ -50,6 +50,7 @@ fn main() -> Result<()> {
             noise_bw_ghz: 150.0,
             threads: 1,
             seed: 7,
+            ..Default::default()
         },
     )?;
 

@@ -68,6 +68,7 @@ fn main() -> Result<()> {
             // shard sampling across 4 workers; fix (seed, threads) to replay
             threads: 4,
             seed: 42,
+            ..Default::default()
         },
     )?;
 

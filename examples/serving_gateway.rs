@@ -49,7 +49,10 @@ fn main() -> Result<()> {
         machine: MachineConfig::default(),
         noise_bw_ghz: 150.0,
         threads: 0, // one sampling worker per core: gateway throughput first
+        // background entropy producers keep the sampling workers fed
+        entropy_prefetch: photonic_bayes::coordinator::PrefetchMode::On,
         seed: 42,
+        ..Default::default()
     };
     let svc_cfg = ServiceConfig {
         max_batch: 8,

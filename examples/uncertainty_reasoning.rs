@@ -47,6 +47,7 @@ fn main() -> Result<()> {
             noise_bw_ghz: 150.0,
             threads: 1,
             seed: 11,
+            ..Default::default()
         },
     )?;
 

@@ -166,6 +166,7 @@ fn main() {
                     noise_bw_ghz: 150.0,
                     threads: 1,
                     seed: 7,
+                    ..Default::default()
                 },
             )
             .unwrap();

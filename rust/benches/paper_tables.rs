@@ -2,8 +2,8 @@
 //! and figure of the paper's evaluation section (DESIGN.md experiment
 //! index).  Each section prints the paper's value next to the measured one.
 //!
-//! Sections: headline, backends, fig2_error, fig2_delay, nist, fig4_roc,
-//! fig4_confusion, fig5_scatter, fig5_auroc, ablations.
+//! Sections: headline, backends, entropy, fig2_error, fig2_delay, nist,
+//! fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc, ablations.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -11,7 +11,9 @@
 
 use std::sync::Arc;
 
-use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
+use photonic_bayes::backend::{
+    self, BackendKind, PipelineOptions, PrefetchMode, ProbConvBackend, SamplePlan,
+};
 use photonic_bayes::benchkit::{black_box, section, Bench, JsonSink};
 use photonic_bayes::bnn::UncertaintyPolicy;
 use photonic_bayes::calibration::computation_error_experiment;
@@ -49,6 +51,9 @@ fn main() {
     }
     if run("backends") {
         backends(&mut sink);
+    }
+    if run("entropy") {
+        entropy(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -124,20 +129,33 @@ fn backends(sink: &mut Option<JsonSink>) {
         plan.convolutions()
     );
     println!(
-        "{:<12} {:>8} {:>16} {:>16} {:>12} {:>12}",
-        "backend", "threads", "call latency", "conv/s (sim)", "vs 1-thread", "vs digital"
+        "{:<12} {:>8} {:>16} {:>16} {:>12} {:>12} {:>12}",
+        "backend", "threads", "call latency", "conv/s (sim)", "vs 1-thread", "vs digital", "vs off"
     );
     let mut digital_1t_ns_per_conv = f64::NAN;
     for kind in [BackendKind::Digital, BackendKind::Photonic, BackendKind::MeanField] {
-        let threads: &[usize] = if kind == BackendKind::MeanField {
-            &[1] // deterministic single pass: nothing to shard
+        let runs: &[(usize, PrefetchMode)] = if kind == BackendKind::MeanField {
+            &[(1, PrefetchMode::Off)] // deterministic single pass
         } else {
-            &[1, 2, 4, 8]
+            // prefetch-on at t in {1, 4}: the ISSUE 4 acceptance points
+            &[
+                (1, PrefetchMode::Off),
+                (1, PrefetchMode::On),
+                (2, PrefetchMode::Off),
+                (4, PrefetchMode::Off),
+                (4, PrefetchMode::On),
+                (8, PrefetchMode::Off),
+            ]
         };
         let mut base_ns = f64::NAN;
-        for &t in threads {
+        let mut off_ns_by_t = [f64::NAN; 9];
+        for &(t, mode) in runs {
             let pool = (t > 1).then(|| Arc::new(ThreadPool::new(t)));
-            let mut be = backend::build_with_pool(kind, &mcfg, pool);
+            let popts = PipelineOptions {
+                mode,
+                ..PipelineOptions::default()
+            };
+            let mut be = backend::build_with_opts(kind, &mcfg, pool, popts);
             be.program(&kernels, false).unwrap();
             let eff = SamplePlan {
                 // the mean-field fast path executes a single deterministic pass
@@ -145,38 +163,120 @@ fn backends(sink: &mut Option<JsonSink>) {
                 ..plan
             };
             let mut out = vec![0.0f32; eff.total_size()];
-            let s = bench.run(&format!("{} t{}", kind.name(), t), || {
+            let s = bench.run(&format!("{} t{} {}", kind.name(), t, mode), || {
                 be.sample_conv(&eff, &x, &mut out).unwrap();
                 black_box(&out);
             });
             let ns_per_conv = s.mean_ns / eff.convolutions() as f64;
-            if t == 1 {
+            if t == 1 && mode == PrefetchMode::Off {
                 base_ns = s.mean_ns;
                 if kind == BackendKind::Digital {
                     digital_1t_ns_per_conv = ns_per_conv;
                 }
             }
+            if mode == PrefetchMode::Off {
+                off_ns_by_t[t.min(8)] = s.mean_ns;
+            }
+            let label = if mode == PrefetchMode::On {
+                format!("{}+pf", kind.name())
+            } else {
+                kind.name().to_string()
+            };
+            // the acceptance metric: prefetch-on vs prefetch-off at equal t
+            let vs_off = off_ns_by_t[t.min(8)] / s.mean_ns;
             println!(
-                "{:<12} {:>8} {:>16} {:>16.2e} {:>11.2}x {:>11.2}x",
-                kind.name(),
+                "{:<12} {:>8} {:>16} {:>16.2e} {:>11.2}x {:>11.2}x {:>11.2}x",
+                label,
                 t,
                 photonic_bayes::benchkit::fmt_ns(s.mean_ns),
                 1e9 / ns_per_conv,
                 base_ns / s.mean_ns,
-                digital_1t_ns_per_conv / ns_per_conv
+                digital_1t_ns_per_conv / ns_per_conv,
+                vs_off,
             );
             if let Some(sink) = sink {
-                sink.push(
-                    &format!("backends/sample_conv/{}/t{}", kind.name(), t),
-                    s.mean_ns,
-                    1e9 / ns_per_conv,
-                );
+                let name = if mode == PrefetchMode::On {
+                    format!("backends/sample_conv/{}/t{}/prefetch", kind.name(), t)
+                } else {
+                    format!("backends/sample_conv/{}/t{}", kind.name(), t)
+                };
+                sink.push(&name, s.mean_ns, 1e9 / ns_per_conv);
             }
         }
     }
     println!("(simulator wall-clock; the machine's *optical* rate is the 26.7 Gconv/s headline)");
-    println!("(speedup columns: per-call latency vs the same backend at 1 thread, and");
-    println!(" ns/conv vs the digital backend at 1 thread — the PR 2 baseline)");
+    println!("(speedup columns: per-call latency vs the same backend at 1 thread/off,");
+    println!(" ns/conv vs the digital backend at 1 thread — the PR 2 baseline — and");
+    println!(" prefetch-on vs prefetch-off at the same thread count)");
+}
+
+/// The entropy pipeline's own numbers: producer-side generation throughput
+/// in Gbit/s (one f64 draw = 64 delivered bits; the paper's interface
+/// streams 1.28 Tbit/s) and the piped-vs-sync `fill` delta a consumer
+/// actually sees.
+fn entropy(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::entropy::gaussian::Gaussian;
+    use photonic_bayes::entropy::pipeline::{EntropyStream, NormalGen, WeightGen};
+    use photonic_bayes::entropy::Xoshiro256pp;
+    use std::sync::atomic::AtomicU64;
+
+    section("ENTROPY — producer throughput vs the paper's 1.28 Tbit/s interface");
+    let bench = Bench::quick();
+    let block = 4096usize;
+    let mut buf = vec![0.0f64; block];
+    println!(
+        "{:<40} {:>14} {:>14}  (paper interface: 1.28 Tbit/s)",
+        "stream", "draws/s", "Gbit/s"
+    );
+    let report = |sink: &mut Option<JsonSink>, name: &str, mean_ns: f64| {
+        let draws_per_s = block as f64 / (mean_ns * 1e-9);
+        let gbit = draws_per_s * 64.0 / 1e9;
+        println!("{name:<40} {draws_per_s:>14.3e} {gbit:>14.2}");
+        if let Some(s) = sink {
+            s.push(&format!("entropy/{name}"), mean_ns, draws_per_s);
+        }
+    };
+
+    // raw generators (what one producer thread can draw)
+    let mut ng = NormalGen::new(Xoshiro256pp::new(7));
+    let s = bench.run("normal-gen", || {
+        photonic_bayes::entropy::pipeline::BlockGen::fill(&mut ng, &mut buf);
+        black_box(&buf);
+    });
+    report(sink, "producer/digital_normals", s.mean_ns);
+
+    let mut wg = WeightGen {
+        rng: Xoshiro256pp::new(9),
+        gauss: Gaussian::new(),
+        p_plus: 1.2,
+        p_minus: 0.4,
+        dof: 5.0,
+        gain_eff: 0.9,
+    };
+    let s = bench.run("weight-gen", || {
+        photonic_bayes::entropy::pipeline::BlockGen::fill(&mut wg, &mut buf);
+        black_box(&buf);
+    });
+    report(sink, "producer/photonic_weights", s.mean_ns);
+
+    // consumer-visible fill: piped (copy out of prefetched blocks) vs sync
+    for mode in [PrefetchMode::Sync, PrefetchMode::On] {
+        let mut stream = EntropyStream::new(
+            NormalGen::new(Xoshiro256pp::new(11)),
+            &PipelineOptions {
+                mode,
+                block,
+                depth: 8,
+            },
+            "bench",
+            std::sync::Arc::new(AtomicU64::new(0)),
+        );
+        let s = bench.run(&format!("fill {mode}"), || {
+            stream.fill(&mut buf);
+            black_box(&buf);
+        });
+        report(sink, &format!("fill/normals_{mode}"), s.mean_ns);
+    }
 }
 
 fn fig2_error() {
@@ -251,6 +351,7 @@ fn load_engine(
             noise_bw_ghz: 150.0,
             threads: 1,
             seed,
+            ..Default::default()
         },
     )
     .ok()?;

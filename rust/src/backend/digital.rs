@@ -21,15 +21,24 @@
 //! construction, so outputs are bitwise-deterministic for a fixed
 //! `(seed, n_threads)` and statistically equivalent across thread counts.
 //! Weight draws happen in bulk — one plane of normals per (item, channel,
-//! sample) via [`Gaussian::fill_f64`] — into per-shard scratch, so the
-//! steady-state loop performs no heap allocation.
+//! sample) — into per-shard scratch, so the steady-state loop performs no
+//! heap allocation.
+//!
+//! With the entropy pipeline enabled (`PrefetchMode::On`), each shard's
+//! Box–Muller work moves to a dedicated background producer that pre-draws
+//! normal planes into an SPSC block ring; the conv loop then reduces to
+//! `mu + sigma·z` FMAs over prefetched blocks.  Because the shard stream
+//! and draw order are unchanged, outputs are bitwise identical across all
+//! prefetch modes.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{BackendKind, ProbConvBackend, SamplePlan};
+use super::{BackendKind, PipelineOptions, ProbConvBackend, SamplePlan};
 use crate::entropy::gaussian::Gaussian;
+use crate::entropy::pipeline::{EntropyStream, NormalGen};
 use crate::entropy::Xoshiro256pp;
 use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
@@ -37,10 +46,12 @@ use crate::photonics::converters::Quantizer;
 use crate::photonics::machine::im2col_3x3;
 use crate::photonics::TapTarget;
 
-/// One worker's private entropy stream + draw scratch.
+/// One worker's private entropy stream + draw scratch.  The stream is the
+/// shard's forked xoshiro256++ either drawn inline (prefetch off/sync —
+/// identical draws, identical order) or pre-drawn by a background producer
+/// (prefetch on) — bitwise the same weight planes in every mode.
 struct DigitalShard {
-    rng: Xoshiro256pp,
-    gauss: Gaussian,
+    stream: EntropyStream<NormalGen>,
     scratch: ScratchArena,
 }
 
@@ -68,11 +79,11 @@ impl DigitalShard {
             let b = (g0 + r) % batch;
             for (ch, kern) in kernels.iter().enumerate().take(c) {
                 let plane = &patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9];
-                // bulk-draw the whole weight plane up front: the PRNG cost
-                // stays (that is the measured quantity), the per-symbol
-                // call overhead goes
+                // one whole weight plane per (item, channel, sample): drawn
+                // inline, or copied out of a producer-prefetched block —
+                // either way the same draws in the same order
                 let z = grow(&mut self.scratch.draws, hw9);
-                self.gauss.fill_f64(&mut self.rng, z);
+                self.stream.fill(z);
                 super::conv_plane_quantized(
                     plane,
                     hw,
@@ -96,6 +107,9 @@ pub struct DigitalBaselineBackend {
     pool: Option<Arc<ThreadPool>>,
     shards: Vec<DigitalShard>,
     arena: ScratchArena,
+    popts: PipelineOptions,
+    /// Draws produced by background entropy producers (prefetch on only).
+    produced: Arc<AtomicU64>,
     /// Output pixels computed (one probabilistic convolution each).
     pub convolutions: u64,
     /// Gaussian weight draws consumed (the PRNG bottleneck being measured).
@@ -117,13 +131,34 @@ impl DigitalBaselineBackend {
         seed: u64,
         pool: Option<Arc<ThreadPool>>,
     ) -> Self {
+        Self::with_opts(scale_dac, scale_adc, seed, pool, PipelineOptions::default())
+    }
+
+    /// Full-control constructor: pool sharding plus the decoupled-entropy
+    /// pipeline options.  The digital backend's weight draws depend only on
+    /// the shard streams — not on the programmed targets — so its outputs
+    /// are bitwise identical across all three prefetch modes for a fixed
+    /// `(seed, n_threads)` (the `mu + sigma·z` mapping happens at
+    /// consumption time).
+    pub fn with_opts(
+        scale_dac: f32,
+        scale_adc: f32,
+        seed: u64,
+        pool: Option<Arc<ThreadPool>>,
+        popts: PipelineOptions,
+    ) -> Self {
         let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
+        let produced = Arc::new(AtomicU64::new(0));
         // offset the fork root so shard streams never alias the probe rng
         let mut root = Xoshiro256pp::new(seed ^ 0xD161_7A15_7EAD_5EED);
         let shards = (0..n_shards)
-            .map(|_| DigitalShard {
-                rng: root.fork(),
-                gauss: Gaussian::new(),
+            .map(|i| DigitalShard {
+                stream: EntropyStream::new(
+                    NormalGen::new(root.fork()),
+                    &popts,
+                    &format!("dig-s{i}"),
+                    produced.clone(),
+                ),
                 scratch: ScratchArena::default(),
             })
             .collect();
@@ -136,6 +171,8 @@ impl DigitalBaselineBackend {
             pool,
             shards,
             arena: ScratchArena::default(),
+            popts,
+            produced,
             convolutions: 0,
             weight_draws: 0,
         }
@@ -222,10 +259,13 @@ impl ProbConvBackend for DigitalBaselineBackend {
 
     fn report(&self) -> String {
         format!(
-            "convolutions={} weight_draws={} shards={} (xoshiro256++ / Box-Muller)",
+            "convolutions={} weight_draws={} shards={} prefetch={} produced_draws={} \
+             (xoshiro256++ / Box-Muller)",
             self.convolutions,
             self.weight_draws,
-            self.shards.len()
+            self.shards.len(),
+            self.popts.mode,
+            self.produced.load(Ordering::Relaxed)
         )
     }
 }

@@ -34,6 +34,7 @@ use crate::entropy::Xoshiro256pp;
 use crate::exec::ThreadPool;
 use crate::photonics::{MachineConfig, TapTarget};
 
+pub use crate::entropy::pipeline::{PipelineOptions, PrefetchMode};
 pub use digital::DigitalBaselineBackend;
 pub use mean_field::MeanFieldBackend;
 pub use photonic::PhotonicSimBackend;
@@ -298,15 +299,29 @@ pub fn build_with_pool(
     cfg: &MachineConfig,
     pool: Option<Arc<ThreadPool>>,
 ) -> Box<dyn ProbConvBackend> {
+    build_with_opts(kind, cfg, pool, PipelineOptions::default())
+}
+
+/// Build a backend with full pipeline control: worker pool sharding plus
+/// the decoupled-entropy options (`PrefetchMode::{Off, Sync, On}` and the
+/// block/depth knobs).  See the crate README's Performance section for the
+/// `(seed, threads, prefetch)` reproducibility contract.
+pub fn build_with_opts(
+    kind: BackendKind,
+    cfg: &MachineConfig,
+    pool: Option<Arc<ThreadPool>>,
+    popts: PipelineOptions,
+) -> Box<dyn ProbConvBackend> {
     match kind {
-        BackendKind::Photonic => Box::new(PhotonicSimBackend::with_pool(cfg.clone(), pool)),
-        BackendKind::Digital => Box::new(DigitalBaselineBackend::with_pool(
+        BackendKind::Photonic => Box::new(PhotonicSimBackend::with_opts(cfg.clone(), pool, popts)),
+        BackendKind::Digital => Box::new(DigitalBaselineBackend::with_opts(
             cfg.scale_dac,
             cfg.scale_adc,
             cfg.seed,
             pool,
+            popts,
         )),
-        // a deterministic single pass: nothing worth sharding
+        // a deterministic single pass: nothing worth sharding or prefetching
         BackendKind::MeanField => Box::new(MeanFieldBackend::new(cfg.scale_dac, cfg.scale_adc)),
     }
 }

@@ -18,20 +18,36 @@
 //! `(seed, n_threads)` and statistically equivalent across thread counts.
 //! Without a pool the machine's own streams are used, bit-identical to the
 //! historical per-sample loop.
+//!
+//! ## The entropy pipeline (prefetched weight-plane banks)
+//!
+//! The pipeline modes (`PrefetchMode::Sync`/`On`) mirror the paper's
+//! source/detector split one level higher: each (shard, kernel, tap) gets
+//! its own deterministic weight stream emitting *realized* weights
+//! `gain·(I⁺ − I⁻)` at that tap's programmed operating point.  `On` runs
+//! one background producer per shard that keeps every tap's SPSC block
+//! ring full, so the conv inner loop is a pure FMA over prefetched planes;
+//! `Sync` draws the identical streams inline (the verification fallback).
+//! Banks are generation-keyed against `programs_loaded`: any reprogram or
+//! calibration pass retires the prefetched planes and reseeds the streams.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{BackendKind, ProbConvBackend, SamplePlan};
+use super::{BackendKind, PipelineOptions, ProbConvBackend, SamplePlan};
 use crate::calibration::{calibrate_kernel, CalibrationOptions};
 use crate::entropy::chaotic::ChaoticLightSource;
+use crate::entropy::gaussian::Gaussian;
+use crate::entropy::pipeline::{spawn_group, stream_seed, EntropyStream, WeightGen};
 use crate::entropy::xoshiro::splitmix64;
+use crate::entropy::Xoshiro256pp;
 use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
 use crate::photonics::detector::Detector;
 use crate::photonics::eom::Eom;
-use crate::photonics::machine::{conv_patches_core, im2col_3x3};
+use crate::photonics::machine::{conv_patches_banked, conv_patches_core, im2col_3x3};
 use crate::photonics::{MachineConfig, PhotonicMachine, TapTarget};
 
 /// One worker's private optical front-end: an independent chaotic source,
@@ -77,6 +93,107 @@ impl PhotonicShard {
             }
         }
     }
+
+    /// Bank-aware variant of [`Self::run`]: realized tap weights come from
+    /// this shard's prefetched weight-plane bank (or its synchronous
+    /// fallback streams) instead of inline rail sampling — the conv inner
+    /// loop is a pure FMA over pre-drawn planes.
+    fn run_banked(
+        &mut self,
+        bank: &mut ShardBank,
+        nt: usize,
+        scale_dac: f32,
+        patches: &[f32],
+        plan: SamplePlan,
+        g0: usize,
+        out: &mut [f32],
+    ) {
+        let c = plan.channels;
+        let hw = plan.height * plan.width;
+        let hw9 = hw * 9;
+        let item = c * hw;
+        let rows = out.len() / item;
+        for r in 0..rows {
+            let b = (g0 + r) % plan.batch;
+            for ch in 0..c {
+                let streams = &mut bank.streams[ch * nt..(ch + 1) * nt];
+                conv_patches_banked(
+                    &patches[(b * c + ch) * hw9..(b * c + ch + 1) * hw9],
+                    nt,
+                    scale_dac,
+                    &self.eom,
+                    |k, w| streams[k].fill(w),
+                    &mut self.det,
+                    &mut self.scratch,
+                    &mut out[r * item + ch * hw..r * item + (ch + 1) * hw],
+                );
+            }
+        }
+    }
+}
+
+/// One shard's slice of the weight-plane bank: per (kernel, tap) entropy
+/// streams in kernel-major order, each emitting realized weights at that
+/// tap's programmed operating point.
+struct ShardBank {
+    streams: Vec<EntropyStream<WeightGen>>,
+}
+
+/// The prefetched weight-plane bank of a photonic backend: one
+/// [`ShardBank`] per worker shard, tagged with the machine program
+/// generation it was drawn against.  Any (re)programming bumps
+/// `PhotonicMachine::stats::programs_loaded`, so a stale bank is detected
+/// and rebuilt — with fresh generation-keyed stream seeds — before the next
+/// `sample_conv` (prefetched planes never survive a reprogram).
+struct WeightBank {
+    shards: Vec<ShardBank>,
+    generation: u64,
+}
+
+impl WeightBank {
+    fn build(
+        machine: &PhotonicMachine,
+        n_shards: usize,
+        popts: &PipelineOptions,
+        produced: &Arc<AtomicU64>,
+    ) -> Self {
+        let generation = machine.stats.programs_loaded;
+        let nt = machine.num_taps();
+        let seed = machine.cfg.seed;
+        // the bank holds shards x kernels x taps streams, each buffering up
+        // to (depth + 2) blocks: cap the per-stream block so prefetched
+        // memory stays bounded (block size does not affect draw order, so
+        // the sync/on equivalence is untouched)
+        let popts = &PipelineOptions {
+            block: popts.block.min(1024),
+            ..*popts
+        };
+        let shards = (0..n_shards)
+            .map(|s| {
+                // one generator per (kernel, tap), one producer thread per
+                // shard: spawn_group multiplexes all of this shard's rings
+                let gens: Vec<WeightGen> = (0..machine.bank_len())
+                    .flat_map(|kernel| (0..nt).map(move |tap| (kernel, tap)))
+                    .map(|(kernel, tap)| {
+                        let flat = machine.kernel(kernel).flat()[tap];
+                        let sseed = stream_seed(seed, generation, s, kernel, tap);
+                        WeightGen {
+                            rng: Xoshiro256pp::new(sseed),
+                            gauss: Gaussian::new(),
+                            p_plus: flat.p_plus,
+                            p_minus: flat.p_minus,
+                            dof: flat.dof,
+                            gain_eff: flat.gain_eff,
+                        }
+                    })
+                    .collect();
+                ShardBank {
+                    streams: spawn_group(gens, popts, &format!("pho-s{s}"), produced.clone()),
+                }
+            })
+            .collect();
+        Self { shards, generation }
+    }
 }
 
 /// Deterministic per-shard optical front-ends for a machine configuration.
@@ -103,6 +220,12 @@ pub struct PhotonicSimBackend {
     pool: Option<Arc<ThreadPool>>,
     shards: Vec<PhotonicShard>,
     arena: ScratchArena,
+    popts: PipelineOptions,
+    /// Prefetched weight-plane banks (pipeline modes only; rebuilt lazily
+    /// whenever the machine program generation moves).
+    bank: Option<WeightBank>,
+    /// Draws produced by background entropy producers (prefetch on only).
+    produced: Arc<AtomicU64>,
 }
 
 impl PhotonicSimBackend {
@@ -114,8 +237,25 @@ impl PhotonicSimBackend {
     /// and bit-identical to the historical loop when `None` or
     /// single-worker).
     pub fn with_pool(cfg: MachineConfig, pool: Option<Arc<ThreadPool>>) -> Self {
+        Self::with_opts(cfg, pool, PipelineOptions::default())
+    }
+
+    /// Full-control constructor: pool sharding plus the decoupled-entropy
+    /// pipeline options.  With `PrefetchMode::Off` (default) the entropy
+    /// organization is the historical one (machine streams sequentially,
+    /// per-shard sources when sharded).  The pipeline modes (`Sync`/`On`)
+    /// switch to per-(shard, kernel, tap) weight streams — `Sync` draws
+    /// them inline, `On` prefetches them via background producers — and are
+    /// bitwise identical to *each other* for a fixed `(seed, threads)`.
+    pub fn with_opts(
+        cfg: MachineConfig,
+        pool: Option<Arc<ThreadPool>>,
+        popts: PipelineOptions,
+    ) -> Self {
         let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
-        let shards = if n_shards > 1 {
+        let shards = if n_shards > 1 || popts.mode.banked() {
+            // banked modes use a shard front-end (EOM/detector/scratch)
+            // even sequentially, so build at least one
             build_shards(&cfg, n_shards)
         } else {
             Vec::new()
@@ -126,7 +266,30 @@ impl PhotonicSimBackend {
             pool,
             shards,
             arena: ScratchArena::default(),
+            popts,
+            bank: None,
+            produced: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// (Re)build the weight-plane bank if the machine program moved since
+    /// it was last drawn: any `load_kernel`/`reprogram_kernel`/calibration
+    /// pass bumps `programs_loaded`, which both invalidates prefetched
+    /// planes and reseeds the per-tap streams (generation-keyed).
+    fn ensure_bank(&mut self) {
+        let generation = self.machine.stats.programs_loaded;
+        if let Some(bank) = &self.bank {
+            if bank.generation == generation {
+                return;
+            }
+        }
+        self.bank = None; // drop first: joins any old producers
+        self.bank = Some(WeightBank::build(
+            &self.machine,
+            self.shards.len().max(1),
+            &self.popts,
+            &self.produced,
+        ));
     }
 
     pub fn with_defaults(seed: u64) -> Self {
@@ -154,6 +317,11 @@ impl ProbConvBackend for PhotonicSimBackend {
     }
 
     fn program(&mut self, kernels: &[Vec<TapTarget>], calibrate: bool) -> Result<()> {
+        // retire any prefetched weight planes immediately: they were drawn
+        // against the outgoing program (lazy rebuild would catch it too,
+        // via the generation check, but the producers would keep drawing
+        // stale planes in the meantime)
+        self.bank = None;
         self.machine.clear_bank();
         for targets in kernels {
             let idx = self.machine.load_kernel(targets);
@@ -175,7 +343,11 @@ impl ProbConvBackend for PhotonicSimBackend {
     fn sample_conv(&mut self, plan: &SamplePlan, x: &[f32], out: &mut [f32]) -> Result<()> {
         plan.check(x.len(), out.len(), self.machine.bank_len())?;
         let item = plan.item_size();
-        if self.shards.len() <= 1 || self.pool.is_none() {
+        let banked = self.popts.mode.banked();
+        if banked {
+            self.ensure_bank();
+        }
+        if !banked && (self.shards.len() <= 1 || self.pool.is_none()) {
             // Sample-major, batch-minor on the machine's own streams: the
             // exact RNG consumption order of the old per-sample engine
             // loop, so outputs are bit-identical.
@@ -210,36 +382,61 @@ impl ProbConvBackend for PhotonicSimBackend {
         }
         let patches: &[f32] = patches;
         let grid = plan.n_samples * plan.batch;
-        let machine = &self.machine;
         let plan_v = *plan;
-        let ranges = super::shard_ranges(grid, self.shards.len());
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.shards.len());
-        let mut rest = &mut out[..grid * item];
-        for (shard, range) in self.shards.iter_mut().zip(ranges) {
-            if range.is_empty() {
-                continue;
+        let nt = self.machine.num_taps();
+        let scale_dac = self.machine.cfg.scale_dac;
+        if banked && (self.shards.len() <= 1 || self.pool.is_none()) {
+            // sequential banked path: shard 0's front-end + bank streams
+            let shard = &mut self.shards[0];
+            let sb = &mut self.bank.as_mut().unwrap().shards[0];
+            shard.run_banked(sb, nt, scale_dac, patches, plan_v, 0, &mut out[..grid * item]);
+        } else {
+            let machine = &self.machine;
+            let ranges = super::shard_ranges(grid, self.shards.len());
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(self.shards.len());
+            let mut rest = &mut out[..grid * item];
+            let mut banks = self
+                .bank
+                .as_mut()
+                .map(|b| b.shards.iter_mut())
+                .into_iter()
+                .flatten();
+            for (shard, range) in self.shards.iter_mut().zip(ranges) {
+                let sb = banks.next();
+                if range.is_empty() {
+                    continue;
+                }
+                let (head, tail) = rest.split_at_mut(range.len() * item);
+                rest = tail;
+                let g0 = range.start;
+                if banked {
+                    let sb = sb.expect("bank has one shard bank per shard");
+                    jobs.push(Box::new(move || {
+                        shard.run_banked(sb, nt, scale_dac, patches, plan_v, g0, head);
+                    }));
+                } else {
+                    jobs.push(Box::new(move || {
+                        shard.run(machine, patches, plan_v, g0, head);
+                    }));
+                }
             }
-            let (head, tail) = rest.split_at_mut(range.len() * item);
-            rest = tail;
-            let g0 = range.start;
-            jobs.push(Box::new(move || {
-                shard.run(machine, patches, plan_v, g0, head);
-            }));
+            self.pool.as_ref().unwrap().scope_run(jobs);
         }
-        self.pool.as_ref().unwrap().scope_run(jobs);
-        // account the sharded work on the machine's optical clock
+        // account the work on the machine's optical clock
         let convs = (grid * item) as u64;
-        let nt = self.machine.num_taps() as u64;
         self.machine.stats.convolutions += convs;
-        self.machine.stats.clock.advance_symbols(convs * nt);
+        self.machine.stats.clock.advance_symbols(convs * nt as u64);
         Ok(())
     }
 
     fn report(&self) -> String {
         format!(
-            "{} shards={}",
+            "{} shards={} prefetch={} produced_draws={}",
             self.machine.throughput_report(),
-            self.shards.len().max(1)
+            self.shards.len().max(1),
+            self.popts.mode,
+            self.produced.load(Ordering::Relaxed)
         )
     }
 }
@@ -247,6 +444,7 @@ impl ProbConvBackend for PhotonicSimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::PrefetchMode;
     use crate::util::mathstat::Welford;
 
     fn quiet(seed: u64) -> PhotonicSimBackend {
@@ -299,6 +497,67 @@ mod tests {
             err_closed < err_open + 0.01,
             "open {err_open} closed {err_closed}"
         );
+    }
+
+    fn banked_backend(seed: u64, mode: PrefetchMode) -> PhotonicSimBackend {
+        PhotonicSimBackend::with_opts(
+            MachineConfig {
+                rx_noise: 0.0,
+                actuator_sigma: 0.0,
+                actuator_jitter: 0.0,
+                ripple_rms_ps: 0.0,
+                seed,
+                ..MachineConfig::default()
+            },
+            None,
+            PipelineOptions {
+                mode,
+                block: 128,
+                depth: 2,
+            },
+        )
+    }
+
+    #[test]
+    fn banked_sync_and_prefetched_agree_bitwise() {
+        let kernels = vec![vec![TapTarget { mu: 0.4, sigma: 0.3 }; 9]; 2];
+        let plan = SamplePlan::new(3, 2, 2, 4, 4);
+        let x: Vec<f32> = (0..plan.sample_size()).map(|i| 0.25 * (i % 5) as f32).collect();
+        let run = |mode| {
+            let mut be = banked_backend(31, mode);
+            be.program(&kernels, false).unwrap();
+            let mut out = vec![0.0f32; plan.total_size()];
+            be.sample_conv(&plan, &x, &mut out).unwrap();
+            out
+        };
+        let sync = run(PrefetchMode::Sync);
+        let piped = run(PrefetchMode::On);
+        assert_eq!(sync, piped);
+        assert!(sync.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn weight_bank_invalidated_on_reprogram() {
+        let plan = SamplePlan::new(8, 1, 1, 4, 4);
+        let x = vec![2.0f32; plan.sample_size()];
+        let mean_of = |out: &[f32]| out.iter().map(|&v| v as f64).sum::<f64>() / out.len() as f64;
+        for mode in [PrefetchMode::Sync, PrefetchMode::On] {
+            let mut be = banked_backend(5, mode);
+            be.program(&[vec![TapTarget { mu: 0.6, sigma: 0.2 }; 9]], false).unwrap();
+            let mut hi = vec![0.0f32; plan.total_size()];
+            be.sample_conv(&plan, &x, &mut hi).unwrap();
+            // reprogram to a strongly negative kernel: prefetched planes
+            // drawn against the old program must not leak into the output
+            be.program(&[vec![TapTarget { mu: -0.6, sigma: 0.2 }; 9]], false).unwrap();
+            let mut lo = vec![0.0f32; plan.total_size()];
+            be.sample_conv(&plan, &x, &mut lo).unwrap();
+            assert!(
+                mean_of(&hi) > 0.5 && mean_of(&lo) < -0.5,
+                "{mode}: hi {} lo {}",
+                mean_of(&hi),
+                mean_of(&lo)
+            );
+        }
     }
 
     #[test]

@@ -33,8 +33,22 @@ impl Predictive {
     /// Aggregate a flat logits buffer of `n_samples * n_classes`.
     pub fn from_flat_logits(flat: &[f32], n_classes: usize) -> Self {
         assert_eq!(flat.len() % n_classes, 0);
-        let logits: Vec<Vec<f32>> = flat.chunks(n_classes).map(|c| c.to_vec()).collect();
-        Self::from_logits(&logits)
+        let probs: Vec<Vec<f32>> = flat.chunks(n_classes).map(softmax).collect();
+        Self::from_probs(probs)
+    }
+
+    /// Aggregate one image's logits out of per-pass batch buffers: pass
+    /// `p`'s logits for the image live at
+    /// `passes[p][image*n_classes..(image+1)*n_classes]`.  Strided view —
+    /// the serving engine's per-request hot path, with no per-pass logit
+    /// row copies (`Predictive` still owns its probability rows; those are
+    /// the result, not staging).
+    pub fn from_batched_logits(passes: &[Vec<f32>], image: usize, n_classes: usize) -> Self {
+        let probs: Vec<Vec<f32>> = passes
+            .iter()
+            .map(|pass| softmax(&pass[image * n_classes..(image + 1) * n_classes]))
+            .collect();
+        Self::from_probs(probs)
     }
 
     pub fn from_probs(probs: Vec<Vec<f32>>) -> Self {
@@ -110,6 +124,24 @@ mod tests {
         let b = Predictive::from_logits(&[vec![1.0, 0.0, 0.5], vec![0.2, 2.0, -1.0]]);
         assert_eq!(a.predicted, b.predicted);
         assert!((a.mutual_information - b.mutual_information).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_batched_matches_per_image_rows() {
+        // two passes x three images x two classes
+        let passes = vec![
+            vec![2.0, 0.0, 0.1, 0.9, -1.0, 1.0],
+            vec![1.5, 0.5, 0.8, 0.2, -0.5, 0.5],
+        ];
+        for i in 0..3 {
+            let rows: Vec<Vec<f32>> =
+                passes.iter().map(|p| p[i * 2..(i + 1) * 2].to_vec()).collect();
+            let a = Predictive::from_batched_logits(&passes, i, 2);
+            let b = Predictive::from_logits(&rows);
+            assert_eq!(a.predicted, b.predicted, "image {i}");
+            assert_eq!(a.probs, b.probs, "image {i}");
+            assert!((a.mutual_information - b.mutual_information).abs() < 1e-12);
+        }
     }
 
     #[test]

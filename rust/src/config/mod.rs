@@ -18,6 +18,12 @@
 //! # sampling worker threads per engine: 1 = sequential, 0 = one per core;
 //! # results are deterministic for a fixed (seed, threads)
 //! threads = 4
+//! # decoupled entropy pipeline: off (inline draws), sync (banked streams,
+//! # drawn at consumption), on (background producers + SPSC block rings);
+//! # sync and on are bitwise identical for a fixed (seed, threads)
+//! entropy_prefetch = "on"
+//! # draws per prefetched entropy block
+//! entropy_block = 4096
 //!
 //! [batcher]
 //! max_batch = 8

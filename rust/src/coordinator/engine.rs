@@ -7,7 +7,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{self, BackendKind, EpsSource, ProbConvBackend, SamplePlan};
+use crate::backend::{
+    self, BackendKind, EpsSource, PipelineOptions, PrefetchMode, ProbConvBackend, SamplePlan,
+};
 use crate::bnn::{Decision, Predictive, UncertaintyPolicy};
 use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
@@ -71,6 +73,14 @@ pub struct EngineConfig {
     /// `1` = sequential in-thread sampling (bit-compatible with the
     /// pre-pool engine); `0` = one worker per available core.
     pub threads: usize,
+    /// Decoupled entropy pipeline: `Off` draws entropy inline in the
+    /// historical stream organization; `Sync` switches to the pipeline's
+    /// banked streams drawn synchronously; `On` additionally prefetches
+    /// them with background producer threads.  `Sync` and `On` are bitwise
+    /// identical for a fixed `(seed, threads)`.
+    pub entropy_prefetch: PrefetchMode,
+    /// Draws per prefetched entropy block (ring transfer granularity).
+    pub entropy_block: usize,
     pub seed: u64,
 }
 
@@ -84,6 +94,8 @@ impl Default for EngineConfig {
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
             threads: 1,
+            entropy_prefetch: PrefetchMode::Off,
+            entropy_block: 4096,
             seed: 42,
         }
     }
@@ -137,18 +149,26 @@ impl Engine {
         mcfg.seed = cfg.seed;
         let threads = cfg.resolved_threads();
         let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
-        let mut backend = backend::build_with_pool(cfg.mode.backend_kind(), &mcfg, pool);
+        let popts = PipelineOptions {
+            mode: cfg.entropy_prefetch,
+            block: cfg.entropy_block,
+            ..PipelineOptions::default()
+        }
+        .sanitized();
+        let mut backend = backend::build_with_opts(cfg.mode.backend_kind(), &mcfg, pool, popts);
         let kernels = params.prob_kernels()?;
         let t0 = Instant::now();
         backend.program(&kernels, cfg.calibrate)?;
         log_info!(
-            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={}, threads={})",
+            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={}, \
+             threads={}, prefetch={})",
             arts.meta.dataset,
             kernels.len(),
             backend.name(),
             t0.elapsed().as_secs_f64(),
             cfg.calibrate,
-            threads
+            threads,
+            popts.mode
         );
         Ok(Self {
             noise: EpsSource::chaotic(cfg.seed.wrapping_add(77), cfg.noise_bw_ghz),
@@ -212,11 +232,9 @@ impl Engine {
         let nc = self.n_classes();
         let results = (0..n)
             .map(|i| {
-                let rows: Vec<Vec<f32>> = logits
-                    .iter()
-                    .map(|pass| pass[i * nc..(i + 1) * nc].to_vec())
-                    .collect();
-                let predictive = Predictive::from_logits(&rows);
+                // strided aggregation straight off the pass buffers — no
+                // per-image re-staging of N logit rows
+                let predictive = Predictive::from_batched_logits(&logits, i, nc);
                 let decision = self.cfg.policy.decide(&predictive);
                 ClassifyResult {
                     predictive,

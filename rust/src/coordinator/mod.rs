@@ -29,7 +29,7 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use crate::backend::BackendKind;
+pub use crate::backend::{BackendKind, PrefetchMode};
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
 pub use router::Router;

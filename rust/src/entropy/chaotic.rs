@@ -189,6 +189,38 @@ impl ChaoticLightSource {
     }
 }
 
+/// Bulk *realized-weight* draws for one differential tap: per slot, one
+/// intensity at `p_plus` (if lit) then one at `p_minus` (if lit) from the
+/// same stream, combined as `gain_eff * (I⁺ − I⁻)`.  This is the block API
+/// of the entropy pipeline: a free-running producer thread calls it against
+/// its own `(rng, gauss)` stream exactly as the synchronous fallback does,
+/// so the emitted weight sequence is identical either way.  The stream
+/// consumption per slot (plus-then-minus, skipping dark rails) matches the
+/// conv core's historical rail sampling order.
+pub fn fill_realized_weights<R: crate::entropy::BitSource>(
+    rng: &mut R,
+    gauss: &mut Gaussian,
+    p_plus: f64,
+    p_minus: f64,
+    dof: f64,
+    gain_eff: f64,
+    out: &mut [f64],
+) {
+    for slot in out {
+        let plus = if p_plus > 0.0 {
+            sample_intensity(rng, gauss, p_plus, dof)
+        } else {
+            0.0
+        };
+        let minus = if p_minus > 0.0 {
+            sample_intensity(rng, gauss, p_minus, dof)
+        } else {
+            0.0
+        };
+        *slot = gain_eff * (plus - minus);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +328,44 @@ mod tests {
         for i in 0..300 {
             assert_eq!(plus[i], b.intensity_dof(2, pp, dof), "plus {i}");
             assert_eq!(minus[i], b.intensity_dof(2, pm, dof), "minus {i}");
+        }
+    }
+
+    #[test]
+    fn realized_weight_fill_matches_scalar_rail_order_and_moments() {
+        let (pp, pm, dof, ge) = (1.2, 0.4, 5.0, 0.8);
+        let mut rng = Xoshiro256pp::new(23);
+        let mut gauss = Gaussian::new();
+        let mut w = vec![0.0f64; 40_000];
+        fill_realized_weights(&mut rng, &mut gauss, pp, pm, dof, ge, &mut w);
+
+        // same stream, scalar plus-then-minus draws -> identical values
+        let mut rng2 = Xoshiro256pp::new(23);
+        let mut g2 = Gaussian::new();
+        for (i, &v) in w.iter().take(200).enumerate() {
+            let plus = sample_intensity(&mut rng2, &mut g2, pp, dof);
+            let minus = sample_intensity(&mut rng2, &mut g2, pm, dof);
+            assert_eq!(v, ge * (plus - minus), "slot {i}");
+        }
+
+        let mut st = Welford::new();
+        for &v in &w {
+            st.push(v);
+        }
+        let want_mu = ge * (pp - pm);
+        let want_sd = ge * ((pp * pp + pm * pm) / dof).sqrt();
+        assert!((st.mean() - want_mu).abs() < 0.02, "mean {}", st.mean());
+        assert!((st.std() - want_sd).abs() < 0.02, "std {}", st.std());
+
+        // a dark rail consumes no draws: single-rail fill == plus-only scalar
+        let mut a = Xoshiro256pp::new(29);
+        let mut ga = Gaussian::new();
+        let mut single = vec![0.0f64; 64];
+        fill_realized_weights(&mut a, &mut ga, pp, 0.0, dof, ge, &mut single);
+        let mut b = Xoshiro256pp::new(29);
+        let mut gb = Gaussian::new();
+        for (i, &v) in single.iter().enumerate() {
+            assert_eq!(v, ge * sample_intensity(&mut b, &mut gb, pp, dof), "slot {i}");
         }
     }
 

@@ -18,15 +18,20 @@
 //! * [`chaotic`] — the ASE chaotic-light source model used by the photonic
 //!   machine simulator and as the serving-time noise provider,
 //! * [`nist`] — seven tests from NIST SP800-22 (the paper cites passing
-//!   this battery), runnable over any bit stream.
+//!   this battery), runnable over any bit stream,
+//! * [`pipeline`] — the decoupled entropy pipeline: free-running producer
+//!   threads filling SPSC block rings (the paper's source/detector split),
+//!   with a bitwise-equivalent synchronous fallback.
 
 pub mod chaotic;
 pub mod gamma;
 pub mod gaussian;
 pub mod nist;
+pub mod pipeline;
 pub mod xoshiro;
 
 pub use chaotic::ChaoticLightSource;
+pub use pipeline::{PipelineOptions, PrefetchMode};
 pub use xoshiro::Xoshiro256pp;
 
 /// Common interface for anything that yields uniform 64-bit words.

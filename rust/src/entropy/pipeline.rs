@@ -1,0 +1,534 @@
+//! Decoupled entropy pipeline: background producers, block rings, and the
+//! synchronous fallback.
+//!
+//! The paper's performance story is architectural: chaotic light produces
+//! randomness *continuously at line rate*, so the compute path never waits
+//! on entropy — the source is a free-running producer, the detector merely
+//! consumes.  The simulator historically re-coupled the two: every
+//! `sample_conv` shard synthesized its Gamma/Gaussian draws inline, on the
+//! same thread as the convolution arithmetic.  This module restores the
+//! split.
+//!
+//! An [`EntropyStream`] is a sequential stream of `f64` entropy draws with
+//! two interchangeable engines:
+//!
+//! * **Sync** — draws happen inline at `fill` time on the caller's thread
+//!   (the `prefetch = off`/`sync` fallback; also what the digital backend's
+//!   historical inline path is);
+//! * **Piped** — a dedicated producer thread owns the generator and
+//!   continuously fills fixed-size blocks into a lock-free SPSC
+//!   [`crate::exec::ring`]; `fill` copies out of pre-drawn blocks.
+//!
+//! Because the generator state (PRNG + Gaussian spare) lives with exactly
+//! one owner and blocks traverse the ring in FIFO order, the sequence of
+//! draws a consumer observes is **bitwise identical** in both engines — the
+//! testable equivalence that makes prefetching safe to enable in
+//! production.  Spent blocks are recycled to the producer over a second
+//! ring, so the steady state allocates nothing.
+//!
+//! Generators are small: [`NormalGen`] emits standard normals (the digital
+//! backend's weight planes, Box–Muller moved off the hot thread) and
+//! [`WeightGen`] emits realized photonic tap weights
+//! `gain·(I⁺ − I⁻)` at a programmed `(P⁺, P⁻, M)` operating point (the
+//! prefetched weight-plane banks; invalidated by reprogramming — see
+//! `backend::photonic`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::chaotic::fill_realized_weights;
+use super::gaussian::Gaussian;
+use super::xoshiro::{splitmix64, Xoshiro256pp};
+use crate::exec::ring::{self, Consumer, Producer, PushError};
+use crate::exec::CancelToken;
+
+/// How `sample_conv` obtains its entropy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefetchMode {
+    /// Inline draws in the historical stream organization — bit-identical
+    /// to the pre-pipeline engine.  The default.
+    #[default]
+    Off,
+    /// Pipeline stream organization, drawn synchronously at consumption
+    /// time (the fallback the prefetch-on path is verified against).
+    Sync,
+    /// Pipeline stream organization with background producer threads and
+    /// SPSC block rings — entropy production off the compute threads.
+    On,
+}
+
+impl PrefetchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchMode::Off => "off",
+            PrefetchMode::Sync => "sync",
+            PrefetchMode::On => "on",
+        }
+    }
+
+    /// Parse a CLI/config token (`off|sync|on`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" | "inline" => Ok(PrefetchMode::Off),
+            "sync" => Ok(PrefetchMode::Sync),
+            "on" | "async" | "pipelined" => Ok(PrefetchMode::On),
+            other => Err(anyhow!("entropy prefetch must be off|sync|on, got {other}")),
+        }
+    }
+
+    /// True when the pipeline's banked stream organization is in effect
+    /// (either engine); false for the historical inline path.
+    pub fn banked(&self) -> bool {
+        !matches!(self, PrefetchMode::Off)
+    }
+}
+
+impl std::fmt::Display for PrefetchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Pipeline tuning knobs, carried from config/CLI into the backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineOptions {
+    pub mode: PrefetchMode,
+    /// Draws per entropy block (the ring transfer granularity).
+    pub block: usize,
+    /// Blocks per SPSC ring (how far a producer may run ahead).
+    pub depth: usize,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self {
+            mode: PrefetchMode::Off,
+            block: 4096,
+            depth: 4,
+        }
+    }
+}
+
+impl PipelineOptions {
+    /// Clamp degenerate knob values (a zero-length block would spin forever).
+    pub fn sanitized(mut self) -> Self {
+        self.block = self.block.clamp(64, 1 << 22);
+        self.depth = self.depth.clamp(2, 1024);
+        self
+    }
+}
+
+/// A deterministic sequential generator of `f64` entropy draws.  Exactly one
+/// owner (the sync stream or a producer thread) ever advances it.
+pub trait BlockGen: Send + 'static {
+    fn fill(&mut self, out: &mut [f64]);
+}
+
+/// Standard normals from a forked xoshiro256++ stream — the digital
+/// backend's per-shard weight-plane generator.
+pub struct NormalGen {
+    pub rng: Xoshiro256pp,
+    pub gauss: Gaussian,
+}
+
+impl NormalGen {
+    pub fn new(rng: Xoshiro256pp) -> Self {
+        Self {
+            rng,
+            gauss: Gaussian::new(),
+        }
+    }
+}
+
+impl BlockGen for NormalGen {
+    fn fill(&mut self, out: &mut [f64]) {
+        self.gauss.fill_f64(&mut self.rng, out);
+    }
+}
+
+/// Realized photonic tap weights at one programmed operating point — the
+/// weight-plane bank generator.  One stream per (shard, kernel, tap),
+/// reseeded per program generation, so prefetched planes can never survive
+/// a reprogram.
+pub struct WeightGen {
+    pub rng: Xoshiro256pp,
+    pub gauss: Gaussian,
+    pub p_plus: f64,
+    pub p_minus: f64,
+    pub dof: f64,
+    pub gain_eff: f64,
+}
+
+impl BlockGen for WeightGen {
+    fn fill(&mut self, out: &mut [f64]) {
+        fill_realized_weights(
+            &mut self.rng,
+            &mut self.gauss,
+            self.p_plus,
+            self.p_minus,
+            self.dof,
+            self.gain_eff,
+            out,
+        );
+    }
+}
+
+/// Derive the deterministic seed of one pipeline stream.  Both engines use
+/// the same derivation, which is half of the prefetch-on/off equivalence;
+/// mixing in the program generation is the bank-invalidation half.
+pub fn stream_seed(base: u64, generation: u64, shard: usize, kernel: usize, tap: usize) -> u64 {
+    let mut st = base ^ 0x9E6B_1A57_E17B_A2C3;
+    let _ = splitmix64(&mut st);
+    st ^= generation.wrapping_mul(0xA076_1D64_78BD_642F);
+    let _ = splitmix64(&mut st);
+    st ^= (shard as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB);
+    let _ = splitmix64(&mut st);
+    st ^= ((kernel as u64) << 32) ^ tap as u64;
+    splitmix64(&mut st)
+}
+
+/// One entropy block in flight.
+type Block = Vec<f64>;
+
+/// Handle owning a producer thread: cancels and joins on drop, so dropping
+/// a backend (or invalidating a bank) can never leak a spinning thread.
+/// Shared (`Arc`) by every stream the thread produces for; the last stream
+/// dropped performs the join.
+struct ProducerHandle {
+    cancel: CancelToken,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Drop for ProducerHandle {
+    fn drop(&mut self) {
+        self.cancel.cancel();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Consumer half of a piped stream: pops pre-drawn blocks, recycles spent
+/// ones, and tracks a read cursor inside the current block.  (Public only
+/// because it names an [`EntropyStream`] variant; not constructible
+/// directly.)
+pub struct Piped {
+    rx: Consumer<Block>,
+    recycle: Producer<Block>,
+    cur: Block,
+    pos: usize,
+    // declared last: the ring handles above drop (and disconnect) first,
+    // unblocking the producer before any join in ProducerHandle::drop
+    _producer: Arc<ProducerHandle>,
+}
+
+impl Piped {
+    fn fill(&mut self, out: &mut [f64]) {
+        let mut done = 0usize;
+        while done < out.len() {
+            if self.pos == self.cur.len() {
+                let spent = std::mem::take(&mut self.cur);
+                if spent.capacity() > 0 {
+                    // hand the allocation back; a full/closed recycle ring
+                    // just drops it (allocation-free steady state, not a
+                    // correctness dependency)
+                    let _ = self.recycle.try_push(spent);
+                }
+                self.cur = self
+                    .rx
+                    .pop_blocking()
+                    .expect("entropy producer terminated mid-stream");
+                self.pos = 0;
+            }
+            let n = (out.len() - done).min(self.cur.len() - self.pos);
+            out[done..done + n].copy_from_slice(&self.cur[self.pos..self.pos + n]);
+            done += n;
+            self.pos += n;
+        }
+    }
+}
+
+/// Producer-side state of one stream inside a producer group.
+struct StreamSlot<G> {
+    gen: G,
+    tx: Producer<Block>,
+    recycle: Consumer<Block>,
+    /// A drawn-but-unpushed block (its draws are already committed to the
+    /// stream sequence; it is pushed as soon as the ring has room).
+    pending: Option<Block>,
+    /// Consumer disconnected — stop producing for this stream.
+    done: bool,
+}
+
+/// The free-running group producer: round-robin over the group's streams,
+/// filling whichever ring has room, until cancelled or every consumer has
+/// disconnected.  One thread serves many rings, so a photonic shard's full
+/// (kernel × tap) bank costs one producer thread, not dozens.
+fn group_producer_loop<G: BlockGen>(
+    mut slots: Vec<StreamSlot<G>>,
+    block_len: usize,
+    cancel: CancelToken,
+    produced: Arc<AtomicU64>,
+) {
+    // escalate the idle sleep (50us -> 5ms) while every ring stays full, so
+    // a saturated pipeline on an idle server costs ~no CPU; any progress
+    // resets to the short sleep for low refill latency under load
+    let mut idle_us = 50u64;
+    loop {
+        if cancel.is_cancelled() {
+            return;
+        }
+        let mut progressed = false;
+        let mut all_done = true;
+        for slot in &mut slots {
+            if slot.done {
+                continue;
+            }
+            all_done = false;
+            if slot.pending.is_none() && slot.tx.len() < slot.tx.capacity() {
+                let mut block = slot.recycle.try_pop().unwrap_or_default();
+                block.resize(block_len, 0.0);
+                slot.gen.fill(&mut block);
+                produced.fetch_add(block_len as u64, Ordering::Relaxed);
+                slot.pending = Some(block);
+            }
+            if let Some(b) = slot.pending.take() {
+                match slot.tx.try_push(b) {
+                    Ok(()) => progressed = true,
+                    Err(PushError::Full(back)) => slot.pending = Some(back),
+                    Err(PushError::Disconnected(_)) => slot.done = true,
+                }
+            }
+        }
+        if all_done {
+            return;
+        }
+        if progressed {
+            idle_us = 50;
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(idle_us));
+            idle_us = (idle_us * 2).min(5_000);
+        }
+    }
+}
+
+/// A deterministic entropy stream with interchangeable engines (see the
+/// module docs).  `fill` hands out the next `out.len()` draws of the
+/// stream; the draw sequence is identical whichever engine runs it.
+pub enum EntropyStream<G: BlockGen> {
+    Sync(G),
+    Piped(Piped),
+}
+
+impl<G: BlockGen> EntropyStream<G> {
+    /// Build one stream for `opts.mode`: `On` spawns a dedicated producer
+    /// thread, anything else keeps the generator inline.  `produced`
+    /// accumulates producer-side draw counts (pipeline telemetry; shared
+    /// across the streams of one backend).
+    pub fn new(gen: G, opts: &PipelineOptions, label: &str, produced: Arc<AtomicU64>) -> Self {
+        spawn_group(vec![gen], opts, label, produced)
+            .pop()
+            .expect("one generator in, one stream out")
+    }
+
+    /// The next `out.len()` draws of the stream, in draw order.
+    pub fn fill(&mut self, out: &mut [f64]) {
+        match self {
+            EntropyStream::Sync(gen) => gen.fill(out),
+            EntropyStream::Piped(p) => p.fill(out),
+        }
+    }
+
+    pub fn is_piped(&self) -> bool {
+        matches!(self, EntropyStream::Piped(_))
+    }
+}
+
+/// Build a group of streams sharing one producer thread (`PrefetchMode::On`)
+/// or all-inline (`Off`/`Sync`).  Stream `i` of the result is backed by
+/// `gens[i]`; each has its own SPSC ring pair, so consumption on one stream
+/// never reorders another.
+pub fn spawn_group<G: BlockGen>(
+    gens: Vec<G>,
+    opts: &PipelineOptions,
+    label: &str,
+    produced: Arc<AtomicU64>,
+) -> Vec<EntropyStream<G>> {
+    if opts.mode != PrefetchMode::On {
+        return gens.into_iter().map(EntropyStream::Sync).collect();
+    }
+    let opts = opts.sanitized();
+    let cancel = CancelToken::new();
+    let mut slots = Vec::with_capacity(gens.len());
+    let mut consumers = Vec::with_capacity(gens.len());
+    for gen in gens {
+        let (tx, rx) = ring::ring::<Block>(opts.depth);
+        let (recycle_tx, recycle_rx) = ring::ring::<Block>(opts.depth);
+        slots.push(StreamSlot {
+            gen,
+            tx,
+            recycle: recycle_rx,
+            pending: None,
+            done: false,
+        });
+        consumers.push((rx, recycle_tx));
+    }
+    let cancel2 = cancel.clone();
+    let block = opts.block;
+    let thread = std::thread::Builder::new()
+        .name(format!("pbm-entropy-{label}"))
+        .spawn(move || group_producer_loop(slots, block, cancel2, produced))
+        .expect("spawn entropy producer");
+    let handle = Arc::new(ProducerHandle {
+        cancel,
+        thread: Some(thread),
+    });
+    consumers
+        .into_iter()
+        .map(|(rx, recycle)| {
+            EntropyStream::Piped(Piped {
+                rx,
+                recycle,
+                cur: Vec::new(),
+                pos: 0,
+                _producer: handle.clone(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(mode: PrefetchMode, block: usize, depth: usize) -> PipelineOptions {
+        PipelineOptions { mode, block, depth }
+    }
+
+    #[test]
+    fn prefetch_mode_parse_roundtrip() {
+        for m in [PrefetchMode::Off, PrefetchMode::Sync, PrefetchMode::On] {
+            assert_eq!(PrefetchMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(PrefetchMode::parse("maybe").is_err());
+        assert!(PrefetchMode::Off == PrefetchMode::default());
+        assert!(!PrefetchMode::Off.banked() && PrefetchMode::Sync.banked());
+    }
+
+    #[test]
+    fn sanitize_clamps_degenerate_knobs() {
+        let o = opts(PrefetchMode::On, 0, 0).sanitized();
+        assert!(o.block >= 64 && o.depth >= 2);
+    }
+
+    #[test]
+    fn piped_normals_match_sync_bitwise_across_odd_fills() {
+        let produced = Arc::new(AtomicU64::new(0));
+        let mut piped = EntropyStream::new(
+            NormalGen::new(Xoshiro256pp::new(42)),
+            &opts(PrefetchMode::On, 128, 3),
+            "test-normals",
+            produced.clone(),
+        );
+        assert!(piped.is_piped());
+        let mut sync = EntropyStream::new(
+            NormalGen::new(Xoshiro256pp::new(42)),
+            &opts(PrefetchMode::Sync, 128, 3),
+            "unused",
+            Arc::new(AtomicU64::new(0)),
+        );
+        // fill sizes straddling block boundaries in every way
+        for len in [1usize, 7, 127, 128, 129, 300, 1000] {
+            let mut a = vec![0.0f64; len];
+            let mut b = vec![0.0f64; len];
+            piped.fill(&mut a);
+            sync.fill(&mut b);
+            assert_eq!(a, b, "fill of {len}");
+        }
+        assert!(produced.load(Ordering::Relaxed) >= 1692, "producer ran ahead");
+    }
+
+    #[test]
+    fn piped_weight_stream_matches_sync_bitwise() {
+        let mk = |mode| {
+            EntropyStream::new(
+                WeightGen {
+                    rng: Xoshiro256pp::new(stream_seed(7, 1, 0, 2, 4)),
+                    gauss: Gaussian::new(),
+                    p_plus: 1.1,
+                    p_minus: 0.3,
+                    dof: 4.5,
+                    gain_eff: 0.9,
+                },
+                &opts(mode, 64, 2),
+                "test-weights",
+                Arc::new(AtomicU64::new(0)),
+            )
+        };
+        let mut a_stream = mk(PrefetchMode::On);
+        let mut b_stream = mk(PrefetchMode::Sync);
+        let mut a = vec![0.0f64; 777];
+        let mut b = vec![0.0f64; 777];
+        a_stream.fill(&mut a);
+        b_stream.fill(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn group_streams_are_independent_and_match_sync() {
+        // one producer thread, three rings: consuming stream 2 heavily must
+        // not perturb streams 0/1, and each must match its sync twin
+        let gens = |mode: PrefetchMode| {
+            spawn_group(
+                (0..3u64)
+                    .map(|i| NormalGen::new(Xoshiro256pp::new(100 + i)))
+                    .collect(),
+                &opts(mode, 64, 2),
+                "group-test",
+                Arc::new(AtomicU64::new(0)),
+            )
+        };
+        let mut piped = gens(PrefetchMode::On);
+        let mut sync = gens(PrefetchMode::Sync);
+        let mut big = vec![0.0f64; 1000];
+        let mut big2 = vec![0.0f64; 1000];
+        piped[2].fill(&mut big);
+        sync[2].fill(&mut big2);
+        assert_eq!(big, big2, "hot stream");
+        for i in [0usize, 1] {
+            let mut a = vec![0.0f64; 97];
+            let mut b = vec![0.0f64; 97];
+            piped[i].fill(&mut a);
+            sync[i].fill(&mut b);
+            assert_eq!(a, b, "cold stream {i}");
+        }
+    }
+
+    #[test]
+    fn dropping_a_piped_stream_joins_its_producer() {
+        // tiny ring: the producer is certainly parked on a full ring when
+        // the drop lands; this must not deadlock
+        for _ in 0..8 {
+            let s: EntropyStream<NormalGen> = EntropyStream::new(
+                NormalGen::new(Xoshiro256pp::new(1)),
+                &opts(PrefetchMode::On, 64, 2),
+                "drop-test",
+                Arc::new(AtomicU64::new(0)),
+            );
+            drop(s);
+        }
+    }
+
+    #[test]
+    fn stream_seed_separates_axes() {
+        let base = stream_seed(9, 0, 0, 0, 0);
+        assert_ne!(base, stream_seed(9, 1, 0, 0, 0), "generation");
+        assert_ne!(base, stream_seed(9, 0, 1, 0, 0), "shard");
+        assert_ne!(base, stream_seed(9, 0, 0, 1, 0), "kernel");
+        assert_ne!(base, stream_seed(9, 0, 0, 0, 1), "tap");
+        assert_eq!(base, stream_seed(9, 0, 0, 0, 0), "deterministic");
+    }
+}

@@ -6,6 +6,7 @@
 pub mod cancel;
 pub mod channel;
 pub mod pool;
+pub mod ring;
 pub mod scratch;
 
 pub use cancel::CancelToken;

@@ -1,0 +1,325 @@
+//! Lock-free SPSC block ring buffer.
+//!
+//! The entropy pipeline decouples entropy *production* (background producer
+//! threads drawing Gaussian weight planes / chaotic rail pairs) from
+//! *consumption* (the `sample_conv` worker shards).  Each producer/consumer
+//! pair communicates over one of these rings: a fixed number of slots, a
+//! monotonic head (consumer) and tail (producer) counter, and no locks —
+//! one atomic load + one atomic store per side per transfer.  FIFO order is
+//! the load-bearing property: blocks arrive in exactly the order the
+//! producer drew them, so a consumer that pops sequentially observes the
+//! producer's entropy stream in its original draw order (the bitwise
+//! prefetch-on/off equivalence of `entropy::pipeline` rests on this).
+//!
+//! The ring is strictly single-producer/single-consumer: [`ring`] hands out
+//! one non-cloneable handle per side, and dropping either side closes the
+//! channel (the survivor observes `Disconnected` instead of blocking
+//! forever).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::CancelToken;
+
+/// Pad the hot atomics onto separate cache lines so producer and consumer
+/// cores do not false-share.
+#[repr(align(64))]
+struct Padded<T>(T);
+
+struct Shared<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    /// Next slot index the consumer will pop (monotonic, wraps at usize).
+    head: Padded<AtomicUsize>,
+    /// Next slot index the producer will push (monotonic, wraps at usize).
+    tail: Padded<AtomicUsize>,
+    producer_alive: AtomicBool,
+    consumer_alive: AtomicBool,
+}
+
+// SAFETY: only the unique Producer writes uninhabited slots and only the
+// unique Consumer takes inhabited ones; the head/tail acquire/release pair
+// orders every slot access.
+unsafe impl<T: Send> Sync for Shared<T> {}
+unsafe impl<T: Send> Send for Shared<T> {}
+
+/// Error returned by [`Producer::try_push`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// All slots occupied; the value is handed back.
+    Full(T),
+    /// The consumer is gone; the value is handed back.
+    Disconnected(T),
+}
+
+/// Error returned by [`Consumer::try_pop`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopError {
+    /// No block ready (the producer may still push more).
+    Empty,
+    /// The producer is gone and every pushed block has been drained.
+    Disconnected,
+}
+
+/// The producing half (not cloneable — SPSC by construction).
+pub struct Producer<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// The consuming half (not cloneable — SPSC by construction).
+pub struct Consumer<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded SPSC ring with `capacity` slots (at least 1).
+pub fn ring<T: Send>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let capacity = capacity.max(1);
+    let slots = (0..capacity)
+        .map(|_| UnsafeCell::new(None))
+        .collect::<Vec<_>>()
+        .into_boxed_slice();
+    let shared = Arc::new(Shared {
+        slots,
+        head: Padded(AtomicUsize::new(0)),
+        tail: Padded(AtomicUsize::new(0)),
+        producer_alive: AtomicBool::new(true),
+        consumer_alive: AtomicBool::new(true),
+    });
+    (
+        Producer {
+            shared: shared.clone(),
+        },
+        Consumer { shared },
+    )
+}
+
+/// Back-off for the blocking helpers: yield a few times, then sleep briefly
+/// so a stalled peer does not burn a core.
+fn backoff(round: &mut u32) {
+    if *round < 16 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    *round = round.saturating_add(1);
+}
+
+impl<T> Producer<T> {
+    /// Push one block without blocking.
+    pub fn try_push(&mut self, value: T) -> Result<(), PushError<T>> {
+        let sh = &*self.shared;
+        if !sh.consumer_alive.load(Ordering::Acquire) {
+            return Err(PushError::Disconnected(value));
+        }
+        let tail = sh.tail.0.load(Ordering::Relaxed);
+        let head = sh.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= sh.slots.len() {
+            return Err(PushError::Full(value));
+        }
+        // SAFETY: this slot is outside [head, tail), so the consumer will
+        // not touch it until the tail store below publishes it.
+        unsafe {
+            *sh.slots[tail % sh.slots.len()].get() = Some(value);
+        }
+        sh.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Push, blocking while the ring is full.  Returns the value back if the
+    /// consumer disconnects or `cancel` fires first.
+    pub fn push_blocking(&mut self, mut value: T, cancel: &CancelToken) -> Result<(), T> {
+        let mut round = 0u32;
+        loop {
+            match self.try_push(value) {
+                Ok(()) => return Ok(()),
+                Err(PushError::Disconnected(v)) => return Err(v),
+                Err(PushError::Full(v)) => {
+                    if cancel.is_cancelled() {
+                        return Err(v);
+                    }
+                    value = v;
+                    backoff(&mut round);
+                }
+            }
+        }
+    }
+
+    /// Blocks currently queued (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let sh = &*self.shared;
+        sh.tail
+            .0
+            .load(Ordering::Relaxed)
+            .wrapping_sub(sh.head.0.load(Ordering::Relaxed))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.slots.len()
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.shared.producer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Pop the oldest block without blocking.
+    pub fn try_pop(&mut self) -> Result<T, PopError> {
+        let sh = &*self.shared;
+        let head = sh.head.0.load(Ordering::Relaxed);
+        let tail = sh.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            // Re-check emptiness *after* observing the closed flag: a
+            // producer pushes, then drops, so seeing `!alive` first and an
+            // empty ring second cannot lose a block.
+            if !sh.producer_alive.load(Ordering::Acquire) {
+                let tail = sh.tail.0.load(Ordering::Acquire);
+                if head == tail {
+                    return Err(PopError::Disconnected);
+                }
+            } else {
+                return Err(PopError::Empty);
+            }
+        }
+        // SAFETY: head < tail, so this slot was published by the producer's
+        // release store and will not be written again until head advances.
+        let value = unsafe { (*sh.slots[head % sh.slots.len()].get()).take() };
+        sh.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Ok(value.expect("published ring slot is inhabited"))
+    }
+
+    /// Pop, blocking while the ring is empty.  `None` once the producer is
+    /// gone and every block has been drained.
+    pub fn pop_blocking(&mut self) -> Option<T> {
+        let mut round = 0u32;
+        loop {
+            match self.try_pop() {
+                Ok(v) => return Some(v),
+                Err(PopError::Disconnected) => return None,
+                Err(PopError::Empty) => backoff(&mut round),
+            }
+        }
+    }
+
+    /// Blocks currently queued (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let sh = &*self.shared;
+        sh.tail
+            .0
+            .load(Ordering::Relaxed)
+            .wrapping_sub(sh.head.0.load(Ordering::Relaxed))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.shared.consumer_alive.store(false, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let (mut tx, mut rx) = ring::<u32>(4);
+        assert_eq!(tx.capacity(), 4);
+        for i in 0..4 {
+            tx.try_push(i).unwrap();
+        }
+        assert_eq!(tx.try_push(99), Err(PushError::Full(99)));
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Ok(i));
+        }
+        assert_eq!(rx.try_pop(), Err(PopError::Empty));
+    }
+
+    #[test]
+    fn wraparound_preserves_order() {
+        let (mut tx, mut rx) = ring::<usize>(3);
+        for i in 0..100 {
+            tx.try_push(i).unwrap();
+            assert_eq!(rx.try_pop(), Ok(i));
+        }
+    }
+
+    #[test]
+    fn producer_drop_disconnects_after_drain() {
+        let (mut tx, mut rx) = ring::<u8>(2);
+        tx.try_push(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_pop(), Ok(1), "pushed blocks survive the drop");
+        assert_eq!(rx.try_pop(), Err(PopError::Disconnected));
+        assert_eq!(rx.pop_blocking(), None);
+    }
+
+    #[test]
+    fn consumer_drop_rejects_pushes() {
+        let (mut tx, rx) = ring::<u8>(2);
+        drop(rx);
+        assert_eq!(tx.try_push(5), Err(PushError::Disconnected(5)));
+        let cancel = CancelToken::new();
+        assert_eq!(tx.push_blocking(6, &cancel), Err(6));
+    }
+
+    #[test]
+    fn push_blocking_respects_cancellation() {
+        let (mut tx, _rx) = ring::<u8>(1);
+        tx.try_push(1).unwrap();
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        // ring full + live consumer: only the token can unblock this
+        assert_eq!(tx.push_blocking(2, &cancel), Err(2));
+    }
+
+    #[test]
+    fn cross_thread_stream_is_lossless_and_ordered() {
+        let (mut tx, mut rx) = ring::<u64>(8);
+        let n = 50_000u64;
+        let producer = std::thread::spawn(move || {
+            let cancel = CancelToken::new();
+            for i in 0..n {
+                tx.push_blocking(i, &cancel).unwrap();
+            }
+        });
+        for i in 0..n {
+            assert_eq!(rx.pop_blocking(), Some(i));
+        }
+        assert_eq!(rx.pop_blocking(), None, "producer done and drained");
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn consumer_drop_unblocks_a_full_producer() {
+        let (mut tx, mut rx) = ring::<u64>(2);
+        let producer = std::thread::spawn(move || {
+            let cancel = CancelToken::new();
+            let mut sent = 0u64;
+            loop {
+                if tx.push_blocking(sent, &cancel).is_err() {
+                    return sent; // consumer went away
+                }
+                sent += 1;
+            }
+        });
+        // consume a little, then walk away mid-stream
+        for i in 0..10 {
+            assert_eq!(rx.pop_blocking(), Some(i));
+        }
+        drop(rx);
+        let sent = producer.join().unwrap();
+        assert!(sent >= 10, "producer made progress before the disconnect");
+    }
+}

@@ -21,7 +21,9 @@ use photonic_bayes::calibration;
 use photonic_bayes::cli::Args;
 use photonic_bayes::config::Config;
 use photonic_bayes::coordinator::service::ServiceConfig;
-use photonic_bayes::coordinator::{BackendKind, Engine, EngineConfig, ExecMode, Router};
+use photonic_bayes::coordinator::{
+    BackendKind, Engine, EngineConfig, ExecMode, PrefetchMode, Router,
+};
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource};
 use photonic_bayes::exec::CancelToken;
@@ -76,16 +78,19 @@ USAGE: pbm <subcommand> [flags]
             --seed N --eval-every N --out STEM]
   eval      --dataset D [--params FILE --samples N --backend photonic|digital|mean
             --mode M|surrogate --limit N --split test|ood|ambiguous|fashion
-            --threads N]
+            --threads N --entropy-prefetch off|sync|on --entropy-block N]
   report    fig2 | fig2e | fig4 | fig5 | headline | nist [--params FILE
             --samples N --backend B --mode M --limit N --threads N]
   calibrate [--kernels N --outputs M --seed N]
   nist      [--bits N --bw GHZ]
   serve     [--config FILE --addr HOST:PORT --datasets digits,blood
             --backend B --mode M --samples N --mi-threshold F
-            --max-batch N --max-wait-ms N --threads N]
+            --max-batch N --max-wait-ms N --threads N
+            --entropy-prefetch off|sync|on --entropy-block N]
             (--threads: sampling workers per engine; 1 = sequential,
-             0 = one per core; results are deterministic per (seed, threads))
+             0 = one per core; --entropy-prefetch on: background entropy
+             producers feed the sampling hot path via lock-free block
+             rings; results are deterministic per (seed, threads, prefetch))
   classify  [--addr HOST:PORT --dataset D --split S --index I]
             [--local --backend B --threads N]   (in-process, no server)
   info
@@ -139,6 +144,8 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
         machine: MachineConfig::default(),
         noise_bw_ghz: args.get_f64("noise-bw", 150.0)?,
         threads: args.get_usize("threads", 1)?,
+        entropy_prefetch: PrefetchMode::parse(&args.get_or("entropy-prefetch", "off"))?,
+        entropy_block: args.get_usize("entropy-block", 4096)?,
         seed: args.get_u64("seed", 42)?,
     };
     Engine::new(arts, params, cfg)
@@ -461,6 +468,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             machine: MachineConfig::default(),
             noise_bw_ghz: 150.0,
             threads: args.get_usize("threads", file.get_usize("engine", "threads", 1)?)?,
+            entropy_prefetch: PrefetchMode::parse(&args.get_or(
+                "entropy-prefetch",
+                &file.get_or("engine", "entropy_prefetch", "off"),
+            ))?,
+            entropy_block: args
+                .get_usize("entropy-block", file.get_usize("engine", "entropy_block", 4096)?)?,
             seed: args.get_u64("seed", 42)?,
         };
         let svc_cfg = ServiceConfig {

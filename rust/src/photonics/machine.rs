@@ -485,6 +485,22 @@ impl PhotonicMachine {
 /// activations (see EXPERIMENTS.md §Perf).
 pub(crate) const T_FLOOR: f64 = 1.5e-3;
 
+/// Fill `trans` with channel `k`'s EOM transmissions for every patch and
+/// return how many lie above the extinction floor — the number of symbols
+/// that will consume entropy draws.  Shared by the inline and the banked
+/// conv cores: both must count `m` identically or the off-vs-banked
+/// statistical equivalence (and the bank's stream advance) silently breaks.
+fn live_transmissions(eom: &Eom, patches: &[f32], nt: usize, k: usize, trans: &mut [f32]) -> usize {
+    let mut m = 0usize;
+    for (p, t) in trans.iter_mut().enumerate() {
+        *t = eom.transmission(patches[p * nt + k]);
+        if (*t as f64) > T_FLOOR {
+            m += 1;
+        }
+    }
+    m
+}
+
 /// The photonic conv inner loop, callable with any entropy streams — the
 /// machine's own, or an independently seeded worker shard's (parallel
 /// `sample_conv`).  Channel-outer with bulk per-channel Gamma draws: each
@@ -511,15 +527,9 @@ pub(crate) fn conv_patches_core(
     let plus = grow(&mut scratch.rail_plus, n);
     let minus = grow(&mut scratch.rail_minus, n);
     for (k, tap) in flat.iter().enumerate().take(nt) {
-        // transmissions for this channel; count symbols above the
-        // extinction floor — only those consume Gamma draws
-        let mut m = 0usize;
-        for (p, t) in trans.iter_mut().enumerate() {
-            *t = eom.transmission(patches[p * nt + k]);
-            if (*t as f64) > T_FLOOR {
-                m += 1;
-            }
-        }
+        // transmissions for this channel; only symbols above the extinction
+        // floor consume Gamma draws
+        let m = live_transmissions(eom, patches, nt, k, trans);
         if m == 0 {
             continue;
         }
@@ -556,6 +566,51 @@ pub(crate) fn conv_patches_core(
                 continue;
             }
             *a += tap.gain_eff * (plus[j] - minus[j]) * t;
+            j += 1;
+        }
+    }
+    for (p, o) in out.iter_mut().take(n).enumerate() {
+        *o = detector.read((acc[p] * scale_dac as f64) as f32);
+    }
+}
+
+/// Bank-aware variant of [`conv_patches_core`] for the decoupled entropy
+/// pipeline: instead of drawing rail intensities inline, each tap's
+/// realized weights arrive from `fill(k, out)` — a per-(kernel, tap)
+/// [`crate::entropy::pipeline::EntropyStream`] that is either prefetched by
+/// a background producer or drawn synchronously from the same stream.  With
+/// the weights pre-realized, the inner loop is a pure FMA over the
+/// prefetched plane.  The extinction-floor skip is preserved: only symbols
+/// above [`T_FLOOR`] consume weight draws, so the bank's streams advance
+/// exactly as far as the inline path's would.
+pub(crate) fn conv_patches_banked<F: FnMut(usize, &mut [f64])>(
+    patches: &[f32],
+    nt: usize,
+    scale_dac: f32,
+    eom: &Eom,
+    mut fill: F,
+    detector: &mut Detector,
+    scratch: &mut ScratchArena,
+    out: &mut [f32],
+) {
+    let n = patches.len() / nt;
+    let acc = grow(&mut scratch.acc, n);
+    acc.fill(0.0);
+    let trans = grow(&mut scratch.trans, n);
+    let weights = grow(&mut scratch.rail_plus, n);
+    for k in 0..nt {
+        let m = live_transmissions(eom, patches, nt, k, trans);
+        if m == 0 {
+            continue;
+        }
+        fill(k, &mut weights[..m]);
+        let mut j = 0usize;
+        for (p, a) in acc.iter_mut().enumerate() {
+            let t = trans[p] as f64;
+            if t <= T_FLOOR {
+                continue;
+            }
+            *a += weights[j] * t;
             j += 1;
         }
     }
@@ -711,7 +766,7 @@ mod tests {
         let mut p = vec![0.0f32; h * w * 9];
         im2col_3x3(&x, h, w, &mut p);
         // center pixel (1,1): window rows [0..3) x [0..3)
-        let base = (1 * w + 1) * 9;
+        let base = (w + 1) * 9;
         let want = [0.0, 1.0, 2.0, 4.0, 5.0, 6.0, 8.0, 9.0, 10.0];
         assert_eq!(&p[base..base + 9], &want);
         // corner (0,0): top-left padding

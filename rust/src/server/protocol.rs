@@ -59,6 +59,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
 
 /// Encode a classification result.
 pub fn encode_result(r: &ClassifyResult) -> String {
+    let mut s = String::new();
+    encode_result_into(r, &mut s);
+    s
+}
+
+/// Append-encode a classification result into a reusable buffer (the
+/// gateway's per-connection fast path).
+pub fn encode_result_into(r: &ClassifyResult, out: &mut String) {
     let (decision, class, extra): (&str, Option<usize>, Vec<(&str, Json)>) = match &r.decision {
         Decision::Accept { class, confidence } => (
             "accept",
@@ -95,15 +103,22 @@ pub fn encode_result(r: &ClassifyResult) -> String {
     for (k, v) in extra {
         o.set(k, v);
     }
-    o.to_string_compact()
+    o.write_compact(out);
 }
 
 /// Encode an error response.
 pub fn encode_error(msg: &str) -> String {
+    let mut s = String::new();
+    encode_error_into(msg, &mut s);
+    s
+}
+
+/// Append-encode an error response into a reusable buffer.
+pub fn encode_error_into(msg: &str, out: &mut String) {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(false));
     o.set("error", Json::Str(msg.into()));
-    o.to_string_compact()
+    o.write_compact(out);
 }
 
 /// Encode the `info` response.

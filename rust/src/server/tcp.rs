@@ -65,9 +65,8 @@ pub fn serve(
         }
     }
     drop(pool); // join workers
-    match Arc::try_unwrap(router) {
-        Ok(r) => r.shutdown(),
-        Err(_) => {}
+    if let Ok(r) = Arc::try_unwrap(router) {
+        r.shutdown();
     }
     Ok(())
 }
@@ -83,15 +82,21 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // one response buffer per connection, reused across requests: encodes
+    // append into it instead of allocating a fresh String per response
+    let mut resp = String::new();
     loop {
         if cancel.is_cancelled() {
             return Ok(());
         }
         if line.len() >= MAX_LINE_BYTES {
-            let resp =
-                protocol::encode_error(&format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+            resp.clear();
+            protocol::encode_error_into(
+                &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                &mut resp,
+            );
+            resp.push('\n');
             writer.write_all(resp.as_bytes())?;
-            writer.write_all(b"\n")?;
             return Ok(()); // close: the rest of the oversized line is garbage
         }
         // cap the read; partial lines (timeout or cap) accumulate in `line`
@@ -101,16 +106,16 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
                 // peer closed; a buffered newline-less final request still
                 // gets its response before we hang up
                 if !line.is_empty() {
-                    let resp = respond(router, &line);
+                    respond_into(router, &line, &mut resp);
+                    resp.push('\n');
                     writer.write_all(resp.as_bytes())?;
-                    writer.write_all(b"\n")?;
                 }
                 return Ok(());
             }
             Ok(_) if line.ends_with('\n') => {
-                let resp = respond(router, &line);
+                respond_into(router, &line, &mut resp);
+                resp.push('\n');
                 writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
                 line.clear();
             }
             Ok(_) => {} // mid-line: keep accumulating (next loop re-budgets)
@@ -128,18 +133,27 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
 /// Compute the response line for one request line (transport-independent —
 /// also used by unit tests without sockets).
 pub fn respond(router: &Router, line: &str) -> String {
+    let mut out = String::new();
+    respond_into(router, line, &mut out);
+    out
+}
+
+/// [`respond`] into a reusable buffer: clears `out`, then append-encodes
+/// the response (no trailing newline).
+pub fn respond_into(router: &Router, line: &str, out: &mut String) {
+    out.clear();
     match protocol::parse_request(line) {
-        Err(e) => protocol::encode_error(&format!("{e}")),
-        Ok(Request::Ping) => protocol::encode_pong(),
-        Ok(Request::Info) => protocol::encode_info(&router.datasets()),
+        Err(e) => protocol::encode_error_into(&format!("{e}"), out),
+        Ok(Request::Ping) => out.push_str(&protocol::encode_pong()),
+        Ok(Request::Info) => out.push_str(&protocol::encode_info(&router.datasets())),
         Ok(Request::Classify { dataset, image }) => {
             let (req, rx) = ClassifyRequest::new(image);
             match router.route(&dataset, req) {
-                Err(e) => protocol::encode_error(&format!("{e}")),
+                Err(e) => protocol::encode_error_into(&format!("{e}"), out),
                 Ok(()) => match rx.recv() {
-                    Some(Ok(result)) => protocol::encode_result(&result),
-                    Some(Err(e)) => protocol::encode_error(&format!("{e}")),
-                    None => protocol::encode_error("engine dropped request"),
+                    Some(Ok(result)) => protocol::encode_result_into(&result, out),
+                    Some(Err(e)) => protocol::encode_error_into(&format!("{e}"), out),
+                    None => protocol::encode_error_into("engine dropped request", out),
                 },
             }
         }
@@ -162,12 +176,25 @@ impl Client {
         })
     }
 
-    /// Send one request line; wait for one response line.
+    /// Send one request line; wait for one response line.  Reads are capped
+    /// at [`MAX_LINE_BYTES`] — the mirror image of the server's request cap
+    /// — so a misbehaving (or spoofed) server cannot make the client buffer
+    /// an unbounded response.
     pub fn call(&mut self, line: &str) -> Result<crate::util::json::Json> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
+        (&mut self.reader)
+            .take(MAX_LINE_BYTES as u64)
+            .read_line(&mut resp)?;
+        if !resp.ends_with('\n') && resp.len() >= MAX_LINE_BYTES {
+            // the unread tail of the oversized line is still in flight; a
+            // further call would read mid-line garbage as its response, so
+            // poison the connection (mirrors the server closing on an
+            // oversized request)
+            let _ = self.writer.shutdown(std::net::Shutdown::Both);
+            return Err(anyhow!("response line exceeds {MAX_LINE_BYTES} bytes"));
+        }
         crate::util::json::parse(&resp).map_err(|e| anyhow!("bad response: {e} ({resp:?})"))
     }
 
@@ -184,6 +211,17 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn respond_into_reuses_and_clears_the_buffer() {
+        let router = Router::new();
+        let mut buf = String::from("stale residue from the previous request");
+        respond_into(&router, "{\"op\":\"ping\"}", &mut buf);
+        assert_eq!(buf, respond(&router, "{\"op\":\"ping\"}"));
+        respond_into(&router, "garbage", &mut buf);
+        assert!(buf.contains("\"ok\":false"));
+        assert!(!buf.contains("pong"), "buffer cleared between responses");
+    }
 
     #[test]
     fn respond_handles_ping_info_and_errors_without_engines() {

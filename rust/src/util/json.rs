@@ -131,6 +131,13 @@ impl Json {
         s
     }
 
+    /// Append the compact encoding to an existing buffer — the server's
+    /// per-connection fast path reuses one response `String` across
+    /// requests instead of allocating a fresh one per encode.
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(1), 0);

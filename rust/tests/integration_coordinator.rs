@@ -26,6 +26,7 @@ fn fast_engine_cfg() -> EngineConfig {
         noise_bw_ghz: 150.0,
         threads: 1,
         seed: 5,
+        ..Default::default()
     }
 }
 

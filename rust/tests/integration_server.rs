@@ -36,6 +36,7 @@ fn tcp_round_trip_ping_info_classify() {
                 noise_bw_ghz: 150.0,
                 threads: 2, // exercise the sharded sampling path end-to-end
                 seed: 3,
+                ..Default::default()
             },
             ServiceConfig {
                 max_batch: 4,
