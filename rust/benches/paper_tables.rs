@@ -2,8 +2,13 @@
 //! and figure of the paper's evaluation section (DESIGN.md experiment
 //! index).  Each section prints the paper's value next to the measured one.
 //!
-//! Sections: headline, backends, entropy, fig2_error, fig2_delay, nist,
-//! fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc, ablations.
+//! Sections: headline, backends, entropy, adaptive, fig2_error, fig2_delay,
+//! nist, fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc, ablations.
+//!
+//! Machine-readable trajectories (`--json <path>`): `backends` →
+//! `BENCH_backends.json`, `entropy` → `BENCH_entropy.json`, `adaptive` →
+//! `BENCH_adaptive.json`; CI regenerates all three per push and archives
+//! them as workflow artifacts.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -54,6 +59,9 @@ fn main() {
     }
     if run("entropy") {
         entropy(&mut sink);
+    }
+    if run("adaptive") {
+        adaptive(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -277,6 +285,83 @@ fn entropy(sink: &mut Option<JsonSink>) {
         });
         report(sink, &format!("fill/normals_{mode}"), s.mean_ns);
     }
+}
+
+/// The adaptive sampler's economy, measured without model artifacts: a
+/// synthetic depthwise classifier (logit `c` = mean of channel `c`'s conv
+/// outputs) served fixed-N vs adaptive over a half-easy / half-ambiguous
+/// request stream.  Easy requests light up one channel (decisive posterior
+/// → the gap rule resolves in `min_samples`); ambiguous ones excite all
+/// channels equally (the rule runs to the max budget).  Reported per
+/// backend: end-to-end request latency/throughput and the mean
+/// samples/request.  `mean_samples` rows carry the sample count in both
+/// JSON fields (the row schema is latency/throughput shaped).
+fn adaptive(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::sampler::{synth, SamplerConfig};
+
+    section("ADAPTIVE — early-stopping sampling cost, fixed vs adaptive");
+    let (channels, hw, max_n) = (4usize, synth::HW, 16usize);
+    let mcfg = photonic_bayes::photonics::MachineConfig {
+        seed: 23,
+        ..photonic_bayes::photonics::MachineConfig::default()
+    };
+    // one decisive kernel, three near-zero ones: channel 0 dominates when
+    // its input plane is lit (shared harness with the adaptive tests)
+    let kernels = synth::decisive_kernels(channels);
+    let easy = synth::decisive_input(channels);
+    let hard = synth::ambiguous_input(channels);
+    let rules = [
+        ("fixed", SamplerConfig::fixed(max_n)),
+        ("adaptive", synth::gap_config(max_n)),
+    ];
+    let bench = Bench::quick();
+    println!("plan: {channels}ch@{hw}x{hw}, max N = {max_n}, stream = 50% easy / 50% ambiguous");
+    println!(
+        "{:<22} {:>14} {:>14} {:>14}",
+        "backend/rule", "req latency", "req/s", "mean samples"
+    );
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        for (label, scfg) in &rules {
+            let mut be = backend::build(kind, &mcfg);
+            be.program(&kernels, false).unwrap();
+            let mut total_samples = 0u64;
+            let mut total_requests = 0u64;
+            let mut flip = false;
+            let s = bench.run(&format!("{} {label}", kind.name()), || {
+                flip = !flip;
+                let x = if flip { &easy } else { &hard };
+                // one request: chunked sample plans + stop checks at every
+                // chunk boundary — the engine's adaptive loop, minus PJRT
+                let (used, probs) =
+                    synth::classify_synthetic(be.as_mut(), scfg, 1, channels, max_n, x);
+                total_samples += used as u64;
+                total_requests += 1;
+                black_box(probs);
+            });
+            let mean_samples = total_samples as f64 / total_requests.max(1) as f64;
+            println!(
+                "{:<22} {:>14} {:>14.1} {:>14.2}",
+                format!("{}/{}", kind.name(), label),
+                photonic_bayes::benchkit::fmt_ns(s.mean_ns),
+                1e9 / s.mean_ns,
+                mean_samples,
+            );
+            if let Some(sink) = sink {
+                sink.push(
+                    &format!("adaptive/{}/{}", kind.name(), label),
+                    s.mean_ns,
+                    1e9 / s.mean_ns,
+                );
+                sink.push(
+                    &format!("adaptive/{}/{}/mean_samples", kind.name(), label),
+                    mean_samples,
+                    mean_samples,
+                );
+            }
+        }
+    }
+    println!("(adaptive rows must show mean samples well below {max_n} — the easy half of the");
+    println!(" stream resolves at the gap rule's min; fixed rows pin the full budget)");
 }
 
 fn fig2_error() {

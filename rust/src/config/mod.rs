@@ -28,6 +28,22 @@
 //! [batcher]
 //! max_batch = 8
 //! max_wait_ms = 2
+//!
+//! [sampler]
+//! # adaptive sequential sampling: fixed | confidence-gap | uncertainty
+//! rule = "uncertainty"
+//! # never stop before / after this many stochastic passes
+//! min_samples = 2
+//! max_samples = 20
+//! # samples per round between stop checks (0 = auto: max(2, threads))
+//! chunk = 0
+//! # consecutive chunk checks a criterion must hold (hysteresis)
+//! stable = 2
+//! # uncertainty rule: the unresolved MI band
+//! mi_low = 0.002
+//! mi_high = 0.08
+//! # confidence-gap rule: required argmax posterior margin
+//! target_gap = 0.5
 //! ```
 
 use std::collections::BTreeMap;
@@ -175,6 +191,21 @@ threads = 8
             .unwrap()
             .get_mode("e", "mode", ExecMode::Surrogate)
             .is_err());
+    }
+
+    #[test]
+    fn sampler_table_parses() {
+        let c = Config::parse(
+            "[sampler]\nrule = \"uncertainty\"\nmin_samples = 3\nmax_samples = 20\n\
+             mi_low = 0.004\nstable = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_or("sampler", "rule", "fixed"), "uncertainty");
+        assert_eq!(c.get_usize("sampler", "min_samples", 2).unwrap(), 3);
+        assert_eq!(c.get_usize("sampler", "max_samples", 0).unwrap(), 20);
+        assert_eq!(c.get_f64("sampler", "mi_low", 0.002).unwrap(), 0.004);
+        // unset knobs fall back to rule defaults
+        assert_eq!(c.get_f64("sampler", "mi_high", 0.08).unwrap(), 0.08);
     }
 
     #[test]

@@ -15,7 +15,11 @@ use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
 use crate::log_info;
 use crate::photonics::MachineConfig;
-use crate::runtime::{Arg, ModelArtifacts, ParamStore};
+use crate::runtime::{Arg, CompiledFn, ModelArtifacts, ParamStore};
+use crate::sampler::{
+    ChunkSchedule, PredictiveAccum, RequestBudget, ResolvedSampler, SamplerConfig, StopReason,
+    StopRule, StopState, Verdict,
+};
 
 /// Where the probabilistic block executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,6 +85,13 @@ pub struct EngineConfig {
     pub entropy_prefetch: PrefetchMode,
     /// Draws per prefetched entropy block (ring transfer granularity).
     pub entropy_block: usize,
+    /// Adaptive sequential sampling: stop rule, `min`/`max` clamps, and
+    /// chunk size.  The default (`StopRule::Fixed(0)`) spends the whole
+    /// `n_samples` budget in one batched round — bitwise identical to the
+    /// pre-sampler engine.  Per-request [`RequestBudget`] overrides refine
+    /// this (they can lower the budget or request a confidence target,
+    /// never raise the budget).
+    pub sampler: SamplerConfig,
     pub seed: u64,
 }
 
@@ -96,6 +107,7 @@ impl Default for EngineConfig {
             threads: 1,
             entropy_prefetch: PrefetchMode::Off,
             entropy_block: 4096,
+            sampler: SamplerConfig::default(),
             seed: 42,
         }
     }
@@ -119,6 +131,14 @@ pub struct ClassifyResult {
     pub predictive: Predictive,
     pub decision: Decision,
     pub latency_us: f64,
+    /// Stochastic passes folded into this image's predictive (== the fixed
+    /// budget on the `Fixed` rule; fewer when its adaptive rule resolved
+    /// early).  For a single-image request this is also the compute
+    /// actually spent; in a multi-image batch the plan keeps drawing until
+    /// the *whole batch* resolves, so per-image compute is bounded by the
+    /// batch's slowest image even though frozen images fold in no more
+    /// samples.
+    pub samples_used: usize,
 }
 
 /// The engine.  Owns non-`Send` PJRT state — confine to one thread (see
@@ -141,8 +161,14 @@ impl Engine {
     /// and optionally runs feedback calibration on each.
     pub fn new(arts: ModelArtifacts, params: ParamStore, cfg: EngineConfig) -> Result<Self> {
         if cfg.n_samples == 0 {
-            return Err(anyhow!("n_samples must be >= 1"));
+            return Err(anyhow!(
+                "n_samples: {}",
+                crate::sampler::BudgetError::ZeroSamples
+            ));
         }
+        cfg.sampler
+            .validate()
+            .map_err(|e| anyhow!("sampler config: {e}"))?;
         let mut mcfg = cfg.machine.clone();
         mcfg.scale_dac = arts.meta.scale_dac;
         mcfg.scale_adc = arts.meta.scale_adc;
@@ -208,9 +234,22 @@ impl Engine {
         }
     }
 
-    /// Classify a batch of images (`images.len() == n * image_size`).
-    /// Returns one result per image.
+    /// Classify a batch of images (`images.len() == n * image_size`) under
+    /// the engine's default sample budget.  Returns one result per image.
     pub fn classify(&mut self, images: &[f32], n: usize) -> Result<Vec<ClassifyResult>> {
+        self.classify_with_budget(images, n, &RequestBudget::default())
+    }
+
+    /// [`Self::classify`] with per-request budget overrides (protocol
+    /// `max_samples` / `target_confidence` fields).  The fixed-rule path is
+    /// bitwise identical to the pre-sampler engine; adaptive rules draw in
+    /// chunks and stop each image as soon as its stop rule resolves.
+    pub fn classify_with_budget(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+    ) -> Result<Vec<ClassifyResult>> {
         if images.len() != n * self.image_size() {
             return Err(anyhow!(
                 "batch buffer {} != {} images x {}",
@@ -222,10 +261,48 @@ impl Engine {
         if n == 0 {
             return Ok(Vec::new());
         }
+        let mut resolved = self
+            .cfg
+            .sampler
+            .resolve(self.samples_per_request(), budget)
+            .map_err(|e| anyhow!("sample budget: {e}"))?;
+        if matches!(self.cfg.mode, ExecMode::Split(_)) && self.backend.is_deterministic() {
+            // identical passes carry no information: a deterministic
+            // backend always collapses to one, whatever the configured max
+            resolved = ResolvedSampler {
+                rule: StopRule::Fixed(1),
+                min: 1,
+                max: 1,
+                chunk: resolved.chunk,
+            };
+        }
         let t0 = Instant::now();
+        let results = if resolved.single_round() {
+            self.classify_fixed(images, n, resolved.fixed_samples(), t0)?
+        } else {
+            match self.cfg.mode {
+                ExecMode::Surrogate => self.classify_adaptive_surrogate(images, n, &resolved, t0)?,
+                ExecMode::Split(_) => self.classify_adaptive_split(images, n, &resolved, t0)?,
+            }
+        };
+        self.metrics.record_batch(n, t0.elapsed(), &results);
+        Ok(results)
+    }
+
+    /// The legacy one-round path: a single batched sample plan of exactly
+    /// `passes_n` passes — the same calls, in the same order, as the
+    /// pre-sampler engine (bitwise identical per `(seed, threads,
+    /// prefetch)`).
+    fn classify_fixed(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        passes_n: usize,
+        t0: Instant,
+    ) -> Result<Vec<ClassifyResult>> {
         let logits = match self.cfg.mode {
-            ExecMode::Surrogate => self.forward_surrogate(images, n)?,
-            ExecMode::Split(_) => self.forward_split(images, n)?,
+            ExecMode::Surrogate => self.forward_surrogate(images, n, passes_n)?,
+            ExecMode::Split(_) => self.forward_split(images, n, passes_n)?,
         };
         // logits: per pass, per image
         let per_image_latency = t0.elapsed().as_micros() as f64 / n as f64;
@@ -240,55 +317,19 @@ impl Engine {
                     predictive,
                     decision,
                     latency_us: per_image_latency,
+                    samples_used: passes_n,
                 }
             })
             .collect::<Vec<_>>();
-        self.metrics.record_batch(n, t0.elapsed(), &results);
         Ok(results)
     }
 
-    /// Surrogate path: `n_samples` calls of `fwd_full` with fresh chaotic
-    /// noise as the `eps` operand.
-    fn forward_surrogate(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
-        let meta = &self.arts.meta;
-        let b = self.arts.pick_batch("fwd_full", n);
-        let f = self.arts.get(&format!("fwd_full_b{b}"))?;
-        // scratch-arena input staging: copy the batch, zero the padding
-        // (previous requests leave residue past `images.len()`)
-        let x = grow(&mut self.scratch.input, b * meta.image_size());
-        x[..images.len()].copy_from_slice(images);
-        x[images.len()..].fill(0.0);
-        let x_shape = [
-            b as i64,
-            meta.in_channels as i64,
-            meta.img_hw as i64,
-            meta.img_hw as i64,
-        ];
-        let eps_shape = [
-            b as i64,
-            meta.prob_ch as i64,
-            meta.prob_hw as i64,
-            meta.prob_hw as i64,
-            meta.num_taps as i64,
-        ];
-        let np = meta.num_params as i64;
-        let eps = grow(&mut self.scratch.noise, b * meta.eps_size());
-        let mut passes = Vec::with_capacity(self.cfg.n_samples);
-        for _ in 0..self.cfg.n_samples {
-            self.noise.fill(eps);
-            let out = f.call(&[
-                Arg::F32(&self.params.theta, &[np]),
-                Arg::F32(x, &x_shape),
-                Arg::F32(eps, &eps_shape),
-            ])?;
-            passes.push(out.into_iter().next().unwrap());
-        }
-        Ok(passes)
-    }
-
-    /// Split path: one `fwd_pre`, then a single batched backend sample plan
-    /// (all passes × all images in one call), then one `fwd_post` per pass.
-    fn forward_split(&mut self, images: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
+    /// Stage one split-path request: pick the batch entry points, pad the
+    /// input into the arena, run `fwd_pre`, and zero the pass-lane batch
+    /// padding.  The one copy of the padding/shape logic — shared by the
+    /// fixed and adaptive paths so they cannot diverge.  Returns owned
+    /// state (`Arc` executables, `x3q`), leaving `self` unborrowed.
+    fn stage_split(&mut self, images: &[f32], n: usize) -> Result<SplitStage> {
         let meta = &self.arts.meta;
         let b = self.arts.pick_batch("fwd_pre", n);
         let pre = self.arts.get(&format!("fwd_pre_b{b}"))?;
@@ -316,26 +357,191 @@ impl Engine {
             meta.prob_hw as i64,
             meta.prob_hw as i64,
         ];
-        let passes_n = self.samples_per_request();
+        // zero the batch padding of the pass-staging lane once per request
+        grow(&mut self.scratch.pass, b * act)[n * act..].fill(0.0);
+        Ok(SplitStage {
+            post,
+            x3q,
+            act_shape,
+            np,
+            b,
+            act,
+        })
+    }
+
+    /// One `fwd_post` round: stage pass `s` out of the all-samples buffer
+    /// and run the deterministic tail, returning the pass logits.
+    fn post_pass(&mut self, st: &SplitStage, n: usize, d_all_off: usize) -> Result<Vec<f32>> {
+        let d3 = grow(&mut self.scratch.pass, st.b * st.act);
+        d3[..n * st.act]
+            .copy_from_slice(&self.scratch.samples[d_all_off..d_all_off + n * st.act]);
+        let out = st.post.call(&[
+            Arg::F32(&self.params.theta, &[st.np]),
+            Arg::F32(&st.x3q, &st.act_shape),
+            Arg::F32(d3, &st.act_shape),
+        ])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Adaptive split path: one `fwd_pre`, then chunked backend sample
+    /// plans with stop-rule checks at every chunk boundary.  Each image's
+    /// accumulator freezes when its rule fires; the round loop ends when
+    /// every image is frozen or the budget is spent.  Chunk sizes come
+    /// from [`ChunkSchedule`] (shard-aligned), and the backend's
+    /// persistent shard streams make the whole run deterministic per
+    /// `(seed, threads, prefetch)`.
+    fn classify_adaptive_split(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        r: &ResolvedSampler,
+        t0: Instant,
+    ) -> Result<Vec<ClassifyResult>> {
+        let st = self.stage_split(images, n)?;
+        let meta = &self.arts.meta;
+        let nc = meta.n_classes;
+        let (prob_ch, prob_hw) = (meta.prob_ch, meta.prob_hw);
+
+        let mut accums: Vec<PredictiveAccum> = (0..n).map(|_| PredictiveAccum::new(nc)).collect();
+        let mut states: Vec<StopState> = vec![StopState::default(); n];
+        let mut verdicts: Vec<Option<Verdict>> = vec![None; n];
+        let mut sched = ChunkSchedule::new(r, self.cfg.resolved_threads());
+        while let Some(chunk) = sched.next_chunk() {
+            let plan = SamplePlan::new(chunk, n, prob_ch, prob_hw, prob_hw);
+            let d_all = grow(&mut self.scratch.samples, plan.total_size());
+            self.backend.sample_conv(&plan, &st.x3q[..n * st.act], d_all)?;
+            for s in 0..chunk {
+                let pass = self.post_pass(&st, n, s * n * st.act)?;
+                push_pass(&mut accums, &pass, nc);
+            }
+            if check_stops(r, &mut accums, &mut states, &mut verdicts) {
+                break;
+            }
+        }
+        Ok(assemble_results(accums, verdicts, &self.cfg.policy, n, t0))
+    }
+
+    /// Stage one surrogate-path request: pick the `fwd_full` entry point,
+    /// pad the input, and size the `eps` lane.  Shared by the fixed and
+    /// adaptive surrogate paths.
+    fn stage_surrogate(&mut self, images: &[f32], n: usize) -> Result<SurrogateStage> {
+        let meta = &self.arts.meta;
+        let b = self.arts.pick_batch("fwd_full", n);
+        let f = self.arts.get(&format!("fwd_full_b{b}"))?;
+        // scratch-arena input staging: copy the batch, zero the padding
+        // (previous requests leave residue past `images.len()`)
+        let x = grow(&mut self.scratch.input, b * meta.image_size());
+        x[..images.len()].copy_from_slice(images);
+        x[images.len()..].fill(0.0);
+        let x_shape = [
+            b as i64,
+            meta.in_channels as i64,
+            meta.img_hw as i64,
+            meta.img_hw as i64,
+        ];
+        let eps_shape = [
+            b as i64,
+            meta.prob_ch as i64,
+            meta.prob_hw as i64,
+            meta.prob_hw as i64,
+            meta.num_taps as i64,
+        ];
+        Ok(SurrogateStage {
+            f,
+            x_shape,
+            eps_shape,
+            np: meta.num_params as i64,
+            x_len: b * meta.image_size(),
+            eps_len: b * meta.eps_size(),
+        })
+    }
+
+    /// One `fwd_full` pass with fresh chaotic `eps` noise.
+    fn surrogate_pass(&mut self, st: &SurrogateStage) -> Result<Vec<f32>> {
+        let x = grow(&mut self.scratch.input, st.x_len);
+        let eps = grow(&mut self.scratch.noise, st.eps_len);
+        self.noise.fill(eps);
+        let out = st.f.call(&[
+            Arg::F32(&self.params.theta, &[st.np]),
+            Arg::F32(x, &st.x_shape),
+            Arg::F32(eps, &st.eps_shape),
+        ])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Adaptive surrogate path: chunked `fwd_full` rounds with fresh
+    /// chaotic `eps` noise per pass and the same stop-rule loop as the
+    /// split path.
+    fn classify_adaptive_surrogate(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        r: &ResolvedSampler,
+        t0: Instant,
+    ) -> Result<Vec<ClassifyResult>> {
+        let st = self.stage_surrogate(images, n)?;
+        let nc = self.arts.meta.n_classes;
+
+        let mut accums: Vec<PredictiveAccum> = (0..n).map(|_| PredictiveAccum::new(nc)).collect();
+        let mut states: Vec<StopState> = vec![StopState::default(); n];
+        let mut verdicts: Vec<Option<Verdict>> = vec![None; n];
+        // align 1: the surrogate path draws per pass with no sharding, so
+        // thread-aligned chunks would only inflate the stop granularity
+        let mut sched = ChunkSchedule::new(r, 1);
+        while let Some(chunk) = sched.next_chunk() {
+            for _ in 0..chunk {
+                let pass = self.surrogate_pass(&st)?;
+                push_pass(&mut accums, &pass, nc);
+            }
+            if check_stops(r, &mut accums, &mut states, &mut verdicts) {
+                break;
+            }
+        }
+        Ok(assemble_results(accums, verdicts, &self.cfg.policy, n, t0))
+    }
+
+    /// Surrogate path: `passes_n` calls of `fwd_full` with fresh chaotic
+    /// noise as the `eps` operand.
+    fn forward_surrogate(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        passes_n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let st = self.stage_surrogate(images, n)?;
+        let mut passes = Vec::with_capacity(passes_n);
+        for _ in 0..passes_n {
+            passes.push(self.surrogate_pass(&st)?);
+        }
+        Ok(passes)
+    }
+
+    /// Split path: one `fwd_pre`, then a single batched backend sample plan
+    /// (all passes × all images in one call), then one `fwd_post` per pass.
+    fn forward_split(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        passes_n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let st = self.stage_split(images, n)?;
+        let meta = &self.arts.meta;
         let plan = SamplePlan::new(passes_n, n, meta.prob_ch, meta.prob_hw, meta.prob_hw);
         // the backend is the only source of randomness on this path; all
         // N x B stochastic convolutions happen in this one call, sharded
         // across the worker pool and written into reusable arena lanes
         let d_all = grow(&mut self.scratch.samples, plan.total_size());
-        self.backend.sample_conv(&plan, &x3q[..n * act], d_all)?;
+        self.backend.sample_conv(&plan, &st.x3q[..n * st.act], d_all)?;
         let mut passes = Vec::with_capacity(passes_n);
-        let d3 = grow(&mut self.scratch.pass, b * act);
-        d3[n * act..].fill(0.0); // zero the batch padding once per request
         for s in 0..passes_n {
-            d3[..n * act].copy_from_slice(&d_all[s * n * act..(s + 1) * n * act]);
-            let out = post.call(&[
-                Arg::F32(&self.params.theta, &[np]),
-                Arg::F32(&x3q, &act_shape),
-                Arg::F32(d3, &act_shape),
-            ])?;
-            passes.push(out.into_iter().next().unwrap());
+            passes.push(self.post_pass(&st, n, s * n * st.act)?);
         }
         Ok(passes)
+    }
+
+    /// The engine's sampler configuration (effective stop rule).
+    pub fn sampler_config(&self) -> &SamplerConfig {
+        &self.cfg.sampler
     }
 
     /// Simulated-optical-time / substrate + host telemetry line.
@@ -347,4 +553,97 @@ impl Engine {
             self.backend.report()
         )
     }
+}
+
+/// Owned staging of one split-path request (see [`Engine::stage_split`]):
+/// `Arc` executables and the quantized activations, so holding it borrows
+/// nothing from the engine.
+struct SplitStage {
+    post: Arc<CompiledFn>,
+    x3q: Vec<f32>,
+    act_shape: [i64; 4],
+    np: i64,
+    b: usize,
+    act: usize,
+}
+
+/// Owned staging of one surrogate-path request (see
+/// [`Engine::stage_surrogate`]).  The padded input and `eps` operand live
+/// in the engine's scratch lanes, addressed by length.
+struct SurrogateStage {
+    f: Arc<CompiledFn>,
+    x_shape: [i64; 4],
+    eps_shape: [i64; 5],
+    np: i64,
+    x_len: usize,
+    eps_len: usize,
+}
+
+/// Fold one pass's batch logits into every still-sampling image.
+fn push_pass(accums: &mut [PredictiveAccum], pass: &[f32], nc: usize) {
+    for (i, acc) in accums.iter_mut().enumerate() {
+        if !acc.is_frozen() {
+            acc.push_logits(&pass[i * nc..(i + 1) * nc]);
+        }
+    }
+}
+
+/// Chunk-boundary stop-rule sweep: freeze every unfrozen image whose rule
+/// fired and record its verdict.  Returns `true` once every image is
+/// frozen (the round loop can end early).
+fn check_stops(
+    r: &ResolvedSampler,
+    accums: &mut [PredictiveAccum],
+    states: &mut [StopState],
+    verdicts: &mut [Option<Verdict>],
+) -> bool {
+    let mut all_frozen = true;
+    for ((acc, st), verdict) in accums.iter_mut().zip(states).zip(verdicts) {
+        if acc.is_frozen() {
+            continue;
+        }
+        let stats = acc.stats();
+        if let Some(reason) = st.update(&r.rule, &stats, acc.n(), r.min) {
+            *verdict = Some(Verdict {
+                samples_used: acc.n(),
+                reason,
+            });
+            acc.freeze();
+        } else {
+            all_frozen = false;
+        }
+    }
+    all_frozen
+}
+
+/// Finalize an adaptive round loop into per-image results.  Unfrozen
+/// accumulators spent the whole budget ([`StopReason::BudgetExhausted`]);
+/// each predictive is built by the exact one-shot aggregation path over
+/// the samples its accumulator saw.
+fn assemble_results(
+    accums: Vec<PredictiveAccum>,
+    verdicts: Vec<Option<Verdict>>,
+    policy: &UncertaintyPolicy,
+    n: usize,
+    t0: Instant,
+) -> Vec<ClassifyResult> {
+    let per_image_latency = t0.elapsed().as_micros() as f64 / n as f64;
+    accums
+        .into_iter()
+        .zip(verdicts)
+        .map(|(acc, verdict)| {
+            let verdict = verdict.unwrap_or(Verdict {
+                samples_used: acc.n(),
+                reason: StopReason::BudgetExhausted,
+            });
+            let predictive = acc.into_predictive();
+            let decision = policy.decide(&predictive);
+            ClassifyResult {
+                predictive,
+                decision,
+                latency_us: per_image_latency,
+                samples_used: verdict.samples_used,
+            }
+        })
+        .collect()
 }

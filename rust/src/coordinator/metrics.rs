@@ -74,6 +74,14 @@ pub struct EngineMetrics {
     pub accepted: u64,
     pub rejected_ood: u64,
     pub flagged_ambiguous: u64,
+    /// Stochastic passes folded into predictives across all requests — the
+    /// adaptive sampler's economy shows up as `samples_drawn / requests`
+    /// falling below the configured `n_samples`.  Counts per-image
+    /// information budgets (`ClassifyResult::samples_used`): for
+    /// single-image requests that equals backend compute; in multi-image
+    /// batches the backend additionally draws for already-frozen images
+    /// until the whole batch resolves.
+    pub samples_drawn: u64,
     pub batch_latency: LatencyHistogram,
     pub request_latency: LatencyHistogram,
 }
@@ -85,6 +93,7 @@ impl EngineMetrics {
         self.batch_latency.record(elapsed.as_micros() as f64);
         for r in results {
             self.request_latency.record(r.latency_us);
+            self.samples_drawn += r.samples_used as u64;
             match r.decision {
                 Decision::Accept { .. } => self.accepted += 1,
                 Decision::RejectOod { .. } => self.rejected_ood += 1,
@@ -93,14 +102,25 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean stochastic passes per request.
+    pub fn mean_samples(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.samples_drawn as f64 / self.requests as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} batches={} accept={} reject_ood={} ambiguous={} mean_batch={:.0}us p95_batch={:.0}us",
+            "requests={} batches={} accept={} reject_ood={} ambiguous={} mean_samples={:.2} \
+             mean_batch={:.0}us p95_batch={:.0}us",
             self.requests,
             self.batches,
             self.accepted,
             self.rejected_ood,
             self.flagged_ambiguous,
+            self.mean_samples(),
             self.batch_latency.mean_us(),
             self.batch_latency.percentile_us(95.0),
         )
@@ -113,6 +133,8 @@ impl EngineMetrics {
             ("accepted", Json::Num(self.accepted as f64)),
             ("rejected_ood", Json::Num(self.rejected_ood as f64)),
             ("flagged_ambiguous", Json::Num(self.flagged_ambiguous as f64)),
+            ("samples_drawn", Json::Num(self.samples_drawn as f64)),
+            ("mean_samples_per_request", Json::Num(self.mean_samples())),
             ("mean_batch_us", Json::Num(self.batch_latency.mean_us())),
             (
                 "p95_batch_us",
@@ -150,5 +172,23 @@ mod tests {
         let m = EngineMetrics::default();
         let j = m.to_json();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("mean_samples_per_request").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn mean_samples_tracks_adaptive_spend() {
+        let pred = crate::bnn::Predictive::from_logits(&vec![vec![3.0, 0.0]; 2]);
+        let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
+        let r = |samples_used| ClassifyResult {
+            predictive: pred.clone(),
+            decision: decision.clone(),
+            latency_us: 10.0,
+            samples_used,
+        };
+        let mut m = EngineMetrics::default();
+        m.record_batch(2, Duration::from_micros(100), &[r(4), r(10)]);
+        assert_eq!(m.samples_drawn, 14);
+        assert!((m.mean_samples() - 7.0).abs() < 1e-12);
+        assert!(m.report().contains("mean_samples=7.00"), "{}", m.report());
     }
 }

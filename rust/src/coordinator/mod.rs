@@ -15,13 +15,17 @@
 //!
 //! The engine thread owns all non-`Send` state (PJRT client/executables and
 //! the sampling backend); everything upstream communicates over MPMC
-//! channels.  Each request is expanded into `n_samples` stochastic forward
-//! passes (paper: N = 10) executed as one batched
-//! [`crate::backend::SamplePlan`] on the configured
+//! channels.  Each request is expanded into up to `n_samples` stochastic
+//! forward passes (paper: N = 10) executed as batched
+//! [`crate::backend::SamplePlan`]s on the configured
 //! [`crate::backend::ProbConvBackend`] — chaotic light on the photonic
 //! backend (no PRNG on the request path), xoshiro256++ + Box–Muller on the
 //! digital baseline, or a single deterministic pass on the mean-field
-//! backend.
+//! backend.  With an adaptive [`crate::sampler::StopRule`] the passes are
+//! drawn in chunks and each request stops as soon as its decision is
+//! statistically resolved; requests carry optional budgets
+//! ([`RequestBudget`]), and the service loop batches same-budget requests
+//! together so variable-cost requests never cross-contaminate a plan.
 
 pub mod batcher;
 pub mod engine;
@@ -30,6 +34,7 @@ pub mod router;
 pub mod service;
 
 pub use crate::backend::{BackendKind, PrefetchMode};
+pub use crate::sampler::{RequestBudget, SamplerConfig, StopRule};
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
 pub use router::Router;

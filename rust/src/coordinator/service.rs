@@ -12,19 +12,56 @@ use super::engine::{ClassifyResult, Engine, EngineConfig};
 use crate::exec::channel::{channel, Receiver, Sender};
 use crate::log_info;
 use crate::runtime::{ModelArtifacts, ParamStore};
+use crate::sampler::RequestBudget;
 
-/// One classification request: an image plus a one-shot reply channel.
+/// One classification request: an image, its per-request sample budget,
+/// and a one-shot reply channel.
 pub struct ClassifyRequest {
     pub image: Vec<f32>,
+    pub budget: RequestBudget,
     pub reply: Sender<Result<ClassifyResult>>,
 }
 
 impl ClassifyRequest {
     /// Build a request + the receiver for its reply.
     pub fn new(image: Vec<f32>) -> (Self, Receiver<Result<ClassifyResult>>) {
-        let (tx, rx) = channel(1);
-        (Self { image, reply: tx }, rx)
+        Self::with_budget(image, RequestBudget::default())
     }
+
+    /// Build a request carrying budget overrides (`max_samples` /
+    /// `target_confidence` protocol fields).
+    pub fn with_budget(
+        image: Vec<f32>,
+        budget: RequestBudget,
+    ) -> (Self, Receiver<Result<ClassifyResult>>) {
+        let (tx, rx) = channel(1);
+        (
+            Self {
+                image,
+                budget,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+}
+
+/// Partition one dynamic batch into same-budget groups, preserving arrival
+/// order within each group (and of first appearance across groups).  The
+/// engine classifies each group as one batched plan: requests with
+/// different budgets are *variable-cost* and must not share a plan — a
+/// 3-sample request batched with a 20-sample one would either overspend or
+/// starve.  Budgets on a batch are few in practice, so a linear scan wins
+/// over hashing.
+fn group_by_budget(batch: Vec<ClassifyRequest>) -> Vec<(RequestBudget, Vec<ClassifyRequest>)> {
+    let mut groups: Vec<(RequestBudget, Vec<ClassifyRequest>)> = Vec::new();
+    for req in batch {
+        match groups.iter_mut().find(|(b, _)| *b == req.budget) {
+            Some((_, members)) => members.push(req),
+            None => groups.push((req.budget, vec![req])),
+        }
+    }
+    groups
 }
 
 /// Handle to a running engine thread.
@@ -80,32 +117,36 @@ impl EngineHandle {
                     let image_size = engine.image_size();
                     let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
                     while let Some(batch) = batcher.next_batch() {
-                        let mut images = Vec::with_capacity(batch.len() * image_size);
-                        let mut ok = Vec::with_capacity(batch.len());
-                        for req in batch {
-                            if req.image.len() == image_size {
-                                images.extend_from_slice(&req.image);
-                                ok.push(req.reply);
-                            } else {
-                                let _ = req.reply.send(Err(anyhow!(
-                                    "image size {} != expected {}",
-                                    req.image.len(),
-                                    image_size
-                                )));
-                            }
-                        }
-                        if ok.is_empty() {
-                            continue;
-                        }
-                        match engine.classify(&images, ok.len()) {
-                            Ok(results) => {
-                                for (reply, res) in ok.into_iter().zip(results) {
-                                    let _ = reply.send(Ok(res));
+                        // same-budget requests share one batched plan;
+                        // mixed budgets split into per-budget sub-batches
+                        for (budget, group) in group_by_budget(batch) {
+                            let mut images = Vec::with_capacity(group.len() * image_size);
+                            let mut ok = Vec::with_capacity(group.len());
+                            for req in group {
+                                if req.image.len() == image_size {
+                                    images.extend_from_slice(&req.image);
+                                    ok.push(req.reply);
+                                } else {
+                                    let _ = req.reply.send(Err(anyhow!(
+                                        "image size {} != expected {}",
+                                        req.image.len(),
+                                        image_size
+                                    )));
                                 }
                             }
-                            Err(e) => {
-                                for reply in ok {
-                                    let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                            if ok.is_empty() {
+                                continue;
+                            }
+                            match engine.classify_with_budget(&images, ok.len(), &budget) {
+                                Ok(results) => {
+                                    for (reply, res) in ok.into_iter().zip(results) {
+                                        let _ = reply.send(Ok(res));
+                                    }
+                                }
+                                Err(e) => {
+                                    for reply in ok {
+                                        let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                                    }
                                 }
                             }
                         }
@@ -155,5 +196,56 @@ impl Drop for EngineHandle {
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(pixel: f32, budget: RequestBudget) -> ClassifyRequest {
+        ClassifyRequest::with_budget(vec![pixel], budget).0
+    }
+
+    #[test]
+    fn grouping_preserves_order_and_separates_budgets() {
+        let small = RequestBudget {
+            max_samples: Some(3),
+            target_confidence: None,
+        };
+        let conf = RequestBudget {
+            max_samples: None,
+            target_confidence: Some(0.9),
+        };
+        let batch = vec![
+            req(0.0, RequestBudget::default()),
+            req(1.0, small),
+            req(2.0, RequestBudget::default()),
+            req(3.0, conf),
+            req(4.0, small),
+        ];
+        let groups = group_by_budget(batch);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, RequestBudget::default());
+        assert_eq!(
+            groups[0].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
+            vec![0.0, 2.0]
+        );
+        assert_eq!(groups[1].0, small);
+        assert_eq!(
+            groups[1].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
+            vec![1.0, 4.0]
+        );
+        assert_eq!(groups[2].0, conf);
+        assert_eq!(groups[2].1.len(), 1);
+    }
+
+    #[test]
+    fn uniform_batch_stays_one_group() {
+        let batch: Vec<ClassifyRequest> =
+            (0..5).map(|i| req(i as f32, RequestBudget::default())).collect();
+        let groups = group_by_budget(batch);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].1.len(), 5);
     }
 }

@@ -13,6 +13,7 @@ use crate::bnn::confusion::ConfusionMatrix;
 use crate::bnn::rocauc::{auroc, best_threshold, roc_curve, RocPoint};
 use crate::coordinator::Engine;
 use crate::data::Dataset;
+use crate::sampler::RequestBudget;
 
 /// Per-split uncertainty scores.
 #[derive(Debug, Clone)]
@@ -22,6 +23,9 @@ pub struct SplitScores {
     pub se: Vec<f64>,
     pub predicted: Vec<usize>,
     pub labels: Vec<i64>,
+    /// Stochastic passes spent per input (constant on the fixed rule,
+    /// input-dependent under adaptive stopping).
+    pub samples: Vec<usize>,
 }
 
 impl SplitScores {
@@ -37,16 +41,36 @@ impl SplitScores {
             .count();
         c as f64 / self.labels.len() as f64
     }
+
+    /// Mean stochastic passes per input — the adaptive sampler's economy.
+    pub fn mean_samples(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<usize>() as f64 / self.samples.len() as f64
+    }
 }
 
 /// Classify up to `limit` inputs of a split through the engine.
 pub fn eval_split(engine: &mut Engine, ds: &Dataset, limit: usize) -> Result<SplitScores> {
+    eval_split_budget(engine, ds, limit, &RequestBudget::default())
+}
+
+/// [`eval_split`] with per-request budget overrides (the accuracy-vs-cost
+/// sweeps drive this with a range of `target_confidence` values).
+pub fn eval_split_budget(
+    engine: &mut Engine,
+    ds: &Dataset,
+    limit: usize,
+    budget: &RequestBudget,
+) -> Result<SplitScores> {
     let n = ds.n.min(limit);
     let bsize = 8usize;
     let mut mi = Vec::with_capacity(n);
     let mut se = Vec::with_capacity(n);
     let mut predicted = Vec::with_capacity(n);
     let mut labels = Vec::with_capacity(n);
+    let mut samples = Vec::with_capacity(n);
     let mut buf = Vec::new();
     let mut i = 0;
     while i < n {
@@ -56,10 +80,11 @@ pub fn eval_split(engine: &mut Engine, ds: &Dataset, limit: usize) -> Result<Spl
             buf.extend_from_slice(ds.image(j));
             labels.push(ds.labels[j]);
         }
-        for r in engine.classify(&buf, b)? {
+        for r in engine.classify_with_budget(&buf, b, budget)? {
             mi.push(r.predictive.mutual_information);
             se.push(r.predictive.softmax_entropy);
             predicted.push(r.predictive.predicted);
+            samples.push(r.samples_used);
         }
         i += b;
     }
@@ -69,7 +94,42 @@ pub fn eval_split(engine: &mut Engine, ds: &Dataset, limit: usize) -> Result<Spl
         se,
         predicted,
         labels,
+        samples,
     })
+}
+
+/// One point of the accuracy-vs-sampling-cost trade-off curve.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptivePoint {
+    pub target_confidence: f64,
+    pub mean_samples: f64,
+    pub accuracy: f64,
+}
+
+/// Sweep `target_confidence` values over a split: each point classifies
+/// the split under that per-request confidence target and reports the
+/// resulting mean samples/request next to the accuracy — the paper's
+/// sampling-cost claim as a measurable curve.
+pub fn accuracy_vs_samples(
+    engine: &mut Engine,
+    ds: &Dataset,
+    limit: usize,
+    targets: &[f64],
+) -> Result<Vec<AdaptivePoint>> {
+    let mut curve = Vec::with_capacity(targets.len());
+    for &t in targets {
+        let budget = RequestBudget {
+            max_samples: None,
+            target_confidence: Some(t),
+        };
+        let scores = eval_split_budget(engine, ds, limit, &budget)?;
+        curve.push(AdaptivePoint {
+            target_confidence: t,
+            mean_samples: scores.mean_samples(),
+            accuracy: scores.accuracy(),
+        });
+    }
+    Ok(curve)
 }
 
 /// Everything the Fig. 4 / Fig. 5 panels report.
@@ -201,13 +261,24 @@ mod tests {
         pred: Vec<usize>,
         lab: Vec<i64>,
     ) -> SplitScores {
+        let samples = vec![10usize; lab.len()];
         SplitScores {
             name: name.into(),
             mi,
             se,
             predicted: pred,
             labels: lab,
+            samples,
         }
+    }
+
+    #[test]
+    fn mean_samples_over_split() {
+        let mut s = scores("id", vec![0.0; 3], vec![0.0; 3], vec![0; 3], vec![0; 3]);
+        s.samples = vec![2, 4, 9];
+        assert!((s.mean_samples() - 5.0).abs() < 1e-12);
+        s.samples.clear();
+        assert_eq!(s.mean_samples(), 0.0);
     }
 
     #[test]

@@ -42,6 +42,17 @@
 //! `coordinator_micro` report photonic-vs-digital sampling throughput
 //! side by side.
 //!
+//! ## Adaptive sampling
+//!
+//! [`sampler`] makes inference *anytime*: predictive samples are drawn in
+//! chunks and a pluggable [`sampler::StopRule`] stops as soon as the
+//! decision is statistically resolved (`--adaptive` /
+//! `--target-confidence` on the CLI, `[sampler]` in a serving config,
+//! `max_samples` / `target_confidence` per request on the wire).  The
+//! `Fixed` compatibility default reproduces the pre-sampler engine
+//! bit-for-bit; see the README's "Adaptive sampling" section for the
+//! extended `(seed, threads, prefetch, rule)` reproducibility contract.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 
@@ -59,6 +70,7 @@ pub mod experiments;
 pub mod photonics;
 pub mod proptest_mini;
 pub mod runtime;
+pub mod sampler;
 pub mod server;
 pub mod svi;
 pub mod util;

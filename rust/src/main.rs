@@ -22,12 +22,13 @@ use photonic_bayes::cli::Args;
 use photonic_bayes::config::Config;
 use photonic_bayes::coordinator::service::ServiceConfig;
 use photonic_bayes::coordinator::{
-    BackendKind, Engine, EngineConfig, ExecMode, PrefetchMode, Router,
+    BackendKind, Engine, EngineConfig, ExecMode, PrefetchMode, RequestBudget, Router,
+    SamplerConfig, StopRule,
 };
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource};
 use photonic_bayes::exec::CancelToken;
-use photonic_bayes::experiments::uncertainty::{build_report, eval_split};
+use photonic_bayes::experiments::uncertainty::{accuracy_vs_samples, build_report, eval_split};
 use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
 use photonic_bayes::runtime::artifact::artifacts_root;
 use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
@@ -78,21 +79,28 @@ USAGE: pbm <subcommand> [flags]
             --seed N --eval-every N --out STEM]
   eval      --dataset D [--params FILE --samples N --backend photonic|digital|mean
             --mode M|surrogate --limit N --split test|ood|ambiguous|fashion
-            --threads N --entropy-prefetch off|sync|on --entropy-block N]
+            --threads N --entropy-prefetch off|sync|on --entropy-block N
+            --adaptive --min-samples N --max-samples N --target-confidence F]
   report    fig2 | fig2e | fig4 | fig5 | headline | nist [--params FILE
-            --samples N --backend B --mode M --limit N --threads N]
+            --samples N --backend B --mode M --limit N --threads N
+            --adaptive --min-samples N --max-samples N --target-confidence F]
   calibrate [--kernels N --outputs M --seed N]
   nist      [--bits N --bw GHZ]
   serve     [--config FILE --addr HOST:PORT --datasets digits,blood
             --backend B --mode M --samples N --mi-threshold F
             --max-batch N --max-wait-ms N --threads N
-            --entropy-prefetch off|sync|on --entropy-block N]
+            --entropy-prefetch off|sync|on --entropy-block N
+            --adaptive --min-samples N --max-samples N --target-confidence F]
             (--threads: sampling workers per engine; 1 = sequential,
              0 = one per core; --entropy-prefetch on: background entropy
              producers feed the sampling hot path via lock-free block
-             rings; results are deterministic per (seed, threads, prefetch))
-  classify  [--addr HOST:PORT --dataset D --split S --index I]
-            [--local --backend B --threads N]   (in-process, no server)
+             rings; results are deterministic per (seed, threads, prefetch);
+             --adaptive: sequential sampling with early stopping — see the
+             [sampler] config table; clients may send per-request
+             max_samples / target_confidence fields)
+  classify  [--addr HOST:PORT --dataset D --split S --index I
+            --max-samples N --target-confidence F]
+            [--local --backend B --threads N --adaptive]  (in-process)
   info
 ",
         photonic_bayes::version()
@@ -117,6 +125,74 @@ fn parse_mode(args: &Args) -> Result<ExecMode> {
         return Ok(ExecMode::Split(BackendKind::parse(b)?));
     }
     ExecMode::parse(&args.get_or("mode", "photonic"))
+}
+
+/// Assemble the sampler configuration from CLI flags layered over an
+/// optional `[sampler]` config-file table.  `--target-confidence` implies
+/// the confidence-gap rule; bare `--adaptive` selects the MI-band rule
+/// (knobs: `mi_low` / `mi_high` / `stable` / `target_gap` / `chunk` under
+/// `[sampler]`).  Validated here — the CLI boundary — so `--samples 0`,
+/// `--min-samples > --max-samples`, and non-finite confidences die with a
+/// typed error instead of a downstream panic.
+fn parse_sampler(args: &Args, file: &Config) -> Result<SamplerConfig> {
+    let min_explicit =
+        args.get("min-samples").is_some() || file.get("sampler", "min_samples").is_some();
+    let mut min_samples =
+        args.get_usize("min-samples", file.get_usize("sampler", "min_samples", 2)?)?;
+    let max_samples =
+        args.get_usize("max-samples", file.get_usize("sampler", "max_samples", 0)?)?;
+    if !min_explicit && max_samples != 0 {
+        // a lone --max-samples below the *default* min is a clamp, not a
+        // conflict (mirrors how a wire-request max_samples cap behaves);
+        // only an explicitly-set min > max is rejected below
+        min_samples = min_samples.min(max_samples);
+    }
+    let chunk = file.get_usize("sampler", "chunk", 0)?;
+    let stable = file.get_usize("sampler", "stable", 2)?;
+    let rule_name = file.get_or("sampler", "rule", "fixed");
+    let target_conf = if args.has("target-confidence") {
+        Some(args.get_f64("target-confidence", 0.0)?)
+    } else if file.get("sampler", "target_confidence").is_some() {
+        Some(file.get_f64("sampler", "target_confidence", 0.0)?)
+    } else {
+        None
+    };
+    let rule = if let Some(c) = target_conf {
+        match StopRule::confidence_target(c).map_err(|e| anyhow!("target-confidence: {e}"))? {
+            StopRule::ConfidenceGap { target_gap, .. } => StopRule::ConfidenceGap {
+                target_gap,
+                stable,
+            },
+            r => r,
+        }
+    } else if args.has("adaptive") || rule_name != "fixed" {
+        match rule_name.as_str() {
+            "fixed" | "uncertainty" => StopRule::UncertaintyResolved {
+                mi_low: file.get_f64("sampler", "mi_low", 0.002)?,
+                mi_high: file.get_f64("sampler", "mi_high", 0.08)?,
+                stable,
+            },
+            "confidence-gap" => StopRule::ConfidenceGap {
+                target_gap: file.get_f64("sampler", "target_gap", 0.5)?,
+                stable,
+            },
+            other => {
+                return Err(anyhow!(
+                    "[sampler] rule must be fixed|confidence-gap|uncertainty, got {other}"
+                ))
+            }
+        }
+    } else {
+        StopRule::Fixed(0)
+    };
+    let cfg = SamplerConfig {
+        rule,
+        min_samples,
+        max_samples,
+        chunk,
+    };
+    cfg.validate().map_err(|e| anyhow!("sampler config: {e}"))?;
+    Ok(cfg)
 }
 
 fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
@@ -146,6 +222,7 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
         threads: args.get_usize("threads", 1)?,
         entropy_prefetch: PrefetchMode::parse(&args.get_or("entropy-prefetch", "off"))?,
         entropy_block: args.get_usize("entropy-block", 4096)?,
+        sampler: parse_sampler(args, &Config::default())?,
         seed: args.get_u64("seed", 42)?,
     };
     Engine::new(arts, params, cfg)
@@ -224,12 +301,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mut engine = build_engine(args, &dataset)?;
     let scores = eval_split(&mut engine, &ds, limit)?;
     println!(
-        "{dataset}/{split} ({} inputs, mode {:?}): accuracy {:.2}%  mean MI {:.4}  mean SE {:.4}",
+        "{dataset}/{split} ({} inputs, mode {:?}): accuracy {:.2}%  mean MI {:.4}  mean SE \
+         {:.4}  mean samples/request {:.2} (rule {})",
         scores.labels.len(),
         engine.mode(),
         scores.accuracy() * 100.0,
         photonic_bayes::util::mathstat::mean(&scores.mi),
         photonic_bayes::util::mathstat::mean(&scores.se),
+        scores.mean_samples(),
+        engine.sampler_config().rule.name(),
     );
     println!("{}", engine.report());
     Ok(())
@@ -370,6 +450,21 @@ fn report_uncertainty(args: &Args, dataset: &str) -> Result<()> {
     let names: Vec<String> = (0..n_classes).map(|c| c.to_string()).collect();
     let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
     println!("{}", rep.confusion.render(&name_refs));
+    if args.has("adaptive") || engine.sampler_config().rule.is_adaptive() {
+        let targets = [0.6, 0.75, 0.9, 0.97];
+        let curve =
+            accuracy_vs_samples(&mut engine, &load_split(dataset, "test")?, limit, &targets)?;
+        println!("\naccuracy vs mean samples/request (confidence-target sweep):");
+        println!("{:>10} {:>14} {:>10}", "target", "mean samples", "accuracy");
+        for p in &curve {
+            println!(
+                "{:>10.2} {:>14.2} {:>9.2}%",
+                p.target_confidence,
+                p.mean_samples,
+                p.accuracy * 100.0
+            );
+        }
+    }
     println!("{}", engine.report());
     Ok(())
 }
@@ -474,6 +569,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ))?,
             entropy_block: args
                 .get_usize("entropy-block", file.get_usize("engine", "entropy_block", 4096)?)?,
+            sampler: parse_sampler(args, &file)?,
             seed: args.get_u64("seed", 42)?,
         };
         let svc_cfg = ServiceConfig {
@@ -520,18 +616,35 @@ fn cmd_classify(args: &Args) -> Result<()> {
     if !local && args.has("backend") {
         eprintln!("warning: --backend is ignored when classifying against a gateway (use --local)");
     }
+    // per-request budget overrides ride the wire (or the local engine call)
+    let budget = RequestBudget {
+        max_samples: match args.get("max-samples") {
+            Some(_) => Some(args.get_usize("max-samples", 0)?),
+            None => None,
+        },
+        target_confidence: match args.get("target-confidence") {
+            Some(_) => Some(args.get_f64("target-confidence", 0.0)?),
+            None => None,
+        },
+    };
+    budget
+        .validate()
+        .map_err(|e| anyhow!("sample budget: {e}"))?;
     if local {
         let mut engine = build_engine(args, &dataset)?;
         let r = engine
-            .classify(ds.image(index), 1)?
+            .classify_with_budget(ds.image(index), 1, &budget)?
             .into_iter()
             .next()
             .unwrap();
         println!("true label: {}", ds.labels[index]);
         println!(
-            "backend {} ({} passes): predicted {} | MI {:.4} SE {:.3} agreement {:.0}% | {:?}",
+            "backend {} ({} of max {} passes, rule {}): predicted {} | MI {:.4} SE {:.3} \
+             agreement {:.0}% | {:?}",
             engine.backend_kind(),
+            r.samples_used,
             engine.samples_per_request(),
+            engine.sampler_config().rule.name(),
             r.predictive.predicted,
             r.predictive.mutual_information,
             r.predictive.softmax_entropy,
@@ -543,7 +656,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     }
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let mut client = Client::connect(&addr)?;
-    let resp = client.classify(&dataset, ds.image(index))?;
+    let resp = client.classify_with_budget(&dataset, ds.image(index), &budget)?;
     println!("true label: {}", ds.labels[index]);
     println!("response:   {}", resp.to_string_pretty());
     Ok(())

@@ -1,0 +1,226 @@
+//! Incremental predictive aggregation over chunked sampling rounds.
+
+use crate::bnn::metrics;
+use crate::bnn::Predictive;
+use crate::util::mathstat::softmax;
+
+/// Running statistics of an accumulator, evaluated at chunk boundaries to
+/// drive stop rules.  Computed in f64 from the running sums — decision
+/// inputs only; the reported [`Predictive`] is finalized through the exact
+/// one-shot aggregation path.
+#[derive(Debug, Clone)]
+pub struct AccumStats {
+    /// Samples folded in so far.
+    pub n: usize,
+    /// argmax of the running mean predictive.
+    pub top: usize,
+    /// Mean posterior mass of the argmax class.
+    pub top_prob: f64,
+    /// Argmax margin `p(1st) − p(2nd)` of the running mean predictive.
+    pub gap: f64,
+    /// Running Shannon entropy of the mean predictive (Eq. 1).
+    pub shannon: f64,
+    /// Running mean per-pass entropy (Eq. 2).
+    pub softmax: f64,
+    /// Running mutual information `H − SE`, clamped at 0.
+    pub mi: f64,
+}
+
+/// Folds chunked rounds of per-pass logits into running per-class
+/// statistics.  Keeps the per-pass probability rows, so
+/// [`PredictiveAccum::into_predictive`] at any budget goes through
+/// [`Predictive::from_probs`] — **bitwise equal** to the one-shot
+/// [`Predictive::from_batched_logits`] over the same passes.
+#[derive(Debug, Clone)]
+pub struct PredictiveAccum {
+    n_classes: usize,
+    rows: Vec<Vec<f32>>,
+    /// f64 running sum of per-pass probabilities (stop-rule inputs).
+    sum: Vec<f64>,
+    /// f64 running sum of per-pass entropies (stop-rule inputs).
+    row_entropy_sum: f64,
+    frozen: bool,
+}
+
+impl PredictiveAccum {
+    pub fn new(n_classes: usize) -> Self {
+        assert!(n_classes > 0, "need at least one class");
+        Self {
+            n_classes,
+            rows: Vec::new(),
+            sum: vec![0.0; n_classes],
+            row_entropy_sum: 0.0,
+            frozen: false,
+        }
+    }
+
+    /// Fold one pass's logits in (softmax + running sums).  Must not be
+    /// called on a frozen accumulator.
+    pub fn push_logits(&mut self, logits: &[f32]) {
+        debug_assert!(!self.frozen, "pushed into a frozen accumulator");
+        debug_assert_eq!(logits.len(), self.n_classes);
+        let row = softmax(logits);
+        self.row_entropy_sum += metrics::entropy(&row);
+        for (s, &p) in self.sum.iter_mut().zip(&row) {
+            *s += p as f64;
+        }
+        self.rows.push(row);
+    }
+
+    /// Samples folded in so far.
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Stop pushing further samples (the stop rule fired); the final
+    /// predictive uses exactly the samples seen so far.
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Running statistics for stop-rule evaluation.
+    pub fn stats(&self) -> AccumStats {
+        let n = self.rows.len();
+        assert!(n > 0, "stats on an empty accumulator");
+        let inv = 1.0 / n as f64;
+        let mut top = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        let mut second = f64::NEG_INFINITY;
+        let mut shannon = 0.0f64;
+        for (c, &s) in self.sum.iter().enumerate() {
+            let p = s * inv;
+            if p > 0.0 {
+                shannon -= p * p.ln();
+            }
+            if p > best {
+                second = best;
+                best = p;
+                top = c;
+            } else if p > second {
+                second = p;
+            }
+        }
+        if !second.is_finite() {
+            second = 0.0; // single-class banks
+        }
+        let se = self.row_entropy_sum * inv;
+        AccumStats {
+            n,
+            top,
+            top_prob: best,
+            gap: best - second,
+            shannon,
+            softmax: se,
+            mi: (shannon - se).max(0.0),
+        }
+    }
+
+    /// Finalize into the reported [`Predictive`] — the same
+    /// [`Predictive::from_probs`] aggregation the one-shot engine path
+    /// uses, over exactly the accumulated rows.
+    pub fn into_predictive(self) -> Predictive {
+        Predictive::from_probs(self.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn passes(n: usize, nc: usize, seed: u64) -> Vec<Vec<f32>> {
+        // deterministic pseudo-logits batches: pass p holds `images * nc`
+        let mut v = Vec::new();
+        let mut s = seed;
+        for _ in 0..n {
+            let row: Vec<f32> = (0..nc * 3)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    ((s >> 33) as f32 / (1u64 << 31) as f32) * 4.0 - 2.0
+                })
+                .collect();
+            v.push(row);
+        }
+        v
+    }
+
+    #[test]
+    fn incremental_matches_one_shot_bitwise() {
+        let batched = passes(10, 4, 99);
+        for image in 0..3 {
+            let mut acc = PredictiveAccum::new(4);
+            for p in &batched {
+                acc.push_logits(&p[image * 4..(image + 1) * 4]);
+            }
+            let a = acc.into_predictive();
+            let b = Predictive::from_batched_logits(&batched, image, 4);
+            assert_eq!(a.probs, b.probs, "image {image}");
+            assert_eq!(a.mean_probs, b.mean_probs, "image {image}");
+            assert_eq!(a.predicted, b.predicted);
+            assert!(a.shannon_entropy == b.shannon_entropy);
+            assert!(a.softmax_entropy == b.softmax_entropy);
+            assert!(a.mutual_information == b.mutual_information);
+            assert!(a.agreement == b.agreement);
+        }
+    }
+
+    #[test]
+    fn stats_track_running_mean() {
+        let mut acc = PredictiveAccum::new(3);
+        for _ in 0..5 {
+            acc.push_logits(&[4.0, 0.0, 0.0]);
+        }
+        let s = acc.stats();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.top, 0);
+        assert!(s.top_prob > 0.9);
+        assert!(s.gap > 0.85);
+        assert!(s.mi < 1e-9, "identical passes carry no epistemic signal");
+
+        // disagreement raises MI
+        let mut acc = PredictiveAccum::new(3);
+        for i in 0..6 {
+            let mut l = [0.0f32; 3];
+            l[i % 3] = 6.0;
+            acc.push_logits(&l);
+        }
+        let s = acc.stats();
+        assert!(s.mi > 0.5, "mi {}", s.mi);
+        assert!(s.gap < 0.1);
+    }
+
+    #[test]
+    fn stats_agree_with_reference_metrics() {
+        let batched = passes(8, 5, 7);
+        let mut acc = PredictiveAccum::new(5);
+        for p in &batched {
+            acc.push_logits(&p[0..5]);
+        }
+        let s = acc.stats();
+        let p = acc.into_predictive();
+        // f64 running stats vs the f32-mean reference: equal to float noise
+        assert!((s.shannon - p.shannon_entropy).abs() < 1e-5);
+        assert!((s.softmax - p.softmax_entropy).abs() < 1e-5);
+        assert!((s.mi - p.mutual_information).abs() < 1e-5);
+        assert_eq!(s.top, p.predicted);
+    }
+
+    #[test]
+    fn freeze_is_sticky() {
+        let mut acc = PredictiveAccum::new(2);
+        acc.push_logits(&[1.0, 0.0]);
+        assert!(!acc.is_frozen());
+        acc.freeze();
+        assert!(acc.is_frozen());
+        assert_eq!(acc.n(), 1);
+        let p = acc.into_predictive();
+        assert_eq!(p.n_samples(), 1);
+    }
+}

@@ -1,0 +1,544 @@
+//! Adaptive sequential sampling: anytime inference with early stopping.
+//!
+//! The paper's economic claim is that the photonic machine *minimizes the
+//! cost of sampling* (37.5 ps per probabilistic convolution).  A fixed
+//! `n_samples` budget squanders that: an easy in-domain image pays the same
+//! N stochastic passes as an ambiguous or out-of-domain one, even though
+//! its decision is statistically resolved after two or three.  This
+//! subsystem draws predictive samples in **chunks** and stops as soon as a
+//! pluggable [`StopRule`] declares the decision resolved:
+//!
+//! * [`accum::PredictiveAccum`] folds chunked rounds of per-pass logits
+//!   into running per-class statistics.  Run to the full budget it is
+//!   **bitwise equal** to the one-shot
+//!   [`crate::bnn::Predictive::from_batched_logits`] aggregation — it keeps
+//!   the same softmax rows and finalizes through the same
+//!   `Predictive::from_probs`; the f64 running stats only drive stop
+//!   decisions, never the reported output.
+//! * [`StopRule`] — `Fixed(n)` (the compatibility default), `ConfidenceGap`
+//!   (argmax posterior-gap stability), `UncertaintyResolved` (MI band
+//!   crossing with hysteresis) — all clamped by `min_samples` /
+//!   `max_samples` and evaluated at chunk boundaries by [`stop::StopState`].
+//! * [`schedule::ChunkSchedule`] slices the budget into rounds.  `Fixed`
+//!   emits **one** full-budget chunk, so the fixed path issues exactly the
+//!   single batched `sample_conv` call it always has — bitwise identical
+//!   per `(seed, threads, prefetch)`.  Adaptive rules emit chunks rounded
+//!   up to the worker-shard count; the backends' shard entropy streams
+//!   persist across calls, so a fixed `(seed, threads, prefetch)` and chunk
+//!   sequence replays bit-identically, and at `threads = 1` a chunked run
+//!   to full budget is bitwise identical to the one-shot call.
+//!
+//! [`RequestBudget`] carries per-request overrides (`max_samples`,
+//! `target_confidence`) from the wire protocol / CLI; [`BudgetError`] is
+//! the typed rejection for hostile or nonsensical budgets (`n == 0`,
+//! `min > max`, non-finite confidence) at the protocol boundary.
+
+pub mod accum;
+pub mod schedule;
+pub mod stop;
+#[doc(hidden)]
+pub mod synth;
+
+pub use accum::{AccumStats, PredictiveAccum};
+pub use schedule::ChunkSchedule;
+pub use stop::{StopReason, StopState, Verdict};
+
+/// When to stop drawing predictive samples for one input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopRule {
+    /// Always draw exactly `n` samples in one round (`0` = inherit the
+    /// engine's `n_samples`).  The compatibility default: classify outputs
+    /// are bitwise identical to the pre-sampler engine.
+    Fixed(usize),
+    /// Stop once the running mean posterior's argmax margin
+    /// `p(1st) − p(2nd)` is at least `target_gap` with an unchanged argmax
+    /// for `stable` consecutive chunk checks.
+    ConfidenceGap { target_gap: f64, stable: usize },
+    /// Stop once the running mutual information leaves the unresolved band:
+    /// `MI <= mi_low` (epistemically resolved — accept or flag-ambiguous
+    /// territory) or `MI >= mi_high` (clearly out-of-domain — reject
+    /// territory), sustained for `stable` consecutive chunk checks
+    /// (hysteresis against MI estimates wobbling across a threshold).
+    UncertaintyResolved {
+        mi_low: f64,
+        mi_high: f64,
+        stable: usize,
+    },
+}
+
+impl StopRule {
+    /// Default adaptive rule: MI band around the paper's OOD operating
+    /// points (0.0185 blood / 0.00308 digits), two-round hysteresis.
+    pub fn uncertainty_default() -> Self {
+        StopRule::UncertaintyResolved {
+            mi_low: 0.002,
+            mi_high: 0.08,
+            stable: 2,
+        }
+    }
+
+    /// Build a [`StopRule::ConfidenceGap`] from a requested posterior mass
+    /// `c` for the predicted class: the argmax margin a top posterior of
+    /// `c` guarantees in the binary worst case is `2c − 1`.
+    pub fn confidence_target(c: f64) -> Result<Self, BudgetError> {
+        if !c.is_finite() {
+            return Err(BudgetError::NonFiniteConfidence(c));
+        }
+        if !(0.5..1.0).contains(&c) {
+            return Err(BudgetError::ConfidenceOutOfRange(c));
+        }
+        Ok(StopRule::ConfidenceGap {
+            target_gap: 2.0 * c - 1.0,
+            stable: 2,
+        })
+    }
+
+    /// Whether this rule can ever stop before the max budget.
+    pub fn is_adaptive(&self) -> bool {
+        !matches!(self, StopRule::Fixed(_))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopRule::Fixed(_) => "fixed",
+            StopRule::ConfidenceGap { .. } => "confidence-gap",
+            StopRule::UncertaintyResolved { .. } => "uncertainty",
+        }
+    }
+}
+
+/// Typed rejection for invalid sample budgets — raised at the protocol /
+/// CLI boundary instead of panicking (or NaN-poisoning a stop decision)
+/// deep inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BudgetError {
+    /// A zero sample budget (`n_samples`, `max_samples`, or a `Fixed(0)`
+    /// rule with no engine default to inherit).
+    ZeroSamples,
+    /// `min_samples` exceeds `max_samples`.
+    MinAboveMax { min: usize, max: usize },
+    /// `target_confidence` is NaN or infinite.
+    NonFiniteConfidence(f64),
+    /// `target_confidence` outside `[0.5, 1)` — below 0.5 stops
+    /// immediately, 1.0 can never be reached by a finite posterior.
+    ConfidenceOutOfRange(f64),
+    /// An inverted MI band (`mi_low > mi_high`): every MI value would land
+    /// on the "low" side first and resolve instantly as settled.
+    InvertedMiBand { low: f64, high: f64 },
+    /// `mi_low` / `mi_high` is NaN or infinite.
+    NonFiniteMiBand(f64),
+}
+
+impl std::fmt::Display for BudgetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetError::ZeroSamples => write!(f, "sample budget must be >= 1"),
+            BudgetError::MinAboveMax { min, max } => {
+                write!(f, "min_samples {min} exceeds max_samples {max}")
+            }
+            BudgetError::NonFiniteConfidence(c) => {
+                write!(f, "target_confidence must be finite, got {c}")
+            }
+            BudgetError::ConfidenceOutOfRange(c) => {
+                write!(f, "target_confidence must be in [0.5, 1), got {c}")
+            }
+            BudgetError::InvertedMiBand { low, high } => {
+                write!(f, "inverted MI band: mi_low {low} > mi_high {high}")
+            }
+            BudgetError::NonFiniteMiBand(v) => {
+                write!(f, "mi_low/mi_high must be finite, got {v}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BudgetError {}
+
+/// Per-request budget overrides, carried by the wire protocol
+/// (`max_samples` / `target_confidence` request fields) and the CLI.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestBudget {
+    /// Cap this request's sample budget below the engine's (never raises
+    /// it — a client cannot buy more compute than the engine configured).
+    pub max_samples: Option<usize>,
+    /// Ask for early stopping at this posterior mass on the predicted
+    /// class (switches the rule to [`StopRule::ConfidenceGap`]).
+    pub target_confidence: Option<f64>,
+}
+
+impl RequestBudget {
+    /// Validate the raw request fields.
+    pub fn validate(&self) -> Result<(), BudgetError> {
+        if self.max_samples == Some(0) {
+            return Err(BudgetError::ZeroSamples);
+        }
+        if let Some(c) = self.target_confidence {
+            // constructing the rule performs the range checks
+            StopRule::confidence_target(c)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_default(&self) -> bool {
+        self.max_samples.is_none() && self.target_confidence.is_none()
+    }
+}
+
+/// Engine-level sampler configuration (`[sampler]` in a serving TOML,
+/// `--adaptive` / `--min-samples` / `--max-samples` /
+/// `--target-confidence` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerConfig {
+    pub rule: StopRule,
+    /// Never stop an adaptive rule before this many samples.
+    pub min_samples: usize,
+    /// Hard per-request budget; `0` = inherit the engine's `n_samples`.
+    pub max_samples: usize,
+    /// Samples drawn per round between stop checks; `0` = auto
+    /// (`max(2, worker shards)`).
+    pub chunk: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self {
+            rule: StopRule::Fixed(0),
+            min_samples: 2,
+            max_samples: 0,
+            chunk: 0,
+        }
+    }
+}
+
+impl SamplerConfig {
+    /// The compatibility configuration: always draw exactly `n` samples.
+    pub fn fixed(n: usize) -> Self {
+        Self {
+            rule: StopRule::Fixed(n),
+            ..Self::default()
+        }
+    }
+
+    /// Adaptive configuration with the default MI-band rule.
+    pub fn adaptive() -> Self {
+        Self {
+            rule: StopRule::uncertainty_default(),
+            ..Self::default()
+        }
+    }
+
+    /// Validate the *configured* fields (CLI / config-file boundary).
+    /// `min > max` is only an error when both are explicit — `max = 0`
+    /// inherits the engine budget, which is checked at resolve time.
+    pub fn validate(&self) -> Result<(), BudgetError> {
+        if self.max_samples != 0 && self.min_samples > self.max_samples {
+            return Err(BudgetError::MinAboveMax {
+                min: self.min_samples,
+                max: self.max_samples,
+            });
+        }
+        if let StopRule::ConfidenceGap { target_gap, .. } = self.rule {
+            if !target_gap.is_finite() {
+                return Err(BudgetError::NonFiniteConfidence(target_gap));
+            }
+        }
+        if let StopRule::UncertaintyResolved { mi_low, mi_high, .. } = self.rule {
+            if !mi_low.is_finite() || !mi_high.is_finite() {
+                return Err(BudgetError::NonFiniteMiBand(if mi_low.is_finite() {
+                    mi_high
+                } else {
+                    mi_low
+                }));
+            }
+            if mi_low > mi_high {
+                return Err(BudgetError::InvertedMiBand {
+                    low: mi_low,
+                    high: mi_high,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve this configuration against the engine's per-request pass
+    /// budget and one request's overrides into a concrete sampling plan.
+    pub fn resolve(
+        &self,
+        engine_samples: usize,
+        req: &RequestBudget,
+    ) -> Result<ResolvedSampler, BudgetError> {
+        self.validate()?;
+        req.validate()?;
+        // a configured max is an explicit operator choice; a *request* can
+        // only lower the effective budget, never raise it
+        let mut max = if self.max_samples == 0 {
+            engine_samples
+        } else {
+            self.max_samples
+        };
+        if let Some(m) = req.max_samples {
+            max = max.min(m);
+        }
+        if max == 0 {
+            return Err(BudgetError::ZeroSamples);
+        }
+        let mut rule = match req.target_confidence {
+            Some(c) => {
+                // the request picks the rule; the operator's configured
+                // hysteresis (stable consecutive checks) still applies
+                let configured_stable = match self.rule {
+                    StopRule::ConfidenceGap { stable, .. }
+                    | StopRule::UncertaintyResolved { stable, .. } => stable,
+                    StopRule::Fixed(_) => 2,
+                };
+                match StopRule::confidence_target(c)? {
+                    StopRule::ConfidenceGap { target_gap, .. } => StopRule::ConfidenceGap {
+                        target_gap,
+                        stable: configured_stable,
+                    },
+                    r => r,
+                }
+            }
+            None => self.rule,
+        };
+        if let StopRule::Fixed(n) = rule {
+            let n = if n == 0 { max } else { n.min(max) };
+            rule = StopRule::Fixed(n);
+        }
+        let min = self.min_samples.clamp(1, max);
+        // an adaptive rule that cannot check before the budget is spent
+        // collapses to the fixed single round (e.g. deterministic backends
+        // where the engine budget is 1)
+        if rule.is_adaptive() && min >= max {
+            rule = StopRule::Fixed(max);
+        }
+        let chunk = if self.chunk == 0 { 2 } else { self.chunk };
+        Ok(ResolvedSampler {
+            rule,
+            min,
+            max,
+            chunk,
+        })
+    }
+}
+
+/// A fully-resolved per-request sampling plan (all zeros/inherits applied).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedSampler {
+    pub rule: StopRule,
+    pub min: usize,
+    pub max: usize,
+    pub chunk: usize,
+}
+
+impl ResolvedSampler {
+    /// Fixed rules run as one batched round — the legacy engine path.
+    pub fn single_round(&self) -> bool {
+        !self.rule.is_adaptive()
+    }
+
+    /// The sample count of the single fixed round.
+    pub fn fixed_samples(&self) -> usize {
+        match self.rule {
+            StopRule::Fixed(n) => n,
+            _ => self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_resolves_to_engine_fixed_budget() {
+        let r = SamplerConfig::default()
+            .resolve(10, &RequestBudget::default())
+            .unwrap();
+        assert_eq!(r.rule, StopRule::Fixed(10));
+        assert!(r.single_round());
+        assert_eq!(r.fixed_samples(), 10);
+    }
+
+    #[test]
+    fn request_budget_caps_but_never_raises() {
+        let cfg = SamplerConfig::default();
+        let r = cfg
+            .resolve(
+                10,
+                &RequestBudget {
+                    max_samples: Some(4),
+                    target_confidence: None,
+                },
+            )
+            .unwrap();
+        assert_eq!(r.fixed_samples(), 4);
+        let r = cfg
+            .resolve(
+                10,
+                &RequestBudget {
+                    max_samples: Some(40),
+                    target_confidence: None,
+                },
+            )
+            .unwrap();
+        assert_eq!(r.fixed_samples(), 10, "requests cannot raise the budget");
+    }
+
+    #[test]
+    fn target_confidence_switches_to_gap_rule() {
+        let r = SamplerConfig::default()
+            .resolve(
+                10,
+                &RequestBudget {
+                    max_samples: None,
+                    target_confidence: Some(0.9),
+                },
+            )
+            .unwrap();
+        match r.rule {
+            StopRule::ConfidenceGap { target_gap, .. } => {
+                assert!((target_gap - 0.8).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(!r.single_round());
+    }
+
+    #[test]
+    fn typed_rejections_at_the_boundary() {
+        assert_eq!(
+            RequestBudget {
+                max_samples: Some(0),
+                target_confidence: None,
+            }
+            .validate(),
+            Err(BudgetError::ZeroSamples)
+        );
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = RequestBudget {
+                max_samples: None,
+                target_confidence: Some(bad),
+            }
+            .validate()
+            .unwrap_err();
+            assert!(matches!(e, BudgetError::NonFiniteConfidence(_)), "{bad}");
+        }
+        for bad in [0.2, 0.49, 1.0, 1.5] {
+            let e = StopRule::confidence_target(bad).unwrap_err();
+            assert!(matches!(e, BudgetError::ConfidenceOutOfRange(_)), "{bad}");
+        }
+        let cfg = SamplerConfig {
+            min_samples: 8,
+            max_samples: 4,
+            ..SamplerConfig::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(BudgetError::MinAboveMax { min: 8, max: 4 })
+        );
+        assert!(cfg.resolve(10, &RequestBudget::default()).is_err());
+        // errors render as human-readable typed messages
+        assert!(BudgetError::ZeroSamples.to_string().contains(">= 1"));
+    }
+
+    #[test]
+    fn inverted_mi_band_rejected() {
+        let cfg = SamplerConfig {
+            rule: StopRule::UncertaintyResolved {
+                mi_low: 0.08,
+                mi_high: 0.002,
+                stable: 2,
+            },
+            ..SamplerConfig::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(BudgetError::InvertedMiBand {
+                low: 0.08,
+                high: 0.002
+            })
+        );
+        assert!(cfg.resolve(10, &RequestBudget::default()).is_err());
+        // degenerate-but-ordered band (low == high) stays legal
+        let eq = SamplerConfig {
+            rule: StopRule::UncertaintyResolved {
+                mi_low: 0.01,
+                mi_high: 0.01,
+                stable: 2,
+            },
+            ..SamplerConfig::default()
+        };
+        assert!(eq.validate().is_ok());
+    }
+
+    #[test]
+    fn request_confidence_inherits_configured_hysteresis() {
+        let cfg = SamplerConfig {
+            rule: StopRule::UncertaintyResolved {
+                mi_low: 0.002,
+                mi_high: 0.08,
+                stable: 5,
+            },
+            ..SamplerConfig::default()
+        };
+        let r = cfg
+            .resolve(
+                10,
+                &RequestBudget {
+                    max_samples: None,
+                    target_confidence: Some(0.8),
+                },
+            )
+            .unwrap();
+        match r.rule {
+            StopRule::ConfidenceGap { stable, .. } => assert_eq!(stable, 5),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn adaptive_collapses_on_deterministic_budget() {
+        // mean-field backends expose a 1-pass budget: adaptive rules must
+        // collapse to Fixed(1) instead of scheduling unreachable rounds
+        let r = SamplerConfig::adaptive()
+            .resolve(1, &RequestBudget::default())
+            .unwrap();
+        assert_eq!(r.rule, StopRule::Fixed(1));
+        assert!(r.single_round());
+    }
+
+    #[test]
+    fn min_clamped_into_budget() {
+        let cfg = SamplerConfig {
+            rule: StopRule::uncertainty_default(),
+            min_samples: 6,
+            max_samples: 0,
+            chunk: 0,
+        };
+        let r = cfg
+            .resolve(
+                10,
+                &RequestBudget {
+                    max_samples: Some(3),
+                    target_confidence: None,
+                },
+            )
+            .unwrap();
+        // request cap under the configured min: clamp (and collapse to
+        // fixed), don't reject — the conflict came from the client cap
+        assert_eq!(r.min, 3);
+        assert_eq!(r.rule, StopRule::Fixed(3));
+    }
+
+    #[test]
+    fn rule_names_and_adaptivity() {
+        assert_eq!(StopRule::Fixed(3).name(), "fixed");
+        assert!(!StopRule::Fixed(3).is_adaptive());
+        assert!(StopRule::uncertainty_default().is_adaptive());
+        assert_eq!(
+            StopRule::confidence_target(0.75).unwrap().name(),
+            "confidence-gap"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Chunked budget slicing over the sharded sampling backends.
+
+use super::ResolvedSampler;
+
+/// Slices a resolved per-request budget into sampling rounds.
+///
+/// * **Fixed** rules emit exactly one chunk of the whole budget — the
+///   legacy engine path, issuing the identical single batched
+///   `sample_conv` call, so outputs stay bitwise identical to the
+///   pre-sampler engine for every `(seed, threads, prefetch)`.
+/// * **Adaptive** rules emit a first chunk of at least `min` samples, then
+///   `chunk`-sized rounds until `max` is spent.  Chunk sizes are rounded
+///   **up to a multiple of the worker-shard count** (`align`): every shard
+///   advances its persistent entropy stream by whole samples each round,
+///   keeping shard loads equal and the chunk partition a pure function of
+///   the chunk sequence.  Because the backends' shard streams persist
+///   across `sample_conv` calls, a fixed `(seed, threads, prefetch)` +
+///   chunk sequence replays bit-identically — and at `threads = 1` a
+///   chunked run to full budget is bitwise identical to the one-shot call
+///   (the single stream consumes the same grid rows in the same order).
+///   The final chunk truncates to the remaining budget regardless of
+///   alignment.
+#[derive(Debug, Clone)]
+pub struct ChunkSchedule {
+    remaining: usize,
+    first: usize,
+    step: usize,
+    started: bool,
+}
+
+impl ChunkSchedule {
+    pub fn new(r: &ResolvedSampler, align: usize) -> Self {
+        let align = align.max(1);
+        if r.single_round() {
+            let n = r.fixed_samples();
+            return Self {
+                remaining: n,
+                first: n,
+                step: n.max(1),
+                started: false,
+            };
+        }
+        Self {
+            remaining: r.max,
+            first: align_up(r.min, align).min(r.max),
+            step: align_up(r.chunk.max(1), align),
+            started: false,
+        }
+    }
+
+    /// Samples to draw in the next round; `None` when the budget is spent.
+    /// Callers break out of the loop early once every input is resolved.
+    pub fn next_chunk(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let want = if self.started { self.step } else { self.first };
+        self.started = true;
+        let c = want.min(self.remaining);
+        self.remaining -= c;
+        Some(c)
+    }
+
+    /// Budget not yet scheduled.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
+fn align_up(x: usize, align: usize) -> usize {
+    x.div_ceil(align) * align
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{RequestBudget, SamplerConfig, StopRule};
+
+    fn resolved(rule: StopRule, min: usize, max: usize, chunk: usize) -> ResolvedSampler {
+        ResolvedSampler {
+            rule,
+            min,
+            max,
+            chunk,
+        }
+    }
+
+    fn drain(mut s: ChunkSchedule) -> Vec<usize> {
+        let mut v = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            v.push(c);
+        }
+        v
+    }
+
+    #[test]
+    fn fixed_is_one_full_chunk() {
+        let r = SamplerConfig::default()
+            .resolve(10, &RequestBudget::default())
+            .unwrap();
+        for align in [1, 3, 4] {
+            assert_eq!(drain(ChunkSchedule::new(&r, align)), vec![10]);
+        }
+    }
+
+    #[test]
+    fn adaptive_chunks_cover_budget_exactly() {
+        let r = resolved(StopRule::uncertainty_default(), 2, 10, 2);
+        assert_eq!(drain(ChunkSchedule::new(&r, 1)), vec![2, 2, 2, 2, 2]);
+        // align 4: min 2 rounds up to 4, steps of 4, final truncated to 2
+        assert_eq!(drain(ChunkSchedule::new(&r, 4)), vec![4, 4, 2]);
+        // align 3: 3 + 3 + 3 + 1
+        assert_eq!(drain(ChunkSchedule::new(&r, 3)), vec![3, 3, 3, 1]);
+        for align in [1, 2, 3, 4, 8] {
+            let chunks = drain(ChunkSchedule::new(&r, align));
+            assert_eq!(chunks.iter().sum::<usize>(), 10, "align {align}");
+            assert!(chunks[0] >= 2.min(10), "first covers min");
+            for c in &chunks[..chunks.len() - 1] {
+                assert_eq!(c % align, 0, "non-final chunks shard-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn min_dominates_first_chunk() {
+        let r = resolved(StopRule::uncertainty_default(), 5, 12, 2);
+        assert_eq!(drain(ChunkSchedule::new(&r, 2)), vec![6, 2, 2, 2]);
+    }
+
+    #[test]
+    fn remaining_tracks_budget() {
+        let r = resolved(StopRule::uncertainty_default(), 2, 6, 2);
+        let mut s = ChunkSchedule::new(&r, 1);
+        assert_eq!(s.remaining(), 6);
+        assert_eq!(s.next_chunk(), Some(2));
+        assert_eq!(s.remaining(), 4);
+    }
+
+    #[test]
+    fn degenerate_single_sample_budget() {
+        let r = resolved(StopRule::Fixed(1), 1, 1, 2);
+        assert_eq!(drain(ChunkSchedule::new(&r, 8)), vec![1]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Stop-rule evaluation state: per-input hysteresis across chunk checks.
+
+use super::accum::AccumStats;
+use super::StopRule;
+
+/// Why sampling stopped for one input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// A fixed rule spent its whole budget in one round.
+    FixedBudget,
+    /// The max budget ran out before any rule fired.
+    BudgetExhausted,
+    /// `ConfidenceGap`: the argmax margin held above target.
+    GapResolved,
+    /// `UncertaintyResolved`: MI settled below `mi_low` (epistemically
+    /// resolved — accept / flag-ambiguous territory).
+    UncertaintyLow,
+    /// `UncertaintyResolved`: MI settled above `mi_high` (clearly
+    /// out-of-domain — further sampling cannot rescue the input).
+    UncertaintyHigh,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::FixedBudget => "fixed",
+            StopReason::BudgetExhausted => "budget",
+            StopReason::GapResolved => "gap",
+            StopReason::UncertaintyLow => "mi-low",
+            StopReason::UncertaintyHigh => "mi-high",
+        }
+    }
+}
+
+/// The decision-aware outcome of one input's sampling loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Verdict {
+    /// Stochastic passes actually spent on this input.
+    pub samples_used: usize,
+    pub reason: StopReason,
+}
+
+/// Which side of the MI band a check landed on (hysteresis bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MiSide {
+    Low,
+    High,
+}
+
+/// Per-input evaluation state for one request: consecutive-hit counters and
+/// the previously observed argmax.  Deterministic — a pure function of the
+/// sequence of [`AccumStats`] it has seen.
+#[derive(Debug, Clone, Default)]
+pub struct StopState {
+    hits: usize,
+    last_top: Option<usize>,
+    last_side: Option<MiSide>,
+}
+
+impl StopState {
+    /// Evaluate `rule` against the running stats after a chunk.  `used` is
+    /// the samples folded into the accumulator; `min` is the floor below
+    /// which no adaptive rule may fire.  Returns the stop reason once the
+    /// rule's criterion has held for its `stable` consecutive checks.
+    pub fn update(
+        &mut self,
+        rule: &StopRule,
+        stats: &AccumStats,
+        used: usize,
+        min: usize,
+    ) -> Option<StopReason> {
+        let fired = match rule {
+            StopRule::Fixed(_) => None,
+            StopRule::ConfidenceGap { target_gap, stable } => {
+                let same_top = self.last_top.map_or(true, |t| t == stats.top);
+                if stats.gap >= *target_gap && same_top {
+                    self.hits += 1;
+                } else {
+                    self.hits = 0;
+                }
+                self.last_top = Some(stats.top);
+                (self.hits >= (*stable).max(1)).then_some(StopReason::GapResolved)
+            }
+            StopRule::UncertaintyResolved {
+                mi_low,
+                mi_high,
+                stable,
+            } => {
+                let side = if stats.mi <= *mi_low {
+                    Some(MiSide::Low)
+                } else if stats.mi >= *mi_high {
+                    Some(MiSide::High)
+                } else {
+                    None
+                };
+                match side {
+                    Some(s) if self.last_side == Some(s) || self.last_side.is_none() => {
+                        self.hits += 1
+                    }
+                    Some(_) => self.hits = 1, // switched sides: restart
+                    None => self.hits = 0,
+                }
+                self.last_side = side;
+                (side.is_some() && self.hits >= (*stable).max(1)).then(|| match side {
+                    Some(MiSide::Low) => StopReason::UncertaintyLow,
+                    _ => StopReason::UncertaintyHigh,
+                })
+            }
+        };
+        fired.filter(|_| used >= min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(top: usize, gap: f64, mi: f64) -> AccumStats {
+        AccumStats {
+            n: 4,
+            top,
+            top_prob: 0.5 + gap / 2.0,
+            gap,
+            shannon: mi + 0.1,
+            softmax: 0.1,
+            mi,
+        }
+    }
+
+    #[test]
+    fn fixed_never_fires_early() {
+        let rule = StopRule::Fixed(10);
+        let mut st = StopState::default();
+        for used in 1..100 {
+            assert_eq!(st.update(&rule, &stats(0, 1.0, 0.0), used, 1), None);
+        }
+    }
+
+    #[test]
+    fn gap_rule_needs_stability() {
+        let rule = StopRule::ConfidenceGap {
+            target_gap: 0.5,
+            stable: 2,
+        };
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(3, 0.8, 0.0), 4, 2), None, "1st hit");
+        assert_eq!(
+            st.update(&rule, &stats(3, 0.8, 0.0), 6, 2),
+            Some(StopReason::GapResolved),
+            "2nd consecutive hit fires"
+        );
+    }
+
+    #[test]
+    fn gap_rule_resets_on_argmax_flip_or_collapse() {
+        let rule = StopRule::ConfidenceGap {
+            target_gap: 0.5,
+            stable: 2,
+        };
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(3, 0.8, 0.0), 2, 1), None);
+        // argmax flips: streak restarts even though the gap is wide
+        assert_eq!(st.update(&rule, &stats(1, 0.9, 0.0), 4, 1), None);
+        // gap collapses: streak resets to zero
+        assert_eq!(st.update(&rule, &stats(1, 0.1, 0.0), 6, 1), None);
+        assert_eq!(st.update(&rule, &stats(1, 0.9, 0.0), 8, 1), None);
+        assert_eq!(
+            st.update(&rule, &stats(1, 0.9, 0.0), 10, 1),
+            Some(StopReason::GapResolved)
+        );
+    }
+
+    #[test]
+    fn min_samples_gate_holds_back_early_fires() {
+        let rule = StopRule::ConfidenceGap {
+            target_gap: 0.2,
+            stable: 1,
+        };
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(0, 0.9, 0.0), 2, 4), None, "below min");
+        assert_eq!(
+            st.update(&rule, &stats(0, 0.9, 0.0), 4, 4),
+            Some(StopReason::GapResolved)
+        );
+    }
+
+    #[test]
+    fn mi_band_hysteresis_both_sides() {
+        let rule = StopRule::UncertaintyResolved {
+            mi_low: 0.01,
+            mi_high: 0.2,
+            stable: 2,
+        };
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(0, 0.5, 0.005), 2, 1), None);
+        assert_eq!(
+            st.update(&rule, &stats(0, 0.5, 0.002), 4, 1),
+            Some(StopReason::UncertaintyLow)
+        );
+
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.5), 2, 1), None);
+        assert_eq!(
+            st.update(&rule, &stats(0, 0.0, 0.4), 4, 1),
+            Some(StopReason::UncertaintyHigh)
+        );
+
+        // wobbling through the unresolved band resets the streak
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.005), 2, 1), None);
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.1), 4, 1), None, "in band");
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.005), 6, 1), None, "restart");
+        assert_eq!(
+            st.update(&rule, &stats(0, 0.0, 0.003), 8, 1),
+            Some(StopReason::UncertaintyLow)
+        );
+
+        // switching sides restarts the streak at one
+        let mut st = StopState::default();
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.005), 2, 1), None);
+        assert_eq!(st.update(&rule, &stats(0, 0.0, 0.5), 4, 1), None, "side flip");
+        assert_eq!(
+            st.update(&rule, &stats(0, 0.0, 0.5), 6, 1),
+            Some(StopReason::UncertaintyHigh)
+        );
+    }
+
+    #[test]
+    fn reason_names() {
+        assert_eq!(StopReason::FixedBudget.name(), "fixed");
+        assert_eq!(StopReason::GapResolved.name(), "gap");
+        assert_eq!(StopReason::UncertaintyLow.name(), "mi-low");
+    }
+}

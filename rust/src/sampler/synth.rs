@@ -1,0 +1,98 @@
+//! Shared synthetic-classifier harness for the adaptive sampler's bench
+//! (`paper_tables -- adaptive`) and integration tests
+//! (`rust/tests/adaptive_sampling.rs`).  One copy, so the algorithm the
+//! bench measures is exactly the one the tests validate.
+//!
+//! The "model" is a depthwise readout over a [`ProbConvBackend`]: logit
+//! `c` is the mean of channel `c`'s conv outputs.  A *decisive* input
+//! lights one channel against one dominant kernel (the posterior gap
+//! resolves within a few samples); an *ambiguous* input excites every
+//! channel equally and faintly (the gap never opens, so adaptive rules
+//! run to the max budget).
+//!
+//! Not a public API — `#[doc(hidden)]` support code.
+
+use crate::backend::{ProbConvBackend, SamplePlan};
+use crate::photonics::TapTarget;
+
+use super::{ChunkSchedule, PredictiveAccum, RequestBudget, SamplerConfig, StopRule, StopState};
+
+/// Synthetic activation maps are `HW x HW` pixels per channel.
+pub const HW: usize = 5;
+
+/// One dominant kernel (channel 0), the rest near-zero: a decisive input
+/// on channel 0 produces a wide, stable posterior gap.
+pub fn decisive_kernels(channels: usize) -> Vec<Vec<TapTarget>> {
+    let mut k = vec![vec![TapTarget { mu: 0.05, sigma: 0.1 }; 9]; channels];
+    k[0] = vec![TapTarget { mu: 0.6, sigma: 0.15 }; 9];
+    k
+}
+
+/// Input that lights channel 0 and leaves the rest near dark.
+pub fn decisive_input(channels: usize) -> Vec<f32> {
+    let item = channels * HW * HW;
+    (0..item)
+        .map(|i| if i < HW * HW { 0.8 } else { 0.02 })
+        .collect()
+}
+
+/// Input exciting every channel equally and faintly — no decisive argmax.
+pub fn ambiguous_input(channels: usize) -> Vec<f32> {
+    vec![0.03f32; channels * HW * HW]
+}
+
+/// The confidence-gap configuration both the bench and the tests use.
+pub fn gap_config(max_samples: usize) -> SamplerConfig {
+    SamplerConfig {
+        rule: StopRule::ConfidenceGap {
+            target_gap: 0.5,
+            stable: 2,
+        },
+        min_samples: 2,
+        max_samples,
+        chunk: 2,
+    }
+}
+
+/// The engine's adaptive round loop, minus PJRT: chunked `sample_conv`
+/// rounds, per-pass mean-of-channel logits into a [`PredictiveAccum`],
+/// stop checks at every chunk boundary.  Returns
+/// `(samples_used, mean_probs)`.
+pub fn classify_synthetic(
+    be: &mut dyn ProbConvBackend,
+    scfg: &SamplerConfig,
+    align: usize,
+    channels: usize,
+    max_n: usize,
+    x: &[f32],
+) -> (usize, Vec<f32>) {
+    let hw = HW * HW;
+    let item = channels * hw;
+    let resolved = scfg.resolve(max_n, &RequestBudget::default()).unwrap();
+    let mut acc = PredictiveAccum::new(channels);
+    let mut st = StopState::default();
+    let mut sched = ChunkSchedule::new(&resolved, align);
+    let mut out = vec![0.0f32; max_n * item];
+    while let Some(chunk) = sched.next_chunk() {
+        let plan = SamplePlan::new(chunk, 1, channels, HW, HW);
+        be.sample_conv(&plan, x, &mut out[..chunk * item]).unwrap();
+        for s in 0..chunk {
+            let logits: Vec<f32> = (0..channels)
+                .map(|c| {
+                    out[s * item + c * hw..s * item + (c + 1) * hw].iter().sum::<f32>()
+                        / hw as f32
+                })
+                .collect();
+            acc.push_logits(&logits);
+        }
+        let stats = acc.stats();
+        if st
+            .update(&resolved.rule, &stats, acc.n(), resolved.min)
+            .is_some()
+        {
+            break;
+        }
+    }
+    let used = acc.n();
+    (used, acc.into_predictive().mean_probs)
+}

@@ -3,13 +3,21 @@
 //! Protocol (one JSON object per line):
 //!
 //! ```text
-//! -> {"op":"classify","dataset":"blood","image":[...C*H*W floats in 0..1]}
+//! -> {"op":"classify","dataset":"blood","image":[...C*H*W floats in 0..1],
+//!     "max_samples":20,"target_confidence":0.9}          // budget: optional
 //! <- {"ok":true,"class":4,"decision":"accept","confidence":0.93,
-//!     "mi":0.004,"se":0.12,"h":0.124,"mean_probs":[...],"latency_us":812}
+//!     "mi":0.004,"se":0.12,"h":0.124,"mean_probs":[...],
+//!     "samples_used":4,"latency_us":812}
 //! -> {"op":"info"}
 //! <- {"ok":true,"datasets":["digits","blood"],"version":"0.1.0"}
 //! -> {"op":"ping"}   <- {"ok":true,"pong":true}
 //! ```
+//!
+//! `max_samples` caps the request's stochastic passes below the engine's
+//! budget (never raises it); `target_confidence` asks for adaptive early
+//! stopping at that posterior mass.  Invalid budgets (`0`, non-finite or
+//! out-of-range confidence) are rejected at parse time with a typed error
+//! response.  `samples_used` reports the passes actually spent.
 
 pub mod protocol;
 pub mod tcp;

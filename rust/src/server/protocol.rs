@@ -4,6 +4,7 @@ use anyhow::{anyhow, Result};
 
 use crate::bnn::Decision;
 use crate::coordinator::engine::ClassifyResult;
+use crate::sampler::RequestBudget;
 use crate::util::json::{self, Json};
 
 /// Largest accepted `image` array (elements).  Image sizes are set by model
@@ -18,7 +19,15 @@ pub const MAX_IMAGE_LEN: usize = 1 << 18;
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Classify { dataset: String, image: Vec<f32> },
+    Classify {
+        dataset: String,
+        image: Vec<f32>,
+        /// Optional per-request sample budget (`max_samples` /
+        /// `target_confidence` fields) — validated here at the protocol
+        /// boundary so hostile budgets (`0`, NaN, out-of-range) are a
+        /// typed error response, not a downstream panic or NaN decision.
+        budget: RequestBudget,
+    },
     Info,
     Ping,
 }
@@ -49,12 +58,48 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     MAX_IMAGE_LEN
                 ));
             }
-            Ok(Request::Classify { dataset, image })
+            let budget = parse_budget(&j)?;
+            Ok(Request::Classify {
+                dataset,
+                image,
+                budget,
+            })
         }
         Some("info") => Ok(Request::Info),
         Some("ping") => Ok(Request::Ping),
         other => Err(anyhow!("unknown op {other:?}")),
     }
+}
+
+/// Parse + validate the optional budget fields of a classify request.
+fn parse_budget(j: &Json) -> Result<RequestBudget> {
+    let max_samples = match j.get("max_samples") {
+        None => None,
+        Some(v) => {
+            // exact integer required: a silently floored 3.9 would alter
+            // the client's stated budget
+            let f = v
+                .as_f64()
+                .filter(|f| *f >= 0.0 && f.fract() == 0.0 && *f <= usize::MAX as f64)
+                .ok_or_else(|| anyhow!("max_samples must be a non-negative integer"))?;
+            Some(f as usize)
+        }
+    };
+    let target_confidence = match j.get("target_confidence") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .ok_or_else(|| anyhow!("target_confidence must be a number"))?,
+        ),
+    };
+    let budget = RequestBudget {
+        max_samples,
+        target_confidence,
+    };
+    budget
+        .validate()
+        .map_err(|e| anyhow!("invalid sample budget: {e}"))?;
+    Ok(budget)
 }
 
 /// Encode a classification result.
@@ -99,6 +144,7 @@ pub fn encode_result_into(r: &ClassifyResult, out: &mut String) {
     o.set("h", Json::Num(r.predictive.shannon_entropy));
     o.set("agreement", Json::Num(r.predictive.agreement));
     o.set("mean_probs", Json::arr_f32(&r.predictive.mean_probs));
+    o.set("samples_used", Json::Num(r.samples_used as f64));
     o.set("latency_us", Json::Num(r.latency_us));
     for (k, v) in extra {
         o.set(k, v);
@@ -140,10 +186,25 @@ pub fn encode_pong() -> String {
 
 /// Client-side: encode a classify request.
 pub fn encode_classify(dataset: &str, image: &[f32]) -> String {
+    encode_classify_with_budget(dataset, image, &RequestBudget::default())
+}
+
+/// Client-side: encode a classify request carrying budget overrides.
+pub fn encode_classify_with_budget(
+    dataset: &str,
+    image: &[f32],
+    budget: &RequestBudget,
+) -> String {
     let mut o = Json::obj();
     o.set("op", Json::Str("classify".into()));
     o.set("dataset", Json::Str(dataset.into()));
     o.set("image", Json::arr_f32(image));
+    if let Some(m) = budget.max_samples {
+        o.set("max_samples", Json::Num(m as f64));
+    }
+    if let Some(c) = budget.target_confidence {
+        o.set("target_confidence", Json::Num(c));
+    }
     o.to_string_compact()
 }
 
@@ -156,12 +217,53 @@ mod tests {
     fn parse_classify_roundtrip() {
         let line = encode_classify("digits", &[0.0, 0.5, 1.0]);
         match parse_request(&line).unwrap() {
-            Request::Classify { dataset, image } => {
+            Request::Classify {
+                dataset,
+                image,
+                budget,
+            } => {
                 assert_eq!(dataset, "digits");
                 assert_eq!(image, vec![0.0, 0.5, 1.0]);
+                assert!(budget.is_default());
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_budget_fields_roundtrip() {
+        let want = RequestBudget {
+            max_samples: Some(5),
+            target_confidence: Some(0.9),
+        };
+        let line = encode_classify_with_budget("digits", &[0.1], &want);
+        match parse_request(&line).unwrap() {
+            Request::Classify { budget, .. } => assert_eq!(budget, want),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_hostile_budgets_with_typed_errors() {
+        let base = "{\"op\":\"classify\",\"dataset\":\"d\",\"image\":[1]";
+        let err = parse_request(&format!("{base},\"max_samples\":0}}")).unwrap_err();
+        assert!(err.to_string().contains("sample budget"), "{err}");
+        // float→usize saturation turns negatives into 0 → same typed error
+        assert!(parse_request(&format!("{base},\"max_samples\":-3}}")).is_err());
+        let err =
+            parse_request(&format!("{base},\"target_confidence\":1.5}}")).unwrap_err();
+        assert!(err.to_string().contains("target_confidence"), "{err}");
+        assert!(parse_request(&format!("{base},\"target_confidence\":0.2}}")).is_err());
+        assert!(
+            parse_request(&format!("{base},\"target_confidence\":\"high\"}}")).is_err(),
+            "non-numeric confidence rejected"
+        );
+        // fractional budgets are rejected, not silently floored
+        let err = parse_request(&format!("{base},\"max_samples\":3.9}}")).unwrap_err();
+        assert!(err.to_string().contains("integer"), "{err}");
+        // valid boundary values are accepted
+        assert!(parse_request(&format!("{base},\"target_confidence\":0.5}}")).is_ok());
+        assert!(parse_request(&format!("{base},\"max_samples\":1}}")).is_ok());
     }
 
     #[test]
@@ -197,6 +299,7 @@ mod tests {
             predictive: pred,
             decision,
             latency_us: 123.0,
+            samples_used: 5,
         };
         let line = encode_result(&r);
         let j = crate::util::json::parse(&line).unwrap();
@@ -204,6 +307,7 @@ mod tests {
         assert_eq!(j.get("decision").unwrap().as_str(), Some("accept"));
         assert_eq!(j.get("class").unwrap().as_usize(), Some(0));
         assert!(j.get("mi").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("samples_used").unwrap().as_usize(), Some(5));
     }
 
     #[test]

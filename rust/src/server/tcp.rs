@@ -1,6 +1,6 @@
 //! TCP gateway: accept loop + per-connection workers over the router.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
@@ -77,6 +77,37 @@ pub fn serve(
 /// image in JSON text.
 const MAX_LINE_BYTES: usize = 8 << 20;
 
+/// Write `body` + the protocol's line terminator as **one vectored
+/// syscall** (`write_vectored` of `[body, "\n"]`): the response `String`
+/// stays reused and untouched — no per-response `push('\n')` churn — and
+/// the newline never costs a second `write` syscall.  Handles partial
+/// vectored writes (kernels may accept any prefix) and `Interrupted`.
+pub(crate) fn write_line_vectored<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    const NL: &[u8] = b"\n";
+    let total = body.len() + 1;
+    let mut written = 0usize;
+    while written < total {
+        let res = if written < body.len() {
+            w.write_vectored(&[IoSlice::new(&body[written..]), IoSlice::new(NL)])
+        } else {
+            // only the terminator (or its tail after a partial write) left
+            w.write(&NL[written - body.len()..])
+        };
+        match res {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write whole response line",
+                ))
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
 fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
@@ -95,8 +126,7 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
                 &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
                 &mut resp,
             );
-            resp.push('\n');
-            writer.write_all(resp.as_bytes())?;
+            write_line_vectored(&mut writer, resp.as_bytes())?;
             return Ok(()); // close: the rest of the oversized line is garbage
         }
         // cap the read; partial lines (timeout or cap) accumulate in `line`
@@ -107,15 +137,13 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
                 // gets its response before we hang up
                 if !line.is_empty() {
                     respond_into(router, &line, &mut resp);
-                    resp.push('\n');
-                    writer.write_all(resp.as_bytes())?;
+                    write_line_vectored(&mut writer, resp.as_bytes())?;
                 }
                 return Ok(());
             }
             Ok(_) if line.ends_with('\n') => {
                 respond_into(router, &line, &mut resp);
-                resp.push('\n');
-                writer.write_all(resp.as_bytes())?;
+                write_line_vectored(&mut writer, resp.as_bytes())?;
                 line.clear();
             }
             Ok(_) => {} // mid-line: keep accumulating (next loop re-budgets)
@@ -146,8 +174,12 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
         Err(e) => protocol::encode_error_into(&format!("{e}"), out),
         Ok(Request::Ping) => out.push_str(&protocol::encode_pong()),
         Ok(Request::Info) => out.push_str(&protocol::encode_info(&router.datasets())),
-        Ok(Request::Classify { dataset, image }) => {
-            let (req, rx) = ClassifyRequest::new(image);
+        Ok(Request::Classify {
+            dataset,
+            image,
+            budget,
+        }) => {
+            let (req, rx) = ClassifyRequest::with_budget(image, budget);
             match router.route(&dataset, req) {
                 Err(e) => protocol::encode_error_into(&format!("{e}"), out),
                 Ok(()) => match rx.recv() {
@@ -181,8 +213,9 @@ impl Client {
     /// — so a misbehaving (or spoofed) server cannot make the client buffer
     /// an unbounded response.
     pub fn call(&mut self, line: &str) -> Result<crate::util::json::Json> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        // mirror of the gateway's response path: body + newline in one
+        // vectored syscall
+        write_line_vectored(&mut self.writer, line.as_bytes())?;
         let mut resp = String::new();
         (&mut self.reader)
             .take(MAX_LINE_BYTES as u64)
@@ -206,6 +239,17 @@ impl Client {
     pub fn classify(&mut self, dataset: &str, image: &[f32]) -> Result<crate::util::json::Json> {
         self.call(&protocol::encode_classify(dataset, image))
     }
+
+    /// Classify with per-request budget overrides (`max_samples` /
+    /// `target_confidence` protocol fields).
+    pub fn classify_with_budget(
+        &mut self,
+        dataset: &str,
+        image: &[f32],
+        budget: &crate::sampler::RequestBudget,
+    ) -> Result<crate::util::json::Json> {
+        self.call(&protocol::encode_classify_with_budget(dataset, image, budget))
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +265,53 @@ mod tests {
         respond_into(&router, "garbage", &mut buf);
         assert!(buf.contains("\"ok\":false"));
         assert!(!buf.contains("pong"), "buffer cleared between responses");
+    }
+
+    /// A writer that accepts at most `cap` bytes per call and ignores all
+    /// but the first buffer of a vectored write — the worst-legal-case
+    /// kernel behavior the helper must survive.
+    struct ChunkyWriter {
+        cap: usize,
+        data: Vec<u8>,
+    }
+
+    impl Write for ChunkyWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.cap);
+            self.data.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn vectored_line_write_is_complete_under_partial_writes() {
+        for cap in [1, 2, 3, 7, 64] {
+            let mut w = ChunkyWriter {
+                cap,
+                data: Vec::new(),
+            };
+            write_line_vectored(&mut w, b"{\"ok\":true}").unwrap();
+            assert_eq!(w.data, b"{\"ok\":true}\n", "cap {cap}");
+        }
+        // empty body still terminates the line
+        let mut w = ChunkyWriter {
+            cap: 8,
+            data: Vec::new(),
+        };
+        write_line_vectored(&mut w, b"").unwrap();
+        assert_eq!(w.data, b"\n");
+    }
+
+    #[test]
+    fn vectored_line_write_single_call_fast_path() {
+        // a Vec<u8> writer consumes both buffers in one vectored call
+        let mut buf: Vec<u8> = Vec::new();
+        write_line_vectored(&mut buf, b"body").unwrap();
+        assert_eq!(buf, b"body\n");
     }
 
     #[test]

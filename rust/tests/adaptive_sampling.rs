@@ -1,0 +1,492 @@
+//! Integration: adaptive sequential sampling — equivalence, determinism,
+//! and statistical sanity.
+//!
+//! The contracts (README §Adaptive sampling):
+//!
+//! * incremental accumulation to full budget is **bitwise equal** to the
+//!   one-shot `Predictive::from_batched_logits` aggregation;
+//! * with `StopRule::Fixed` the engine issues the identical single batched
+//!   `sample_conv` call, so classify outputs replay bit-identically per
+//!   `(seed, threads, prefetch)`;
+//! * at `threads = 1` a *chunked* run to full budget is bitwise identical
+//!   to the one-shot call (persistent shard streams, same grid order);
+//! * early-stop decisions are deterministic per `(seed, threads)` —
+//!   replaying a run reproduces both outputs and `samples_used`;
+//! * adaptive rules spend fewer samples on decisive inputs than ambiguous
+//!   ones, and (artifact-gated) OOD AUROC at matched max budget is no
+//!   worse than fixed-N sampling.
+//!
+//! Backend-level tests need no model artifacts; engine-level tests
+//! self-skip when `meta.json` is absent (run `make artifacts`).
+
+use std::sync::Arc;
+
+use photonic_bayes::backend::{self, BackendKind, ProbConvBackend, SamplePlan};
+use photonic_bayes::bnn::{Predictive, UncertaintyPolicy};
+use photonic_bayes::coordinator::{Engine, EngineConfig, ExecMode};
+use photonic_bayes::exec::ThreadPool;
+use photonic_bayes::photonics::{MachineConfig, TapTarget};
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
+use photonic_bayes::sampler::{synth, PredictiveAccum, RequestBudget, SamplerConfig, StopRule};
+
+fn quiet_cfg(seed: u64) -> MachineConfig {
+    MachineConfig {
+        rx_noise: 0.0,
+        actuator_sigma: 0.0,
+        actuator_jitter: 0.0,
+        ripple_rms_ps: 0.0,
+        seed,
+        ..MachineConfig::default()
+    }
+}
+
+fn kernels(c: usize) -> Vec<Vec<TapTarget>> {
+    (0..c)
+        .map(|i| {
+            let mu = 0.25 + 0.1 * i as f32;
+            vec![TapTarget { mu, sigma: 0.4 * mu }; 9]
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// accumulator equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn incremental_accum_matches_batched_aggregation_bitwise() {
+    // per-pass batch buffers of 4 images x 3 classes, 12 passes
+    let mut state = 97u64;
+    let mut next = || {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((state >> 33) as f32 / (1u64 << 31) as f32) * 6.0 - 3.0
+    };
+    let passes: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..4 * 3).map(|_| next()).collect())
+        .collect();
+    for image in 0..4 {
+        let mut acc = PredictiveAccum::new(3);
+        // uneven chunk boundaries: 1 + 2 + 5 + 4 passes
+        for bounds in [0..1usize, 1..3, 3..8, 8..12] {
+            for p in &passes[bounds] {
+                acc.push_logits(&p[image * 3..(image + 1) * 3]);
+            }
+        }
+        let a = acc.into_predictive();
+        let b = Predictive::from_batched_logits(&passes, image, 3);
+        assert_eq!(a.probs, b.probs, "image {image}: per-pass rows");
+        assert_eq!(a.mean_probs, b.mean_probs, "image {image}: mean");
+        assert_eq!(a.predicted, b.predicted);
+        assert!(a.shannon_entropy == b.shannon_entropy, "H bitwise");
+        assert!(a.softmax_entropy == b.softmax_entropy, "SE bitwise");
+        assert!(a.mutual_information == b.mutual_information, "MI bitwise");
+        assert!(a.agreement == b.agreement);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chunked backend execution
+// ---------------------------------------------------------------------------
+
+fn run_chunked(
+    kind: BackendKind,
+    threads: usize,
+    chunks: &[usize],
+    batch: usize,
+    x: &[f32],
+    seed: u64,
+) -> Vec<f32> {
+    let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+    let mut be = backend::build_with_pool(kind, &quiet_cfg(seed), pool);
+    be.program(&kernels(2), false).unwrap();
+    let mut out = Vec::new();
+    for &chunk in chunks {
+        let plan = SamplePlan::new(chunk, batch, 2, 5, 5);
+        let mut part = vec![0.0f32; plan.total_size()];
+        be.sample_conv(&plan, x, &mut part).unwrap();
+        out.extend_from_slice(&part);
+    }
+    out
+}
+
+/// The schedule-level half of the fixed-rule compatibility claim: at one
+/// worker the shard stream is consumed in grid order, so any chunking of
+/// the budget concatenates to the one-shot call bit-for-bit.
+#[test]
+fn sequential_chunked_run_is_bitwise_identical_to_one_shot() {
+    let batch = 2usize;
+    let x: Vec<f32> = (0..batch * 2 * 25).map(|i| 0.3 * ((i % 11) as f32) / 3.0).collect();
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        let one_shot = run_chunked(kind, 1, &[10], batch, &x, 31);
+        for chunks in [vec![2, 3, 5], vec![4, 4, 2], vec![1; 10]] {
+            let chunked = run_chunked(kind, 1, &chunks, batch, &x, 31);
+            assert_eq!(one_shot, chunked, "{kind:?} chunks {chunks:?}");
+        }
+    }
+}
+
+/// Sharded chunked runs replay bit-identically per `(seed, threads)` for a
+/// fixed chunk sequence (the persistent per-shard streams are the only
+/// state; the chunk sequence is itself deterministic given the outputs).
+#[test]
+fn chunked_runs_replay_bitwise_per_thread_count() {
+    let batch = 2usize;
+    let x: Vec<f32> = (0..batch * 2 * 25).map(|i| 0.2 * ((i % 7) as f32)).collect();
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        for threads in [1, 2, 4] {
+            let a = run_chunked(kind, threads, &[4, 4, 2], batch, &x, 7);
+            let b = run_chunked(kind, threads, &[4, 4, 2], batch, &x, 7);
+            assert_eq!(a, b, "{kind:?} t={threads}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// early-stop determinism + statistical sanity (synthetic classifier —
+// shared harness `sampler::synth`, also measured by `paper_tables --
+// adaptive`)
+// ---------------------------------------------------------------------------
+
+const MAX_N: usize = 16;
+
+#[test]
+fn early_stop_is_deterministic_per_thread_count() {
+    let channels = 4usize;
+    let easy = synth::decisive_input(channels);
+    let hard = synth::ambiguous_input(channels);
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        for threads in [1usize, 2, 4] {
+            let run = |x: &[f32]| {
+                let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+                let mut be = backend::build_with_pool(kind, &quiet_cfg(11), pool);
+                be.program(&synth::decisive_kernels(channels), false).unwrap();
+                synth::classify_synthetic(
+                    be.as_mut(),
+                    &synth::gap_config(MAX_N),
+                    threads,
+                    channels,
+                    MAX_N,
+                    x,
+                )
+            };
+            for x in [&easy, &hard] {
+                let (used_a, probs_a) = run(x);
+                let (used_b, probs_b) = run(x);
+                assert_eq!(used_a, used_b, "{kind:?} t={threads}: samples_used replays");
+                assert_eq!(probs_a, probs_b, "{kind:?} t={threads}: outputs replay");
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_spends_fewer_samples_on_decisive_inputs() {
+    let channels = 4usize;
+    let easy = synth::decisive_input(channels);
+    let hard = synth::ambiguous_input(channels);
+    let gap = synth::gap_config(MAX_N);
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        let mut be = backend::build(kind, &quiet_cfg(3));
+        be.program(&synth::decisive_kernels(channels), false).unwrap();
+        let (easy_used, probs) =
+            synth::classify_synthetic(be.as_mut(), &gap, 1, channels, MAX_N, &easy);
+        let (hard_used, _) =
+            synth::classify_synthetic(be.as_mut(), &gap, 1, channels, MAX_N, &hard);
+        assert!(
+            easy_used < MAX_N,
+            "{kind:?}: decisive input must resolve early (used {easy_used})"
+        );
+        assert!(
+            easy_used < hard_used,
+            "{kind:?}: easy {easy_used} >= hard {hard_used}"
+        );
+        assert_eq!(
+            hard_used, MAX_N,
+            "{kind:?}: ambiguous input runs to the max budget"
+        );
+        let top: f32 = probs.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(top > 0.75, "{kind:?}: decisive posterior, got top {top}");
+    }
+    // the fixed rule pins the budget regardless of difficulty
+    let mut be = backend::build(BackendKind::Digital, &quiet_cfg(3));
+    be.program(&synth::decisive_kernels(channels), false).unwrap();
+    let (used, _) = synth::classify_synthetic(
+        be.as_mut(),
+        &SamplerConfig::fixed(MAX_N),
+        1,
+        channels,
+        MAX_N,
+        &easy,
+    );
+    assert_eq!(used, MAX_N);
+}
+
+// ---------------------------------------------------------------------------
+// budget validation (protocol/CLI boundary)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_budgets_are_typed_errors_not_panics() {
+    use photonic_bayes::sampler::BudgetError;
+    // zero budgets
+    assert!(matches!(
+        SamplerConfig::default().resolve(0, &RequestBudget::default()),
+        Err(BudgetError::ZeroSamples)
+    ));
+    assert!(matches!(
+        RequestBudget {
+            max_samples: Some(0),
+            target_confidence: None,
+        }
+        .validate(),
+        Err(BudgetError::ZeroSamples)
+    ));
+    // min > max
+    let bad = SamplerConfig {
+        min_samples: 9,
+        max_samples: 3,
+        ..SamplerConfig::default()
+    };
+    assert!(matches!(bad.validate(), Err(BudgetError::MinAboveMax { .. })));
+    // non-finite / out-of-range confidence
+    for c in [f64::NAN, f64::INFINITY] {
+        assert!(RequestBudget {
+            max_samples: None,
+            target_confidence: Some(c),
+        }
+        .validate()
+        .is_err());
+    }
+    assert!(StopRule::confidence_target(1.0).is_err());
+    // the wire protocol surfaces the same typed rejections
+    let base = "{\"op\":\"classify\",\"dataset\":\"d\",\"image\":[1]";
+    for (field, bad) in [("max_samples", "0"), ("target_confidence", "2.0")] {
+        let err = photonic_bayes::server::protocol::parse_request(&format!(
+            "{base},\"{field}\":{bad}}}"
+        ))
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("budget") || err.to_string().contains("confidence"),
+            "{field}={bad}: {err}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-level contracts (artifact-gated)
+// ---------------------------------------------------------------------------
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("digits/meta.json").exists()
+}
+
+fn have_trained() -> bool {
+    artifacts_root().join("digits/params_trained.bin").exists()
+}
+
+/// Engine over the trained checkpoint when present (the statistical tests
+/// need separable splits), the init params otherwise (replay tests are
+/// parameter-agnostic).
+fn engine(cfg: EngineConfig) -> Engine {
+    let root = artifacts_root();
+    let arts = ModelArtifacts::load_dataset(&root, "digits").unwrap();
+    let trained = root.join("digits/params_trained.bin");
+    let params = if trained.exists() {
+        ParamStore::load_bin(&arts.meta, &trained).unwrap()
+    } else {
+        ParamStore::load_init(&arts.meta, &root.join("digits")).unwrap()
+    };
+    Engine::new(arts, params, cfg).unwrap()
+}
+
+fn digits_batch(n: usize) -> Vec<f32> {
+    (0..n * 28 * 28).map(|i| ((i % 17) as f32) / 16.0).collect()
+}
+
+fn base_cfg(threads: usize) -> EngineConfig {
+    EngineConfig {
+        n_samples: 6,
+        mode: ExecMode::Split(BackendKind::Digital),
+        policy: UncertaintyPolicy::ood_only(0.05),
+        calibrate: false,
+        threads,
+        seed: 5,
+        ..EngineConfig::default()
+    }
+}
+
+/// Fixed-rule classify replays bit-identically and carries the full
+/// budget as `samples_used` — the pre-sampler contract, per thread count.
+#[test]
+fn engine_fixed_rule_replays_bitwise() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let images = digits_batch(3);
+    for threads in [1usize, 2] {
+        let collect = |e: &mut Engine| {
+            e.classify(&images, 3)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.predictive.probs, r.predictive.predicted, r.samples_used))
+                .collect::<Vec<_>>()
+        };
+        let a = collect(&mut engine(base_cfg(threads)));
+        let b = collect(&mut engine(base_cfg(threads)));
+        assert_eq!(a, b, "t={threads}");
+        assert!(a.iter().all(|(_, _, used)| *used == 6));
+    }
+}
+
+/// `classify` and `classify_with_budget(default)` are the same path, and a
+/// request `max_samples` cap lowers the spend on the fixed rule.
+#[test]
+fn engine_default_budget_is_identity_and_caps_apply() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let images = digits_batch(2);
+    let a: Vec<_> = engine(base_cfg(1))
+        .classify(&images, 2)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.predictive.probs, r.samples_used))
+        .collect();
+    let b: Vec<_> = engine(base_cfg(1))
+        .classify_with_budget(&images, 2, &RequestBudget::default())
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.predictive.probs, r.samples_used))
+        .collect();
+    assert_eq!(a, b);
+
+    let capped = engine(base_cfg(1))
+        .classify_with_budget(
+            &images,
+            2,
+            &RequestBudget {
+                max_samples: Some(2),
+                target_confidence: None,
+            },
+        )
+        .unwrap();
+    assert!(capped.iter().all(|r| r.samples_used == 2));
+    assert!(capped.iter().all(|r| r.predictive.n_samples() == 2));
+}
+
+/// Adaptive engine classify: samples_used within clamps, deterministic
+/// replay, and OOD AUROC at matched max budget no worse than fixed-N.
+#[test]
+fn engine_adaptive_replays_and_auroc_holds() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use photonic_bayes::bnn::rocauc::auroc;
+    use photonic_bayes::data::{Dataset, DatasetKind};
+    use photonic_bayes::experiments::uncertainty::eval_split;
+
+    let adaptive_cfg = || EngineConfig {
+        sampler: SamplerConfig {
+            rule: StopRule::UncertaintyResolved {
+                mi_low: 0.001,
+                mi_high: 0.2,
+                stable: 2,
+            },
+            min_samples: 2,
+            max_samples: 0,
+            chunk: 2,
+        },
+        ..base_cfg(1)
+    };
+    let images = digits_batch(3);
+    let collect = |e: &mut Engine| {
+        e.classify(&images, 3)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.predictive.probs, r.samples_used))
+            .collect::<Vec<_>>()
+    };
+    let a = collect(&mut engine(adaptive_cfg()));
+    let b = collect(&mut engine(adaptive_cfg()));
+    assert_eq!(a, b, "adaptive replay");
+    assert!(a.iter().all(|(_, used)| (2..=6).contains(used)));
+
+    // AUROC comparison needs the real dataset splits AND a trained
+    // checkpoint (init params make both detectors coin flips)
+    if !have_trained() {
+        eprintln!("skipping AUROC half: no trained checkpoint");
+        return;
+    }
+    let data_dir = artifacts_root().join("data");
+    let (Ok(id), Ok(ood)) = (
+        Dataset::load(&data_dir, "digits_test", DatasetKind::InDomain),
+        Dataset::load(&data_dir, "fashion", DatasetKind::Epistemic),
+    ) else {
+        eprintln!("skipping AUROC half: dataset splits missing");
+        return;
+    };
+    let limit = 48;
+    let mut fixed = engine(base_cfg(1));
+    let f_id = eval_split(&mut fixed, &id, limit).unwrap();
+    let f_ood = eval_split(&mut fixed, &ood, limit).unwrap();
+    let mut adap = engine(adaptive_cfg());
+    let a_id = eval_split(&mut adap, &id, limit).unwrap();
+    let a_ood = eval_split(&mut adap, &ood, limit).unwrap();
+    let f_auroc = auroc(&f_ood.mi, &f_id.mi);
+    let a_auroc = auroc(&a_ood.mi, &a_id.mi);
+    // small-sample slack: "no worse" within noise at matched max budget
+    assert!(
+        a_auroc >= f_auroc - 0.1,
+        "adaptive AUROC {a_auroc} << fixed {f_auroc}"
+    );
+    assert!(
+        a_id.mean_samples() <= 6.0 + 1e-9,
+        "mean samples within budget"
+    );
+}
+
+/// Statistical sanity (artifact-gated): the aleatoric probe split needs
+/// more samples per request than the in-domain split under an adaptive
+/// rule — ambiguity is exactly what refuses to resolve early.
+#[test]
+fn engine_adaptive_mean_samples_higher_on_ambiguous_split() {
+    if !have_artifacts() || !have_trained() {
+        eprintln!("skipping: run `make artifacts` + `pbm train --dataset digits`");
+        return;
+    }
+    use photonic_bayes::data::{Dataset, DatasetKind};
+    use photonic_bayes::experiments::uncertainty::eval_split_budget;
+
+    let data_dir = artifacts_root().join("data");
+    let (Ok(id), Ok(amb)) = (
+        Dataset::load(&data_dir, "digits_test", DatasetKind::InDomain),
+        Dataset::load(&data_dir, "ambiguous", DatasetKind::Aleatoric),
+    ) else {
+        eprintln!("skipping: dataset splits missing");
+        return;
+    };
+    // confidence-gap stopping: decisive in-domain posteriors resolve
+    // early, ambiguous ones keep sampling
+    let budget = RequestBudget {
+        max_samples: None,
+        target_confidence: Some(0.7),
+    };
+    let mut cfg = base_cfg(1);
+    cfg.n_samples = 10;
+    let mut e = engine(cfg);
+    let limit = 48;
+    let id_scores = eval_split_budget(&mut e, &id, limit, &budget).unwrap();
+    let amb_scores = eval_split_budget(&mut e, &amb, limit, &budget).unwrap();
+    assert!(
+        amb_scores.mean_samples() > id_scores.mean_samples(),
+        "ambiguous {:.2} <= in-domain {:.2}",
+        amb_scores.mean_samples(),
+        id_scores.mean_samples()
+    );
+}
