@@ -3,12 +3,13 @@
 //! index).  Each section prints the paper's value next to the measured one.
 //!
 //! Sections: headline, backends, entropy, adaptive, fig2_error, fig2_delay,
-//! nist, fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc, ablations.
+//! nist, health, fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc,
+//! ablations.
 //!
 //! Machine-readable trajectories (`--json <path>`): `backends` →
 //! `BENCH_backends.json`, `entropy` → `BENCH_entropy.json`, `adaptive` →
-//! `BENCH_adaptive.json`; CI regenerates all three per push and archives
-//! them as workflow artifacts.
+//! `BENCH_adaptive.json`, `health` → `BENCH_health.json`; CI regenerates
+//! all four per push and archives them as workflow artifacts.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -71,6 +72,9 @@ fn main() {
     }
     if run("nist") {
         nist_table();
+    }
+    if run("health") {
+        health(&mut sink);
     }
     if run("fig4") {
         fig4();
@@ -397,9 +401,102 @@ fn nist_table() {
     let mut src = ChaoticLightSource::with_defaults(2024);
     let bits = src.extract_bits(100.0, 200_000);
     println!("{:<20} {:>10} {:>8}", "test", "p-value", "pass");
-    for r in nist::run_battery(&bits) {
+    let run = nist::run_battery(&bits);
+    for r in &run.results {
         println!("{:<20} {:>10.4} {:>8}", r.name, r.p_value, if r.pass { "yes" } else { "NO" });
     }
+    for e in &run.skipped {
+        println!("skipped: {e}");
+    }
+    println!("overall: {}", if run.all_pass() { "PASS" } else { "FAIL" });
+}
+
+/// Entropy-health monitor overhead: the tentpole acceptance point is
+/// monitor-on sampling throughput within 5% of monitor-off at the default
+/// 5% duty cycle.  Runs the backends' synthetic workload through tapped
+/// (`Sync`-mode) streams, so it needs no artifacts.  With `--json <path>`
+/// the rows land machine-readably in `BENCH_health.json`.
+fn health(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::entropy::health::{HealthConfig, Monitor};
+
+    section("HEALTH — entropy-monitor overhead, monitor-off vs monitor-on");
+    let (n_samples, batch, channels, hw) = (16usize, 8usize, 8usize, 7usize);
+    let plan = SamplePlan::new(n_samples, batch, channels, hw, hw);
+    let mut rng = photonic_bayes::entropy::Xoshiro256pp::new(41);
+    let kernels: Vec<_> = (0..channels).map(|_| random_kernel(&mut rng)).collect();
+    let mcfg = MachineConfig {
+        seed: 41,
+        ..MachineConfig::default()
+    };
+    let x = random_activations(&mut rng, plan.sample_size(), mcfg.scale_dac);
+    let bench = Bench::quick();
+    println!(
+        "plan: N = {n_samples} x B = {batch} x {channels}ch@{hw}x{hw}, duty = {}",
+        HealthConfig::default().duty
+    );
+    println!(
+        "{:<26} {:>14} {:>16} {:>10}",
+        "backend/monitor", "call latency", "conv/s (sim)", "vs off"
+    );
+    for kind in [BackendKind::Digital, BackendKind::Photonic] {
+        let mut off_ns = f64::NAN;
+        for monitored in [false, true] {
+            let popts = PipelineOptions {
+                mode: PrefetchMode::Sync,
+                ..PipelineOptions::default()
+            };
+            let monitor = monitored.then(|| {
+                Arc::new(Monitor::new(HealthConfig {
+                    enabled: true,
+                    ..HealthConfig::default()
+                }))
+            });
+            let mut be =
+                backend::build_with_opts_monitored(kind, &mcfg, None, popts, monitor.clone());
+            be.program(&kernels, false).unwrap();
+            let mut out = vec![0.0f32; plan.total_size()];
+            let label = format!(
+                "{}/{}",
+                kind.name(),
+                if monitored { "monitor-on" } else { "monitor-off" }
+            );
+            let s = bench.run(&label, || {
+                be.sample_conv(&plan, &x, &mut out).unwrap();
+                black_box(&out);
+            });
+            let ns_per_conv = s.mean_ns / plan.convolutions() as f64;
+            if !monitored {
+                off_ns = s.mean_ns;
+            }
+            println!(
+                "{:<26} {:>14} {:>16.2e} {:>9.2}x",
+                label,
+                photonic_bayes::benchkit::fmt_ns(s.mean_ns),
+                1e9 / ns_per_conv,
+                off_ns / s.mean_ns,
+            );
+            if let Some(sink) = sink {
+                sink.push(
+                    &format!(
+                        "health/sample_conv/{}/{}",
+                        kind.name(),
+                        if monitored { "monitor_on" } else { "monitor_off" }
+                    ),
+                    s.mean_ns,
+                    1e9 / ns_per_conv,
+                );
+            }
+            if let Some(m) = &monitor {
+                println!(
+                    "    tapped {} blocks, analyzed {} windows, degraded: {}",
+                    m.observed_blocks(),
+                    m.analyzed_windows(),
+                    m.any_degraded(),
+                );
+            }
+        }
+    }
+    println!("(acceptance: monitor-on within 5% of monitor-off at the default duty cycle)");
 }
 
 // ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ use anyhow::Result;
 
 use super::{BackendKind, PipelineOptions, ProbConvBackend, SamplePlan};
 use crate::entropy::gaussian::Gaussian;
+use crate::entropy::health::Monitor;
 use crate::entropy::pipeline::{EntropyStream, NormalGen};
 use crate::entropy::Xoshiro256pp;
 use crate::exec::scratch::{grow, ScratchArena};
@@ -110,6 +111,8 @@ pub struct DigitalBaselineBackend {
     popts: PipelineOptions,
     /// Draws produced by background entropy producers (prefetch on only).
     produced: Arc<AtomicU64>,
+    /// Entropy-health monitor tapping the shard streams, if attached.
+    monitor: Option<Arc<Monitor>>,
     /// Output pixels computed (one probabilistic convolution each).
     pub convolutions: u64,
     /// Gaussian weight draws consumed (the PRNG bottleneck being measured).
@@ -147,17 +150,33 @@ impl DigitalBaselineBackend {
         pool: Option<Arc<ThreadPool>>,
         popts: PipelineOptions,
     ) -> Self {
+        Self::with_opts_monitored(scale_dac, scale_adc, seed, pool, popts, None)
+    }
+
+    /// [`Self::with_opts`] with an optional entropy-health monitor: each
+    /// shard stream `dig-s{i}` gets a duty-cycled tap reporting to scorecard
+    /// `(i, "dig-s{i}")`.  Taps observe produced blocks by copy — monitored
+    /// and unmonitored backends replay bitwise-identically.
+    pub fn with_opts_monitored(
+        scale_dac: f32,
+        scale_adc: f32,
+        seed: u64,
+        pool: Option<Arc<ThreadPool>>,
+        popts: PipelineOptions,
+        monitor: Option<Arc<Monitor>>,
+    ) -> Self {
         let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
         let produced = Arc::new(AtomicU64::new(0));
         // offset the fork root so shard streams never alias the probe rng
         let mut root = Xoshiro256pp::new(seed ^ 0xD161_7A15_7EAD_5EED);
         let shards = (0..n_shards)
             .map(|i| DigitalShard {
-                stream: EntropyStream::new(
+                stream: EntropyStream::new_monitored(
                     NormalGen::new(root.fork()),
                     &popts,
                     &format!("dig-s{i}"),
                     produced.clone(),
+                    monitor.as_ref().map(|m| (m.clone(), i)),
                 ),
                 scratch: ScratchArena::default(),
             })
@@ -173,6 +192,7 @@ impl DigitalBaselineBackend {
             arena: ScratchArena::default(),
             popts,
             produced,
+            monitor,
             convolutions: 0,
             weight_draws: 0,
         }
@@ -268,6 +288,10 @@ impl ProbConvBackend for DigitalBaselineBackend {
             self.produced.load(Ordering::Relaxed)
         )
     }
+
+    fn entropy_health(&self) -> Option<Arc<Monitor>> {
+        self.monitor.clone()
+    }
 }
 
 #[cfg(test)]
@@ -353,5 +377,41 @@ mod tests {
         let mut replay = vec![0.0f32; plan.total_size()];
         b.sample_conv(&plan, &x, &mut replay).unwrap();
         assert_eq!(first, replay);
+    }
+
+    #[test]
+    fn monitored_backend_replays_bitwise_and_reports_health() {
+        use crate::entropy::health::{HealthConfig, Monitor};
+        let plan = SamplePlan::new(6, 2, 1, 5, 5);
+        let x = vec![0.4f32; plan.sample_size()];
+        let popts = PipelineOptions::default();
+
+        let mut plain = DigitalBaselineBackend::with_opts(4.0, 8.0, 13, None, popts);
+        plain.program(&[targets9(0.2, 0.4)], false).unwrap();
+        let mut want = vec![0.0f32; plan.total_size()];
+        plain.sample_conv(&plan, &x, &mut want).unwrap();
+        assert!(plain.entropy_health().is_none());
+
+        let monitor = Arc::new(Monitor::new(HealthConfig {
+            enabled: true,
+            window_bits: 256,
+            duty: 1.0,
+            ..HealthConfig::default()
+        }));
+        let mut tapped = DigitalBaselineBackend::with_opts_monitored(
+            4.0,
+            8.0,
+            13,
+            None,
+            popts,
+            Some(monitor.clone()),
+        );
+        tapped.program(&[targets9(0.2, 0.4)], false).unwrap();
+        let mut got = vec![0.0f32; plan.total_size()];
+        tapped.sample_conv(&plan, &x, &mut got).unwrap();
+        assert_eq!(want, got, "health tap changed the sampled outputs");
+        assert!(tapped.entropy_health().is_some());
+        assert!(monitor.observed_blocks() >= 1, "tap saw no blocks");
+        assert!(!monitor.any_degraded(), "healthy PRNG flagged as degraded");
     }
 }

@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::entropy::chaotic::ChaoticLightSource;
 use crate::entropy::gaussian::Gaussian;
+use crate::entropy::health::Monitor;
 use crate::entropy::Xoshiro256pp;
 use crate::exec::ThreadPool;
 use crate::photonics::{MachineConfig, TapTarget};
@@ -242,6 +243,13 @@ pub trait ProbConvBackend {
 
     /// One-line substrate telemetry (counters, simulated optical time, ...).
     fn report(&self) -> String;
+
+    /// The entropy-health monitor observing this backend's producer streams,
+    /// if one was attached at construction.  Deterministic substrates (mean
+    /// field) and unmonitored builds return `None`.
+    fn entropy_health(&self) -> Option<Arc<Monitor>> {
+        None
+    }
 }
 
 /// Reject kernels the 3x3 depthwise conv path cannot execute.
@@ -312,16 +320,39 @@ pub fn build_with_opts(
     pool: Option<Arc<ThreadPool>>,
     popts: PipelineOptions,
 ) -> Box<dyn ProbConvBackend> {
+    build_with_opts_monitored(kind, cfg, pool, popts, None)
+}
+
+/// [`build_with_opts`] with an optional entropy-health monitor: the stochastic
+/// substrates attach duty-cycled [`crate::entropy::health::BlockTap`]s to
+/// their entropy streams so every produced block can be audited off the hot
+/// path.  Taps observe by copy and never advance stream state, so a monitored
+/// backend replays bitwise-identically to an unmonitored one.  The mean-field
+/// backend draws no entropy and ignores the monitor.
+pub fn build_with_opts_monitored(
+    kind: BackendKind,
+    cfg: &MachineConfig,
+    pool: Option<Arc<ThreadPool>>,
+    popts: PipelineOptions,
+    monitor: Option<Arc<Monitor>>,
+) -> Box<dyn ProbConvBackend> {
     match kind {
-        BackendKind::Photonic => Box::new(PhotonicSimBackend::with_opts(cfg.clone(), pool, popts)),
-        BackendKind::Digital => Box::new(DigitalBaselineBackend::with_opts(
+        BackendKind::Photonic => Box::new(PhotonicSimBackend::with_opts_monitored(
+            cfg.clone(),
+            pool,
+            popts,
+            monitor,
+        )),
+        BackendKind::Digital => Box::new(DigitalBaselineBackend::with_opts_monitored(
             cfg.scale_dac,
             cfg.scale_adc,
             cfg.seed,
             pool,
             popts,
+            monitor,
         )),
-        // a deterministic single pass: nothing worth sharding or prefetching
+        // a deterministic single pass: nothing worth sharding, prefetching,
+        // or health-monitoring (no entropy is drawn)
         BackendKind::MeanField => Box::new(MeanFieldBackend::new(cfg.scale_dac, cfg.scale_adc)),
     }
 }

@@ -40,7 +40,8 @@ use super::{BackendKind, PipelineOptions, ProbConvBackend, SamplePlan};
 use crate::calibration::{calibrate_kernel, CalibrationOptions};
 use crate::entropy::chaotic::ChaoticLightSource;
 use crate::entropy::gaussian::Gaussian;
-use crate::entropy::pipeline::{spawn_group, stream_seed, EntropyStream, WeightGen};
+use crate::entropy::health::Monitor;
+use crate::entropy::pipeline::{spawn_group_monitored, stream_seed, EntropyStream, WeightGen};
 use crate::entropy::xoshiro::splitmix64;
 use crate::entropy::Xoshiro256pp;
 use crate::exec::scratch::{grow, ScratchArena};
@@ -156,6 +157,7 @@ impl WeightBank {
         n_shards: usize,
         popts: &PipelineOptions,
         produced: &Arc<AtomicU64>,
+        monitor: Option<&Arc<Monitor>>,
     ) -> Self {
         let generation = machine.stats.programs_loaded;
         let nt = machine.num_taps();
@@ -187,8 +189,17 @@ impl WeightBank {
                         }
                     })
                     .collect();
+                // every stream of the group reports under the shard label,
+                // so the whole (kernel x tap) bank rolls up into one
+                // (shard, "pho-s{s}") scorecard
                 ShardBank {
-                    streams: spawn_group(gens, popts, &format!("pho-s{s}"), produced.clone()),
+                    streams: spawn_group_monitored(
+                        gens,
+                        popts,
+                        &format!("pho-s{s}"),
+                        produced.clone(),
+                        monitor.map(|m| (m.clone(), s)),
+                    ),
                 }
             })
             .collect();
@@ -226,6 +237,8 @@ pub struct PhotonicSimBackend {
     bank: Option<WeightBank>,
     /// Draws produced by background entropy producers (prefetch on only).
     produced: Arc<AtomicU64>,
+    /// Entropy-health monitor tapping the bank streams, if attached.
+    monitor: Option<Arc<Monitor>>,
 }
 
 impl PhotonicSimBackend {
@@ -252,6 +265,21 @@ impl PhotonicSimBackend {
         pool: Option<Arc<ThreadPool>>,
         popts: PipelineOptions,
     ) -> Self {
+        Self::with_opts_monitored(cfg, pool, popts, None)
+    }
+
+    /// [`Self::with_opts`] with an optional entropy-health monitor: in the
+    /// banked modes (`Sync`/`On`) every weight-plane stream of shard `s`
+    /// gets a duty-cycled tap rolling up into scorecard `(s, "pho-s{s}")`.
+    /// Taps observe produced blocks by copy, so monitored and unmonitored
+    /// backends replay bitwise-identically.  `PrefetchMode::Off` draws
+    /// weights inline on the machine's own rails and is not tapped.
+    pub fn with_opts_monitored(
+        cfg: MachineConfig,
+        pool: Option<Arc<ThreadPool>>,
+        popts: PipelineOptions,
+        monitor: Option<Arc<Monitor>>,
+    ) -> Self {
         let n_shards = pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
         let shards = if n_shards > 1 || popts.mode.banked() {
             // banked modes use a shard front-end (EOM/detector/scratch)
@@ -269,6 +297,7 @@ impl PhotonicSimBackend {
             popts,
             bank: None,
             produced: Arc::new(AtomicU64::new(0)),
+            monitor,
         }
     }
 
@@ -289,6 +318,7 @@ impl PhotonicSimBackend {
             self.shards.len().max(1),
             &self.popts,
             &self.produced,
+            self.monitor.as_ref(),
         ));
     }
 
@@ -438,6 +468,10 @@ impl ProbConvBackend for PhotonicSimBackend {
             self.popts.mode,
             self.produced.load(Ordering::Relaxed)
         )
+    }
+
+    fn entropy_health(&self) -> Option<Arc<Monitor>> {
+        self.monitor.clone()
     }
 }
 

@@ -24,6 +24,29 @@
 //! entropy_prefetch = "on"
 //! # draws per prefetched entropy block
 //! entropy_block = 4096
+//! # act on sustained entropy-health degradation by swapping the sampling
+//! # backend (requires [health] enabled): digital | none
+//! entropy_fallback = "digital"
+//!
+//! [health]
+//! # online entropy-health monitor: tap producer blocks, score sliding bit
+//! # windows with the hardened NIST battery + min-entropy estimators, and
+//! # publish per-(shard, stream) scorecards on /info
+//! enabled = true
+//! # sliding analysis window (bits); >= 4096 lets the full battery apply
+//! window_bits = 4096
+//! # fraction of produced blocks tapped (keeps the monitor off the hot path)
+//! duty = 0.05
+//! # EWMA smoothing for the per-stream pass-rate score
+//! ewma_alpha = 0.3
+//! # EWMA score below which a window counts as failing
+//! fail_threshold = 0.5
+//! # consecutive failing windows before a Degraded event fires
+//! fail_consecutive = 2
+//! # SP800-90B most-common-value min-entropy floor (bits/bit)
+//! min_entropy_floor = 0.9
+//! # maximum acceptable |lag-1 serial correlation|
+//! serial_corr_cap = 0.2
 //!
 //! [batcher]
 //! max_batch = 8
@@ -206,6 +229,21 @@ threads = 8
         assert_eq!(c.get_f64("sampler", "mi_low", 0.002).unwrap(), 0.004);
         // unset knobs fall back to rule defaults
         assert_eq!(c.get_f64("sampler", "mi_high", 0.08).unwrap(), 0.08);
+    }
+
+    #[test]
+    fn health_table_parses() {
+        let c = Config::parse(
+            "[engine]\nentropy_fallback = \"digital\"\n\n[health]\nenabled = true\n\
+             window_bits = 8192\nduty = 0.1\nfail_threshold = 0.6\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("engine", "entropy_fallback"), Some("digital"));
+        assert!(c.get_bool("health", "enabled", false).unwrap());
+        assert_eq!(c.get_usize("health", "window_bits", 4096).unwrap(), 8192);
+        assert_eq!(c.get_f64("health", "duty", 0.05).unwrap(), 0.1);
+        // unset knobs fall back to monitor defaults
+        assert_eq!(c.get_f64("health", "ewma_alpha", 0.3).unwrap(), 0.3);
     }
 
     #[test]

@@ -11,9 +11,10 @@ use crate::backend::{
     self, BackendKind, EpsSource, PipelineOptions, PrefetchMode, ProbConvBackend, SamplePlan,
 };
 use crate::bnn::{Decision, Predictive, UncertaintyPolicy};
+use crate::entropy::health::{HealthConfig, HealthEvent, Monitor};
 use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
-use crate::log_info;
+use crate::{log_info, log_warn};
 use crate::photonics::MachineConfig;
 use crate::runtime::{Arg, CompiledFn, ModelArtifacts, ParamStore};
 use crate::sampler::{
@@ -92,6 +93,20 @@ pub struct EngineConfig {
     /// this (they can lower the budget or request a confidence target,
     /// never raise the budget).
     pub sampler: SamplerConfig,
+    /// Online entropy-health monitoring: duty-cycled taps on the backend's
+    /// producer streams feed the hardened NIST battery plus min-entropy and
+    /// serial-correlation estimators into per-(shard, stream) scorecards.
+    /// Disabled by default; taps observe by copy, so enabling the monitor
+    /// never changes sampled outputs.
+    pub health: HealthConfig,
+    /// Backend to switch to when the health monitor reports sustained
+    /// degradation (`[engine] entropy_fallback = "digital"`).  `None` (the
+    /// default) logs and exposes scorecards but never swaps backends.
+    pub entropy_fallback: Option<BackendKind>,
+    /// Pre-built monitor shared with the serving layer so `/info` can read
+    /// scorecards without an engine round-trip.  When `None` and
+    /// `health.enabled`, the engine builds its own.
+    pub health_monitor: Option<Arc<Monitor>>,
     pub seed: u64,
 }
 
@@ -108,6 +123,9 @@ impl Default for EngineConfig {
             entropy_prefetch: PrefetchMode::Off,
             entropy_block: 4096,
             sampler: SamplerConfig::default(),
+            health: HealthConfig::default(),
+            entropy_fallback: None,
+            health_monitor: None,
             seed: 42,
         }
     }
@@ -152,6 +170,17 @@ pub struct Engine {
     /// Reusable request buffers (padded input, eps, sample plans, pass
     /// staging): steady-state classification allocates only its results.
     scratch: ScratchArena,
+    /// Resolved machine config / pipeline options / worker pool, retained so
+    /// an entropy-health fallback can rebuild the backend identically.
+    mcfg: MachineConfig,
+    popts: PipelineOptions,
+    pool: Option<Arc<ThreadPool>>,
+    /// Entropy-health monitor tapping the backend's producer streams.
+    monitor: Option<Arc<Monitor>>,
+    /// Set once an entropy-health fallback has swapped the backend: the
+    /// swap is one-way (a recovered source does not swap back — operators
+    /// restart the engine after fixing the hardware).
+    fell_back: bool,
     pub metrics: super::metrics::EngineMetrics,
 }
 
@@ -181,7 +210,20 @@ impl Engine {
             ..PipelineOptions::default()
         }
         .sanitized();
-        let mut backend = backend::build_with_opts(cfg.mode.backend_kind(), &mcfg, pool, popts);
+        // a monitor handed in by the serving layer wins (it is what /info
+        // reads); otherwise build one here when health checking is enabled
+        let monitor = cfg.health_monitor.clone().or_else(|| {
+            cfg.health
+                .enabled
+                .then(|| Arc::new(Monitor::new(cfg.health)))
+        });
+        let mut backend = backend::build_with_opts_monitored(
+            cfg.mode.backend_kind(),
+            &mcfg,
+            pool.clone(),
+            popts,
+            monitor.clone(),
+        );
         let kernels = params.prob_kernels()?;
         let t0 = Instant::now();
         backend.program(&kernels, cfg.calibrate)?;
@@ -203,6 +245,11 @@ impl Engine {
             params,
             cfg,
             scratch: ScratchArena::default(),
+            mcfg,
+            popts,
+            pool,
+            monitor,
+            fell_back: false,
             metrics: Default::default(),
         })
     }
@@ -261,6 +308,7 @@ impl Engine {
         if n == 0 {
             return Ok(Vec::new());
         }
+        self.check_entropy_health()?;
         let mut resolved = self
             .cfg
             .sampler
@@ -542,6 +590,79 @@ impl Engine {
     /// The engine's sampler configuration (effective stop rule).
     pub fn sampler_config(&self) -> &SamplerConfig {
         &self.cfg.sampler
+    }
+
+    /// The entropy-health monitor observing this engine's backend, if any.
+    pub fn entropy_health(&self) -> Option<Arc<Monitor>> {
+        self.monitor.clone()
+    }
+
+    /// Whether an entropy-health fallback has swapped the backend.
+    pub fn fell_back(&self) -> bool {
+        self.fell_back
+    }
+
+    /// Drain health events (always logged) and, when `entropy_fallback` is
+    /// configured and the monitor reports sustained degradation, rebuild the
+    /// backend on the fallback substrate.  The swap is deterministic: the
+    /// replacement is built from the engine's retained `(machine config,
+    /// pool, pipeline options)` and programmed from the same trained
+    /// kernels, and dropping the old backend joins its entropy producers —
+    /// prefetched photonic weight-plane banks retire before the first
+    /// fallback plan runs, never leaking stale draws.
+    fn check_entropy_health(&mut self) -> Result<()> {
+        let Some(monitor) = self.monitor.clone() else {
+            return Ok(());
+        };
+        for ev in monitor.take_events() {
+            match ev {
+                HealthEvent::Degraded { shard, stream, score } => log_warn!(
+                    "engine[{}]: entropy stream (shard {shard}, \"{stream}\") degraded \
+                     (score ewma {score:.3})",
+                    self.arts.meta.dataset
+                ),
+                HealthEvent::Recovered { shard, stream, score } => log_info!(
+                    "engine[{}]: entropy stream (shard {shard}, \"{stream}\") recovered \
+                     (score ewma {score:.3})",
+                    self.arts.meta.dataset
+                ),
+            }
+        }
+        let Some(target) = self.cfg.entropy_fallback else {
+            return Ok(());
+        };
+        if self.fell_back || !monitor.any_degraded() {
+            return Ok(());
+        }
+        self.fell_back = true;
+        if self.backend.kind() == target {
+            log_warn!(
+                "engine[{}]: entropy degraded but already on '{}' — nothing to swap",
+                self.arts.meta.dataset,
+                target
+            );
+            return Ok(());
+        }
+        let kernels = self.params.prob_kernels()?;
+        let mut backend = backend::build_with_opts_monitored(
+            target,
+            &self.mcfg,
+            self.pool.clone(),
+            self.popts,
+            self.monitor.clone(),
+        );
+        backend.program(&kernels, self.cfg.calibrate)?;
+        let old = std::mem::replace(&mut self.backend, backend);
+        let old_name = old.name();
+        drop(old); // joins the degraded backend's entropy producers
+        log_warn!(
+            "engine[{}]: entropy health fallback: '{}' -> '{}' ({} kernels reprogrammed)",
+            self.arts.meta.dataset,
+            old_name,
+            target,
+            kernels.len()
+        );
+        Ok(())
     }
 
     /// Simulated-optical-time / substrate + host telemetry line.

@@ -49,7 +49,10 @@ impl LatencyHistogram {
         }
     }
 
-    /// Approximate percentile from bucket boundaries (upper edge).
+    /// Approximate percentile from bucket boundaries (upper edge), clamped
+    /// to the maximum recorded value: the raw edge `2^(i+1)` of the last
+    /// bucket can be nearly 2x the true maximum, so an unclamped p95/p100
+    /// would over-report tail latency.
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -59,7 +62,7 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return (1u64 << (i + 1)) as f64;
+                return ((1u64 << (i + 1)) as f64).min(self.max_us);
             }
         }
         self.max_us
@@ -140,6 +143,18 @@ impl EngineMetrics {
                 "p95_batch_us",
                 Json::Num(self.batch_latency.percentile_us(95.0)),
             ),
+            (
+                "mean_request_us",
+                Json::Num(self.request_latency.mean_us()),
+            ),
+            (
+                "p50_request_us",
+                Json::Num(self.request_latency.percentile_us(50.0)),
+            ),
+            (
+                "p95_request_us",
+                Json::Num(self.request_latency.percentile_us(95.0)),
+            ),
         ])
     }
 }
@@ -157,7 +172,20 @@ mod tests {
         assert_eq!(h.count(), 1000);
         assert!((h.mean_us() - 500.5).abs() < 1.0);
         assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
-        assert!(h.percentile_us(95.0) <= h.percentile_us(100.0) * 2.0);
+        // clamped to the recorded maximum: no percentile may exceed it
+        assert!(h.percentile_us(95.0) <= 1000.0);
+        assert_eq!(h.percentile_us(100.0), 1000.0);
+    }
+
+    #[test]
+    fn percentile_never_exceeds_recorded_max() {
+        // a single 700us sample falls in bucket [512, 1024): the raw upper
+        // edge would report 1024us for every percentile
+        let mut h = LatencyHistogram::default();
+        h.record(700.0);
+        for p in [50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile_us(p), 700.0, "p{p}");
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use super::service::{ClassifyRequest, EngineHandle};
+use crate::entropy::health::Scorecard;
 
 /// Routes requests to per-dataset engines.
 #[derive(Default)]
@@ -34,6 +35,19 @@ impl Router {
     /// Route one request.
     pub fn route(&self, dataset: &str, req: ClassifyRequest) -> Result<()> {
         self.get(dataset)?.submit(req)
+    }
+
+    /// Per-dataset entropy-health scorecards (datasets sorted by name;
+    /// engines without a monitor are omitted).  Reads the shared monitors
+    /// directly — no round-trip through any engine thread.
+    pub fn health_snapshot(&self) -> Vec<(String, Vec<Scorecard>)> {
+        let mut snap: Vec<(String, Vec<Scorecard>)> = self
+            .engines
+            .iter()
+            .filter_map(|(name, h)| h.health.as_ref().map(|m| (name.clone(), m.scorecards())))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
     }
 
     /// Shut down every engine.

@@ -2,6 +2,7 @@
 //! exposes a channel-based request API.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -9,6 +10,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::DynamicBatcher;
 use super::engine::{ClassifyResult, Engine, EngineConfig};
+use crate::entropy::health::Monitor;
 use crate::exec::channel::{channel, Receiver, Sender};
 use crate::log_info;
 use crate::runtime::{ModelArtifacts, ParamStore};
@@ -67,6 +69,10 @@ fn group_by_budget(batch: Vec<ClassifyRequest>) -> Vec<(RequestBudget, Vec<Class
 /// Handle to a running engine thread.
 pub struct EngineHandle {
     pub dataset: String,
+    /// Entropy-health monitor shared with the engine (present when
+    /// `EngineConfig::health.enabled`): `/info` reads scorecards from here
+    /// without a round-trip through the engine thread.
+    pub health: Option<Arc<Monitor>>,
     tx: Sender<ClassifyRequest>,
     thread: Option<JoinHandle<()>>,
 }
@@ -99,6 +105,14 @@ impl EngineHandle {
         engine_cfg: EngineConfig,
         svc_cfg: ServiceConfig,
     ) -> Result<Self> {
+        // the engine is built inside its thread, so create the monitor here
+        // and hand it in: the serving layer keeps the other reference for
+        // lock-free-on-the-engine /info scorecard reads
+        let mut engine_cfg = engine_cfg;
+        if engine_cfg.health.enabled && engine_cfg.health_monitor.is_none() {
+            engine_cfg.health_monitor = Some(Arc::new(Monitor::new(engine_cfg.health)));
+        }
+        let health = engine_cfg.health_monitor.clone();
         let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
         let dir = artifacts_root.join(dataset);
         let params_path = params_path.map(|p| p.to_path_buf());
@@ -161,6 +175,7 @@ impl EngineHandle {
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
         Ok(Self {
             dataset: dataset_name,
+            health,
             tx,
             thread: Some(thread),
         })

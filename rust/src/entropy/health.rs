@@ -1,0 +1,581 @@
+//! Online entropy-health monitor.
+//!
+//! The paper's trust story rests on the chaotic light source actually being
+//! random — it cites passing the NIST SP800-22 battery — but a field source
+//! degrades silently, and an offline CI battery cannot notice.  This module
+//! audits the entropy pipeline *at serving time*: producer blocks are tapped
+//! at a configurable low duty cycle ([`BlockTap`]), folded into per-stream
+//! sliding bit windows, and each full window is scored by the hardened
+//! (non-panicking) [`super::nist`] battery plus a most-common-value
+//! min-entropy estimate (SP800-90B MCV) and a lag-1 serial-correlation
+//! estimate.  A per-`(shard, stream)` [`Scorecard`] tracks the pass-rate
+//! EWMA and consecutive failing windows; sustained failure raises a typed
+//! [`HealthEvent`] that the engine logs, exposes over `/info`, and — when
+//! `entropy_fallback = "digital"` is opted into — acts on by swapping the
+//! sampling backend.
+//!
+//! The tap *copies* produced blocks and never consumes stream state, so the
+//! replay contract is untouched: outputs stay bitwise identical per
+//! `(seed, threads, prefetch, rule)` whether the monitor is on or off.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::nist;
+
+/// Monitor knobs (the `[health]` config table / `--health-*` flags).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    /// Master switch: a disabled monitor ignores every observation.
+    pub enabled: bool,
+    /// Sliding analysis window length in bits.  4096 is the smallest
+    /// window at which the full battery (matrix rank included) applies.
+    pub window_bits: usize,
+    /// Fraction of produced blocks tapped, `0 < duty <= 1`.  The battery
+    /// cost is `O(window_bits)` per analyzed window, so a low duty keeps
+    /// the monitor off the hot path.
+    pub duty: f64,
+    /// EWMA smoothing factor for the per-stream pass-rate score.
+    pub ewma_alpha: f64,
+    /// EWMA score below which a window counts as failing.
+    pub fail_threshold: f64,
+    /// Consecutive failing windows before a `Degraded` event fires.
+    pub fail_consecutive: u32,
+    /// Minimum acceptable MCV min-entropy (bits per bit) per window.
+    pub min_entropy_floor: f64,
+    /// Maximum acceptable |lag-1 serial correlation| per window.
+    pub serial_corr_cap: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            window_bits: 4096,
+            duty: 0.05,
+            ewma_alpha: 0.3,
+            fail_threshold: 0.5,
+            fail_consecutive: 2,
+            min_entropy_floor: 0.9,
+            serial_corr_cap: 0.2,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Clamp every knob into its sane range (mirrors
+    /// `PipelineOptions::sanitized`).
+    pub fn sanitized(mut self) -> Self {
+        self.window_bits = self.window_bits.clamp(256, 1 << 20);
+        self.duty = if self.duty.is_finite() {
+            self.duty.clamp(1.0 / 1024.0, 1.0)
+        } else {
+            HealthConfig::default().duty
+        };
+        self.ewma_alpha = if self.ewma_alpha.is_finite() {
+            self.ewma_alpha.clamp(0.01, 1.0)
+        } else {
+            HealthConfig::default().ewma_alpha
+        };
+        self.fail_threshold = if self.fail_threshold.is_finite() {
+            self.fail_threshold.clamp(0.0, 1.0)
+        } else {
+            HealthConfig::default().fail_threshold
+        };
+        self.fail_consecutive = self.fail_consecutive.max(1);
+        self.min_entropy_floor = self.min_entropy_floor.clamp(0.0, 1.0);
+        self.serial_corr_cap = self.serial_corr_cap.clamp(0.0, 1.0);
+        self
+    }
+}
+
+/// A sustained change in a stream's health, raised at most once per
+/// transition (degraded -> recovered -> degraded ...).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HealthEvent {
+    /// The stream's pass-rate EWMA stayed below threshold for
+    /// `fail_consecutive` windows.
+    Degraded {
+        shard: usize,
+        stream: String,
+        score: f64,
+    },
+    /// A previously degraded stream's EWMA moved back above threshold.
+    Recovered {
+        shard: usize,
+        stream: String,
+        score: f64,
+    },
+}
+
+/// Public snapshot of one `(shard, stream)` scorecard (the `/info` rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scorecard {
+    pub shard: usize,
+    pub stream: String,
+    /// Windows analyzed so far.
+    pub windows: u64,
+    /// Pass-rate EWMA in [0, 1].
+    pub score_ewma: f64,
+    /// Raw pass rate of the most recent window.
+    pub last_score: f64,
+    /// Current run of failing windows.
+    pub consecutive_fails: u32,
+    /// MCV min-entropy (bits/bit) of the most recent window.
+    pub min_entropy: f64,
+    /// Lag-1 serial correlation of the most recent window.
+    pub serial_corr: f64,
+    /// True while the stream is in the degraded state.
+    pub degraded: bool,
+}
+
+#[derive(Debug, Default)]
+struct StreamState {
+    pending: Vec<u8>,
+    windows: u64,
+    ewma: f64,
+    last_score: f64,
+    consecutive_fails: u32,
+    min_entropy: f64,
+    serial_corr: f64,
+    degraded: bool,
+}
+
+#[derive(Debug, Default)]
+struct MonitorInner {
+    cards: HashMap<(usize, String), StreamState>,
+    events: Vec<HealthEvent>,
+}
+
+/// Thread-safe scorecard keeper shared by producer taps, the engine, and
+/// the gateway's `/info` path.
+#[derive(Debug)]
+pub struct Monitor {
+    cfg: HealthConfig,
+    inner: Mutex<MonitorInner>,
+    any_degraded: AtomicBool,
+    observed_blocks: AtomicU64,
+    analyzed_windows: AtomicU64,
+}
+
+impl Monitor {
+    pub fn new(cfg: HealthConfig) -> Self {
+        Self {
+            cfg: cfg.sanitized(),
+            inner: Mutex::new(MonitorInner::default()),
+            any_degraded: AtomicBool::new(false),
+            observed_blocks: AtomicU64::new(0),
+            analyzed_windows: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// True while any monitored stream is in the degraded state.  Lock-free
+    /// — the engine polls this per classify call.
+    pub fn any_degraded(&self) -> bool {
+        self.any_degraded.load(Ordering::Acquire)
+    }
+
+    /// Blocks seen by taps (post duty cycle).
+    pub fn observed_blocks(&self) -> u64 {
+        self.observed_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Full windows scored so far, across all streams.
+    pub fn analyzed_windows(&self) -> u64 {
+        self.analyzed_windows.load(Ordering::Relaxed)
+    }
+
+    /// Observe one produced entropy block (a slice of f64 draws).  Bits are
+    /// extracted by successive-pair comparison (`a > b`), which is unbiased
+    /// for any continuous iid draw distribution — normals and realized
+    /// weight planes alike — so one extractor serves every stream kind.
+    pub fn observe_block(&self, shard: usize, stream: &str, block: &[f64]) {
+        if !self.cfg.enabled || block.len() < 2 {
+            return;
+        }
+        self.observed_blocks.fetch_add(1, Ordering::Relaxed);
+        let mut bits = Vec::with_capacity(block.len() / 2);
+        for pair in block.chunks_exact(2) {
+            bits.push(u8::from(pair[0] > pair[1]));
+        }
+        self.ingest_bits(shard, stream, &bits);
+    }
+
+    /// Fold raw bits into the stream's window (the extraction-free core;
+    /// also the fault-injection hook for tests).
+    pub fn ingest_bits(&self, shard: usize, stream: &str, bits: &[u8]) {
+        if !self.cfg.enabled || bits.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("health monitor poisoned");
+        let key = (shard, stream.to_string());
+        let state = inner.cards.entry(key).or_default();
+        state.pending.extend_from_slice(bits);
+        let window = self.cfg.window_bits;
+        let mut transitions: Vec<HealthEvent> = Vec::new();
+        while state.pending.len() >= window {
+            let analysis = analyze_window(&state.pending[..window], &self.cfg);
+            state.pending.drain(..window);
+            self.analyzed_windows.fetch_add(1, Ordering::Relaxed);
+            state.windows += 1;
+            state.last_score = analysis.score;
+            state.min_entropy = analysis.min_entropy;
+            state.serial_corr = analysis.serial_corr;
+            state.ewma = if state.windows == 1 {
+                analysis.score
+            } else {
+                self.cfg.ewma_alpha * analysis.score + (1.0 - self.cfg.ewma_alpha) * state.ewma
+            };
+            if state.ewma < self.cfg.fail_threshold {
+                state.consecutive_fails += 1;
+                if state.consecutive_fails >= self.cfg.fail_consecutive && !state.degraded {
+                    state.degraded = true;
+                    transitions.push(HealthEvent::Degraded {
+                        shard,
+                        stream: stream.to_string(),
+                        score: state.ewma,
+                    });
+                }
+            } else {
+                state.consecutive_fails = 0;
+                if state.degraded {
+                    state.degraded = false;
+                    transitions.push(HealthEvent::Recovered {
+                        shard,
+                        stream: stream.to_string(),
+                        score: state.ewma,
+                    });
+                }
+            }
+        }
+        if !transitions.is_empty() {
+            inner.events.extend(transitions);
+            let any = inner.cards.values().any(|s| s.degraded);
+            self.any_degraded.store(any, Ordering::Release);
+        }
+    }
+
+    /// Drain pending health events (Degraded / Recovered transitions).
+    pub fn take_events(&self) -> Vec<HealthEvent> {
+        std::mem::take(&mut self.inner.lock().expect("health monitor poisoned").events)
+    }
+
+    /// Snapshot every scorecard, ordered by `(shard, stream)` for stable
+    /// `/info` output.
+    pub fn scorecards(&self) -> Vec<Scorecard> {
+        let inner = self.inner.lock().expect("health monitor poisoned");
+        let mut out: Vec<Scorecard> = inner
+            .cards
+            .iter()
+            .map(|((shard, stream), s)| Scorecard {
+                shard: *shard,
+                stream: stream.clone(),
+                windows: s.windows,
+                score_ewma: s.ewma,
+                last_score: s.last_score,
+                consecutive_fails: s.consecutive_fails,
+                min_entropy: s.min_entropy,
+                serial_corr: s.serial_corr,
+                degraded: s.degraded,
+            })
+            .collect();
+        out.sort_by(|a, b| (a.shard, &a.stream).cmp(&(b.shard, &b.stream)));
+        out
+    }
+
+    fn duty_stride(&self) -> u64 {
+        ((1.0 / self.cfg.duty).round() as u64).max(1)
+    }
+}
+
+struct WindowAnalysis {
+    score: f64,
+    min_entropy: f64,
+    serial_corr: f64,
+}
+
+/// Score one full window: fraction of applicable checks passed, where the
+/// checks are every applicable battery test plus the min-entropy floor and
+/// the serial-correlation cap.
+fn analyze_window(bits: &[u8], cfg: &HealthConfig) -> WindowAnalysis {
+    let battery = nist::run_battery(bits);
+    let mut total = battery.results.len();
+    let mut passed = battery.results.iter().filter(|r| r.pass).count();
+    let min_entropy = mcv_min_entropy(bits);
+    total += 1;
+    passed += usize::from(min_entropy >= cfg.min_entropy_floor);
+    let serial_corr = lag1_correlation(bits);
+    total += 1;
+    passed += usize::from(serial_corr.abs() <= cfg.serial_corr_cap);
+    WindowAnalysis {
+        score: passed as f64 / total.max(1) as f64,
+        min_entropy,
+        serial_corr,
+    }
+}
+
+/// SP800-90B most-common-value min-entropy estimate over a bit window:
+/// upper-confidence-bound the most common symbol's probability and return
+/// `-log2` of it.  1.0 = perfectly balanced, 0.0 = constant.
+pub fn mcv_min_entropy(bits: &[u8]) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    let n = bits.len() as f64;
+    let ones = bits.iter().map(|&b| b as u64).sum::<u64>() as f64;
+    let p_hat = (ones.max(n - ones)) / n;
+    let p_u = (p_hat + 2.576 * (p_hat * (1.0 - p_hat) / n).sqrt()).min(1.0);
+    -p_u.log2()
+}
+
+/// Lag-1 serial correlation of a bit window; constant windows report 1.0
+/// (fully predictable).
+pub fn lag1_correlation(bits: &[u8]) -> f64 {
+    if bits.len() < 2 {
+        return 1.0;
+    }
+    let n = bits.len() as f64;
+    let mean = bits.iter().map(|&b| b as f64).sum::<f64>() / n;
+    let var = mean * (1.0 - mean);
+    if var <= f64::EPSILON {
+        return 1.0;
+    }
+    let pairs = bits.len() - 1;
+    let cov = bits
+        .windows(2)
+        .map(|w| (w[0] as f64 - mean) * (w[1] as f64 - mean))
+        .sum::<f64>()
+        / pairs as f64;
+    cov / var
+}
+
+/// Producer-side tap handle: owned by one producer thread (or one sync
+/// stream), it forwards every `stride`-th block to the shared [`Monitor`]
+/// by copy.  It never touches generator state, so enabling it cannot
+/// change a single delivered draw.
+#[derive(Debug)]
+pub struct BlockTap {
+    monitor: Arc<Monitor>,
+    shard: usize,
+    stream: String,
+    stride: u64,
+    count: u64,
+}
+
+impl BlockTap {
+    pub fn new(monitor: Arc<Monitor>, shard: usize, stream: impl Into<String>) -> Self {
+        let stride = monitor.duty_stride();
+        Self {
+            monitor,
+            shard,
+            stream: stream.into(),
+            stride,
+            count: 0,
+        }
+    }
+
+    /// Observe one produced block (duty-cycled: the first block and every
+    /// `stride`-th block thereafter are analyzed; the rest are free).
+    pub fn observe(&mut self, block: &[f64]) {
+        let idx = self.count;
+        self.count += 1;
+        if idx % self.stride != 0 {
+            return;
+        }
+        self.monitor.observe_block(self.shard, &self.stream, block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::{BitSource, Xoshiro256pp};
+
+    fn cfg(window_bits: usize) -> HealthConfig {
+        HealthConfig {
+            enabled: true,
+            window_bits,
+            duty: 1.0,
+            ewma_alpha: 1.0,
+            fail_threshold: 0.6,
+            fail_consecutive: 1,
+            ..HealthConfig::default()
+        }
+    }
+
+    fn prng_bits(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n).map(|_| u8::from(rng.next_f64() < 0.5)).collect()
+    }
+
+    #[test]
+    fn good_stream_stays_healthy() {
+        let mon = Monitor::new(cfg(512));
+        let mut rng = Xoshiro256pp::new(11);
+        for _ in 0..8 {
+            let block: Vec<f64> = (0..1024).map(|_| rng.next_f64()).collect();
+            mon.observe_block(0, "dig-s0", &block);
+        }
+        assert!(mon.analyzed_windows() >= 4);
+        assert!(!mon.any_degraded());
+        assert!(mon.take_events().is_empty());
+        let cards = mon.scorecards();
+        assert_eq!(cards.len(), 1);
+        assert!(cards[0].score_ewma > 0.6, "ewma {}", cards[0].score_ewma);
+        assert!(cards[0].min_entropy > 0.8);
+        assert!(!cards[0].degraded);
+    }
+
+    #[test]
+    fn biased_stream_flags_within_one_window() {
+        // 80/20 bias: monobit, block frequency, runs, cusum, apen and the
+        // min-entropy floor all fail inside a single 512-bit window
+        let mon = Monitor::new(cfg(512));
+        let mut rng = Xoshiro256pp::new(7);
+        let bits: Vec<u8> = (0..512).map(|_| u8::from(rng.next_f64() < 0.8)).collect();
+        mon.ingest_bits(2, "dig-s2", &bits);
+        assert!(mon.any_degraded());
+        let events = mon.take_events();
+        assert!(
+            matches!(&events[..], [HealthEvent::Degraded { shard: 2, .. }]),
+            "{events:?}"
+        );
+        let card = &mon.scorecards()[0];
+        assert_eq!(card.windows, 1);
+        assert!(card.degraded);
+        assert!(card.min_entropy < 0.9, "min-entropy {}", card.min_entropy);
+    }
+
+    #[test]
+    fn correlated_stream_flags_within_one_window() {
+        // repeat-with-p = 0.85: runs, serial, approximate entropy and the
+        // correlation cap all trip
+        let mon = Monitor::new(cfg(512));
+        let mut rng = Xoshiro256pp::new(9);
+        let mut bit = 0u8;
+        let bits: Vec<u8> = (0..512)
+            .map(|_| {
+                if rng.next_f64() >= 0.85 {
+                    bit ^= 1;
+                }
+                bit
+            })
+            .collect();
+        mon.ingest_bits(0, "dig-s0", &bits);
+        assert!(mon.any_degraded());
+        let card = &mon.scorecards()[0];
+        assert!(card.serial_corr > 0.2, "corr {}", card.serial_corr);
+    }
+
+    #[test]
+    fn stuck_channel_chaotic_blocks_flag_within_one_window() {
+        // a chaotic source with stuck channels: draws round-robin over 9
+        // channels, channels 0..4 pinned at a constant intensity.  The
+        // pair-comparison extractor turns that into heavily structured
+        // bits and the scorecard must flag it within one window.
+        let mon = Monitor::new(cfg(512));
+        let mut rng = Xoshiro256pp::new(13);
+        let block: Vec<f64> = (0..2048)
+            .map(|i| if i % 9 < 4 { 2.0 } else { rng.next_f64() })
+            .collect();
+        mon.observe_block(1, "pho-s1", &block);
+        assert!(mon.analyzed_windows() >= 1);
+        assert!(mon.any_degraded(), "scorecard: {:?}", mon.scorecards());
+    }
+
+    #[test]
+    fn degraded_stream_recovers_and_raises_both_events() {
+        let mut c = cfg(512);
+        c.ewma_alpha = 1.0; // no smoothing: transitions happen immediately
+        let mon = Monitor::new(c);
+        let bad = vec![1u8; 512];
+        mon.ingest_bits(0, "s", &bad);
+        assert!(mon.any_degraded());
+        mon.ingest_bits(0, "s", &prng_bits(512, 21));
+        assert!(!mon.any_degraded());
+        let events = mon.take_events();
+        assert!(matches!(events[0], HealthEvent::Degraded { .. }));
+        assert!(matches!(events[1], HealthEvent::Recovered { .. }));
+    }
+
+    #[test]
+    fn consecutive_failure_threshold_delays_the_event() {
+        let mut c = cfg(512);
+        c.fail_consecutive = 3;
+        let mon = Monitor::new(c);
+        let bad = vec![0u8; 512];
+        mon.ingest_bits(0, "s", &bad);
+        mon.ingest_bits(0, "s", &bad);
+        assert!(!mon.any_degraded(), "two failing windows < threshold of 3");
+        mon.ingest_bits(0, "s", &bad);
+        assert!(mon.any_degraded());
+    }
+
+    #[test]
+    fn duty_cycle_skips_blocks_and_disabled_monitor_ignores_all() {
+        let mut c = cfg(512);
+        c.duty = 0.25;
+        let mon = Arc::new(Monitor::new(c));
+        let mut tap = BlockTap::new(mon.clone(), 0, "s");
+        let block = vec![0.5f64; 64];
+        for _ in 0..8 {
+            tap.observe(&block);
+        }
+        assert_eq!(mon.observed_blocks(), 2, "every 4th block + the first");
+
+        let off = Monitor::new(HealthConfig::default()); // enabled: false
+        off.observe_block(0, "s", &[1.0; 1024]);
+        off.ingest_bits(0, "s", &[1; 4096]);
+        assert_eq!(off.observed_blocks(), 0);
+        assert!(off.scorecards().is_empty());
+        assert!(!off.any_degraded());
+    }
+
+    #[test]
+    fn estimators_match_known_streams() {
+        // balanced alternating bits: full min-entropy, strong negative
+        // lag-1 correlation
+        let alt: Vec<u8> = (0..4096).map(|i| (i % 2) as u8).collect();
+        assert!(mcv_min_entropy(&alt) > 0.9);
+        assert!(lag1_correlation(&alt) < -0.99);
+        // constant bits: zero min-entropy, fully predictable
+        let konst = vec![1u8; 4096];
+        assert_eq!(lag1_correlation(&konst), 1.0);
+        assert!(mcv_min_entropy(&konst) <= 0.0 + 1e-12);
+        // fair random bits: high min-entropy, near-zero correlation
+        let fair = prng_bits(65_536, 3);
+        assert!(mcv_min_entropy(&fair) > 0.95);
+        assert!(lag1_correlation(&fair).abs() < 0.05);
+        // degenerate inputs are total, not panics
+        assert_eq!(mcv_min_entropy(&[]), 0.0);
+        assert_eq!(lag1_correlation(&[]), 1.0);
+        assert_eq!(lag1_correlation(&[1]), 1.0);
+    }
+
+    #[test]
+    fn sanitize_clamps_hostile_configs() {
+        let c = HealthConfig {
+            enabled: true,
+            window_bits: 0,
+            duty: f64::NAN,
+            ewma_alpha: -3.0,
+            fail_threshold: 7.0,
+            fail_consecutive: 0,
+            min_entropy_floor: 55.0,
+            serial_corr_cap: -1.0,
+        }
+        .sanitized();
+        assert_eq!(c.window_bits, 256);
+        assert!(c.duty > 0.0 && c.duty <= 1.0);
+        assert!(c.ewma_alpha >= 0.01 && c.ewma_alpha <= 1.0);
+        assert!((0.0..=1.0).contains(&c.fail_threshold));
+        assert_eq!(c.fail_consecutive, 1);
+        assert!((0.0..=1.0).contains(&c.min_entropy_floor));
+        assert!((0.0..=1.0).contains(&c.serial_corr_cap));
+    }
+}

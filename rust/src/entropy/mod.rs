@@ -21,16 +21,21 @@
 //!   this battery), runnable over any bit stream,
 //! * [`pipeline`] — the decoupled entropy pipeline: free-running producer
 //!   threads filling SPSC block rings (the paper's source/detector split),
-//!   with a bitwise-equivalent synchronous fallback.
+//!   with a bitwise-equivalent synchronous fallback,
+//! * [`health`] — the online entropy-health monitor: duty-cycled taps on
+//!   producer blocks feed the hardened NIST battery plus min-entropy and
+//!   serial-correlation estimators into per-(shard, stream) scorecards.
 
 pub mod chaotic;
 pub mod gamma;
 pub mod gaussian;
+pub mod health;
 pub mod nist;
 pub mod pipeline;
 pub mod xoshiro;
 
 pub use chaotic::ChaoticLightSource;
+pub use health::{HealthConfig, HealthEvent, Monitor, Scorecard};
 pub use pipeline::{PipelineOptions, PrefetchMode};
 pub use xoshiro::Xoshiro256pp;
 

@@ -14,6 +14,14 @@
 //!
 //! Each test returns a p-value; a stream passes at significance
 //! `alpha = 0.01` (the SP800-22 default).
+//!
+//! Every test is total over arbitrary input: streams too short for a test
+//! yield a typed [`NistError`] instead of a panic, so the online entropy
+//! health monitor ([`crate::entropy::health`]) can feed production tap
+//! windows through the battery unconditionally.  [`run_battery`] runs the
+//! applicable subset and records the skipped tests with their reasons.
+
+use std::fmt;
 
 use crate::util::fft::real_fft_magnitudes;
 use crate::util::mathstat::{erfc, igamc};
@@ -26,6 +34,32 @@ pub struct TestResult {
     pub pass: bool,
 }
 
+/// Why a test could not be applied to a stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NistError {
+    /// The stream is empty.
+    Empty { test: &'static str },
+    /// The stream is shorter than the test's minimum input length (bits).
+    TooShort {
+        test: &'static str,
+        needed: usize,
+        got: usize,
+    },
+}
+
+impl fmt::Display for NistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NistError::Empty { test } => write!(f, "{test}: empty bit stream"),
+            NistError::TooShort { test, needed, got } => {
+                write!(f, "{test}: needs >= {needed} bits, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NistError {}
+
 pub const ALPHA: f64 = 0.01;
 
 fn result(name: &'static str, p: f64) -> TestResult {
@@ -36,18 +70,36 @@ fn result(name: &'static str, p: f64) -> TestResult {
     }
 }
 
+/// Applicability guard shared by the tests: empty and too-short streams
+/// become typed errors instead of NaN p-values or panics.
+fn require(test: &'static str, bits: &[u8], needed: usize) -> Result<(), NistError> {
+    if bits.is_empty() {
+        Err(NistError::Empty { test })
+    } else if bits.len() < needed {
+        Err(NistError::TooShort {
+            test,
+            needed,
+            got: bits.len(),
+        })
+    } else {
+        Ok(())
+    }
+}
+
 /// 2.1 Frequency (monobit) test.
-pub fn frequency(bits: &[u8]) -> TestResult {
+pub fn frequency(bits: &[u8]) -> Result<TestResult, NistError> {
+    require("frequency", bits, 1)?;
     let n = bits.len() as f64;
     let s: i64 = bits.iter().map(|&b| if b == 1 { 1i64 } else { -1 }).sum();
     let s_obs = (s as f64).abs() / n.sqrt();
-    result("frequency", erfc(s_obs / std::f64::consts::SQRT_2))
+    Ok(result("frequency", erfc(s_obs / std::f64::consts::SQRT_2)))
 }
 
-/// 2.2 Block frequency test with block size `m`.
-pub fn block_frequency(bits: &[u8], m: usize) -> TestResult {
+/// 2.2 Block frequency test with block size `m` (clamped to >= 1).
+pub fn block_frequency(bits: &[u8], m: usize) -> Result<TestResult, NistError> {
+    let m = m.max(1);
+    require("block_frequency", bits, m)?;
     let nblocks = bits.len() / m;
-    assert!(nblocks > 0, "stream shorter than one block");
     let mut chi2 = 0.0;
     for b in 0..nblocks {
         let ones = bits[b * m..(b + 1) * m].iter().map(|&x| x as usize).sum::<usize>();
@@ -55,19 +107,20 @@ pub fn block_frequency(bits: &[u8], m: usize) -> TestResult {
         chi2 += (pi - 0.5) * (pi - 0.5);
     }
     chi2 *= 4.0 * m as f64;
-    result(
+    Ok(result(
         "block_frequency",
         igamc(nblocks as f64 / 2.0, chi2 / 2.0),
-    )
+    ))
 }
 
 /// 2.3 Runs test.
-pub fn runs(bits: &[u8]) -> TestResult {
+pub fn runs(bits: &[u8]) -> Result<TestResult, NistError> {
+    require("runs", bits, 2)?;
     let n = bits.len() as f64;
     let pi = bits.iter().map(|&b| b as f64).sum::<f64>() / n;
     // prerequisite: frequency test must be applicable
     if (pi - 0.5).abs() >= 2.0 / n.sqrt() {
-        return result("runs", 0.0);
+        return Ok(result("runs", 0.0));
     }
     let mut v = 1u64;
     for w in bits.windows(2) {
@@ -77,16 +130,16 @@ pub fn runs(bits: &[u8]) -> TestResult {
     }
     let num = (v as f64 - 2.0 * n * pi * (1.0 - pi)).abs();
     let den = 2.0 * (2.0 * n).sqrt() * pi * (1.0 - pi);
-    result("runs", erfc(num / den))
+    Ok(result("runs", erfc(num / den)))
 }
 
 /// 2.4 Longest run of ones in 8-bit blocks (n >= 128 variant).
-pub fn longest_run(bits: &[u8]) -> TestResult {
+pub fn longest_run(bits: &[u8]) -> Result<TestResult, NistError> {
     // SP800-22 Table 2-4 for M = 8: categories <=1, 2, 3, >=4
     const PI: [f64; 4] = [0.2148, 0.3672, 0.2305, 0.1875];
     let m = 8;
+    require("longest_run", bits, 16 * m)?;
     let nblocks = bits.len() / m;
-    assert!(nblocks >= 16, "need >= 128 bits");
     let mut counts = [0f64; 4];
     for b in 0..nblocks {
         let mut longest = 0usize;
@@ -114,11 +167,17 @@ pub fn longest_run(bits: &[u8]) -> TestResult {
             (counts[i] - e) * (counts[i] - e) / e
         })
         .sum();
-    result("longest_run", igamc(1.5, chi2 / 2.0))
+    Ok(result("longest_run", igamc(1.5, chi2 / 2.0)))
 }
 
 /// 2.13 Cumulative sums test (mode 0 = forward, 1 = backward).
-pub fn cusum(bits: &[u8], backward: bool) -> TestResult {
+///
+/// Degenerate streams (`z_max == 0`, i.e. empty input — every bit moves the
+/// walk by ±1, so any non-empty stream has `z_max >= 1`) return p = 0.0
+/// (fail) instead of driving `n / z` to infinity: the saturated `as i64`
+/// casts used to turn the series bounds into an astronomically long loop.
+pub fn cusum(bits: &[u8], backward: bool) -> Result<TestResult, NistError> {
+    let name = if backward { "cusum_backward" } else { "cusum_forward" };
     let n = bits.len();
     let mut z_max = 0i64;
     let mut s = 0i64;
@@ -130,6 +189,9 @@ pub fn cusum(bits: &[u8], backward: bool) -> TestResult {
     for &b in iter {
         s += if b == 1 { 1 } else { -1 };
         z_max = z_max.max(s.abs());
+    }
+    if z_max == 0 {
+        return Ok(result(name, 0.0));
     }
     let z = z_max as f64;
     let nf = n as f64;
@@ -148,10 +210,7 @@ pub fn cusum(bits: &[u8], backward: bool) -> TestResult {
         let kf = k as f64;
         sum2 += phi((4.0 * kf + 3.0) * z / sqrt_n) - phi((4.0 * kf + 1.0) * z / sqrt_n);
     }
-    result(
-        if backward { "cusum_backward" } else { "cusum_forward" },
-        (1.0 - sum1 + sum2).clamp(0.0, 1.0),
-    )
+    Ok(result(name, (1.0 - sum1 + sum2).clamp(0.0, 1.0)))
 }
 
 fn phi_m(bits: &[u8], m: usize) -> f64 {
@@ -182,15 +241,17 @@ fn phi_m(bits: &[u8], m: usize) -> f64 {
         .sum()
 }
 
-/// 2.12 Approximate entropy test with template length `m`.
-pub fn approximate_entropy(bits: &[u8], m: usize) -> TestResult {
+/// 2.12 Approximate entropy test with template length `m` (clamped >= 1).
+pub fn approximate_entropy(bits: &[u8], m: usize) -> Result<TestResult, NistError> {
+    require("approx_entropy", bits, 1)?;
+    let m = m.max(1);
     let n = bits.len() as f64;
     let ap_en = phi_m(bits, m) - phi_m(bits, m + 1);
     let chi2 = 2.0 * n * (std::f64::consts::LN_2 - ap_en);
-    result(
+    Ok(result(
         "approx_entropy",
         igamc((1 << (m - 1)) as f64, chi2 / 2.0),
-    )
+    ))
 }
 
 fn psi2(bits: &[u8], m: usize) -> f64 {
@@ -213,14 +274,17 @@ fn psi2(bits: &[u8], m: usize) -> f64 {
     counts.iter().map(|&c| (c as f64) * (c as f64)).sum::<f64>() * (1 << m) as f64 / nf - nf
 }
 
-/// 2.11 Serial test with template length `m`; returns both p-values.
-pub fn serial(bits: &[u8], m: usize) -> (TestResult, TestResult) {
+/// 2.11 Serial test with template length `m` (clamped >= 2); returns both
+/// p-values.
+pub fn serial(bits: &[u8], m: usize) -> Result<(TestResult, TestResult), NistError> {
+    require("serial", bits, 1)?;
+    let m = m.max(2);
     let d1 = psi2(bits, m) - psi2(bits, m - 1);
-    let d2 = psi2(bits, m) - 2.0 * psi2(bits, m - 1) + psi2(bits, m.saturating_sub(2));
-    (
+    let d2 = psi2(bits, m) - 2.0 * psi2(bits, m - 1) + psi2(bits, m - 2);
+    Ok((
         result("serial_p1", igamc((1 << (m - 2)) as f64, d1 / 2.0)),
-        result("serial_p2", igamc((1 << (m - 3)).max(1) as f64, d2 / 2.0)),
-    )
+        result("serial_p2", igamc((1usize << (m.saturating_sub(3))).max(1) as f64, d2 / 2.0)),
+    ))
 }
 
 /// 2.6 Discrete Fourier Transform (spectral) test.
@@ -228,7 +292,10 @@ pub fn serial(bits: &[u8], m: usize) -> (TestResult, TestResult) {
 /// Detects periodic features: converts bits to ±1, takes the FFT magnitude
 /// of the first half-spectrum, and compares the count of peaks below the
 /// 95 % threshold `T = sqrt(ln(1/0.05) * n)` with its expectation `0.95 n/2`.
-pub fn spectral(bits: &[u8]) -> TestResult {
+pub fn spectral(bits: &[u8]) -> Result<TestResult, NistError> {
+    // empty input would shift-underflow the power-of-two truncation below
+    // (usize::BITS - 1 - leading_zeros with len == 0)
+    require("spectral", bits, 1)?;
     // truncate to a power of two (the reference implementation pads/truncs)
     let n = 1usize << (usize::BITS - 1 - bits.len().leading_zeros());
     let signal: Vec<f64> = bits[..n]
@@ -240,7 +307,7 @@ pub fn spectral(bits: &[u8]) -> TestResult {
     let n0 = 0.95 * n as f64 / 2.0;
     let n1 = mags.iter().filter(|&&m| m < t).count() as f64;
     let d = (n1 - n0) / (n as f64 * 0.95 * 0.05 / 4.0).sqrt();
-    result("spectral", erfc(d.abs() / std::f64::consts::SQRT_2))
+    Ok(result("spectral", erfc(d.abs() / std::f64::consts::SQRT_2)))
 }
 
 /// Rank of a 32x32 binary matrix over GF(2), rows as u32 bitmasks.
@@ -269,13 +336,13 @@ fn gf2_rank32(rows: &mut [u32; 32]) -> usize {
 ///
 /// Random binary matrices have full rank with p ≈ 0.2888, rank 31 with
 /// p ≈ 0.5776, lower with p ≈ 0.1336; structure in the stream skews this.
-pub fn matrix_rank(bits: &[u8]) -> TestResult {
+pub fn matrix_rank(bits: &[u8]) -> Result<TestResult, NistError> {
     const P_FULL: f64 = 0.2888;
     const P_M1: f64 = 0.5776;
     const P_LO: f64 = 0.1336;
     let per_matrix = 32 * 32;
+    require("matrix_rank", bits, 4 * per_matrix)?;
     let n_mat = bits.len() / per_matrix;
-    assert!(n_mat >= 4, "need >= 4096 bits");
     let mut counts = [0f64; 3]; // full, full-1, lower
     for m in 0..n_mat {
         let chunk = &bits[m * per_matrix..(m + 1) * per_matrix];
@@ -298,27 +365,53 @@ pub fn matrix_rank(bits: &[u8]) -> TestResult {
         .zip(&expect)
         .map(|(c, e)| (c - e) * (c - e) / e)
         .sum();
-    result("matrix_rank", igamc(1.0, chi2 / 2.0))
+    Ok(result("matrix_rank", igamc(1.0, chi2 / 2.0)))
 }
 
-/// Run the whole battery with SP800-22 default parameters.
-pub fn run_battery(bits: &[u8]) -> Vec<TestResult> {
-    let mut out = vec![
-        frequency(bits),
-        block_frequency(bits, 128),
-        runs(bits),
-        longest_run(bits),
-        cusum(bits, false),
-        cusum(bits, true),
-        approximate_entropy(bits, 8),
-        spectral(bits),
-    ];
-    if bits.len() >= 4 * 1024 {
-        out.push(matrix_rank(bits));
+/// Outcome of a full battery run: the tests that applied (with their
+/// p-values) and the tests skipped as inapplicable to this stream.
+#[derive(Debug, Clone, Default)]
+pub struct BatteryRun {
+    pub results: Vec<TestResult>,
+    pub skipped: Vec<NistError>,
+}
+
+impl BatteryRun {
+    /// True when at least one test ran and every test that ran passed.
+    pub fn all_pass(&self) -> bool {
+        !self.results.is_empty() && self.results.iter().all(|r| r.pass)
     }
-    let (s1, s2) = serial(bits, 8);
-    out.push(s1);
-    out.push(s2);
+
+    fn push(&mut self, r: Result<TestResult, NistError>) {
+        match r {
+            Ok(t) => self.results.push(t),
+            Err(e) => self.skipped.push(e),
+        }
+    }
+}
+
+/// Run the whole battery with SP800-22 default parameters.  Tests whose
+/// minimum input length exceeds the stream are skipped — recorded with
+/// their reasons in [`BatteryRun::skipped`] — instead of panicking, so the
+/// battery is safe to run on production tap windows of any size.
+pub fn run_battery(bits: &[u8]) -> BatteryRun {
+    let mut out = BatteryRun::default();
+    out.push(frequency(bits));
+    out.push(block_frequency(bits, 128));
+    out.push(runs(bits));
+    out.push(longest_run(bits));
+    out.push(cusum(bits, false));
+    out.push(cusum(bits, true));
+    out.push(approximate_entropy(bits, 8));
+    out.push(spectral(bits));
+    out.push(matrix_rank(bits));
+    match serial(bits, 8) {
+        Ok((s1, s2)) => {
+            out.results.push(s1);
+            out.results.push(s2);
+        }
+        Err(e) => out.skipped.push(e),
+    }
     out
 }
 
@@ -340,54 +433,72 @@ mod tests {
         bits
     }
 
-    #[test]
-    fn sp800_22_example_frequency() {
-        // SP800-22 §2.1.8 worked example: epsilon = 1100100100001111110110101010001000
-        // gives P-value = 0.109599 (n = 100 example uses different data; this
-        // is the n = 10 example extended; use the documented 100-bit example).
-        let eps = "11001001000011111101101010100010001000010110100011\
-                   00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps
-            .chars()
+    fn bitstring(s: &str) -> Vec<u8> {
+        s.chars()
             .filter(|c| !c.is_whitespace())
             .map(|c| c as u8 - b'0')
-            .collect();
-        let r = frequency(&bits);
+            .collect()
+    }
+
+    // SP800-22 §2.1.8 / §2.3.8 / §2.13.8 worked example: the 100-bit
+    // binary expansion used throughout the document's small examples.
+    const EPS_100: &str = "11001001000011111101101010100010001000010110100011\
+                           00001000110100110001001100011001100010100010111000";
+
+    #[test]
+    fn sp800_22_example_frequency() {
+        // §2.1.8 worked example: P-value = 0.109599
+        let r = frequency(&bitstring(EPS_100)).unwrap();
         assert!((r.p_value - 0.109599).abs() < 1e-4, "p {}", r.p_value);
     }
 
     #[test]
     fn sp800_22_example_runs() {
-        // §2.3.8 example: 100-bit pi expansion, P-value = 0.500798
-        let eps = "11001001000011111101101010100010001000010110100011\
-                   00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps
-            .chars()
-            .filter(|c| !c.is_whitespace())
-            .map(|c| c as u8 - b'0')
-            .collect();
-        let r = runs(&bits);
+        // §2.3.8 example: P-value = 0.500798
+        let r = runs(&bitstring(EPS_100)).unwrap();
         assert!((r.p_value - 0.500798).abs() < 1e-4, "p {}", r.p_value);
     }
 
     #[test]
     fn sp800_22_example_cusum() {
-        // §2.13.8 example: same 100-bit stream, forward P-value = 0.219194
-        let eps = "11001001000011111101101010100010001000010110100011\
-                   00001000110100110001001100011001100010100010111000";
-        let bits: Vec<u8> = eps
-            .chars()
-            .filter(|c| !c.is_whitespace())
-            .map(|c| c as u8 - b'0')
-            .collect();
-        let r = cusum(&bits, false);
+        // §2.13.8 example: forward P-value = 0.219194
+        let r = cusum(&bitstring(EPS_100), false).unwrap();
         assert!((r.p_value - 0.219194).abs() < 1e-3, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn sp800_22_example_longest_run() {
+        // §2.4.8 example: 128-bit stream, M = 8 blocks give category counts
+        // ν = [4, 9, 3, 0] and P-value = 0.180609
+        let eps = "11001100000101010110110001001100111000000000001001\
+                   00110101010001000100111101011010000000110101111100\
+                   1100111001101101100010110010";
+        let r = longest_run(&bitstring(eps)).unwrap();
+        assert!((r.p_value - 0.180609).abs() < 1e-3, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn sp800_22_example_approximate_entropy() {
+        // §2.12.4 example: ε = 0100110101, m = 3, P-value = 0.261961
+        let r = approximate_entropy(&bitstring("0100110101"), 3).unwrap();
+        assert!((r.p_value - 0.261961).abs() < 1e-3, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn sp800_22_example_serial() {
+        // §2.11.4 example: ε = 0011011101, m = 3 → ψ²₃ = 2.8, ψ²₂ = 1.2,
+        // P-value1 = 0.808792, P-value2 = 0.670320
+        let (s1, s2) = serial(&bitstring("0011011101"), 3).unwrap();
+        assert!((s1.p_value - 0.808792).abs() < 1e-3, "p1 {}", s1.p_value);
+        assert!((s2.p_value - 0.670320).abs() < 1e-3, "p2 {}", s2.p_value);
     }
 
     #[test]
     fn good_prng_passes_battery() {
         let bits = prng_bits(100_000, 42);
-        for r in run_battery(&bits) {
+        let run = run_battery(&bits);
+        assert!(run.skipped.is_empty(), "{:?}", run.skipped);
+        for r in &run.results {
             assert!(r.pass, "{} failed: p = {}", r.name, r.p_value);
         }
     }
@@ -397,7 +508,9 @@ mod tests {
         // the paper's claim, checked against the simulated ASE source
         let mut src = ChaoticLightSource::with_defaults(2024);
         let bits = src.extract_bits(100.0, 100_000);
-        for r in run_battery(&bits) {
+        let run = run_battery(&bits);
+        assert!(run.all_pass());
+        for r in &run.results {
             assert!(r.pass, "{} failed: p = {}", r.name, r.p_value);
         }
     }
@@ -405,16 +518,17 @@ mod tests {
     #[test]
     fn spectral_passes_prng_fails_periodic() {
         let bits = prng_bits(65_536, 21);
-        assert!(spectral(&bits).pass, "p = {}", spectral(&bits).p_value);
+        let r = spectral(&bits).unwrap();
+        assert!(r.pass, "p = {}", r.p_value);
         // strong periodic component
         let periodic: Vec<u8> = (0..65_536).map(|i| ((i / 4) % 2) as u8).collect();
-        assert!(!spectral(&periodic).pass);
+        assert!(!spectral(&periodic).unwrap().pass);
     }
 
     #[test]
     fn matrix_rank_passes_prng_fails_lowrank() {
         let bits = prng_bits(64 * 1024, 22);
-        let r = matrix_rank(&bits);
+        let r = matrix_rank(&bits).unwrap();
         assert!(r.pass, "p = {}", r.p_value);
         // rank-1 matrices: every row identical
         let mut low = Vec::with_capacity(64 * 1024);
@@ -425,7 +539,7 @@ mod tests {
                 low.extend_from_slice(&row);
             }
         }
-        assert!(!matrix_rank(&low).pass);
+        assert!(!matrix_rank(&low).unwrap().pass);
     }
 
     #[test]
@@ -447,14 +561,13 @@ mod tests {
     #[test]
     fn constant_stream_fails() {
         let bits = vec![1u8; 10_000];
-        let r = frequency(&bits);
-        assert!(!r.pass);
+        assert!(!frequency(&bits).unwrap().pass);
     }
 
     #[test]
     fn alternating_stream_fails_runs() {
         let bits: Vec<u8> = (0..10_000).map(|i| (i % 2) as u8).collect();
-        let r = runs(&bits);
+        let r = runs(&bits).unwrap();
         assert!(!r.pass, "p = {}", r.p_value);
     }
 
@@ -465,7 +578,7 @@ mod tests {
         let bits: Vec<u8> = (0..100_000)
             .map(|_| u8::from(rng.next_f64() < 0.6))
             .collect();
-        assert!(!frequency(&bits).pass);
+        assert!(!frequency(&bits).unwrap().pass);
     }
 
     #[test]
@@ -483,6 +596,79 @@ mod tests {
             })
             .collect();
         let battery = run_battery(&bits);
-        assert!(battery.iter().any(|r| !r.pass));
+        assert!(battery.results.iter().any(|r| !r.pass));
+    }
+
+    #[test]
+    fn short_and_empty_streams_are_typed_errors_not_panics() {
+        assert_eq!(
+            frequency(&[]).unwrap_err(),
+            NistError::Empty { test: "frequency" }
+        );
+        assert!(matches!(
+            block_frequency(&[1, 0, 1], 128),
+            Err(NistError::TooShort {
+                needed: 128,
+                got: 3,
+                ..
+            })
+        ));
+        assert!(matches!(
+            longest_run(&[1; 64]),
+            Err(NistError::TooShort { needed: 128, .. })
+        ));
+        assert!(matches!(
+            matrix_rank(&[0; 1024]),
+            Err(NistError::TooShort { needed: 4096, .. })
+        ));
+        assert!(matches!(spectral(&[]), Err(NistError::Empty { .. })));
+        assert!(matches!(
+            approximate_entropy(&[], 8),
+            Err(NistError::Empty { .. })
+        ));
+        assert!(matches!(serial(&[], 8), Err(NistError::Empty { .. })));
+        // errors render readably for logs and /info
+        let msg = NistError::TooShort {
+            test: "longest_run",
+            needed: 128,
+            got: 64,
+        }
+        .to_string();
+        assert!(msg.contains("longest_run") && msg.contains("128"), "{msg}");
+    }
+
+    #[test]
+    fn battery_on_short_stream_skips_and_reports() {
+        // 8 bits: frequency/runs/cusum/apen/spectral/serial apply; the
+        // block tests do not — they are reported, not panicked on
+        let run = run_battery(&[1, 0, 1, 1, 0, 0, 1, 0]);
+        assert!(!run.results.is_empty());
+        assert!(run
+            .skipped
+            .iter()
+            .any(|e| matches!(e, NistError::TooShort { test: "longest_run", .. })));
+        assert!(run
+            .skipped
+            .iter()
+            .any(|e| matches!(e, NistError::TooShort { test: "matrix_rank", .. })));
+        // the empty stream runs nothing but still reports every skip
+        let empty = run_battery(&[]);
+        assert!(!empty.all_pass());
+        assert!(empty.results.iter().all(|r| !r.pass), "only degenerate cusum rows");
+        assert!(!empty.skipped.is_empty());
+    }
+
+    #[test]
+    fn cusum_degenerate_stream_fails_promptly() {
+        // z_max == 0 (empty stream) used to drive n/z to infinity; the
+        // saturated i64 series bounds then spun for ~2^62 iterations.
+        // Degenerate streams now fail immediately with p = 0.
+        for backward in [false, true] {
+            let r = cusum(&[], backward).unwrap();
+            assert_eq!(r.p_value, 0.0);
+            assert!(!r.pass);
+        }
+        // non-degenerate path still matches the reference example
+        assert!(cusum(&bitstring(EPS_100), true).unwrap().p_value > 0.0);
     }
 }

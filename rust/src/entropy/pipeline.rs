@@ -41,6 +41,7 @@ use anyhow::{anyhow, Result};
 
 use super::chaotic::fill_realized_weights;
 use super::gaussian::Gaussian;
+use super::health::{BlockTap, Monitor};
 use super::xoshiro::{splitmix64, Xoshiro256pp};
 use crate::exec::ring::{self, Consumer, Producer, PushError};
 use crate::exec::CancelToken;
@@ -261,6 +262,9 @@ struct StreamSlot<G> {
     pending: Option<Block>,
     /// Consumer disconnected — stop producing for this stream.
     done: bool,
+    /// Optional health-monitor tap: observes (copies) produced blocks at a
+    /// duty cycle, on the producer thread — off the consuming hot path.
+    tap: Option<BlockTap>,
 }
 
 /// The free-running group producer: round-robin over the group's streams,
@@ -293,6 +297,11 @@ fn group_producer_loop<G: BlockGen>(
                 block.resize(block_len, 0.0);
                 slot.gen.fill(&mut block);
                 produced.fetch_add(block_len as u64, Ordering::Relaxed);
+                if let Some(tap) = slot.tap.as_mut() {
+                    // copy-only observation: the block's draws are already
+                    // committed to the stream sequence above
+                    tap.observe(&block);
+                }
                 slot.pending = Some(block);
             }
             if let Some(b) = slot.pending.take() {
@@ -319,7 +328,7 @@ fn group_producer_loop<G: BlockGen>(
 /// module docs).  `fill` hands out the next `out.len()` draws of the
 /// stream; the draw sequence is identical whichever engine runs it.
 pub enum EntropyStream<G: BlockGen> {
-    Sync(G),
+    Sync(G, Option<BlockTap>),
     Piped(Piped),
 }
 
@@ -329,7 +338,22 @@ impl<G: BlockGen> EntropyStream<G> {
     /// accumulates producer-side draw counts (pipeline telemetry; shared
     /// across the streams of one backend).
     pub fn new(gen: G, opts: &PipelineOptions, label: &str, produced: Arc<AtomicU64>) -> Self {
-        spawn_group(vec![gen], opts, label, produced)
+        Self::new_monitored(gen, opts, label, produced, None)
+    }
+
+    /// [`EntropyStream::new`] with an optional health-monitor tap
+    /// `(monitor, shard)`: produced blocks are observed (by copy) under the
+    /// stream's label — on the producer thread for `On`, at `fill` time for
+    /// `Off`/`Sync`.  The tap never advances generator state, so monitored
+    /// and unmonitored streams deliver bitwise-identical draws.
+    pub fn new_monitored(
+        gen: G,
+        opts: &PipelineOptions,
+        label: &str,
+        produced: Arc<AtomicU64>,
+        monitor: Option<(Arc<Monitor>, usize)>,
+    ) -> Self {
+        spawn_group_monitored(vec![gen], opts, label, produced, monitor)
             .pop()
             .expect("one generator in, one stream out")
     }
@@ -337,7 +361,12 @@ impl<G: BlockGen> EntropyStream<G> {
     /// The next `out.len()` draws of the stream, in draw order.
     pub fn fill(&mut self, out: &mut [f64]) {
         match self {
-            EntropyStream::Sync(gen) => gen.fill(out),
+            EntropyStream::Sync(gen, tap) => {
+                gen.fill(out);
+                if let Some(t) = tap.as_mut() {
+                    t.observe(out);
+                }
+            }
             EntropyStream::Piped(p) => p.fill(out),
         }
     }
@@ -357,8 +386,30 @@ pub fn spawn_group<G: BlockGen>(
     label: &str,
     produced: Arc<AtomicU64>,
 ) -> Vec<EntropyStream<G>> {
+    spawn_group_monitored(gens, opts, label, produced, None)
+}
+
+/// [`spawn_group`] with an optional health-monitor tap `(monitor, shard)`.
+/// Every stream of the group reports under the group's label, so a photonic
+/// shard's whole (kernel × tap) bank rolls up into one `(shard, label)`
+/// scorecard — the granularity `/info` exposes.
+pub fn spawn_group_monitored<G: BlockGen>(
+    gens: Vec<G>,
+    opts: &PipelineOptions,
+    label: &str,
+    produced: Arc<AtomicU64>,
+    monitor: Option<(Arc<Monitor>, usize)>,
+) -> Vec<EntropyStream<G>> {
+    let mk_tap = || {
+        monitor
+            .as_ref()
+            .map(|(m, shard)| BlockTap::new(m.clone(), *shard, label))
+    };
     if opts.mode != PrefetchMode::On {
-        return gens.into_iter().map(EntropyStream::Sync).collect();
+        return gens
+            .into_iter()
+            .map(|g| EntropyStream::Sync(g, mk_tap()))
+            .collect();
     }
     let opts = opts.sanitized();
     let cancel = CancelToken::new();
@@ -373,6 +424,7 @@ pub fn spawn_group<G: BlockGen>(
             recycle: recycle_rx,
             pending: None,
             done: false,
+            tap: mk_tap(),
         });
         consumers.push((rx, recycle_tx));
     }
@@ -519,6 +571,43 @@ mod tests {
                 Arc::new(AtomicU64::new(0)),
             );
             drop(s);
+        }
+    }
+
+    #[test]
+    fn monitored_streams_match_unmonitored_bitwise_in_both_engines() {
+        use super::super::health::{HealthConfig, Monitor};
+        let hcfg = HealthConfig {
+            enabled: true,
+            window_bits: 256,
+            duty: 1.0,
+            ..HealthConfig::default()
+        };
+        for mode in [PrefetchMode::Sync, PrefetchMode::On] {
+            let monitor = Arc::new(Monitor::new(hcfg));
+            let mut tapped = EntropyStream::new_monitored(
+                NormalGen::new(Xoshiro256pp::new(77)),
+                &opts(mode, 128, 3),
+                "mon-test",
+                Arc::new(AtomicU64::new(0)),
+                Some((monitor.clone(), 0)),
+            );
+            let mut plain = EntropyStream::new(
+                NormalGen::new(Xoshiro256pp::new(77)),
+                &opts(mode, 128, 3),
+                "plain",
+                Arc::new(AtomicU64::new(0)),
+            );
+            let mut a = vec![0.0f64; 1024];
+            let mut b = vec![0.0f64; 1024];
+            tapped.fill(&mut a);
+            plain.fill(&mut b);
+            assert_eq!(a, b, "tap changed draws in {mode}");
+            // the tap did see blocks (On observes on the producer thread,
+            // which may still be running — drop first to join it)
+            drop(tapped);
+            assert!(monitor.observed_blocks() >= 1, "{mode}");
+            assert!(!monitor.any_degraded(), "healthy normals flagged ({mode})");
         }
     }
 

@@ -26,7 +26,7 @@ use photonic_bayes::coordinator::{
     SamplerConfig, StopRule,
 };
 use photonic_bayes::data::{Dataset, DatasetKind};
-use photonic_bayes::entropy::{nist, ChaoticLightSource};
+use photonic_bayes::entropy::{nist, ChaoticLightSource, HealthConfig};
 use photonic_bayes::exec::CancelToken;
 use photonic_bayes::experiments::uncertainty::{accuracy_vs_samples, build_report, eval_split};
 use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
@@ -90,14 +90,20 @@ USAGE: pbm <subcommand> [flags]
             --backend B --mode M --samples N --mi-threshold F
             --max-batch N --max-wait-ms N --threads N
             --entropy-prefetch off|sync|on --entropy-block N
-            --adaptive --min-samples N --max-samples N --target-confidence F]
+            --adaptive --min-samples N --max-samples N --target-confidence F
+            --health --health-window BITS --health-duty F
+            --entropy-fallback digital|none]
             (--threads: sampling workers per engine; 1 = sequential,
              0 = one per core; --entropy-prefetch on: background entropy
              producers feed the sampling hot path via lock-free block
              rings; results are deterministic per (seed, threads, prefetch);
              --adaptive: sequential sampling with early stopping — see the
              [sampler] config table; clients may send per-request
-             max_samples / target_confidence fields)
+             max_samples / target_confidence fields;
+             --health: online entropy-health monitor — NIST battery +
+             min-entropy over tapped producer blocks, scorecards on /info;
+             --entropy-fallback digital: swap degraded photonic sampling
+             to the digital baseline; see the [health] config table)
   classify  [--addr HOST:PORT --dataset D --split S --index I
             --max-samples N --target-confidence F]
             [--local --backend B --threads N --adaptive]  (in-process)
@@ -195,6 +201,47 @@ fn parse_sampler(args: &Args, file: &Config) -> Result<SamplerConfig> {
     Ok(cfg)
 }
 
+/// Assemble the entropy-health monitor configuration from `--health*`
+/// flags layered over an optional `[health]` config-file table.  Knobs are
+/// range-clamped by `HealthConfig::sanitized`, so a typo'd duty cycle
+/// degrades to the nearest sane value instead of wedging the monitor.
+fn parse_health(args: &Args, file: &Config) -> Result<HealthConfig> {
+    let d = HealthConfig::default();
+    Ok(HealthConfig {
+        enabled: args.has("health") || file.get_bool("health", "enabled", d.enabled)?,
+        window_bits: args
+            .get_usize("health-window", file.get_usize("health", "window_bits", d.window_bits)?)?,
+        duty: args.get_f64("health-duty", file.get_f64("health", "duty", d.duty)?)?,
+        ewma_alpha: file.get_f64("health", "ewma_alpha", d.ewma_alpha)?,
+        fail_threshold: file.get_f64("health", "fail_threshold", d.fail_threshold)?,
+        fail_consecutive: file.get_usize(
+            "health",
+            "fail_consecutive",
+            d.fail_consecutive as usize,
+        )? as u32,
+        min_entropy_floor: file.get_f64("health", "min_entropy_floor", d.min_entropy_floor)?,
+        serial_corr_cap: file.get_f64("health", "serial_corr_cap", d.serial_corr_cap)?,
+    }
+    .sanitized())
+}
+
+/// Resolve the opt-in automatic backend fallback (`--entropy-fallback` /
+/// `[engine] entropy_fallback`).  `none` (or absent) disables it; any
+/// backend name the `--backend` flag accepts is a valid target, though
+/// `digital` is the intended one.
+fn parse_entropy_fallback(args: &Args, file: &Config) -> Result<Option<BackendKind>> {
+    let raw = args
+        .get("entropy-fallback")
+        .map(str::to_string)
+        .or_else(|| file.get("engine", "entropy_fallback").map(str::to_string));
+    match raw.as_deref() {
+        None | Some("") | Some("none") | Some("off") => Ok(None),
+        Some(s) => Ok(Some(
+            BackendKind::parse(s).map_err(|e| anyhow!("entropy-fallback: {e}"))?,
+        )),
+    }
+}
+
 fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
     let root = artifacts_root();
     let arts = ModelArtifacts::load_dataset(&root, dataset)?;
@@ -224,6 +271,9 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
         entropy_block: args.get_usize("entropy-block", 4096)?,
         sampler: parse_sampler(args, &Config::default())?,
         seed: args.get_u64("seed", 42)?,
+        health: parse_health(args, &Config::default())?,
+        entropy_fallback: parse_entropy_fallback(args, &Config::default())?,
+        health_monitor: None,
     };
     Engine::new(arts, params, cfg)
 }
@@ -510,19 +560,21 @@ fn cmd_nist(args: &Args) -> Result<()> {
     let mut src = ChaoticLightSource::with_defaults(args.get_u64("seed", 2024)?);
     println!("NIST SP800-22 battery over {bits} bits from the chaotic source (B = {bw} GHz):");
     let stream = src.extract_bits(bw, bits);
-    let mut all_pass = true;
-    for r in nist::run_battery(&stream) {
+    let run = nist::run_battery(&stream);
+    for r in &run.results {
         println!(
             "  {:<18} p = {:.4}  {}",
             r.name,
             r.p_value,
             if r.pass { "PASS" } else { "FAIL" }
         );
-        all_pass &= r.pass;
+    }
+    for e in &run.skipped {
+        println!("  SKIP  {e}");
     }
     println!(
         "overall: {}",
-        if all_pass { "PASS (alpha = 0.01)" } else { "FAIL" }
+        if run.all_pass() { "PASS (alpha = 0.01)" } else { "FAIL" }
     );
     Ok(())
 }
@@ -571,6 +623,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .get_usize("entropy-block", file.get_usize("engine", "entropy_block", 4096)?)?,
             sampler: parse_sampler(args, &file)?,
             seed: args.get_u64("seed", 42)?,
+            health: parse_health(args, &file)?,
+            entropy_fallback: parse_entropy_fallback(args, &file)?,
+            // created per-dataset by EngineHandle::spawn so /info can read
+            // scorecards without an engine round-trip
+            health_monitor: None,
         };
         let svc_cfg = ServiceConfig {
             max_batch: args.get_usize("max-batch", file.get_usize("batcher", "max_batch", 8)?)?,

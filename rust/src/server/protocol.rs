@@ -4,6 +4,7 @@ use anyhow::{anyhow, Result};
 
 use crate::bnn::Decision;
 use crate::coordinator::engine::ClassifyResult;
+use crate::entropy::health::Scorecard;
 use crate::sampler::RequestBudget;
 use crate::util::json::{self, Json};
 
@@ -167,8 +168,11 @@ pub fn encode_error_into(msg: &str, out: &mut String) {
     o.write_compact(out);
 }
 
-/// Encode the `info` response.
-pub fn encode_info(datasets: &[&str]) -> String {
+/// Encode the `info` response.  `health` carries per-dataset entropy-health
+/// scorecards (see [`crate::coordinator::Router::health_snapshot`]); pass an
+/// empty slice when no engine runs a monitor and the `entropy_health` object
+/// is omitted entirely.
+pub fn encode_info(datasets: &[&str], health: &[(String, Vec<Scorecard>)]) -> String {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(true));
     o.set(
@@ -176,7 +180,32 @@ pub fn encode_info(datasets: &[&str]) -> String {
         Json::Arr(datasets.iter().map(|d| Json::Str(d.to_string())).collect()),
     );
     o.set("version", Json::Str(crate::version().into()));
+    if !health.is_empty() {
+        let mut h = Json::obj();
+        for (dataset, cards) in health {
+            h.set(
+                dataset,
+                Json::Arr(cards.iter().map(encode_scorecard).collect()),
+            );
+        }
+        o.set("entropy_health", h);
+    }
     o.to_string_compact()
+}
+
+/// One `(shard, stream)` scorecard as a JSON object.
+fn encode_scorecard(c: &Scorecard) -> Json {
+    let mut o = Json::obj();
+    o.set("shard", Json::Num(c.shard as f64));
+    o.set("stream", Json::Str(c.stream.clone()));
+    o.set("windows", Json::Num(c.windows as f64));
+    o.set("score_ewma", Json::Num(c.score_ewma));
+    o.set("last_score", Json::Num(c.last_score));
+    o.set("consecutive_fails", Json::Num(c.consecutive_fails as f64));
+    o.set("min_entropy", Json::Num(c.min_entropy));
+    o.set("serial_corr", Json::Num(c.serial_corr));
+    o.set("degraded", Json::Bool(c.degraded));
+    o
 }
 
 /// Encode the `ping` response.
@@ -308,6 +337,44 @@ mod tests {
         assert_eq!(j.get("class").unwrap().as_usize(), Some(0));
         assert!(j.get("mi").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(j.get("samples_used").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn encode_info_reports_health_scorecards() {
+        // no monitors -> no entropy_health object at all
+        let plain = encode_info(&["digits"], &[]);
+        let j = crate::util::json::parse(&plain).unwrap();
+        assert!(j.get("entropy_health").is_none());
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+
+        let card = Scorecard {
+            shard: 1,
+            stream: "pho-s1".into(),
+            windows: 4,
+            score_ewma: 0.25,
+            last_score: 0.2,
+            consecutive_fails: 3,
+            min_entropy: 0.41,
+            serial_corr: 0.6,
+            degraded: true,
+        };
+        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])]);
+        let j = crate::util::json::parse(&line).unwrap();
+        let cards = j
+            .get("entropy_health")
+            .unwrap()
+            .get("digits")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(cards.len(), 1);
+        let c = &cards[0];
+        assert_eq!(c.get("shard").unwrap().as_usize(), Some(1));
+        assert_eq!(c.get("stream").unwrap().as_str(), Some("pho-s1"));
+        assert_eq!(c.get("windows").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("score_ewma").unwrap().as_f64(), Some(0.25));
+        assert_eq!(c.get("consecutive_fails").unwrap().as_usize(), Some(3));
+        assert_eq!(c.get("degraded").unwrap().as_bool(), Some(true));
     }
 
     #[test]

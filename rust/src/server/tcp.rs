@@ -173,7 +173,10 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
     match protocol::parse_request(line) {
         Err(e) => protocol::encode_error_into(&format!("{e}"), out),
         Ok(Request::Ping) => out.push_str(&protocol::encode_pong()),
-        Ok(Request::Info) => out.push_str(&protocol::encode_info(&router.datasets())),
+        Ok(Request::Info) => out.push_str(&protocol::encode_info(
+            &router.datasets(),
+            &router.health_snapshot(),
+        )),
         Ok(Request::Classify {
             dataset,
             image,

@@ -66,14 +66,17 @@ pub fn fft_in_place(data: &mut [C64]) {
 }
 
 /// Magnitudes of the first n/2 bins of the FFT of a real signal.
+///
+/// Non-power-of-two inputs are truncated to the largest power of two below
+/// their length (the NIST spectral test's convention).  An empty signal
+/// yields an empty spectrum instead of tripping the FFT's length assert.
 pub fn real_fft_magnitudes(signal: &[f64]) -> Vec<f64> {
+    if signal.is_empty() {
+        return Vec::new();
+    }
+    // largest power of two <= len: next_power_of_two() overshoots exactly
+    // when len is not already a power of two, so shift the overshoot back
     let n = signal.len().next_power_of_two() >> usize::from(!signal.len().is_power_of_two());
-    // truncate to the largest power of two <= len
-    let n = if signal.len().is_power_of_two() {
-        signal.len()
-    } else {
-        n
-    };
     let mut buf: Vec<C64> = signal[..n].iter().map(|&x| (x, 0.0)).collect();
     fft_in_place(&mut buf);
     buf[..n / 2]
@@ -122,6 +125,15 @@ mod tests {
             assert!((acc.0 - d[k].0).abs() < 1e-8, "re bin {k}");
             assert!((acc.1 - d[k].1).abs() < 1e-8, "im bin {k}");
         }
+    }
+
+    #[test]
+    fn real_magnitudes_handle_empty_and_truncate() {
+        assert!(real_fft_magnitudes(&[]).is_empty());
+        // 12 samples truncate to 8 -> 4 magnitude bins
+        assert_eq!(real_fft_magnitudes(&[1.0; 12]).len(), 4);
+        // power-of-two lengths are used in full
+        assert_eq!(real_fft_magnitudes(&[1.0; 16]).len(), 8);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Integration: entropy-health monitor — fault-injected degradation must
+//! drive the scorecard down, trip the opt-in digital fallback
+//! deterministically, and surface per-(shard, stream) scores on `/info`.
+
+use std::sync::Arc;
+
+use photonic_bayes::bnn::UncertaintyPolicy;
+use photonic_bayes::coordinator::service::{EngineHandle, ServiceConfig};
+use photonic_bayes::coordinator::{BackendKind, Engine, EngineConfig, ExecMode, Router};
+use photonic_bayes::entropy::{HealthConfig, Monitor};
+use photonic_bayes::photonics::MachineConfig;
+use photonic_bayes::runtime::artifact::artifacts_root;
+use photonic_bayes::runtime::{ModelArtifacts, ParamStore};
+use photonic_bayes::server::tcp;
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("digits/meta.json").exists()
+}
+
+/// A monitor config that degrades after one bad window: the smallest legal
+/// window and a single failing window suffices.
+fn tight_health() -> HealthConfig {
+    HealthConfig {
+        enabled: true,
+        window_bits: 256,
+        duty: 1.0,
+        fail_consecutive: 1,
+        ..HealthConfig::default()
+    }
+}
+
+fn photonic_engine(
+    health: HealthConfig,
+    fallback: Option<BackendKind>,
+    monitor: Option<Arc<Monitor>>,
+) -> Engine {
+    let root = artifacts_root();
+    let arts = ModelArtifacts::load_dataset(&root, "digits").unwrap();
+    let params = ParamStore::load_init(&arts.meta, &root.join("digits")).unwrap();
+    let cfg = EngineConfig {
+        n_samples: 3,
+        mode: ExecMode::Split(BackendKind::Photonic),
+        policy: UncertaintyPolicy::ood_only(0.05),
+        calibrate: false,
+        machine: MachineConfig::default(),
+        noise_bw_ghz: 150.0,
+        threads: 1,
+        seed: 5,
+        health,
+        entropy_fallback: fallback,
+        health_monitor: monitor,
+        ..Default::default()
+    };
+    Engine::new(arts, params, cfg).unwrap()
+}
+
+/// Drive `monitor` into the degraded state: a constant window fails every
+/// applicable battery test, the min-entropy floor, and the correlation cap.
+fn inject_degraded(monitor: &Monitor) {
+    monitor.ingest_bits(0, "pho-s0", &[0u8; 256]);
+    assert!(monitor.any_degraded(), "constant window must degrade");
+}
+
+#[test]
+fn degraded_stream_triggers_deterministic_digital_fallback() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let image_size = 28 * 28;
+    let image = vec![0.4f32; image_size];
+
+    // control: same engine, healthy source -> stays photonic
+    let control_monitor = Arc::new(Monitor::new(tight_health()));
+    let mut control = photonic_engine(
+        tight_health(),
+        Some(BackendKind::Digital),
+        Some(control_monitor),
+    );
+    control.classify(&image, 1).unwrap();
+    assert_eq!(control.backend_kind(), BackendKind::Photonic);
+    assert!(!control.fell_back());
+
+    // two identically-seeded engines, both fault-injected before their
+    // first request: the swap must happen on both and the post-fallback
+    // outputs must replay bitwise identically
+    let mut outputs = Vec::new();
+    for _ in 0..2 {
+        let monitor = Arc::new(Monitor::new(tight_health()));
+        let mut engine = photonic_engine(
+            tight_health(),
+            Some(BackendKind::Digital),
+            Some(monitor.clone()),
+        );
+        assert_eq!(engine.backend_kind(), BackendKind::Photonic);
+        inject_degraded(&monitor);
+        let r = engine.classify(&image, 1).unwrap();
+        assert_eq!(engine.backend_kind(), BackendKind::Digital, "fallback swap");
+        assert!(engine.fell_back());
+        // the scorecard keeps reporting the degraded stream after the swap
+        let cards = monitor.scorecards();
+        assert!(cards.iter().any(|c| c.degraded && c.stream == "pho-s0"));
+        outputs.push(r[0].predictive.probs.clone());
+    }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "post-fallback sampling must be bitwise deterministic"
+    );
+
+    // without the opt-in, the same degradation only logs: no swap
+    let monitor = Arc::new(Monitor::new(tight_health()));
+    let mut engine = photonic_engine(tight_health(), None, Some(monitor.clone()));
+    inject_degraded(&monitor);
+    engine.classify(&image, 1).unwrap();
+    assert_eq!(engine.backend_kind(), BackendKind::Photonic);
+    assert!(!engine.fell_back());
+}
+
+#[test]
+fn info_reports_per_stream_scorecards() {
+    if !have_artifacts() {
+        return;
+    }
+    // surrogate mode keeps this test fast; the monitor is fed by fault
+    // injection, which exercises the same /info path as live taps
+    let engine_cfg = EngineConfig {
+        n_samples: 3,
+        mode: ExecMode::Surrogate,
+        policy: UncertaintyPolicy::ood_only(0.05),
+        calibrate: false,
+        machine: MachineConfig::default(),
+        noise_bw_ghz: 150.0,
+        threads: 1,
+        seed: 5,
+        health: tight_health(),
+        ..Default::default()
+    };
+    let handle = EngineHandle::spawn(
+        &artifacts_root(),
+        "digits",
+        None,
+        engine_cfg,
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let monitor = handle.health.clone().expect("spawn creates the monitor");
+    inject_degraded(&monitor);
+    let mut router = Router::new();
+    router.register(handle);
+
+    let snap = router.health_snapshot();
+    assert_eq!(snap.len(), 1);
+    assert_eq!(snap[0].0, "digits");
+    assert!(snap[0].1.iter().any(|c| c.degraded));
+
+    let info = tcp::respond(&router, "{\"op\":\"info\"}");
+    let j = photonic_bayes::util::json::parse(&info).unwrap();
+    let health = j
+        .get("entropy_health")
+        .and_then(|h| h.get("digits"))
+        .and_then(|d| d.as_arr())
+        .expect("/info carries per-dataset scorecards");
+    assert!(health
+        .iter()
+        .any(|c| c.get("degraded").and_then(|v| v.as_bool()) == Some(true)));
+    router.shutdown();
+}
