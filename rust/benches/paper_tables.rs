@@ -2,14 +2,15 @@
 //! and figure of the paper's evaluation section (DESIGN.md experiment
 //! index).  Each section prints the paper's value next to the measured one.
 //!
-//! Sections: headline, backends, entropy, adaptive, fig2_error, fig2_delay,
-//! nist, health, fig4_roc, fig4_confusion, fig5_scatter, fig5_auroc,
-//! ablations.
+//! Sections: headline, backends, entropy, adaptive, multimodel, fig2_error,
+//! fig2_delay, nist, health, fig4_roc, fig4_confusion, fig5_scatter,
+//! fig5_auroc, ablations.
 //!
 //! Machine-readable trajectories (`--json <path>`): `backends` →
 //! `BENCH_backends.json`, `entropy` → `BENCH_entropy.json`, `adaptive` →
-//! `BENCH_adaptive.json`, `health` → `BENCH_health.json`; CI regenerates
-//! all four per push and archives them as workflow artifacts.
+//! `BENCH_adaptive.json`, `health` → `BENCH_health.json`, `multimodel` →
+//! `BENCH_multimodel.json`; CI regenerates all five per push and archives
+//! them as workflow artifacts.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -63,6 +64,9 @@ fn main() {
     }
     if run("adaptive") {
         adaptive(&mut sink);
+    }
+    if run("multimodel") {
+        multimodel(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -366,6 +370,118 @@ fn adaptive(sink: &mut Option<JsonSink>) {
     }
     println!("(adaptive rows must show mean samples well below {max_n} — the easy half of the");
     println!(" stream resolves at the gap rule's min; fixed rows pin the full budget)");
+}
+
+/// Multi-model serving economics, measured at the `ProbConvBackend`
+/// boundary without artifacts: single-model steady state vs N virtualized
+/// models under the program registry's bank cache.  `interleaved/cached`
+/// switches models every request with an unbounded budget (every switch a
+/// hit), `interleaved/thrash` with budget 0 (every switch rebuilds the
+/// banked state from seed), and `coalesced` batches 8 same-model requests
+/// per switch — the batcher's model-aware grouping.  The amortization row
+/// is the measured thrash/coalesced per-request ratio: what same-model
+/// coalescing buys when models do not fit the budget.  With `--json <path>`
+/// the rows land machine-readably in `BENCH_multimodel.json`.
+fn multimodel(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::registry::{ProgramKey, RegistryMetrics};
+
+    section("MULTIMODEL — registry bank-cache cost, 1 model vs N virtualized");
+    let (n_samples, batch, channels, hw) = (16usize, 8usize, 8usize, 7usize);
+    let plan = SamplePlan::new(n_samples, batch, channels, hw, hw);
+    let mut rng = photonic_bayes::entropy::Xoshiro256pp::new(59);
+    let kernels: Vec<_> = (0..channels).map(|_| random_kernel(&mut rng)).collect();
+    let mcfg = MachineConfig {
+        seed: 59,
+        ..MachineConfig::default()
+    };
+    let x = random_activations(&mut rng, plan.sample_size(), mcfg.scale_dac);
+    let models = ["m0", "m1"];
+    let keys: Vec<ProgramKey> = models
+        .iter()
+        .map(|m| ProgramKey::new(m, mcfg.seed, mcfg.scale_dac, mcfg.scale_adc))
+        .collect();
+    let bench = Bench::quick();
+    println!(
+        "plan: N = {n_samples} x B = {batch} x {channels}ch@{hw}x{hw}, {} models, coalesce run = 8",
+        models.len()
+    );
+    println!(
+        "{:<26} {:>14} {:>16} {:>12}",
+        "schedule", "req latency", "conv/s (sim)", "vs 1-model"
+    );
+    // (schedule label, budget, requests per model before switching)
+    let cases: [(&str, usize, usize); 4] = [
+        ("steady_1model", usize::MAX, usize::MAX),
+        ("interleaved/cached", usize::MAX, 1),
+        ("interleaved/thrash", 0, 1),
+        ("coalesced", 0, 8),
+    ];
+    let mut base_ns = f64::NAN;
+    let mut thrash_ns = f64::NAN;
+    let mut coalesced_ns = f64::NAN;
+    for kind in [BackendKind::Photonic, BackendKind::Digital] {
+        for (label, budget, run_len) in cases {
+            let popts = PipelineOptions {
+                mode: PrefetchMode::Sync,
+                ..PipelineOptions::default()
+            };
+            let mut be = backend::build_with_opts(kind, &mcfg, None, popts);
+            be.enable_model_cache(budget, Arc::new(RegistryMetrics::default()));
+            be.switch_program(&keys[0], &kernels, false).unwrap();
+            let mut out = vec![0.0f32; plan.total_size()];
+            let mut req = 0usize;
+            let s = bench.run(&format!("{} {label}", kind.name()), || {
+                // request schedule: `run_len` same-model requests, then the
+                // next model — switch cost lands inside the measured call
+                let model = (req / run_len.max(1)) % models.len();
+                if run_len != usize::MAX {
+                    be.switch_program(&keys[model], &kernels, false).unwrap();
+                }
+                be.sample_conv(&plan, &x, &mut out).unwrap();
+                req += 1;
+                black_box(&out);
+            });
+            let ns_per_conv = s.mean_ns / plan.convolutions() as f64;
+            match label {
+                "steady_1model" => base_ns = s.mean_ns,
+                "interleaved/thrash" => thrash_ns = s.mean_ns,
+                "coalesced" => coalesced_ns = s.mean_ns,
+                _ => {}
+            }
+            println!(
+                "{:<26} {:>14} {:>16.2e} {:>11.2}x",
+                format!("{}/{}", kind.name(), label),
+                photonic_bayes::benchkit::fmt_ns(s.mean_ns),
+                1e9 / ns_per_conv,
+                base_ns / s.mean_ns,
+            );
+            if let Some(sink) = sink {
+                sink.push(
+                    &format!("multimodel/{}/{}", kind.name(), label),
+                    s.mean_ns,
+                    1e9 / ns_per_conv,
+                );
+            }
+        }
+        // the switch-amortization headline: per-request cost of thrashing
+        // every call vs amortizing one rebuild over an 8-request run
+        let amortization = thrash_ns / coalesced_ns;
+        println!(
+            "{:<26} {:>43.2}x",
+            format!("{}/amortization", kind.name()),
+            amortization
+        );
+        if let Some(sink) = sink {
+            sink.push(
+                &format!("multimodel/{}/switch_amortization", kind.name()),
+                amortization,
+                amortization,
+            );
+        }
+    }
+    println!("(cached interleaving must sit near the 1-model baseline: a hit swaps bank");
+    println!(" pointers instead of replaying streams; the amortization row is the win the");
+    println!(" model-aware batcher's same-model grouping realizes at tight budgets)");
 }
 
 fn fig2_error() {

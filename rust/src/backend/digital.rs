@@ -46,6 +46,7 @@ use crate::exec::ThreadPool;
 use crate::photonics::converters::Quantizer;
 use crate::photonics::machine::im2col_3x3;
 use crate::photonics::TapTarget;
+use crate::registry::{ModelCache, ProgramKey, RegistryMetrics};
 
 /// One worker's private entropy stream + draw scratch.  The stream is the
 /// shard's forked xoshiro256++ either drawn inline (prefetch off/sync —
@@ -113,6 +114,11 @@ pub struct DigitalBaselineBackend {
     produced: Arc<AtomicU64>,
     /// Entropy-health monitor tapping the shard streams, if attached.
     monitor: Option<Arc<Monitor>>,
+    /// Multi-model registry cache: parked per-model shard streams keyed by
+    /// model name (`None` until the first switch).  Weight planes are
+    /// `mu + sigma·z` at consumption, so the streams are the only per-model
+    /// sampling state.
+    models: Option<ModelCache<Vec<DigitalShard>>>,
     /// Output pixels computed (one probabilistic convolution each).
     pub convolutions: u64,
     /// Gaussian weight draws consumed (the PRNG bottleneck being measured).
@@ -193,6 +199,7 @@ impl DigitalBaselineBackend {
             popts,
             produced,
             monitor,
+            models: None,
             convolutions: 0,
             weight_draws: 0,
         }
@@ -292,6 +299,68 @@ impl ProbConvBackend for DigitalBaselineBackend {
     fn entropy_health(&self) -> Option<Arc<Monitor>> {
         self.monitor.clone()
     }
+
+    fn enable_model_cache(&mut self, budget_bytes: usize, metrics: Arc<RegistryMetrics>) {
+        self.models = Some(ModelCache::new(budget_bytes, metrics));
+    }
+
+    /// Swap the per-model shard streams through the registry cache.  A hit
+    /// resumes the model's streams where they left off; a miss re-forks
+    /// them from `key.seed` — so an eviction-then-reload replays the model
+    /// bitwise from the start, exactly like a cold backend seeded with the
+    /// same model-mixed seed.  Kernels and DAC/ADC quantizers always come
+    /// from the new model's checkpoint.
+    fn switch_program(
+        &mut self,
+        key: &ProgramKey,
+        kernels: &[Vec<TapTarget>],
+        _calibrate: bool,
+    ) -> Result<()> {
+        super::validate_kernels9("digital", kernels)?;
+        if self.models.is_none() {
+            self.models = Some(ModelCache::new(
+                usize::MAX,
+                Arc::new(RegistryMetrics::default()),
+            ));
+        }
+        self.kernels = kernels.to_vec();
+        self.dac = Quantizer::new(key.scale_dac);
+        self.adc = Quantizer::new(key.scale_adc);
+        if self.models.as_ref().unwrap().is_active(&key.model) {
+            return Ok(());
+        }
+        let mut cache = self.models.take().unwrap();
+        let had_active = cache.active_model().is_some();
+        let (shards, bytes) = match cache.checkout(&key.model) {
+            Some(hit) => hit,
+            None => {
+                let n_shards = self.shards.len().max(1);
+                let mut root = Xoshiro256pp::new(key.seed ^ 0xD161_7A15_7EAD_5EED);
+                let shards: Vec<DigitalShard> = (0..n_shards)
+                    .map(|i| DigitalShard {
+                        stream: EntropyStream::new_monitored(
+                            NormalGen::new(root.fork()),
+                            &self.popts,
+                            &format!("dig-s{i}"),
+                            self.produced.clone(),
+                            self.monitor.as_ref().map(|m| (m.clone(), i)),
+                        ),
+                        scratch: ScratchArena::default(),
+                    })
+                    .collect();
+                let per_stream = if self.popts.mode.banked() {
+                    (self.popts.depth + 2) * self.popts.block * 8
+                } else {
+                    256
+                };
+                (shards, n_shards * per_stream + 1024)
+            }
+        };
+        let prev = std::mem::replace(&mut self.shards, shards);
+        cache.commit(&key.model, bytes, had_active.then_some(prev));
+        self.models = Some(cache);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -377,6 +446,33 @@ mod tests {
         let mut replay = vec![0.0f32; plan.total_size()];
         b.sample_conv(&plan, &x, &mut replay).unwrap();
         assert_eq!(first, replay);
+    }
+
+    #[test]
+    fn model_switch_keeps_per_model_streams() {
+        let plan = SamplePlan::new(2, 1, 1, 3, 3);
+        let x = vec![0.5f32; plan.sample_size()];
+        let key_a = ProgramKey::new("a", 11, 4.0, 8.0);
+        let key_b = ProgramKey::new("b", 11, 4.0, 8.0);
+        let sample = |be: &mut DigitalBaselineBackend| {
+            let mut out = vec![0.0f32; plan.total_size()];
+            be.sample_conv(&plan, &x, &mut out).unwrap();
+            out
+        };
+        let mut be = DigitalBaselineBackend::new(4.0, 8.0, 1);
+        be.switch_program(&key_a, &[targets9(0.3, 0.3)], false).unwrap();
+        let a1 = sample(&mut be);
+        be.switch_program(&key_b, &[targets9(-0.3, 0.3)], false).unwrap();
+        let _b1 = sample(&mut be);
+        be.switch_program(&key_a, &[targets9(0.3, 0.3)], false).unwrap();
+        let a2 = sample(&mut be);
+        assert_ne!(a1, a2, "a's stream advanced across the detour via b");
+        // reference never switched away from a; its constructor seed is
+        // different on purpose — the model-mixed key seed is what governs
+        let mut rf = DigitalBaselineBackend::new(4.0, 8.0, 99);
+        rf.switch_program(&key_a, &[targets9(0.3, 0.3)], false).unwrap();
+        assert_eq!(a1, sample(&mut rf), "first pass replays from the key seed");
+        assert_eq!(a2, sample(&mut rf), "cache hit continues the stream");
     }
 
     #[test]

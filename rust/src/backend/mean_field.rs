@@ -93,6 +93,19 @@ impl ProbConvBackend for MeanFieldBackend {
     fn report(&self) -> String {
         format!("convolutions={} (deterministic mean weights, N = 1)", self.convolutions)
     }
+
+    /// Stateless across models (no streams, no banks) — a switch is just a
+    /// reprogram, but the per-model DAC/ADC ranges on the key still apply.
+    fn switch_program(
+        &mut self,
+        key: &crate::registry::ProgramKey,
+        kernels: &[Vec<TapTarget>],
+        calibrate: bool,
+    ) -> Result<()> {
+        self.dac = Quantizer::new(key.scale_dac);
+        self.adc = Quantizer::new(key.scale_adc);
+        self.program(kernels, calibrate)
+    }
 }
 
 #[cfg(test)]

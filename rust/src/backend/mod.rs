@@ -250,6 +250,31 @@ pub trait ProbConvBackend {
     fn entropy_health(&self) -> Option<Arc<Monitor>> {
         None
     }
+
+    /// Program-switch to a named model.  Stateful substrates swap the
+    /// model's machine/stream/bank state through their model cache,
+    /// reseeding streams deterministically from `key.seed` on a cold load
+    /// so outputs replay bitwise per `(model, seed, threads, prefetch)`.
+    /// The default treats every switch as a plain reprogram — correct for
+    /// substrates with no per-model stream state.
+    fn switch_program(
+        &mut self,
+        _key: &crate::registry::ProgramKey,
+        kernels: &[Vec<TapTarget>],
+        calibrate: bool,
+    ) -> Result<()> {
+        self.program(kernels, calibrate)
+    }
+
+    /// Attach a model cache (byte budget + shared residency metrics) ahead
+    /// of [`ProbConvBackend::switch_program`] use.  Substrates without
+    /// cacheable per-model state ignore it.
+    fn enable_model_cache(
+        &mut self,
+        _budget_bytes: usize,
+        _metrics: Arc<crate::registry::RegistryMetrics>,
+    ) {
+    }
 }
 
 /// Reject kernels the 3x3 depthwise conv path cannot execute.

@@ -50,6 +50,7 @@ use crate::photonics::detector::Detector;
 use crate::photonics::eom::Eom;
 use crate::photonics::machine::{conv_patches_banked, conv_patches_core, im2col_3x3};
 use crate::photonics::{MachineConfig, PhotonicMachine, TapTarget};
+use crate::registry::{ModelCache, ProgramKey, RegistryMetrics};
 
 /// One worker's private optical front-end: an independent chaotic source,
 /// receiver, and conv scratch.  The kernel bank stays shared (read-only).
@@ -207,6 +208,37 @@ impl WeightBank {
     }
 }
 
+/// One model's resident substrate state in a multi-model backend: its own
+/// machine (programmed kernels + chaotic-light rails seeded from the
+/// model-mixed seed), per-shard optical front-ends, and any prefetched
+/// weight-plane bank.  The whole triple moves between the backend's working
+/// slots and the registry's LRU as a unit, so a cache hit resumes every
+/// entropy stream exactly where the model left off; dropping an evicted
+/// state joins that model's background producers.
+struct ModelState {
+    machine: PhotonicMachine,
+    shards: Vec<PhotonicShard>,
+    bank: Option<WeightBank>,
+}
+
+/// Rough resident-size estimate of one model's cached state.  The dominant
+/// term is the prefetched weight-plane rings: shards x kernels x taps
+/// streams, each buffering up to `depth + 2` blocks of (capped) `block`
+/// f64 draws; the machine and front-ends are small change.
+fn estimate_state_bytes(
+    n_shards: usize,
+    n_kernels: usize,
+    nt: usize,
+    popts: &PipelineOptions,
+) -> usize {
+    let per_stream = if popts.mode.banked() {
+        (popts.depth + 2) * popts.block.min(1024) * 8
+    } else {
+        64
+    };
+    n_shards.max(1) * n_kernels.max(1) * nt.max(1) * per_stream + (1 << 12)
+}
+
 /// Deterministic per-shard optical front-ends for a machine configuration.
 fn build_shards(cfg: &MachineConfig, n: usize) -> Vec<PhotonicShard> {
     let mut st = cfg.seed ^ 0x5EED_0F_C0A7_1C57;
@@ -239,6 +271,9 @@ pub struct PhotonicSimBackend {
     produced: Arc<AtomicU64>,
     /// Entropy-health monitor tapping the bank streams, if attached.
     monitor: Option<Arc<Monitor>>,
+    /// Multi-model registry cache: parked [`ModelState`]s keyed by model
+    /// name (`None` until the first `switch_program`/`enable_model_cache`).
+    models: Option<ModelCache<ModelState>>,
 }
 
 impl PhotonicSimBackend {
@@ -298,6 +333,7 @@ impl PhotonicSimBackend {
             bank: None,
             produced: Arc::new(AtomicU64::new(0)),
             monitor,
+            models: None,
         }
     }
 
@@ -473,6 +509,86 @@ impl ProbConvBackend for PhotonicSimBackend {
     fn entropy_health(&self) -> Option<Arc<Monitor>> {
         self.monitor.clone()
     }
+
+    fn enable_model_cache(&mut self, budget_bytes: usize, metrics: Arc<RegistryMetrics>) {
+        self.models = Some(ModelCache::new(budget_bytes, metrics));
+    }
+
+    /// Swap the active [`ModelState`] through the registry cache.  A hit
+    /// restores the model's machine, front-ends, and prefetched bank intact
+    /// (its entropy streams continue where they left off — identical to a
+    /// single-model engine that never switched away); a miss rebuilds
+    /// everything from `key.seed`, so an eviction-then-reload replays the
+    /// model bitwise from the start.  The per-model machine keeps its own
+    /// `programs_loaded` generation, so the existing generation-keyed bank
+    /// invalidation works unchanged within each model.
+    fn switch_program(
+        &mut self,
+        key: &ProgramKey,
+        kernels: &[Vec<TapTarget>],
+        calibrate: bool,
+    ) -> Result<()> {
+        if self.models.is_none() {
+            // switching without an explicit cache: attach an unbounded
+            // private one so per-model determinism still holds
+            self.models = Some(ModelCache::new(
+                usize::MAX,
+                Arc::new(RegistryMetrics::default()),
+            ));
+        }
+        if self.models.as_ref().unwrap().is_active(&key.model) {
+            return Ok(());
+        }
+        let mut cache = self.models.take().unwrap();
+        let had_active = cache.active_model().is_some();
+        let (state, bytes) = match cache.checkout(&key.model) {
+            Some(hit) => hit,
+            None => {
+                // cold load: a fresh machine seeded from the model-mixed
+                // seed, programmed (and optionally calibrated) exactly as a
+                // cold single-model backend would be
+                let cfg = MachineConfig {
+                    seed: key.seed,
+                    scale_dac: key.scale_dac,
+                    scale_adc: key.scale_adc,
+                    ..self.machine.cfg.clone()
+                };
+                let mut machine = PhotonicMachine::new(cfg.clone());
+                for targets in kernels {
+                    let idx = machine.load_kernel(targets);
+                    if calibrate {
+                        calibrate_kernel(&mut machine, idx, targets, &self.calibration);
+                    }
+                }
+                let n_shards = self.pool.as_ref().map(|p| p.worker_count()).unwrap_or(1).max(1);
+                let shards = if n_shards > 1 || self.popts.mode.banked() {
+                    build_shards(&cfg, n_shards)
+                } else {
+                    Vec::new()
+                };
+                let bytes =
+                    estimate_state_bytes(n_shards, kernels.len(), machine.num_taps(), &self.popts);
+                (
+                    ModelState {
+                        machine,
+                        shards,
+                        bank: None, // prefetched lazily by ensure_bank
+                    },
+                    bytes,
+                )
+            }
+        };
+        let prev = ModelState {
+            machine: std::mem::replace(&mut self.machine, state.machine),
+            shards: std::mem::replace(&mut self.shards, state.shards),
+            bank: std::mem::replace(&mut self.bank, state.bank),
+        };
+        // the constructor's placeholder state (no model was active yet) is
+        // not worth caching — drop it instead of stashing
+        cache.commit(&key.model, bytes, had_active.then_some(prev));
+        self.models = Some(cache);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -591,6 +707,42 @@ mod tests {
                 mean_of(&hi),
                 mean_of(&lo)
             );
+        }
+    }
+
+    #[test]
+    fn model_switch_continues_streams_like_an_unswitched_engine() {
+        let plan = SamplePlan::new(3, 1, 1, 4, 4);
+        let x = vec![1.5f32; plan.sample_size()];
+        let ka = vec![vec![TapTarget { mu: 0.5, sigma: 0.2 }; 9]];
+        let kb = vec![vec![TapTarget { mu: -0.5, sigma: 0.2 }; 9]];
+        let mean_of = |out: &[f32]| out.iter().map(|&v| v as f64).sum::<f64>() / out.len() as f64;
+        for mode in [PrefetchMode::Sync, PrefetchMode::On] {
+            let mk = |model: &str, be: &PhotonicSimBackend| {
+                let cfg = &be.machine.cfg;
+                ProgramKey::new(model, 77, cfg.scale_dac, cfg.scale_adc)
+            };
+            let sample = |be: &mut PhotonicSimBackend| {
+                let mut out = vec![0.0f32; plan.total_size()];
+                be.sample_conv(&plan, &x, &mut out).unwrap();
+                out
+            };
+            // interleaved: a, b, a again (default unbounded cache -> hit)
+            let mut be = banked_backend(8, mode);
+            let (key_a, key_b) = (mk("a", &be), mk("b", &be));
+            be.switch_program(&key_a, &ka, false).unwrap();
+            let a1 = sample(&mut be);
+            be.switch_program(&key_b, &kb, false).unwrap();
+            let b1 = sample(&mut be);
+            be.switch_program(&key_a, &ka, false).unwrap();
+            let a2 = sample(&mut be);
+            assert!(mean_of(&b1) < -0.4, "b serves its own program, not a's");
+            // reference: same backend config, never switched away from a
+            let mut rf = banked_backend(8, mode);
+            let key_a_rf = mk("a", &rf);
+            rf.switch_program(&key_a_rf, &ka, false).unwrap();
+            assert_eq!(a1, sample(&mut rf), "{mode}: first pass replays");
+            assert_eq!(a2, sample(&mut rf), "{mode}: hit continues the stream");
         }
     }
 

@@ -10,6 +10,10 @@
 //!
 //! [engine]
 //! datasets = "digits,blood"
+//! # multi-model registry: LRU budget for cached per-model kernel-bank
+//! # state (MiB); models beyond the budget are evicted and replayed
+//! # bitwise-identically on reload
+//! bank_budget_mb = 256
 //! n_samples = 10
 //! # sampling substrate: photonic | digital | mean | surrogate
 //! backend = "photonic"
@@ -47,6 +51,13 @@
 //! min_entropy_floor = 0.9
 //! # maximum acceptable |lag-1 serial correlation|
 //! serial_corr_cap = 0.2
+//!
+//! # one engine serving several models through a shared program registry:
+//! # model name = artifact subdirectory under the artifacts root; requests
+//! # pick a model via the protocol's `model` field (first entry = default)
+//! [models]
+//! digits = "digits"
+//! blood = "blood"
 //!
 //! [batcher]
 //! max_batch = 8
@@ -161,6 +172,16 @@ impl Config {
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(String::as_str)
     }
+
+    /// Every `key = value` pair of a section, in key order (BTreeMap) — used
+    /// for open-ended tables like `[models]` where the keys themselves are
+    /// data (model name = artifact subdirectory).
+    pub fn items(&self, section: &str) -> Vec<(String, String)> {
+        self.sections
+            .get(section)
+            .map(|kv| kv.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +265,19 @@ threads = 8
         assert_eq!(c.get_f64("health", "duty", 0.05).unwrap(), 0.1);
         // unset knobs fall back to monitor defaults
         assert_eq!(c.get_f64("health", "ewma_alpha", 0.3).unwrap(), 0.3);
+    }
+
+    #[test]
+    fn items_returns_whole_table_in_key_order() {
+        let c = Config::parse("[models]\ndigits = \"digits\"\nblood = \"tissue/blood\"\n").unwrap();
+        assert_eq!(
+            c.items("models"),
+            vec![
+                ("blood".to_string(), "tissue/blood".to_string()),
+                ("digits".to_string(), "digits".to_string()),
+            ]
+        );
+        assert!(c.items("nope").is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
 use crate::{log_info, log_warn};
 use crate::photonics::MachineConfig;
+use crate::registry::{ModelCheckpoint, ProgramKey, ProgramRegistry, RegistryMetrics, UnknownModel};
 use crate::runtime::{Arg, CompiledFn, ModelArtifacts, ParamStore};
 use crate::sampler::{
     ChunkSchedule, PredictiveAccum, RequestBudget, ResolvedSampler, SamplerConfig, StopReason,
@@ -107,6 +108,16 @@ pub struct EngineConfig {
     /// scorecards without an engine round-trip.  When `None` and
     /// `health.enabled`, the engine builds its own.
     pub health_monitor: Option<Arc<Monitor>>,
+    /// Byte budget for the per-model bank cache of a multi-model engine
+    /// ([`Engine::with_registry`]): parked models' machines, shard
+    /// front-ends, and prefetched weight-plane banks are LRU-evicted once
+    /// their combined estimated size exceeds this.  Ignored by single-model
+    /// engines.
+    pub bank_budget_bytes: usize,
+    /// Pre-built registry metrics shared with the serving layer so `/info`
+    /// can read residency and hit/miss/switch counters without an engine
+    /// round-trip.  When `None`, a multi-model engine builds its own.
+    pub registry_metrics: Option<Arc<RegistryMetrics>>,
     pub seed: u64,
 }
 
@@ -126,6 +137,8 @@ impl Default for EngineConfig {
             health: HealthConfig::default(),
             entropy_fallback: None,
             health_monitor: None,
+            bank_budget_bytes: 256 << 20,
+            registry_metrics: None,
             seed: 42,
         }
     }
@@ -181,6 +194,18 @@ pub struct Engine {
     /// swap is one-way (a recovered source does not swap back — operators
     /// restart the engine after fixing the hardware).
     fell_back: bool,
+    /// Inactive checkpoints of a multi-model engine; the active one lives
+    /// in `arts`/`params`.  Empty on single-model engines.
+    standby: Vec<ModelCheckpoint>,
+    /// Serving name of the active checkpoint (the dataset name on legacy
+    /// single-model engines).
+    active_model: String,
+    /// Model serving requests that carry no `model` field (the registry's
+    /// first entry).
+    default_model: String,
+    /// Residency/hit/miss accounting, shared with the backend's model
+    /// cache and the serving layer.  `None` on single-model engines.
+    reg_metrics: Option<Arc<RegistryMetrics>>,
     pub metrics: super::metrics::EngineMetrics,
 }
 
@@ -189,6 +214,49 @@ impl Engine {
     /// probabilistic parameters (one 9-tap kernel per depthwise channel)
     /// and optionally runs feedback calibration on each.
     pub fn new(arts: ModelArtifacts, params: ParamStore, cfg: EngineConfig) -> Result<Self> {
+        Self::build(arts, params, cfg, true)
+    }
+
+    /// Build a multi-model engine over a loaded [`ProgramRegistry`].  The
+    /// first model is the default; the backend gets a model cache under
+    /// `cfg.bank_budget_bytes` and is program-switched (not plain
+    /// programmed), so each model's streams are seeded from its model-mixed
+    /// seed and the bitwise replay contract holds per `(model, seed,
+    /// threads, prefetch, rule)`.
+    pub fn with_registry(registry: ProgramRegistry, cfg: EngineConfig) -> Result<Self> {
+        let mut models = registry.models;
+        if models.is_empty() {
+            return Err(anyhow!("model registry is empty"));
+        }
+        let metrics = cfg
+            .registry_metrics
+            .clone()
+            .unwrap_or_else(|| Arc::new(RegistryMetrics::default()));
+        let budget = cfg.bank_budget_bytes;
+        let first = models.remove(0);
+        let first_name = first.name.clone();
+        // skip the legacy program() call: the registry path programs the
+        // backend through switch_program below, against the model-mixed key
+        let mut engine = Self::build(first.arts, first.params, cfg, false)?;
+        engine.backend.enable_model_cache(budget, metrics.clone());
+        metrics.register(&first_name);
+        for m in &models {
+            metrics.register(&m.name);
+        }
+        engine.standby = models;
+        engine.active_model = first_name.clone();
+        engine.default_model = first_name;
+        engine.reg_metrics = Some(metrics);
+        engine.program_active()?;
+        Ok(engine)
+    }
+
+    fn build(
+        arts: ModelArtifacts,
+        params: ParamStore,
+        cfg: EngineConfig,
+        program_now: bool,
+    ) -> Result<Self> {
         if cfg.n_samples == 0 {
             return Err(anyhow!(
                 "n_samples: {}",
@@ -224,20 +292,23 @@ impl Engine {
             popts,
             monitor.clone(),
         );
-        let kernels = params.prob_kernels()?;
-        let t0 = Instant::now();
-        backend.program(&kernels, cfg.calibrate)?;
-        log_info!(
-            "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={}, \
-             threads={}, prefetch={})",
-            arts.meta.dataset,
-            kernels.len(),
-            backend.name(),
-            t0.elapsed().as_secs_f64(),
-            cfg.calibrate,
-            threads,
-            popts.mode
-        );
+        if program_now {
+            let kernels = params.prob_kernels()?;
+            let t0 = Instant::now();
+            backend.program(&kernels, cfg.calibrate)?;
+            log_info!(
+                "engine[{}]: programmed {} kernels on '{}' backend in {:.2}s (calibrate={}, \
+                 threads={}, prefetch={})",
+                arts.meta.dataset,
+                kernels.len(),
+                backend.name(),
+                t0.elapsed().as_secs_f64(),
+                cfg.calibrate,
+                threads,
+                popts.mode
+            );
+        }
+        let active_model = arts.meta.dataset.clone();
         Ok(Self {
             noise: EpsSource::chaotic(cfg.seed.wrapping_add(77), cfg.noise_bw_ghz),
             backend,
@@ -250,8 +321,95 @@ impl Engine {
             pool,
             monitor,
             fell_back: false,
+            standby: Vec::new(),
+            default_model: active_model.clone(),
+            active_model,
+            reg_metrics: None,
             metrics: Default::default(),
         })
+    }
+
+    /// Program-switch the backend to the engine's active checkpoint
+    /// (registry path).  The key carries the model-mixed seed and the
+    /// checkpoint's own DAC/ADC scales; the retained machine config is kept
+    /// in step so a later entropy-health fallback rebuild sees the right
+    /// quantization ranges.
+    fn program_active(&mut self) -> Result<()> {
+        let key = ProgramKey::new(
+            &self.active_model,
+            self.cfg.seed,
+            self.arts.meta.scale_dac,
+            self.arts.meta.scale_adc,
+        );
+        self.mcfg.scale_dac = self.arts.meta.scale_dac;
+        self.mcfg.scale_adc = self.arts.meta.scale_adc;
+        let kernels = self.params.prob_kernels()?;
+        self.backend.switch_program(&key, &kernels, self.cfg.calibrate)
+    }
+
+    /// All served model names, default (active slot's registry order) first.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names = vec![self.active_model.clone()];
+        names.extend(self.standby.iter().map(|s| s.name.clone()));
+        names
+    }
+
+    /// The default model (requests without a `model` field go here).
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// Expected flat image length for `model`, if it is served here.
+    pub fn image_size_of(&self, model: &str) -> Option<usize> {
+        if model == self.active_model {
+            return Some(self.arts.meta.image_size());
+        }
+        self.standby
+            .iter()
+            .find(|s| s.name == model)
+            .map(|s| s.arts.meta.image_size())
+    }
+
+    /// Switch the active checkpoint to `model` (no-op when already active).
+    /// The previous checkpoint parks in a standby slot; the backend swaps
+    /// its sampling state through the registry's LRU cache.  Switch latency
+    /// lands in the engine metrics.
+    pub fn switch_model(&mut self, model: &str) -> Result<()> {
+        if model == self.active_model {
+            return Ok(());
+        }
+        let idx = self
+            .standby
+            .iter()
+            .position(|s| s.name == model)
+            .ok_or_else(|| {
+                anyhow::Error::new(UnknownModel {
+                    model: model.to_string(),
+                    known: self.model_names(),
+                })
+            })?;
+        let t0 = Instant::now();
+        let slot = &mut self.standby[idx];
+        std::mem::swap(&mut self.arts, &mut slot.arts);
+        std::mem::swap(&mut self.params, &mut slot.params);
+        slot.name = std::mem::replace(&mut self.active_model, model.to_string());
+        self.program_active()?;
+        self.metrics.record_model_switch(t0.elapsed());
+        Ok(())
+    }
+
+    /// [`Self::classify_with_budget`] against a named model (`None` = the
+    /// registry default), switching first if needed.
+    pub fn classify_model(
+        &mut self,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+    ) -> Result<Vec<ClassifyResult>> {
+        let target = model.unwrap_or(&self.default_model).to_string();
+        self.switch_model(&target)?;
+        self.classify_with_budget(images, n, budget)
     }
 
     pub fn n_classes(&self) -> usize {
@@ -651,10 +809,21 @@ impl Engine {
             self.popts,
             self.monitor.clone(),
         );
-        backend.program(&kernels, self.cfg.calibrate)?;
+        if let Some(metrics) = &self.reg_metrics {
+            // registry mode: the replacement starts with an empty model
+            // cache (all parked models go cold — their banks died with the
+            // degraded backend) and is programmed through the switch path
+            // so the active model keeps its model-mixed seed
+            backend.enable_model_cache(self.cfg.bank_budget_bytes, metrics.clone());
+        } else {
+            backend.program(&kernels, self.cfg.calibrate)?;
+        }
         let old = std::mem::replace(&mut self.backend, backend);
         let old_name = old.name();
         drop(old); // joins the degraded backend's entropy producers
+        if self.reg_metrics.is_some() {
+            self.program_active()?;
+        }
         log_warn!(
             "engine[{}]: entropy health fallback: '{}' -> '{}' ({} kernels reprogrammed)",
             self.arts.meta.dataset,

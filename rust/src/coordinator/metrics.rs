@@ -85,8 +85,14 @@ pub struct EngineMetrics {
     /// batches the backend additionally draws for already-frozen images
     /// until the whole batch resolves.
     pub samples_drawn: u64,
+    /// Program switches between registered models (multi-model engines).
+    pub model_switches: u64,
     pub batch_latency: LatencyHistogram,
     pub request_latency: LatencyHistogram,
+    /// Wall time of each model switch (checkpoint swap + program switch,
+    /// including any cold bank rebuild) — the cost model-coalesced batching
+    /// amortizes.
+    pub switch_latency: LatencyHistogram,
 }
 
 impl EngineMetrics {
@@ -105,6 +111,11 @@ impl EngineMetrics {
         }
     }
 
+    pub fn record_model_switch(&mut self, elapsed: Duration) {
+        self.model_switches += 1;
+        self.switch_latency.record(elapsed.as_micros() as f64);
+    }
+
     /// Mean stochastic passes per request.
     pub fn mean_samples(&self) -> f64 {
         if self.requests == 0 {
@@ -117,7 +128,7 @@ impl EngineMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} accept={} reject_ood={} ambiguous={} mean_samples={:.2} \
-             mean_batch={:.0}us p95_batch={:.0}us",
+             mean_batch={:.0}us p95_batch={:.0}us model_switches={} mean_switch={:.0}us",
             self.requests,
             self.batches,
             self.accepted,
@@ -126,6 +137,8 @@ impl EngineMetrics {
             self.mean_samples(),
             self.batch_latency.mean_us(),
             self.batch_latency.percentile_us(95.0),
+            self.model_switches,
+            self.switch_latency.mean_us(),
         )
     }
 
@@ -154,6 +167,11 @@ impl EngineMetrics {
             (
                 "p95_request_us",
                 Json::Num(self.request_latency.percentile_us(95.0)),
+            ),
+            ("model_switches", Json::Num(self.model_switches as f64)),
+            (
+                "mean_switch_us",
+                Json::Num(self.switch_latency.mean_us()),
             ),
         ])
     }
@@ -201,6 +219,19 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("mean_samples_per_request").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn model_switches_surface_in_report_and_json() {
+        let mut m = EngineMetrics::default();
+        m.record_model_switch(Duration::from_micros(300));
+        m.record_model_switch(Duration::from_micros(500));
+        assert_eq!(m.model_switches, 2);
+        assert!((m.switch_latency.mean_us() - 400.0).abs() < 1.0);
+        assert!(m.report().contains("model_switches=2"), "{}", m.report());
+        let j = m.to_json();
+        assert_eq!(j.get("model_switches").unwrap().as_f64(), Some(2.0));
+        assert!(j.get("mean_switch_us").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -37,5 +37,6 @@ pub use crate::backend::{BackendKind, PrefetchMode};
 pub use crate::sampler::{RequestBudget, SamplerConfig, StopRule};
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
+pub use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics, UnknownModel};
 pub use router::Router;
-pub use service::{ClassifyRequest, EngineHandle};
+pub use service::{ClassifyRequest, EngineHandle, GroupKey};

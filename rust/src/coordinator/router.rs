@@ -1,16 +1,26 @@
-//! Request router: dispatch by model/dataset name to the owning engine.
+//! Request router: dispatch by model name to the owning engine.
+//!
+//! One [`EngineHandle`] may serve several models (a multi-model engine built
+//! from a [`crate::registry::ProgramRegistry`]); the router maps every model
+//! name an engine advertises back to that handle, so routing stays a flat
+//! name → engine lookup whether the deployment is one engine per model or
+//! one engine virtualizing all of them.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use super::service::{ClassifyRequest, EngineHandle};
 use crate::entropy::health::Scorecard;
+use crate::registry::{RegistrySnapshot, UnknownModel};
 
-/// Routes requests to per-dataset engines.
+/// Routes requests to the engine serving each model.
 #[derive(Default)]
 pub struct Router {
-    engines: HashMap<String, EngineHandle>,
+    engines: Vec<EngineHandle>,
+    /// model name → index into `engines`; every name in
+    /// [`EngineHandle::models`] is a key.
+    by_model: HashMap<String, usize>,
 }
 
 impl Router {
@@ -19,22 +29,35 @@ impl Router {
     }
 
     pub fn register(&mut self, handle: EngineHandle) {
-        self.engines.insert(handle.dataset.clone(), handle);
+        let idx = self.engines.len();
+        for name in &handle.models {
+            self.by_model.insert(name.clone(), idx);
+        }
+        self.engines.push(handle);
     }
 
+    /// Every servable model name, sorted (stable for `/info`).
     pub fn datasets(&self) -> Vec<&str> {
-        self.engines.keys().map(String::as_str).collect()
+        let mut names: Vec<&str> = self.by_model.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
     }
 
-    pub fn get(&self, dataset: &str) -> Result<&EngineHandle> {
-        self.engines
-            .get(dataset)
-            .ok_or_else(|| anyhow!("unknown dataset '{dataset}' (have: {:?})", self.datasets()))
+    pub fn get(&self, model: &str) -> Result<&EngineHandle> {
+        self.by_model
+            .get(model)
+            .map(|&i| &self.engines[i])
+            .ok_or_else(|| {
+                anyhow::Error::new(UnknownModel {
+                    model: model.to_string(),
+                    known: self.datasets().iter().map(|s| s.to_string()).collect(),
+                })
+            })
     }
 
     /// Route one request.
-    pub fn route(&self, dataset: &str, req: ClassifyRequest) -> Result<()> {
-        self.get(dataset)?.submit(req)
+    pub fn route(&self, model: &str, req: ClassifyRequest) -> Result<()> {
+        self.get(model)?.submit(req)
     }
 
     /// Per-dataset entropy-health scorecards (datasets sorted by name;
@@ -44,7 +67,22 @@ impl Router {
         let mut snap: Vec<(String, Vec<Scorecard>)> = self
             .engines
             .iter()
-            .filter_map(|(name, h)| h.health.as_ref().map(|m| (name.clone(), m.scorecards())))
+            .filter_map(|h| h.health.as_ref().map(|m| (h.dataset.clone(), m.scorecards())))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
+    /// Per-engine model-registry snapshots (bank residency, hit/miss/switch
+    /// counters), keyed by the engine's primary name and sorted.  Engines
+    /// without a registry (single-model) are omitted.  Reads the shared
+    /// [`crate::registry::RegistryMetrics`] directly — no round-trip
+    /// through any engine thread.
+    pub fn registry_snapshot(&self) -> Vec<(String, RegistrySnapshot)> {
+        let mut snap: Vec<(String, RegistrySnapshot)> = self
+            .engines
+            .iter()
+            .filter_map(|h| h.registry.as_ref().map(|r| (h.dataset.clone(), r.snapshot())))
             .collect();
         snap.sort_by(|a, b| a.0.cmp(&b.0));
         snap
@@ -52,7 +90,7 @@ impl Router {
 
     /// Shut down every engine.
     pub fn shutdown(self) {
-        for (_, h) in self.engines {
+        for h in self.engines {
             h.shutdown();
         }
     }
@@ -63,9 +101,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn unknown_dataset_is_error() {
+    fn unknown_model_is_typed_error() {
         let r = Router::new();
         let (req, _rx) = ClassifyRequest::new(vec![0.0; 4]);
-        assert!(r.route("nope", req).is_err());
+        let err = r.route("nope", req).unwrap_err();
+        let um = err.downcast_ref::<UnknownModel>().expect("typed UnknownModel");
+        assert_eq!(um.model, "nope");
+        assert!(um.known.is_empty());
+    }
+
+    #[test]
+    fn empty_router_has_no_models_or_snapshots() {
+        let r = Router::new();
+        assert!(r.datasets().is_empty());
+        assert!(r.health_snapshot().is_empty());
+        assert!(r.registry_snapshot().is_empty());
     }
 }

@@ -13,13 +13,16 @@ use super::engine::{ClassifyResult, Engine, EngineConfig};
 use crate::entropy::health::Monitor;
 use crate::exec::channel::{channel, Receiver, Sender};
 use crate::log_info;
+use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics};
 use crate::runtime::{ModelArtifacts, ParamStore};
 use crate::sampler::RequestBudget;
 
-/// One classification request: an image, its per-request sample budget,
-/// and a one-shot reply channel.
+/// One classification request: an image, the model it targets (`None` =
+/// the engine's default), its per-request sample budget, and a one-shot
+/// reply channel.
 pub struct ClassifyRequest {
     pub image: Vec<f32>,
+    pub model: Option<String>,
     pub budget: RequestBudget,
     pub reply: Sender<Result<ClassifyResult>>,
 }
@@ -36,10 +39,21 @@ impl ClassifyRequest {
         image: Vec<f32>,
         budget: RequestBudget,
     ) -> (Self, Receiver<Result<ClassifyResult>>) {
+        Self::with_model(None, image, budget)
+    }
+
+    /// Build a request targeting a named model (the wire protocol's
+    /// `model` field; `None` = the engine's default model).
+    pub fn with_model(
+        model: Option<String>,
+        image: Vec<f32>,
+        budget: RequestBudget,
+    ) -> (Self, Receiver<Result<ClassifyResult>>) {
         let (tx, rx) = channel(1);
         (
             Self {
                 image,
+                model,
                 budget,
                 reply: tx,
             },
@@ -48,19 +62,40 @@ impl ClassifyRequest {
     }
 }
 
-/// Partition one dynamic batch into same-budget groups, preserving arrival
-/// order within each group (and of first appearance across groups).  The
-/// engine classifies each group as one batched plan: requests with
-/// different budgets are *variable-cost* and must not share a plan — a
-/// 3-sample request batched with a 20-sample one would either overspend or
-/// starve.  Budgets on a batch are few in practice, so a linear scan wins
-/// over hashing.
-fn group_by_budget(batch: Vec<ClassifyRequest>) -> Vec<(RequestBudget, Vec<ClassifyRequest>)> {
-    let mut groups: Vec<(RequestBudget, Vec<ClassifyRequest>)> = Vec::new();
+/// What makes two requests batchable into one engine plan: same target
+/// model (a program switch between them would thrash the machine) and same
+/// sample budget (budgets are variable-cost — a 3-sample request batched
+/// with a 20-sample one would either overspend or starve).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupKey {
+    /// `None` groups with `None`: default-model requests coalesce with
+    /// each other, not with requests naming the default explicitly (the
+    /// engine resolves both to the same program, so the only cost of the
+    /// distinction is one extra no-op switch check).
+    pub model: Option<String>,
+    pub budget: RequestBudget,
+}
+
+/// Partition one dynamic batch into same-(model, budget) groups, preserving
+/// arrival order within each group (and of first appearance across groups).
+/// Same-model requests coalesce so program switches amortize across the
+/// group instead of hitting every request.  Distinct keys on a batch are
+/// few in practice, so a linear scan wins over hashing.
+fn group_requests(batch: Vec<ClassifyRequest>) -> Vec<(GroupKey, Vec<ClassifyRequest>)> {
+    let mut groups: Vec<(GroupKey, Vec<ClassifyRequest>)> = Vec::new();
     for req in batch {
-        match groups.iter_mut().find(|(b, _)| *b == req.budget) {
+        match groups
+            .iter_mut()
+            .find(|(k, _)| k.model == req.model && k.budget == req.budget)
+        {
             Some((_, members)) => members.push(req),
-            None => groups.push((req.budget, vec![req])),
+            None => {
+                let key = GroupKey {
+                    model: req.model.clone(),
+                    budget: req.budget,
+                };
+                groups.push((key, vec![req]));
+            }
         }
     }
     groups
@@ -68,11 +103,19 @@ fn group_by_budget(batch: Vec<ClassifyRequest>) -> Vec<(RequestBudget, Vec<Class
 
 /// Handle to a running engine thread.
 pub struct EngineHandle {
+    /// Primary serving name (the dataset of a single-model engine; the
+    /// default model of a multi-model engine).
     pub dataset: String,
+    /// Every model this engine serves (`[dataset]` on single-model
+    /// engines; registry order on multi-model engines, default first).
+    pub models: Vec<String>,
     /// Entropy-health monitor shared with the engine (present when
     /// `EngineConfig::health.enabled`): `/info` reads scorecards from here
     /// without a round-trip through the engine thread.
     pub health: Option<Arc<Monitor>>,
+    /// Registry residency/hit/miss counters shared with a multi-model
+    /// engine's backend cache; `/info` reads them from here.
+    pub registry: Option<Arc<RegistryMetrics>>,
     tx: Sender<ClassifyRequest>,
     thread: Option<JoinHandle<()>>,
 }
@@ -117,6 +160,7 @@ impl EngineHandle {
         let dir = artifacts_root.join(dataset);
         let params_path = params_path.map(|p| p.to_path_buf());
         let dataset_name = dataset.to_string();
+        let dataset_name2 = dataset_name.clone();
         let thread = std::thread::Builder::new()
             .name(format!("pbm-engine-{dataset}"))
             .spawn(move || {
@@ -129,11 +173,23 @@ impl EngineHandle {
                     };
                     let mut engine = Engine::new(arts, params, engine_cfg)?;
                     let image_size = engine.image_size();
+                    let name = dataset_name2;
                     let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
                     while let Some(batch) = batcher.next_batch() {
-                        // same-budget requests share one batched plan;
-                        // mixed budgets split into per-budget sub-batches
-                        for (budget, group) in group_by_budget(batch) {
+                        // same-(model, budget) requests share one batched
+                        // plan; mixed keys split into sub-batches
+                        for (key, group) in group_requests(batch) {
+                            // single-model engine: a request naming any
+                            // other model is a routing error, not a switch
+                            if key.model.as_deref().is_some_and(|m| m != name) {
+                                let m = key.model.as_deref().unwrap_or("");
+                                for req in group {
+                                    let _ = req.reply.send(Err(anyhow!(
+                                        "unknown model '{m}' (this engine serves '{name}')"
+                                    )));
+                                }
+                                continue;
+                            }
                             let mut images = Vec::with_capacity(group.len() * image_size);
                             let mut ok = Vec::with_capacity(group.len());
                             for req in group {
@@ -151,7 +207,7 @@ impl EngineHandle {
                             if ok.is_empty() {
                                 continue;
                             }
-                            match engine.classify_with_budget(&images, ok.len(), &budget) {
+                            match engine.classify_with_budget(&images, ok.len(), &key.budget) {
                                 Ok(results) => {
                                     for (reply, res) in ok.into_iter().zip(results) {
                                         let _ = reply.send(Ok(res));
@@ -174,8 +230,114 @@ impl EngineHandle {
             })
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
         Ok(Self {
+            models: vec![dataset_name.clone()],
             dataset: dataset_name,
             health,
+            registry: None,
+            tx,
+            thread: Some(thread),
+        })
+    }
+
+    /// Spawn one engine thread serving every model in `specs` through a
+    /// shared [`ProgramRegistry`]: the first spec is the default model,
+    /// requests name others via [`ClassifyRequest::model`], and the
+    /// batcher's [`GroupKey`] coalesces same-model traffic so program
+    /// switches amortize across whole groups.
+    pub fn spawn_multi(
+        artifacts_root: &Path,
+        specs: Vec<ModelSpec>,
+        engine_cfg: EngineConfig,
+        svc_cfg: ServiceConfig,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            anyhow::bail!("spawn_multi needs at least one model spec");
+        }
+        let mut engine_cfg = engine_cfg;
+        if engine_cfg.health.enabled && engine_cfg.health_monitor.is_none() {
+            engine_cfg.health_monitor = Some(Arc::new(Monitor::new(engine_cfg.health)));
+        }
+        let health = engine_cfg.health_monitor.clone();
+        // the registry metrics live outside the engine thread so /info can
+        // read residency without a round-trip
+        if engine_cfg.registry_metrics.is_none() {
+            engine_cfg.registry_metrics = Some(Arc::new(RegistryMetrics::default()));
+        }
+        let registry = engine_cfg.registry_metrics.clone();
+        let model_names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let default_name = model_names[0].clone();
+        let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
+        let root = artifacts_root.to_path_buf();
+        let thread_default = default_name.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("pbm-engine-{thread_default}"))
+            .spawn(move || {
+                // all PJRT + machine state is created on this thread
+                let run = || -> Result<()> {
+                    let reg = ProgramRegistry::load(&root, &specs)?;
+                    let mut engine = Engine::with_registry(reg, engine_cfg)?;
+                    let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
+                    while let Some(batch) = batcher.next_batch() {
+                        for (key, group) in group_requests(batch) {
+                            let name = key.model.as_deref().unwrap_or(&thread_default);
+                            // image size is per-model: validate against the
+                            // target model, not whichever is active
+                            let Some(image_size) = engine.image_size_of(name) else {
+                                let err = crate::registry::UnknownModel {
+                                    model: name.to_string(),
+                                    known: engine.model_names(),
+                                };
+                                for req in group {
+                                    let _ =
+                                        req.reply.send(Err(anyhow::Error::new(err.clone())));
+                                }
+                                continue;
+                            };
+                            let mut images = Vec::with_capacity(group.len() * image_size);
+                            let mut ok = Vec::with_capacity(group.len());
+                            for req in group {
+                                if req.image.len() == image_size {
+                                    images.extend_from_slice(&req.image);
+                                    ok.push(req.reply);
+                                } else {
+                                    let _ = req.reply.send(Err(anyhow!(
+                                        "image size {} != expected {}",
+                                        req.image.len(),
+                                        image_size
+                                    )));
+                                }
+                            }
+                            if ok.is_empty() {
+                                continue;
+                            }
+                            match engine.classify_model(Some(name), &images, ok.len(), &key.budget)
+                            {
+                                Ok(results) => {
+                                    for (reply, res) in ok.into_iter().zip(results) {
+                                        let _ = reply.send(Ok(res));
+                                    }
+                                }
+                                Err(e) => {
+                                    for reply in ok {
+                                        let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    log_info!("engine thread exiting: {}", engine.report());
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    crate::log_error!("engine thread failed: {e:#}");
+                }
+            })
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        Ok(Self {
+            dataset: default_name,
+            models: model_names,
+            health,
+            registry,
             tx,
             thread: Some(thread),
         })
@@ -222,6 +384,15 @@ mod tests {
         ClassifyRequest::with_budget(vec![pixel], budget).0
     }
 
+    fn req_for(model: &str, pixel: f32) -> ClassifyRequest {
+        ClassifyRequest::with_model(
+            Some(model.to_string()),
+            vec![pixel],
+            RequestBudget::default(),
+        )
+        .0
+    }
+
     #[test]
     fn grouping_preserves_order_and_separates_budgets() {
         let small = RequestBudget {
@@ -239,19 +410,19 @@ mod tests {
             req(3.0, conf),
             req(4.0, small),
         ];
-        let groups = group_by_budget(batch);
+        let groups = group_requests(batch);
         assert_eq!(groups.len(), 3);
-        assert_eq!(groups[0].0, RequestBudget::default());
+        assert_eq!(groups[0].0.budget, RequestBudget::default());
         assert_eq!(
             groups[0].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
             vec![0.0, 2.0]
         );
-        assert_eq!(groups[1].0, small);
+        assert_eq!(groups[1].0.budget, small);
         assert_eq!(
             groups[1].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
             vec![1.0, 4.0]
         );
-        assert_eq!(groups[2].0, conf);
+        assert_eq!(groups[2].0.budget, conf);
         assert_eq!(groups[2].1.len(), 1);
     }
 
@@ -259,8 +430,54 @@ mod tests {
     fn uniform_batch_stays_one_group() {
         let batch: Vec<ClassifyRequest> =
             (0..5).map(|i| req(i as f32, RequestBudget::default())).collect();
-        let groups = group_by_budget(batch);
+        let groups = group_requests(batch);
         assert_eq!(groups.len(), 1);
+        assert!(groups[0].0.model.is_none());
         assert_eq!(groups[0].1.len(), 5);
+    }
+
+    #[test]
+    fn grouping_coalesces_same_model_and_keeps_arrival_order() {
+        // interleaved a/b/default traffic: one group per model, arrival
+        // order preserved within each and by first appearance across
+        let batch = vec![
+            req_for("a", 0.0),
+            req_for("b", 1.0),
+            req(2.0, RequestBudget::default()),
+            req_for("a", 3.0),
+            req_for("b", 4.0),
+            req_for("a", 5.0),
+        ];
+        let groups = group_requests(batch);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0.model.as_deref(), Some("a"));
+        assert_eq!(
+            groups[0].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
+            vec![0.0, 3.0, 5.0]
+        );
+        assert_eq!(groups[1].0.model.as_deref(), Some("b"));
+        assert_eq!(
+            groups[1].1.iter().map(|r| r.image[0]).collect::<Vec<_>>(),
+            vec![1.0, 4.0]
+        );
+        assert!(groups[2].0.model.is_none());
+        assert_eq!(groups[2].1.len(), 1);
+    }
+
+    #[test]
+    fn same_model_different_budget_splits() {
+        let small = RequestBudget {
+            max_samples: Some(3),
+            target_confidence: None,
+        };
+        let batch = vec![
+            req_for("a", 0.0),
+            ClassifyRequest::with_model(Some("a".into()), vec![1.0], small).0,
+        ];
+        let groups = group_requests(batch);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0.model.as_deref(), Some("a"));
+        assert_eq!(groups[1].0.model.as_deref(), Some("a"));
+        assert_ne!(groups[0].0.budget, groups[1].0.budget);
     }
 }

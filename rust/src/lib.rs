@@ -53,6 +53,18 @@
 //! bit-for-bit; see the README's "Adaptive sampling" section for the
 //! extended `(seed, threads, prefetch, rule)` reproducibility contract.
 //!
+//! ## Multi-model serving
+//!
+//! [`registry`] virtualizes the one simulated machine across many named
+//! checkpoints: a [`registry::ProgramRegistry`] of models behind one
+//! engine, per-model bank state parked in an LRU cache under a byte budget
+//! (`--bank-budget-mb`), a `model` field on the wire with typed
+//! `unknown_model` errors, and model-aware batch grouping so program
+//! switches amortize.  Outputs replay bitwise per
+//! `(model, seed, threads, prefetch, rule)`; `/info` reports per-model
+//! residency and hit/miss/switch counters.  See the README's "Multi-model
+//! serving" section.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 
@@ -69,6 +81,7 @@ pub mod exec;
 pub mod experiments;
 pub mod photonics;
 pub mod proptest_mini;
+pub mod registry;
 pub mod runtime;
 pub mod sampler;
 pub mod server;

@@ -87,6 +87,7 @@ USAGE: pbm <subcommand> [flags]
   calibrate [--kernels N --outputs M --seed N]
   nist      [--bits N --bw GHZ]
   serve     [--config FILE --addr HOST:PORT --datasets digits,blood
+            --models a,b --models-dir DIR --bank-budget-mb N
             --backend B --mode M --samples N --mi-threshold F
             --max-batch N --max-wait-ms N --threads N
             --entropy-prefetch off|sync|on --entropy-block N
@@ -100,11 +101,16 @@ USAGE: pbm <subcommand> [flags]
              --adaptive: sequential sampling with early stopping — see the
              [sampler] config table; clients may send per-request
              max_samples / target_confidence fields;
+             --models: ONE engine virtualized across the listed model
+             checkpoints (program registry + LRU bank cache, budget
+             --bank-budget-mb, default 256); requests pick a model via the
+             protocol's `model` field, first listed = default; /info shows
+             per-model residency + hit/miss/switch counters;
              --health: online entropy-health monitor — NIST battery +
              min-entropy over tapped producer blocks, scorecards on /info;
              --entropy-fallback digital: swap degraded photonic sampling
              to the digital baseline; see the [health] config table)
-  classify  [--addr HOST:PORT --dataset D --split S --index I
+  classify  [--addr HOST:PORT --model D --split S --index I
             --max-samples N --target-confidence F]
             [--local --backend B --threads N --adaptive]  (in-process)
   info
@@ -274,6 +280,8 @@ fn build_engine(args: &Args, dataset: &str) -> Result<Engine> {
         health: parse_health(args, &Config::default())?,
         entropy_fallback: parse_entropy_fallback(args, &Config::default())?,
         health_monitor: None,
+        bank_budget_bytes: args.get_usize("bank-budget-mb", 256)? << 20,
+        registry_metrics: None,
     };
     Engine::new(arts, params, cfg)
 }
@@ -589,7 +597,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(p) => Config::load(Path::new(p))?,
         None => Config::default(),
     };
-    let root = artifacts_root();
+    let root = match args.get("models-dir") {
+        Some(d) => PathBuf::from(d),
+        None => artifacts_root(),
+    };
     let datasets = args.get_or(
         "datasets",
         &file.get_or("engine", "datasets", "digits,blood"),
@@ -599,13 +610,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         file.get_mode("engine", "backend", ExecMode::photonic())?
     };
-    let mut router = Router::new();
-    for ds in datasets.split(',') {
-        let (params_path, trained) = default_params(&root, ds);
-        if !trained {
-            eprintln!("warning: serving '{ds}' with untrained init params");
-        }
-        let engine_cfg = EngineConfig {
+    let make_engine_cfg = || -> Result<EngineConfig> {
+        Ok(EngineConfig {
             n_samples: args.get_usize("samples", file.get_usize("engine", "n_samples", 10)?)?,
             mode,
             policy: UncertaintyPolicy::ood_only(
@@ -625,24 +631,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: args.get_u64("seed", 42)?,
             health: parse_health(args, &file)?,
             entropy_fallback: parse_entropy_fallback(args, &file)?,
-            // created per-dataset by EngineHandle::spawn so /info can read
-            // scorecards without an engine round-trip
+            // created per-engine by EngineHandle::spawn/spawn_multi so /info
+            // can read scorecards without an engine round-trip
             health_monitor: None,
-        };
-        let svc_cfg = ServiceConfig {
+            bank_budget_bytes: args
+                .get_usize("bank-budget-mb", file.get_usize("engine", "bank_budget_mb", 256)?)?
+                << 20,
+            // created by spawn_multi; /info reads residency from the handle
+            registry_metrics: None,
+        })
+    };
+    let make_svc_cfg = || -> Result<ServiceConfig> {
+        Ok(ServiceConfig {
             max_batch: args.get_usize("max-batch", file.get_usize("batcher", "max_batch", 8)?)?,
             max_wait: std::time::Duration::from_millis(
                 args.get_u64("max-wait-ms", file.get_usize("batcher", "max_wait_ms", 2)? as u64)?,
             ),
             queue_depth: file.get_usize("batcher", "queue_depth", 256)?,
+        })
+    };
+    // multi-model registry: `--models a,b` (or a `[models]` table: model
+    // name = artifact subdirectory) virtualizes ONE engine across all
+    // listed checkpoints behind a shared LRU bank cache; the first entry is
+    // the default model.  Without either, fall back to one engine per
+    // dataset (the pre-registry layout).
+    let mut specs: Vec<photonic_bayes::coordinator::ModelSpec> =
+        match args.get("models").or_else(|| args.get("model")) {
+            Some(list) => list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(photonic_bayes::coordinator::ModelSpec::named)
+                .collect(),
+            None => file
+                .items("models")
+                .into_iter()
+                .map(|(name, dir)| photonic_bayes::coordinator::ModelSpec {
+                    name,
+                    dir,
+                    params_path: None,
+                })
+                .collect(),
         };
-        router.register(photonic_bayes::coordinator::service::EngineHandle::spawn(
-            &root,
-            ds,
-            Some(&params_path),
-            engine_cfg,
-            svc_cfg,
-        )?);
+    let mut router = Router::new();
+    if !specs.is_empty() {
+        for spec in &mut specs {
+            let (params_path, trained) = default_params(&root, &spec.dir);
+            if !trained {
+                eprintln!("warning: serving '{}' with untrained init params", spec.name);
+            }
+            spec.params_path = Some(params_path);
+        }
+        router.register(
+            photonic_bayes::coordinator::service::EngineHandle::spawn_multi(
+                &root,
+                specs,
+                make_engine_cfg()?,
+                make_svc_cfg()?,
+            )?,
+        );
+    } else {
+        for ds in datasets.split(',') {
+            let (params_path, trained) = default_params(&root, ds);
+            if !trained {
+                eprintln!("warning: serving '{ds}' with untrained init params");
+            }
+            router.register(photonic_bayes::coordinator::service::EngineHandle::spawn(
+                &root,
+                ds,
+                Some(&params_path),
+                make_engine_cfg()?,
+                make_svc_cfg()?,
+            )?);
+        }
     }
     let opts = ServerOptions {
         addr: args.get_or("addr", &file.get_or("server", "addr", "127.0.0.1:7878")),
@@ -653,7 +714,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_classify(args: &Args) -> Result<()> {
-    let dataset = args.get_or("dataset", "digits");
+    // `--model` is the modern name for the target; `--dataset` still works
+    let dataset = match args.get("model") {
+        Some(m) => m.to_string(),
+        None => args.get_or("dataset", "digits"),
+    };
     let split = args.get_or("split", "test");
     let index = args.get_usize("index", 0)?;
     let ds = load_split(&dataset, &split)?;

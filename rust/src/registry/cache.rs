@@ -1,0 +1,263 @@
+//! Byte-budgeted LRU over per-model backend state.
+//!
+//! [`BankCache`] is the generic policy core (pure, unit-testable);
+//! [`ModelCache`] wires it to [`RegistryMetrics`] with the
+//! checkout/commit discipline the backends drive their program switches
+//! through.  `T` is whatever a backend considers "one model's resident
+//! state" — for the photonic backend the machine + shards + prefetched
+//! weight bank triple; dropping an entry joins that model's background
+//! entropy producers.
+
+use std::sync::Arc;
+
+use super::metrics::RegistryMetrics;
+
+struct Entry<T> {
+    key: String,
+    value: T,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// LRU keyed by model name under a byte budget.  Entries whose combined
+/// size exceeds the budget are evicted least-recently-used first; a budget
+/// of 0 caches nothing (every switch rebuilds cold), a budget of
+/// `usize::MAX` never evicts.
+pub struct BankCache<T> {
+    entries: Vec<Entry<T>>,
+    budget_bytes: usize,
+    tick: u64,
+}
+
+impl<T> BankCache<T> {
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            budget_bytes,
+            tick: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    /// Remove and return `key`'s state (cache hit); `None` is a miss.
+    pub fn take(&mut self, key: &str) -> Option<(T, usize)> {
+        let idx = self.entries.iter().position(|e| e.key == key)?;
+        let e = self.entries.swap_remove(idx);
+        Some((e.value, e.bytes))
+    }
+
+    /// Insert (or replace) `key`, then evict least-recently-used entries
+    /// until the cache fits its budget.  The just-inserted entry is the
+    /// most recent, but is itself evicted if it alone exceeds the budget
+    /// (budget 0 == cache nothing).  Returns the evicted entries so the
+    /// caller can account for them before dropping.
+    pub fn insert(&mut self, key: String, value: T, bytes: usize) -> Vec<(String, T, usize)> {
+        if let Some(idx) = self.entries.iter().position(|e| e.key == key) {
+            self.entries.swap_remove(idx);
+        }
+        self.tick += 1;
+        self.entries.push(Entry {
+            key,
+            value,
+            bytes,
+            last_used: self.tick,
+        });
+        let mut evicted = Vec::new();
+        while self.resident_bytes() > self.budget_bytes && !self.entries.is_empty() {
+            let idx = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .unwrap();
+            let e = self.entries.swap_remove(idx);
+            evicted.push((e.key, e.value, e.bytes));
+        }
+        evicted
+    }
+}
+
+/// Per-backend model cache: the active model's state lives *in* the
+/// backend's working fields; everything else sits in the LRU.  Backends
+/// drive switches as `checkout(model)` (take cached state, recording
+/// hit/miss/switch) followed by `commit(model, bytes, prev)` (stash the
+/// previous active state, evict over budget, publish residency).
+pub struct ModelCache<T> {
+    active: Option<(String, usize)>,
+    lru: BankCache<T>,
+    pub metrics: Arc<RegistryMetrics>,
+}
+
+impl<T> ModelCache<T> {
+    pub fn new(budget_bytes: usize, metrics: Arc<RegistryMetrics>) -> Self {
+        metrics.set_budget(budget_bytes as u64);
+        // a fresh cache starts empty: any prior residency claims (e.g. from
+        // a backend replaced by the entropy-health fallback) are void
+        metrics.reset_residency();
+        Self {
+            active: None,
+            lru: BankCache::new(budget_bytes),
+            metrics,
+        }
+    }
+
+    pub fn active_model(&self) -> Option<&str> {
+        self.active.as_ref().map(|(n, _)| n.as_str())
+    }
+
+    pub fn is_active(&self, model: &str) -> bool {
+        self.active_model() == Some(model)
+    }
+
+    /// Begin a switch to `model`: record it, and return the cached state
+    /// on a hit (`None` = miss, the caller rebuilds from seed).
+    pub fn checkout(&mut self, model: &str) -> Option<(T, usize)> {
+        self.metrics.record_switch(model);
+        match self.lru.take(model) {
+            Some(hit) => {
+                self.metrics.record_hit(model);
+                Some(hit)
+            }
+            None => {
+                self.metrics.record_miss(model);
+                None
+            }
+        }
+    }
+
+    /// Finish a switch: stash the previous active state (if any) into the
+    /// LRU, evicting over budget, and mark `model` active at `bytes`.
+    /// Evicted state is dropped here (joining any producers it owns).
+    pub fn commit(&mut self, model: &str, bytes: usize, prev: Option<T>) {
+        if let Some((old_name, old_bytes)) = self.active.take() {
+            if let Some(state) = prev {
+                for (name, state, _) in self.lru.insert(old_name.clone(), state, old_bytes) {
+                    drop(state);
+                    self.metrics.record_eviction(&name);
+                }
+                if self.lru.contains(&old_name) {
+                    self.metrics.mark_resident(&old_name, old_bytes as u64);
+                }
+            }
+        }
+        self.active = Some((model.to_string(), bytes));
+        self.metrics.mark_active(model, bytes as u64);
+        self.metrics
+            .set_resident_bytes((self.lru.resident_bytes() + bytes) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_takes_hits_and_misses() {
+        let mut c: BankCache<u32> = BankCache::new(1000);
+        assert!(c.insert("a".into(), 1, 100).is_empty());
+        assert!(c.insert("b".into(), 2, 100).is_empty());
+        assert_eq!(c.take("a"), Some((1, 100)));
+        assert_eq!(c.take("a"), None, "take removes");
+        assert!(c.contains("b") && !c.contains("a"));
+        assert_eq!(c.resident_bytes(), 100);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let mut c: BankCache<&'static str> = BankCache::new(250);
+        c.insert("a".into(), "A", 100);
+        c.insert("b".into(), "B", 100);
+        // touch a by re-inserting it (take + insert is the real pattern)
+        let (va, ba) = c.take("a").unwrap();
+        c.insert("a".into(), va, ba);
+        // c pushes over budget: b is now the LRU entry
+        let ev = c.insert("c".into(), "C", 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].0, "b");
+        assert!(c.contains("a") && c.contains("c"));
+    }
+
+    #[test]
+    fn zero_budget_caches_nothing() {
+        let mut c: BankCache<u8> = BankCache::new(0);
+        let ev = c.insert("a".into(), 7, 64);
+        assert_eq!(ev.len(), 1, "entry immediately evicted");
+        assert_eq!(ev[0].0, "a");
+        assert!(c.is_empty() && c.resident_bytes() == 0);
+    }
+
+    #[test]
+    fn unbounded_budget_never_evicts() {
+        let mut c: BankCache<u8> = BankCache::new(usize::MAX);
+        for i in 0..16u8 {
+            assert!(c.insert(format!("m{i}"), i, 1 << 20).is_empty());
+        }
+        assert_eq!(c.len(), 16);
+    }
+
+    #[test]
+    fn model_cache_checkout_commit_accounting() {
+        let m = Arc::new(RegistryMetrics::default());
+        let mut c: ModelCache<u32> = ModelCache::new(1000, m.clone());
+        assert!(c.active_model().is_none());
+
+        // first activation: miss, nothing to stash
+        assert!(c.checkout("a").is_none());
+        c.commit("a", 100, None);
+        assert!(c.is_active("a"));
+
+        // switch to b: miss; a goes resident
+        assert!(c.checkout("b").is_none());
+        c.commit("b", 100, Some(1));
+        let s = m.snapshot();
+        assert_eq!(s.switches, 2);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.resident_bytes, 200, "a cached + b active");
+
+        // back to a: hit
+        let hit = c.checkout("a");
+        assert_eq!(hit, Some((1, 100)));
+        c.commit("a", 100, Some(2));
+        let s = m.snapshot();
+        assert_eq!(s.hits, 1);
+        assert!(c.is_active("a"));
+    }
+
+    #[test]
+    fn model_cache_zero_budget_reports_evictions() {
+        let m = Arc::new(RegistryMetrics::default());
+        let mut c: ModelCache<u32> = ModelCache::new(0, m.clone());
+        assert!(c.checkout("a").is_none());
+        c.commit("a", 50, None);
+        assert!(c.checkout("b").is_none());
+        c.commit("b", 50, Some(1)); // a evicted immediately
+        assert!(c.checkout("a").is_none(), "a was not retained");
+        c.commit("a", 50, Some(2));
+        let s = m.snapshot();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 3);
+        assert!(s.evictions >= 2);
+        assert_eq!(s.resident_bytes, 50, "only the active model");
+    }
+}

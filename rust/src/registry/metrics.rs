@@ -1,0 +1,235 @@
+//! Residency accounting for the model registry: hit/miss/switch/eviction
+//! counters plus a per-model scorecard, shared between the backend (which
+//! drives the cache) and the serving layer (which reports on `/info`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Where one model's banked state currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Residency {
+    /// Loaded in the backend's working slots, serving requests.
+    Active,
+    /// Parked in the LRU cache; a switch back is a hit.
+    Resident,
+    /// Was cached, got evicted under the byte budget; next switch rebuilds.
+    Evicted,
+    /// Registered, never activated.
+    #[default]
+    Cold,
+}
+
+impl Residency {
+    pub fn name(self) -> &'static str {
+        match self {
+            Residency::Active => "active",
+            Residency::Resident => "resident",
+            Residency::Evicted => "evicted",
+            Residency::Cold => "cold",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct ModelCard {
+    state: Residency,
+    bytes: u64,
+    hits: u64,
+    misses: u64,
+    switches_in: u64,
+}
+
+/// Shared counters.  Atomics for the hot counters; the per-model cards sit
+/// behind a mutex taken only on switches and `/info` snapshots, never on
+/// the sampling path.
+#[derive(Debug, Default)]
+pub struct RegistryMetrics {
+    budget_bytes: AtomicU64,
+    resident_bytes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    switches: AtomicU64,
+    evictions: AtomicU64,
+    cards: Mutex<BTreeMap<String, ModelCard>>,
+}
+
+impl RegistryMetrics {
+    /// Pre-register a model so `/info` lists it (state `cold`) before its
+    /// first request.
+    pub fn register(&self, model: &str) {
+        self.cards.lock().unwrap().entry(model.into()).or_default();
+    }
+
+    pub fn set_budget(&self, bytes: u64) {
+        self.budget_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn set_resident_bytes(&self, bytes: u64) {
+        self.resident_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// A replacement cache starts empty: every card that claimed residency
+    /// goes back to cold (used when the entropy-health fallback swaps the
+    /// backend out from under the registry).
+    pub fn reset_residency(&self) {
+        self.resident_bytes.store(0, Ordering::Relaxed);
+        for card in self.cards.lock().unwrap().values_mut() {
+            card.state = Residency::Cold;
+            card.bytes = 0;
+        }
+    }
+
+    pub fn record_switch(&self, model: &str) {
+        self.switches.fetch_add(1, Ordering::Relaxed);
+        let mut cards = self.cards.lock().unwrap();
+        cards.entry(model.into()).or_default().switches_in += 1;
+    }
+
+    pub fn record_hit(&self, model: &str) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        let mut cards = self.cards.lock().unwrap();
+        cards.entry(model.into()).or_default().hits += 1;
+    }
+
+    pub fn record_miss(&self, model: &str) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut cards = self.cards.lock().unwrap();
+        cards.entry(model.into()).or_default().misses += 1;
+    }
+
+    pub fn record_eviction(&self, model: &str) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        let mut cards = self.cards.lock().unwrap();
+        let card = cards.entry(model.into()).or_default();
+        card.state = Residency::Evicted;
+        card.bytes = 0;
+    }
+
+    pub fn mark_active(&self, model: &str, bytes: u64) {
+        let mut cards = self.cards.lock().unwrap();
+        let card = cards.entry(model.into()).or_default();
+        card.state = Residency::Active;
+        card.bytes = bytes;
+    }
+
+    pub fn mark_resident(&self, model: &str, bytes: u64) {
+        let mut cards = self.cards.lock().unwrap();
+        let card = cards.entry(model.into()).or_default();
+        card.state = Residency::Resident;
+        card.bytes = bytes;
+    }
+
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let cards = self.cards.lock().unwrap();
+        RegistrySnapshot {
+            budget_bytes: self.budget_bytes.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            switches: self.switches.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            models: cards
+                .iter()
+                .map(|(name, c)| ModelCardSnapshot {
+                    model: name.clone(),
+                    state: c.state,
+                    bytes: c.bytes,
+                    hits: c.hits,
+                    misses: c.misses,
+                    switches_in: c.switches_in,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time view for `/info` (models sorted by name — `cards` is a
+/// `BTreeMap`).
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub budget_bytes: u64,
+    pub resident_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub switches: u64,
+    pub evictions: u64,
+    pub models: Vec<ModelCardSnapshot>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCardSnapshot {
+    pub model: String,
+    pub state: Residency,
+    pub bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub switches_in: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_cards_track_a_switch_sequence() {
+        let m = RegistryMetrics::default();
+        m.register("digits");
+        m.register("blood");
+        m.set_budget(1 << 20);
+
+        m.record_switch("digits");
+        m.record_miss("digits");
+        m.mark_active("digits", 4096);
+
+        m.record_switch("blood");
+        m.record_miss("blood");
+        m.mark_resident("digits", 4096);
+        m.mark_active("blood", 4096);
+        m.set_resident_bytes(8192);
+
+        m.record_switch("digits");
+        m.record_hit("digits");
+        m.mark_resident("blood", 4096);
+        m.mark_active("digits", 4096);
+
+        let s = m.snapshot();
+        assert_eq!(s.switches, 3);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.budget_bytes, 1 << 20);
+        assert_eq!(s.models.len(), 2);
+        // BTreeMap: sorted by name
+        assert_eq!(s.models[0].model, "blood");
+        assert_eq!(s.models[0].state, Residency::Resident);
+        assert_eq!(s.models[1].model, "digits");
+        assert_eq!(s.models[1].state, Residency::Active);
+        assert_eq!(s.models[1].hits, 1);
+    }
+
+    #[test]
+    fn eviction_marks_card_and_reset_goes_cold() {
+        let m = RegistryMetrics::default();
+        m.mark_resident("a", 100);
+        m.record_eviction("a");
+        let s = m.snapshot();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.models[0].state, Residency::Evicted);
+        assert_eq!(s.models[0].bytes, 0);
+
+        m.mark_active("a", 100);
+        m.set_resident_bytes(100);
+        m.reset_residency();
+        let s = m.snapshot();
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.models[0].state, Residency::Cold);
+    }
+
+    #[test]
+    fn residency_names_are_wire_stable() {
+        assert_eq!(Residency::Active.name(), "active");
+        assert_eq!(Residency::Resident.name(), "resident");
+        assert_eq!(Residency::Evicted.name(), "evicted");
+        assert_eq!(Residency::Cold.name(), "cold");
+    }
+}

@@ -1,0 +1,253 @@
+//! Program registry: virtualizing one photonic machine across models.
+//!
+//! The paper's machine is a single shared analog substrate; production use
+//! means one machine serving many models.  This module provides the naming
+//! and accounting layer for that:
+//!
+//! - [`ProgramRegistry`] — an ordered set of named checkpoints
+//!   ([`ModelCheckpoint`]: artifacts + parameter store), loaded from the
+//!   same on-disk layout `runtime/artifact.rs` defines for one model.
+//! - [`ProgramKey`] — the identity a backend programs against: model name
+//!   plus the model-mixed seed and the per-model DAC/ADC scales.  Streams
+//!   reseed deterministically per `(model, generation)`, so the bitwise
+//!   replay contract holds per `(model, seed, threads, prefetch, rule)`.
+//! - [`BankCache`] / [`ModelCache`] — byte-budgeted LRU over per-model
+//!   machine + prefetched weight-plane bank state.  Switching models swaps
+//!   cache entries instead of destroying them (generalizing the
+//!   generation-keyed invalidation: a generation retires a *model's own*
+//!   stale banks; the LRU retires *other models'* banks only under memory
+//!   pressure).
+//! - [`RegistryMetrics`] — residency + hit/miss/switch/eviction counters
+//!   surfaced on `/info` next to the entropy-health scorecards.
+//!
+//! Replay contract under the cache: a cache **hit** continues the model's
+//! entropy streams exactly where they left off, so a multi-model engine
+//! behaves bitwise like a single-model engine that was never switched away
+//! from.  An **eviction + reload** rebuilds the model's machine from its
+//! seed, replaying the stream from the start — bitwise identical to a cold
+//! engine with the same `(model, seed, threads, prefetch)`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::entropy::xoshiro::splitmix64;
+use crate::runtime::{ModelArtifacts, ParamStore};
+
+mod cache;
+mod metrics;
+
+pub use cache::{BankCache, ModelCache};
+pub use metrics::{ModelCardSnapshot, RegistryMetrics, RegistrySnapshot, Residency};
+
+/// Mix a model name into a base seed (FNV-1a over the name, finalized with
+/// splitmix64).  Distinct models get decorrelated stream seed spaces even
+/// when the engine-level seed is shared; the same `(base, name)` pair is
+/// stable across runs, which is what the per-model replay contract needs.
+pub fn model_seed(base: u64, model: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut st = base ^ h.rotate_left(17);
+    splitmix64(&mut st)
+}
+
+/// The identity a backend program-switches against.  `seed` is already
+/// model-mixed (see [`model_seed`]); the DAC/ADC scales ride along because
+/// each checkpoint's meta pins its own quantization ranges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramKey {
+    pub model: String,
+    pub seed: u64,
+    pub scale_dac: f32,
+    pub scale_adc: f32,
+}
+
+impl ProgramKey {
+    pub fn new(model: &str, base_seed: u64, scale_dac: f32, scale_adc: f32) -> Self {
+        Self {
+            model: model.to_string(),
+            seed: model_seed(base_seed, model),
+            scale_dac,
+            scale_adc,
+        }
+    }
+}
+
+/// Typed "no such model" error, surfaced through the wire protocol as
+/// `"code":"unknown_model"`.
+#[derive(Debug, Clone)]
+pub struct UnknownModel {
+    pub model: String,
+    pub known: Vec<String>,
+}
+
+impl std::fmt::Display for UnknownModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown model '{}' (have: {:?})",
+            self.model, self.known
+        )
+    }
+}
+
+impl std::error::Error for UnknownModel {}
+
+/// How to find one model's checkpoint on disk.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Serving name (the wire protocol's `model` field).
+    pub name: String,
+    /// Subdirectory under the artifacts root holding `meta.json` etc.
+    pub dir: String,
+    /// Explicit parameter file; `None` picks `theta_trained.bin` if present,
+    /// else the meta's init distributions.
+    pub params_path: Option<PathBuf>,
+}
+
+impl ModelSpec {
+    /// Name-is-directory spec (the `--model a,b` CLI form).
+    pub fn named(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            dir: name.to_string(),
+            params_path: None,
+        }
+    }
+}
+
+/// One named, fully-loaded checkpoint: artifacts (meta + compiled stage
+/// programs) and the variational parameter store.
+pub struct ModelCheckpoint {
+    pub name: String,
+    pub arts: ModelArtifacts,
+    pub params: ParamStore,
+}
+
+impl ModelCheckpoint {
+    pub fn load(artifacts_root: &Path, spec: &ModelSpec) -> Result<Self> {
+        let dir = artifacts_root.join(&spec.dir);
+        let arts = ModelArtifacts::load(&dir)
+            .with_context(|| format!("loading model '{}' from {}", spec.name, dir.display()))?;
+        let params = match &spec.params_path {
+            Some(p) => ParamStore::load_bin(&arts.meta, p)
+                .with_context(|| format!("model '{}' params {}", spec.name, p.display()))?,
+            None => {
+                let trained = dir.join("theta_trained.bin");
+                if trained.exists() {
+                    ParamStore::load_bin(&arts.meta, &trained)?
+                } else {
+                    ParamStore::load_init(&arts.meta, &dir)?
+                }
+            }
+        };
+        Ok(Self {
+            name: spec.name.clone(),
+            arts,
+            params,
+        })
+    }
+}
+
+impl std::fmt::Debug for ModelCheckpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelCheckpoint")
+            .field("name", &self.name)
+            .field("dataset", &self.arts.meta.dataset)
+            .finish()
+    }
+}
+
+/// Ordered set of named checkpoints.  The first model is the engine's
+/// default (requests without a `model` field go there); order otherwise
+/// only affects error listings.
+#[derive(Debug, Default)]
+pub struct ProgramRegistry {
+    pub models: Vec<ModelCheckpoint>,
+}
+
+impl ProgramRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load every spec from `artifacts_root`.  Duplicate names are an
+    /// error — the registry is the namespace the wire protocol routes on.
+    pub fn load(artifacts_root: &Path, specs: &[ModelSpec]) -> Result<Self> {
+        let mut reg = Self::new();
+        for spec in specs {
+            reg.push(ModelCheckpoint::load(artifacts_root, spec)?)?;
+        }
+        Ok(reg)
+    }
+
+    pub fn push(&mut self, ckpt: ModelCheckpoint) -> Result<()> {
+        if self.models.iter().any(|m| m.name == ckpt.name) {
+            return Err(anyhow!("duplicate model name '{}' in registry", ckpt.name));
+        }
+        self.models.push(ckpt);
+        Ok(())
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_seed_is_stable_and_separates_models() {
+        let a = model_seed(42, "digits");
+        assert_eq!(a, model_seed(42, "digits"), "same inputs, same seed");
+        assert_ne!(a, model_seed(42, "blood"), "name separates");
+        assert_ne!(a, model_seed(43, "digits"), "base seed separates");
+        // not the identity on the base seed
+        assert_ne!(a, 42);
+    }
+
+    #[test]
+    fn program_key_mixes_model_into_seed() {
+        let k1 = ProgramKey::new("digits", 7, 1.0, 2.0);
+        let k2 = ProgramKey::new("blood", 7, 1.0, 2.0);
+        assert_ne!(k1.seed, k2.seed);
+        assert_eq!(k1.seed, model_seed(7, "digits"));
+        assert_eq!(k1.scale_dac, 1.0);
+        assert_eq!(k2.scale_adc, 2.0);
+    }
+
+    #[test]
+    fn unknown_model_formats_and_downcasts() {
+        let err = UnknownModel {
+            model: "nope".into(),
+            known: vec!["digits".into()],
+        };
+        let any: anyhow::Error = err.into();
+        let back = any.downcast_ref::<UnknownModel>().expect("typed error");
+        assert_eq!(back.model, "nope");
+        assert!(format!("{any}").contains("unknown model 'nope'"));
+    }
+
+    #[test]
+    fn empty_registry_and_named_spec() {
+        let reg = ProgramRegistry::new();
+        assert!(reg.is_empty() && reg.len() == 0 && reg.names().is_empty());
+        let spec = ModelSpec::named("digits");
+        assert_eq!(spec.name, "digits");
+        assert_eq!(spec.dir, "digits");
+        assert!(spec.params_path.is_none());
+    }
+}

@@ -46,7 +46,15 @@ impl ModelMeta {
     pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("reading {}/meta.json", dir.display()))?;
-        let j = json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        Self::from_json(&text).with_context(|| format!("{}/meta.json", dir.display()))
+    }
+
+    /// Parse + validate a `meta.json` document.  The layout check runs here
+    /// — at the trust boundary — so a hostile or corrupted meta cannot push
+    /// out-of-range or overlapping parameter regions into the slicing code
+    /// downstream (`ParamStore` indexes the flat vector with these).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
         let num = |k: &str| -> Result<usize> {
             j.req(k)
                 .map_err(|e| anyhow!(e))?
@@ -107,7 +115,7 @@ impl ModelMeta {
             .iter()
             .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
             .collect();
-        Ok(Self {
+        let meta = Self {
             dataset: j
                 .req("dataset")
                 .map_err(|e| anyhow!(e))?
@@ -136,7 +144,69 @@ impl ModelMeta {
             full_batches: bvec("full")?,
             param_layout: layout,
             artifact_files,
-        })
+        };
+        meta.validate_layout()?;
+        Ok(meta)
+    }
+
+    /// Reject metas whose `param_layout` cannot be indexed safely against
+    /// `num_params`: duplicate region names, regions whose `offset + size`
+    /// overflows or exceeds the parameter count, shape/size mismatches, and
+    /// overlapping regions.
+    fn validate_layout(&self) -> Result<()> {
+        for s in &self.param_layout {
+            let end = s
+                .offset
+                .checked_add(s.size)
+                .ok_or_else(|| anyhow!("param '{}': offset + size overflows", s.name))?;
+            if end > self.num_params {
+                return Err(anyhow!(
+                    "param '{}': region [{}, {}) exceeds num_params {}",
+                    s.name,
+                    s.offset,
+                    end,
+                    self.num_params
+                ));
+            }
+            let shape_elems: usize = s.shape.iter().try_fold(1usize, |a, &d| {
+                a.checked_mul(d)
+                    .ok_or_else(|| anyhow!("param '{}': shape product overflows", s.name))
+            })?;
+            if shape_elems != s.size {
+                return Err(anyhow!(
+                    "param '{}': shape {:?} has {} elements but size = {}",
+                    s.name,
+                    s.shape,
+                    shape_elems,
+                    s.size
+                ));
+            }
+        }
+        // overlap + duplicate-name checks on a sorted view: any two regions
+        // colliding appear adjacent after sorting by offset
+        let mut sorted: Vec<&ParamSpec> = self.param_layout.iter().collect();
+        sorted.sort_by_key(|s| s.offset);
+        for w in sorted.windows(2) {
+            if w[0].offset + w[0].size > w[1].offset {
+                return Err(anyhow!(
+                    "params '{}' and '{}' overlap ([{}, {}) vs [{}, {}))",
+                    w[0].name,
+                    w[1].name,
+                    w[0].offset,
+                    w[0].offset + w[0].size,
+                    w[1].offset,
+                    w[1].offset + w[1].size
+                ));
+            }
+        }
+        let mut names: Vec<&str> = self.param_layout.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(anyhow!("duplicate param name '{}' in layout", w[0]));
+            }
+        }
+        Ok(())
     }
 
     pub fn param(&self, name: &str) -> Option<&ParamSpec> {
@@ -233,6 +303,80 @@ mod tests {
 
     fn have_artifacts() -> bool {
         artifacts_root().join("digits/meta.json").exists()
+    }
+
+    /// Minimal meta document with a caller-supplied `param_layout` — the
+    /// hostile-meta tests mutate only the layout.
+    fn meta_json(num_params: usize, layout: &str) -> String {
+        format!(
+            r#"{{
+              "dataset": "t", "in_channels": 1, "n_classes": 2, "img_hw": 4,
+              "prob_ch": 1, "prob_hw": 2, "num_taps": 9, "feat_ch": 1,
+              "num_params": {num_params},
+              "scale_dac": 4.0, "scale_adc": 8.0,
+              "prior_sigma": 0.1, "min_rel_sigma": 0.01,
+              "batch_sizes": {{"train": 8, "pre": [1], "post": [1], "full": [1]}},
+              "param_layout": [{layout}],
+              "artifacts": {{}}
+            }}"#
+        )
+    }
+
+    fn spec(name: &str, offset: usize, size: usize) -> String {
+        format!(r#"{{"name": "{name}", "shape": [{size}], "offset": {offset}, "size": {size}}}"#)
+    }
+
+    #[test]
+    fn valid_layout_passes_validation() {
+        let text = meta_json(10, &format!("{}, {}", spec("a", 0, 4), spec("b", 4, 6)));
+        let meta = ModelMeta::from_json(&text).unwrap();
+        assert_eq!(meta.param_layout.len(), 2);
+        assert_eq!(meta.param("b").unwrap().offset, 4);
+        // a benign gap between regions is allowed (only overlap is hostile)
+        let gappy = meta_json(20, &format!("{}, {}", spec("a", 0, 4), spec("b", 10, 6)));
+        assert!(ModelMeta::from_json(&gappy).is_ok());
+    }
+
+    #[test]
+    fn rejects_out_of_range_region() {
+        let text = meta_json(8, &spec("a", 4, 6));
+        let err = ModelMeta::from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("exceeds num_params"), "{err}");
+    }
+
+    #[test]
+    fn rejects_offset_size_overflow() {
+        let text = meta_json(8, &spec("a", usize::MAX, 2));
+        let err = ModelMeta::from_json(&text).unwrap_err();
+        // the huge offset dies either in checked_add or the range check —
+        // both are rejections, never a wrapped index
+        assert!(
+            err.to_string().contains("overflow") || err.to_string().contains("exceeds"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_overlapping_regions() {
+        // out-of-order offsets with a 2-element collision
+        let text = meta_json(20, &format!("{}, {}", spec("b", 6, 6), spec("a", 0, 8)));
+        let err = ModelMeta::from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_region_names() {
+        let text = meta_json(10, &format!("{}, {}", spec("a", 0, 4), spec("a", 4, 4)));
+        let err = ModelMeta::from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("duplicate param name"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_size_mismatch() {
+        let lying =
+            r#"{"name": "a", "shape": [2, 3], "offset": 0, "size": 4}"#.to_string();
+        let err = ModelMeta::from_json(&meta_json(10, &lying)).unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
     }
 
     #[test]

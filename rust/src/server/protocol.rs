@@ -5,6 +5,7 @@ use anyhow::{anyhow, Result};
 use crate::bnn::Decision;
 use crate::coordinator::engine::ClassifyResult;
 use crate::entropy::health::Scorecard;
+use crate::registry::RegistrySnapshot;
 use crate::sampler::RequestBudget;
 use crate::util::json::{self, Json};
 
@@ -21,7 +22,9 @@ pub const MAX_IMAGE_LEN: usize = 1 << 18;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Classify {
-        dataset: String,
+        /// Target model name.  The wire field is `model`; `dataset` is
+        /// accepted as a legacy alias (`model` wins when both appear).
+        model: String,
         image: Vec<f32>,
         /// Optional per-request sample budget (`max_samples` /
         /// `target_confidence` fields) — validated here at the protocol
@@ -38,11 +41,12 @@ pub fn parse_request(line: &str) -> Result<Request> {
     let j = json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
     match j.req("op").map_err(|e| anyhow!(e))?.as_str() {
         Some("classify") => {
-            let dataset = j
-                .req("dataset")
-                .map_err(|e| anyhow!(e))?
+            let model = j
+                .get("model")
+                .or_else(|| j.get("dataset"))
+                .ok_or_else(|| anyhow!("missing required field 'model'"))?
                 .as_str()
-                .ok_or_else(|| anyhow!("dataset must be a string"))?
+                .ok_or_else(|| anyhow!("model must be a string"))?
                 .to_string();
             let image: Vec<f32> = j
                 .req("image")
@@ -61,7 +65,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             let budget = parse_budget(&j)?;
             Ok(Request::Classify {
-                dataset,
+                model,
                 image,
                 budget,
             })
@@ -168,17 +172,35 @@ pub fn encode_error_into(msg: &str, out: &mut String) {
     o.write_compact(out);
 }
 
-/// Encode the `info` response.  `health` carries per-dataset entropy-health
-/// scorecards (see [`crate::coordinator::Router::health_snapshot`]); pass an
-/// empty slice when no engine runs a monitor and the `entropy_health` object
-/// is omitted entirely.
-pub fn encode_info(datasets: &[&str], health: &[(String, Vec<Scorecard>)]) -> String {
+/// Append-encode an error response carrying a machine-readable `code`
+/// (e.g. `"unknown_model"`) so clients can dispatch without parsing the
+/// human-readable message.
+pub fn encode_error_coded_into(code: &str, msg: &str, out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("code", Json::Str(code.into()));
+    o.set("error", Json::Str(msg.into()));
+    o.write_compact(out);
+}
+
+/// Encode the `info` response.  `models` lists every servable model name
+/// (emitted under both `models` and the legacy `datasets` key); `health`
+/// carries per-dataset entropy-health scorecards (see
+/// [`crate::coordinator::Router::health_snapshot`]) and `registry` the
+/// per-engine model-registry residency snapshots (see
+/// [`crate::coordinator::Router::registry_snapshot`]) — pass empty slices
+/// and the respective object is omitted entirely.
+pub fn encode_info(
+    models: &[&str],
+    health: &[(String, Vec<Scorecard>)],
+    registry: &[(String, RegistrySnapshot)],
+) -> String {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(true));
-    o.set(
-        "datasets",
-        Json::Arr(datasets.iter().map(|d| Json::Str(d.to_string())).collect()),
-    );
+    let names = Json::Arr(models.iter().map(|d| Json::Str(d.to_string())).collect());
+    o.set("models", names.clone());
+    // legacy alias kept for pre-multi-model clients
+    o.set("datasets", names);
     o.set("version", Json::Str(crate::version().into()));
     if !health.is_empty() {
         let mut h = Json::obj();
@@ -190,7 +212,46 @@ pub fn encode_info(datasets: &[&str], health: &[(String, Vec<Scorecard>)]) -> St
         }
         o.set("entropy_health", h);
     }
+    if !registry.is_empty() {
+        let mut r = Json::obj();
+        for (engine, snap) in registry {
+            r.set(engine, encode_registry_snapshot(snap));
+        }
+        o.set("registry", r);
+    }
     o.to_string_compact()
+}
+
+/// One engine's model-registry snapshot as a JSON object: cache-wide
+/// residency/budget bytes and hit/miss/switch/eviction counters, plus a
+/// per-model card array (state, resident bytes, per-model counters).
+fn encode_registry_snapshot(s: &RegistrySnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("budget_bytes", Json::Num(s.budget_bytes as f64));
+    o.set("resident_bytes", Json::Num(s.resident_bytes as f64));
+    o.set("hits", Json::Num(s.hits as f64));
+    o.set("misses", Json::Num(s.misses as f64));
+    o.set("switches", Json::Num(s.switches as f64));
+    o.set("evictions", Json::Num(s.evictions as f64));
+    o.set(
+        "models",
+        Json::Arr(
+            s.models
+                .iter()
+                .map(|c| {
+                    let mut m = Json::obj();
+                    m.set("model", Json::Str(c.model.clone()));
+                    m.set("state", Json::Str(c.state.name().into()));
+                    m.set("bytes", Json::Num(c.bytes as f64));
+                    m.set("hits", Json::Num(c.hits as f64));
+                    m.set("misses", Json::Num(c.misses as f64));
+                    m.set("switches_in", Json::Num(c.switches_in as f64));
+                    m
+                })
+                .collect(),
+        ),
+    );
+    o
 }
 
 /// One `(shard, stream)` scorecard as a JSON object.
@@ -214,19 +275,15 @@ pub fn encode_pong() -> String {
 }
 
 /// Client-side: encode a classify request.
-pub fn encode_classify(dataset: &str, image: &[f32]) -> String {
-    encode_classify_with_budget(dataset, image, &RequestBudget::default())
+pub fn encode_classify(model: &str, image: &[f32]) -> String {
+    encode_classify_with_budget(model, image, &RequestBudget::default())
 }
 
 /// Client-side: encode a classify request carrying budget overrides.
-pub fn encode_classify_with_budget(
-    dataset: &str,
-    image: &[f32],
-    budget: &RequestBudget,
-) -> String {
+pub fn encode_classify_with_budget(model: &str, image: &[f32], budget: &RequestBudget) -> String {
     let mut o = Json::obj();
     o.set("op", Json::Str("classify".into()));
-    o.set("dataset", Json::Str(dataset.into()));
+    o.set("model", Json::Str(model.into()));
     o.set("image", Json::arr_f32(image));
     if let Some(m) = budget.max_samples {
         o.set("max_samples", Json::Num(m as f64));
@@ -245,18 +302,39 @@ mod tests {
     #[test]
     fn parse_classify_roundtrip() {
         let line = encode_classify("digits", &[0.0, 0.5, 1.0]);
+        assert!(line.contains("\"model\""), "{line}");
         match parse_request(&line).unwrap() {
             Request::Classify {
-                dataset,
+                model,
                 image,
                 budget,
             } => {
-                assert_eq!(dataset, "digits");
+                assert_eq!(model, "digits");
                 assert_eq!(image, vec![0.0, 0.5, 1.0]);
                 assert!(budget.is_default());
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn dataset_is_a_legacy_alias_and_model_wins() {
+        // pre-multi-model clients send `dataset`
+        let legacy = "{\"op\":\"classify\",\"dataset\":\"blood\",\"image\":[1]}";
+        match parse_request(legacy).unwrap() {
+            Request::Classify { model, .. } => assert_eq!(model, "blood"),
+            other => panic!("{other:?}"),
+        }
+        // when both appear, the modern field wins
+        let both = "{\"op\":\"classify\",\"model\":\"digits\",\"dataset\":\"blood\",\"image\":[1]}";
+        match parse_request(both).unwrap() {
+            Request::Classify { model, .. } => assert_eq!(model, "digits"),
+            other => panic!("{other:?}"),
+        }
+        // neither is an error naming the missing field
+        let err =
+            parse_request("{\"op\":\"classify\",\"image\":[1]}").unwrap_err();
+        assert!(err.to_string().contains("model"), "{err}");
     }
 
     #[test]
@@ -342,10 +420,14 @@ mod tests {
     #[test]
     fn encode_info_reports_health_scorecards() {
         // no monitors -> no entropy_health object at all
-        let plain = encode_info(&["digits"], &[]);
+        let plain = encode_info(&["digits"], &[], &[]);
         let j = crate::util::json::parse(&plain).unwrap();
         assert!(j.get("entropy_health").is_none());
+        assert!(j.get("registry").is_none());
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        // model list appears under both the modern and the legacy key
+        assert_eq!(j.get("models").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("datasets").unwrap().as_arr().unwrap().len(), 1);
 
         let card = Scorecard {
             shard: 1,
@@ -358,7 +440,7 @@ mod tests {
             serial_corr: 0.6,
             degraded: true,
         };
-        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])]);
+        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[]);
         let j = crate::util::json::parse(&line).unwrap();
         let cards = j
             .get("entropy_health")
@@ -382,5 +464,63 @@ mod tests {
         let j = crate::util::json::parse(&encode_error("boom")).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn coded_error_carries_machine_readable_code() {
+        let mut s = String::new();
+        encode_error_coded_into("unknown_model", "unknown model 'x'", &mut s);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("unknown_model"));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("unknown model 'x'"));
+    }
+
+    #[test]
+    fn encode_info_reports_model_registry() {
+        use crate::registry::{ModelCardSnapshot, Residency};
+        let snap = RegistrySnapshot {
+            budget_bytes: 1024,
+            resident_bytes: 512,
+            hits: 3,
+            misses: 2,
+            switches: 5,
+            evictions: 1,
+            models: vec![
+                ModelCardSnapshot {
+                    model: "blood".into(),
+                    state: Residency::Evicted,
+                    bytes: 0,
+                    hits: 1,
+                    misses: 1,
+                    switches_in: 2,
+                },
+                ModelCardSnapshot {
+                    model: "digits".into(),
+                    state: Residency::Active,
+                    bytes: 512,
+                    hits: 2,
+                    misses: 1,
+                    switches_in: 3,
+                },
+            ],
+        };
+        let line = encode_info(
+            &["blood", "digits"],
+            &[],
+            &[("digits".to_string(), snap)],
+        );
+        let j = crate::util::json::parse(&line).unwrap();
+        let r = j.get("registry").unwrap().get("digits").unwrap();
+        assert_eq!(r.get("budget_bytes").unwrap().as_usize(), Some(1024));
+        assert_eq!(r.get("resident_bytes").unwrap().as_usize(), Some(512));
+        assert_eq!(r.get("hits").unwrap().as_usize(), Some(3));
+        assert_eq!(r.get("switches").unwrap().as_usize(), Some(5));
+        let cards = r.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(cards.len(), 2);
+        assert_eq!(cards[0].get("model").unwrap().as_str(), Some("blood"));
+        assert_eq!(cards[0].get("state").unwrap().as_str(), Some("evicted"));
+        assert_eq!(cards[1].get("state").unwrap().as_str(), Some("active"));
+        assert_eq!(cards[1].get("bytes").unwrap().as_usize(), Some(512));
     }
 }

@@ -176,22 +176,35 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
         Ok(Request::Info) => out.push_str(&protocol::encode_info(
             &router.datasets(),
             &router.health_snapshot(),
+            &router.registry_snapshot(),
         )),
         Ok(Request::Classify {
-            dataset,
+            model,
             image,
             budget,
         }) => {
-            let (req, rx) = ClassifyRequest::with_budget(image, budget);
-            match router.route(&dataset, req) {
-                Err(e) => protocol::encode_error_into(&format!("{e}"), out),
+            // the engine thread re-resolves the name against its registry,
+            // so the request carries it even though routing also uses it
+            let (req, rx) = ClassifyRequest::with_model(Some(model.clone()), image, budget);
+            match router.route(&model, req) {
+                Err(e) => encode_routing_error(&e, out),
                 Ok(()) => match rx.recv() {
                     Some(Ok(result)) => protocol::encode_result_into(&result, out),
-                    Some(Err(e)) => protocol::encode_error_into(&format!("{e}"), out),
+                    Some(Err(e)) => encode_routing_error(&e, out),
                     None => protocol::encode_error_into("engine dropped request", out),
                 },
             }
         }
+    }
+}
+
+/// Encode a routing/engine error, surfacing [`UnknownModel`] as a
+/// machine-readable `"code":"unknown_model"` response.
+fn encode_routing_error(e: &anyhow::Error, out: &mut String) {
+    if e.downcast_ref::<crate::registry::UnknownModel>().is_some() {
+        protocol::encode_error_coded_into("unknown_model", &format!("{e}"), out);
+    } else {
+        protocol::encode_error_into(&format!("{e}"), out);
     }
 }
 
@@ -239,19 +252,19 @@ impl Client {
         Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
     }
 
-    pub fn classify(&mut self, dataset: &str, image: &[f32]) -> Result<crate::util::json::Json> {
-        self.call(&protocol::encode_classify(dataset, image))
+    pub fn classify(&mut self, model: &str, image: &[f32]) -> Result<crate::util::json::Json> {
+        self.call(&protocol::encode_classify(model, image))
     }
 
     /// Classify with per-request budget overrides (`max_samples` /
     /// `target_confidence` protocol fields).
     pub fn classify_with_budget(
         &mut self,
-        dataset: &str,
+        model: &str,
         image: &[f32],
         budget: &crate::sampler::RequestBudget,
     ) -> Result<crate::util::json::Json> {
-        self.call(&protocol::encode_classify_with_budget(dataset, image, budget))
+        self.call(&protocol::encode_classify_with_budget(model, image, budget))
     }
 }
 
@@ -324,8 +337,13 @@ mod tests {
         assert!(pong.contains("pong"));
         let info = respond(&router, "{\"op\":\"info\"}");
         assert!(info.contains("datasets"));
+        assert!(info.contains("models"));
+        // unknown model (via either field name) is the typed coded error
         let err = respond(&router, "{\"op\":\"classify\",\"dataset\":\"x\",\"image\":[1]}");
         assert!(err.contains("\"ok\":false"));
+        assert!(err.contains("\"code\":\"unknown_model\""), "{err}");
+        let err = respond(&router, "{\"op\":\"classify\",\"model\":\"x\",\"image\":[1]}");
+        assert!(err.contains("\"code\":\"unknown_model\""), "{err}");
         let bad = respond(&router, "garbage");
         assert!(bad.contains("\"ok\":false"));
     }

@@ -1,0 +1,302 @@
+//! Multi-model serving: bank-churn correctness at the backend boundary and
+//! (artifact-gated) the two-model gateway demo end-to-end.
+//!
+//! The backend-level tests pin the registry's replay contract without any
+//! artifacts: outputs replay bitwise per `(model, seed, threads, prefetch,
+//! rule)` — a cache hit continues the model's streams exactly as if the
+//! engine had never switched away, and an eviction + reload replays from
+//! the model-mixed seed exactly like a cold single-model engine.
+
+use std::sync::Arc;
+
+use photonic_bayes::backend::{
+    build_with_opts, BackendKind, PipelineOptions, PrefetchMode, ProbConvBackend, SamplePlan,
+};
+use photonic_bayes::photonics::{MachineConfig, TapTarget};
+use photonic_bayes::registry::{ProgramKey, RegistryMetrics, Residency};
+
+/// Noise-free machine: every divergence below is a real state bug, not rx
+/// noise.
+fn quiet_cfg(seed: u64) -> MachineConfig {
+    MachineConfig {
+        rx_noise: 0.0,
+        actuator_sigma: 0.0,
+        actuator_jitter: 0.0,
+        ripple_rms_ps: 0.0,
+        seed,
+        ..MachineConfig::default()
+    }
+}
+
+fn backend(kind: BackendKind, seed: u64, mode: PrefetchMode) -> Box<dyn ProbConvBackend> {
+    build_with_opts(
+        kind,
+        &quiet_cfg(seed),
+        None,
+        PipelineOptions {
+            mode,
+            block: 128,
+            depth: 2,
+        },
+    )
+}
+
+fn targets9(mu: f32, sigma: f32) -> Vec<Vec<TapTarget>> {
+    vec![vec![TapTarget { mu, sigma }; 9]]
+}
+
+fn key(model: &str, cfg: &MachineConfig) -> ProgramKey {
+    ProgramKey::new(model, cfg.seed, cfg.scale_dac, cfg.scale_adc)
+}
+
+fn sample(be: &mut dyn ProbConvBackend, plan: &SamplePlan, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; plan.total_size()];
+    be.sample_conv(plan, x, &mut out).unwrap();
+    out
+}
+
+fn mean_of(out: &[f32]) -> f64 {
+    out.iter().map(|&v| v as f64).sum::<f64>() / out.len() as f64
+}
+
+/// Rapid switches with live background entropy producers: every sample must
+/// come from the *active* model's program and bank generation.  A stale
+/// bank would surface immediately as the wrong sign (the two models carry
+/// opposite-sign kernels).
+#[test]
+fn rapid_switches_never_serve_a_stale_bank() {
+    let cfg = quiet_cfg(4242);
+    let plan = SamplePlan::new(2, 1, 1, 4, 4);
+    let x = vec![0.5f32; plan.sample_size()];
+    let (ka, kb) = (targets9(0.8, 0.05), targets9(-0.8, 0.05));
+    for kind in [BackendKind::Photonic, BackendKind::Digital] {
+        // On = background producer threads stay live across every switch
+        let mut be = backend(kind, cfg.seed, PrefetchMode::On);
+        let (key_a, key_b) = (key("a", &cfg), key("b", &cfg));
+        for round in 0..4 {
+            be.switch_program(&key_a, &ka, false).unwrap();
+            let a = mean_of(&sample(&mut be, &plan, &x));
+            assert!(a > 0.5, "{kind:?} round {round}: model a served {a}");
+            be.switch_program(&key_b, &kb, false).unwrap();
+            let b = mean_of(&sample(&mut be, &plan, &x));
+            assert!(b < -0.5, "{kind:?} round {round}: model b served {b}");
+        }
+    }
+}
+
+/// Budget 0 evicts every parked model: each switch back is a miss that
+/// rebuilds from the model-mixed seed, so outputs are bitwise identical to
+/// a cold engine that only ever served that model.
+#[test]
+fn eviction_then_reload_replays_bitwise_like_a_cold_engine() {
+    let cfg = quiet_cfg(99);
+    let plan = SamplePlan::new(3, 1, 1, 4, 4);
+    let x = vec![1.0f32; plan.sample_size()];
+    let (ka, kb) = (targets9(0.5, 0.3), targets9(-0.5, 0.3));
+    for kind in [BackendKind::Photonic, BackendKind::Digital] {
+        for mode in [PrefetchMode::Sync, PrefetchMode::On] {
+            let metrics = Arc::new(RegistryMetrics::default());
+            metrics.register("a");
+            metrics.register("b");
+            let mut be = backend(kind, cfg.seed, mode);
+            be.enable_model_cache(0, metrics.clone());
+            let (key_a, key_b) = (key("a", &cfg), key("b", &cfg));
+            be.switch_program(&key_a, &ka, false).unwrap();
+            let a1 = sample(&mut be, &plan, &x);
+            be.switch_program(&key_b, &kb, false).unwrap();
+            let _b1 = sample(&mut be, &plan, &x);
+            be.switch_program(&key_a, &ka, false).unwrap();
+            let a2 = sample(&mut be, &plan, &x);
+
+            // cold single-model reference: different machine seed on
+            // purpose — the model-mixed key seed governs the streams
+            let mut cold = backend(kind, 12345, mode);
+            cold.switch_program(&key("a", &cfg), &ka, false).unwrap();
+            let r1 = sample(&mut cold, &plan, &x);
+            assert_eq!(a1, r1, "{kind:?}/{mode:?}: first serve == cold engine");
+            assert_eq!(a2, r1, "{kind:?}/{mode:?}: evicted reload replays from seed");
+
+            let snap = metrics.snapshot();
+            assert_eq!(snap.switches, 3);
+            assert_eq!(snap.misses, 3, "budget 0: every checkout misses");
+            assert_eq!(snap.hits, 0);
+            assert_eq!(snap.evictions, 2, "each park at budget 0 evicts");
+            let a_card = snap.models.iter().find(|c| c.model == "a").unwrap();
+            assert_eq!(a_card.state, Residency::Active);
+            assert_eq!(a_card.switches_in, 2);
+        }
+    }
+}
+
+/// An unbounded budget keeps parked models resident: switching back is a
+/// hit that *continues* the model's streams — bitwise what a single-model
+/// engine that never switched away would have produced next.
+#[test]
+fn cache_hit_continues_streams_like_an_unswitched_engine() {
+    let cfg = quiet_cfg(7);
+    let plan = SamplePlan::new(3, 1, 1, 4, 4);
+    let x = vec![1.0f32; plan.sample_size()];
+    let (ka, kb) = (targets9(0.5, 0.3), targets9(-0.5, 0.3));
+    for kind in [BackendKind::Photonic, BackendKind::Digital] {
+        let metrics = Arc::new(RegistryMetrics::default());
+        metrics.register("a");
+        metrics.register("b");
+        let mut be = backend(kind, cfg.seed, PrefetchMode::Sync);
+        be.enable_model_cache(usize::MAX, metrics.clone());
+        let (key_a, key_b) = (key("a", &cfg), key("b", &cfg));
+        be.switch_program(&key_a, &ka, false).unwrap();
+        let a1 = sample(&mut be, &plan, &x);
+        be.switch_program(&key_b, &kb, false).unwrap();
+        let _ = sample(&mut be, &plan, &x);
+        be.switch_program(&key_a, &ka, false).unwrap();
+        let a2 = sample(&mut be, &plan, &x);
+
+        // reference engine serving only model a, continuously
+        let mut solo = backend(kind, cfg.seed, PrefetchMode::Sync);
+        solo.switch_program(&key("a", &cfg), &ka, false).unwrap();
+        let r1 = sample(&mut solo, &plan, &x);
+        let r2 = sample(&mut solo, &plan, &x);
+        assert_eq!(a1, r1, "{kind:?}: identical cold start");
+        assert_eq!(a2, r2, "{kind:?}: hit continues streams, no replay");
+        assert_ne!(a1, a2, "{kind:?}: streams advance across the round trip");
+
+        let snap = metrics.snapshot();
+        assert_eq!(snap.hits, 1, "the switch back to a is a hit");
+        assert_eq!(snap.evictions, 0);
+        assert!(snap.resident_bytes > 0);
+        let b_card = snap.models.iter().find(|c| c.model == "b").unwrap();
+        assert_eq!(b_card.state, Residency::Resident, "b stays cached");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: the two-model gateway demo
+// ---------------------------------------------------------------------------
+
+mod gateway {
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    use photonic_bayes::bnn::UncertaintyPolicy;
+    use photonic_bayes::coordinator::service::{EngineHandle, ServiceConfig};
+    use photonic_bayes::coordinator::{EngineConfig, ExecMode, ModelSpec, Router};
+    use photonic_bayes::exec::CancelToken;
+    use photonic_bayes::photonics::MachineConfig;
+    use photonic_bayes::runtime::artifact::artifacts_root;
+    use photonic_bayes::runtime::ModelArtifacts;
+    use photonic_bayes::server::{serve, Client, ServerOptions};
+
+    fn have_artifacts() -> bool {
+        let root = artifacts_root();
+        root.join("digits/meta.json").exists() && root.join("blood/meta.json").exists()
+    }
+
+    /// One engine virtualized across two checkpoints, served over TCP: a
+    /// single client session classifies against both models, `/info` shows
+    /// both registered with residency counters, and an unknown model gets
+    /// the typed coded error.
+    #[test]
+    fn two_model_engine_serves_both_over_one_session() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` (needs digits + blood)");
+            return;
+        }
+        let root = artifacts_root();
+        let digits_px = ModelArtifacts::load(&root.join("digits")).unwrap().meta.image_size();
+        let blood_px = ModelArtifacts::load(&root.join("blood")).unwrap().meta.image_size();
+        let mut router = Router::new();
+        router.register(
+            EngineHandle::spawn_multi(
+                &root,
+                vec![ModelSpec::named("digits"), ModelSpec::named("blood")],
+                EngineConfig {
+                    n_samples: 3,
+                    mode: ExecMode::Surrogate,
+                    policy: UncertaintyPolicy::ood_only(0.5),
+                    calibrate: false,
+                    machine: MachineConfig::default(),
+                    noise_bw_ghz: 150.0,
+                    threads: 2,
+                    seed: 3,
+                    ..Default::default()
+                },
+                ServiceConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 32,
+                },
+            )
+            .unwrap(),
+        );
+
+        let cancel = CancelToken::new();
+        let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::new(Mutex::new(None));
+        let b2 = bound.clone();
+        let c2 = cancel.clone();
+        let server = std::thread::spawn(move || {
+            serve(
+                router,
+                ServerOptions {
+                    addr: "127.0.0.1:0".into(),
+                    workers: 4,
+                },
+                c2,
+                move |a| {
+                    *b2.lock().unwrap() = Some(a);
+                },
+            )
+        });
+        let addr = loop {
+            if let Some(a) = *bound.lock().unwrap() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        // both models classify in one session (forces at least one switch)
+        let r = client.classify("digits", &vec![0.4f32; digits_px]).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        let r = client.classify("blood", &vec![0.4f32; blood_px]).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        let r = client.classify("digits", &vec![0.2f32; digits_px]).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+
+        // /info: both models registered, registry counters live
+        let info = client.call("{\"op\":\"info\"}").unwrap();
+        let models: Vec<String> = info
+            .get("models")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap().to_string())
+            .collect();
+        assert!(models.contains(&"digits".to_string()), "{models:?}");
+        assert!(models.contains(&"blood".to_string()), "{models:?}");
+        let reg = info.get("registry").unwrap().get("digits").unwrap();
+        assert!(reg.get("switches").unwrap().as_f64().unwrap() >= 2.0, "{reg:?}");
+        let cards = reg.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(cards.len(), 2);
+        for card in cards {
+            let state = card.get("state").unwrap().as_str().unwrap();
+            assert!(
+                ["active", "resident", "evicted", "cold"].contains(&state),
+                "{card:?}"
+            );
+        }
+
+        // wrong image size for the *named* model is a per-request error
+        let err = client.classify("blood", &vec![0.1f32; digits_px + 1]).unwrap();
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+        // unknown model: machine-readable code
+        let err = client.classify("nope", &vec![0.1f32; 4]).unwrap();
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err.get("code").unwrap().as_str(), Some("unknown_model"));
+        // connection survives the errors
+        assert!(client.ping().unwrap());
+
+        cancel.cancel();
+        server.join().unwrap().unwrap();
+    }
+}
