@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
         queue_depth: 512,
+        ..Default::default()
     };
     let mut router = Router::new();
     router.register(EngineHandle::spawn(
@@ -78,6 +79,7 @@ fn main() -> Result<()> {
             ServerOptions {
                 addr: "127.0.0.1:0".into(),
                 workers: 8,
+                ..Default::default()
             },
             cancel_srv,
             move |addr| {

@@ -2,15 +2,15 @@
 //! and figure of the paper's evaluation section (DESIGN.md experiment
 //! index).  Each section prints the paper's value next to the measured one.
 //!
-//! Sections: headline, backends, entropy, adaptive, multimodel, fig2_error,
-//! fig2_delay, nist, health, fig4_roc, fig4_confusion, fig5_scatter,
-//! fig5_auroc, ablations.
+//! Sections: headline, backends, entropy, adaptive, multimodel, serving,
+//! fig2_error, fig2_delay, nist, health, fig4_roc, fig4_confusion,
+//! fig5_scatter, fig5_auroc, ablations.
 //!
 //! Machine-readable trajectories (`--json <path>`): `backends` →
 //! `BENCH_backends.json`, `entropy` → `BENCH_entropy.json`, `adaptive` →
 //! `BENCH_adaptive.json`, `health` → `BENCH_health.json`, `multimodel` →
-//! `BENCH_multimodel.json`; CI regenerates all five per push and archives
-//! them as workflow artifacts.
+//! `BENCH_multimodel.json`, `serving` → `BENCH_serving.json`; CI
+//! regenerates all six per push and archives them as workflow artifacts.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -67,6 +67,9 @@ fn main() {
     }
     if run("multimodel") {
         multimodel(&mut sink);
+    }
+    if run("serving") {
+        serving(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -482,6 +485,114 @@ fn multimodel(sink: &mut Option<JsonSink>) {
     println!("(cached interleaving must sit near the 1-model baseline: a hit swaps bank");
     println!(" pointers instead of replaying streams; the amortization row is the win the");
     println!(" model-aware batcher's same-model grouping realizes at tight budgets)");
+}
+
+fn serving(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::coordinator::{
+        run_service_loop, submit_with_admission, ClassifyRequest, OverloadConfig,
+        OverloadControl, RequestBudget, ServeCounters, ServiceConfig, SynthExecutor,
+    };
+    use photonic_bayes::exec::channel;
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    section("SERVING — goodput + typed shedding at 2x overload (synthetic engine)");
+    // synthetic engine: 8 samples x 200 us = 1.6 ms per request, so
+    // capacity ~625 req/s; the mixed stream offers 2 requests per 1.6 ms
+    let n_samples = 8usize;
+    let work_per_sample = Duration::from_micros(200);
+    let svc = ServiceConfig {
+        queue_depth: 32,
+        overload: OverloadConfig {
+            default_cost: n_samples as u64,
+            ..OverloadConfig::default()
+        },
+        ..ServiceConfig::default()
+    };
+    let ctrl = Arc::new(OverloadControl::new(svc.overload.clone(), svc.queue_depth));
+    let counters = Arc::new(ServeCounters::default());
+    let (tx, rx) = channel::<ClassifyRequest>(svc.queue_depth);
+    let (c2, k2, svc2) = (ctrl.clone(), counters.clone(), svc.clone());
+    let engine = std::thread::spawn(move || {
+        let mut exec = SynthExecutor::new(17, n_samples);
+        exec.work_per_sample = work_per_sample;
+        run_service_loop(&mut exec, rx, &svc2, &c2, &k2);
+    });
+
+    let offered = 600usize;
+    let mut replies = Vec::with_capacity(offered);
+    let mut overload_rejected = 0u64;
+    let t0 = Instant::now();
+    for i in 0..offered {
+        // mixed stream: every 3rd request runs on a small budget, every
+        // 4th carries a tight deadline that queue wait will blow through
+        let budget = if i % 3 == 0 {
+            RequestBudget {
+                max_samples: Some(2),
+                target_confidence: None,
+            }
+        } else {
+            RequestBudget::default()
+        };
+        let (mut req, rep) = ClassifyRequest::with_budget(vec![0.1; 4], budget);
+        if i % 4 == 0 {
+            req.deadline = Some(Instant::now() + Duration::from_millis(10));
+        }
+        match submit_with_admission(&tx, &ctrl, &counters, 0, req) {
+            Ok(()) => replies.push(rep),
+            Err(_) => overload_rejected += 1,
+        }
+        if i % 2 == 1 {
+            std::thread::sleep(work_per_sample * n_samples as u32); // 2x pace
+        }
+    }
+    let mut served = 0u64;
+    let mut shed_deadline = 0u64;
+    let mut other = 0u64;
+    for rep in replies {
+        match rep.recv() {
+            Some(Ok(_)) => served += 1,
+            Some(Err(_)) => shed_deadline += 1,
+            None => other += 1,
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let goodput = served as f64 / elapsed;
+    let typed_rejects = overload_rejected + shed_deadline;
+    let reject_rate = typed_rejects as f64 / offered as f64;
+    println!(
+        "offered {offered} req in {elapsed:.2}s (2x capacity), queue depth {}",
+        svc.queue_depth
+    );
+    println!("{:<30} {:>12}", "metric", "measured");
+    println!("{:<30} {:>12.0} req/s", "goodput (answered ok)", goodput);
+    println!("{:<30} {:>12.3}", "typed rejection rate", reject_rate);
+    println!("{:<30} {:>12}", "overloaded at admission", overload_rejected);
+    println!("{:<30} {:>12}", "deadline_exceeded replies", shed_deadline);
+    println!("{:<30} {:>12}", "dropped replies (must be 0)", other);
+    println!(
+        "{:<30} {:>12}",
+        "queue depth gauge (final)",
+        counters.queue_depth.load(Ordering::Relaxed)
+    );
+    println!("(every offered request is answered or typed-shed: overload never hangs");
+    println!(" a client, and the bounded queue keeps latency honest under 2x load)");
+    if let Some(sink) = sink {
+        sink.push("serving/goodput_rps", 1e9 / goodput.max(1e-9), goodput);
+        sink.push("serving/typed_reject_rate", reject_rate, reject_rate);
+        sink.push(
+            "serving/overload_rejects",
+            overload_rejected as f64,
+            overload_rejected as f64,
+        );
+        sink.push(
+            "serving/deadline_expired",
+            shed_deadline as f64,
+            shed_deadline as f64,
+        );
+    }
+    tx.close();
+    engine.join().unwrap();
 }
 
 fn fig2_error() {

@@ -7,6 +7,9 @@
 //! [server]
 //! addr = "127.0.0.1:7878"
 //! workers = 8
+//! # close connections with no complete request for this long (0 = never);
+//! # announced with a coded "idle_timeout" error line
+//! idle_timeout_ms = 60000
 //!
 //! [engine]
 //! datasets = "digits,blood"
@@ -62,6 +65,27 @@
 //! [batcher]
 //! max_batch = 8
 //! max_wait_ms = 2
+//! queue_depth = 256
+//!
+//! [overload]
+//! # server-default request deadline (ms, 0 = none); per-request
+//! # deadline_ms wins.  Expired requests shed with code=deadline_exceeded
+//! deadline_ms = 0
+//! # admission work budget in estimated samples (0 = auto:
+//! # queue_depth x engine n_samples); beyond it requests shed with
+//! # code=overloaded + retry_after_ms
+//! work_capacity = 0
+//! # pressure (EWMA of work-queue utilization, 0..1) above which request
+//! # sample budgets are clamped and responses flag degraded:true
+//! clamp_pressure = 0.75
+//! # clamped per-request budget (samples, 0 = auto: n_samples / 2)
+//! clamp_samples = 0
+//! # pressure above which the engine browns out to the mean-field
+//! # backend (requires brownout = true)
+//! brownout_pressure = 0.92
+//! # opt into the brownout tier (off by default: a degraded answer is a
+//! # policy decision, not a given)
+//! brownout = false
 //!
 //! [sampler]
 //! # adaptive sequential sampling: fixed | confidence-gap | uncertainty

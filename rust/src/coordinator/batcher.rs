@@ -26,16 +26,34 @@ impl<T> DynamicBatcher<T> {
     /// drained.  Returns as soon as `max_batch` items are collected or
     /// `max_wait` has elapsed since the first item arrived.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.next_batch_weighted(|_| 0, 0)
+    }
+
+    /// Like [`next_batch`](Self::next_batch), but also closes the batch
+    /// once the summed `cost` of its items reaches `max_work` (0 disables
+    /// the work cap).  Lets the service loop bound a batch by estimated
+    /// samples, not just request count: `max_batch` heavyweight requests
+    /// are `max_batch × default_cost` samples of engine work, which is a
+    /// very different latency envelope from `max_batch` cheap ones.
+    pub fn next_batch_weighted(
+        &self,
+        cost: impl Fn(&T) -> u64,
+        max_work: u64,
+    ) -> Option<Vec<T>> {
         let first = self.rx.recv()?;
+        let mut work = cost(&first);
         let mut batch = vec![first];
         let deadline = Instant::now() + self.max_wait;
-        while batch.len() < self.max_batch {
+        while batch.len() < self.max_batch && (max_work == 0 || work < max_work) {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(Some(item)) => batch.push(item),
+                Ok(Some(item)) => {
+                    work = work.saturating_add(cost(&item));
+                    batch.push(item);
+                }
                 Ok(None) => break, // closed: ship what we have
                 Err(()) => break,  // timed out
             }
@@ -90,6 +108,22 @@ mod tests {
         tx.close();
         let b = DynamicBatcher::new(rx, 4, Duration::from_millis(1));
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn weighted_batch_closes_on_work_cap() {
+        let (tx, rx) = channel(64);
+        for cost in [10u64, 10, 10, 10] {
+            tx.send(cost).unwrap();
+        }
+        // count cap of 8 never binds; the 25-sample work cap closes the
+        // batch at the item that crosses it
+        let b = DynamicBatcher::new(rx, 8, Duration::from_millis(50));
+        let batch = b.next_batch_weighted(|&c| c, 25).unwrap();
+        assert_eq!(batch, vec![10, 10, 10]);
+        // the fourth item is still queued for the next batch
+        let batch = b.next_batch_weighted(|&c| c, 25).unwrap();
+        assert_eq!(batch, vec![10]);
     }
 
     #[test]

@@ -22,6 +22,9 @@ use crate::sampler::{
     ChunkSchedule, PredictiveAccum, RequestBudget, ResolvedSampler, SamplerConfig, StopReason,
     StopRule, StopState, Verdict,
 };
+use crate::util::fault;
+
+use super::overload::ServeError;
 
 /// Where the probabilistic block executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -170,6 +173,11 @@ pub struct ClassifyResult {
     /// batch's slowest image even though frozen images fold in no more
     /// samples.
     pub samples_used: usize,
+    /// Served under overload degradation (clamped budget and/or the
+    /// mean-field brownout backend): the answer is best-effort, with
+    /// reduced or absent sampling-based uncertainty.  Surfaces as
+    /// `degraded:true` on the wire.
+    pub degraded: bool,
 }
 
 /// The engine.  Owns non-`Send` PJRT state — confine to one thread (see
@@ -194,6 +202,13 @@ pub struct Engine {
     /// swap is one-way (a recovered source does not swap back — operators
     /// restart the engine after fixing the hardware).
     fell_back: bool,
+    /// Parked mean-field backend for the overload brownout tier, built
+    /// lazily on first brownout and kept programmed for `brownout_model`.
+    standby_mean: Option<Box<dyn ProbConvBackend>>,
+    /// Model `standby_mean` is programmed for (rebuilt on mismatch).
+    brownout_model: String,
+    /// Whether the mean-field backend is currently swapped in.
+    brownout: bool,
     /// Inactive checkpoints of a multi-model engine; the active one lives
     /// in `arts`/`params`.  Empty on single-model engines.
     standby: Vec<ModelCheckpoint>,
@@ -321,6 +336,9 @@ impl Engine {
             pool,
             monitor,
             fell_back: false,
+            standby_mean: None,
+            brownout_model: String::new(),
+            brownout: false,
             standby: Vec::new(),
             default_model: active_model.clone(),
             active_model,
@@ -407,9 +425,136 @@ impl Engine {
         n: usize,
         budget: &RequestBudget,
     ) -> Result<Vec<ClassifyResult>> {
+        self.classify_opts(model, images, n, budget, None, false)
+    }
+
+    /// The service loop's entry point: switch to `model`, optionally brown
+    /// out to the mean-field backend for this one call (the tier-2
+    /// overload degradation), and classify under `budget` / `deadline`.
+    /// Brownout results come back flagged [`ClassifyResult::degraded`].
+    pub fn classify_opts(
+        &mut self,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
         let target = model.unwrap_or(&self.default_model).to_string();
         self.switch_model(&target)?;
-        self.classify_with_budget(images, n, budget)
+        if brownout {
+            self.enter_brownout()?;
+        }
+        let res = self.classify_with_deadline(images, n, budget, deadline);
+        let was_browned = self.brownout;
+        // exit even on error: the next call decides its own tier
+        self.exit_brownout();
+        res.map(|mut results| {
+            if was_browned {
+                for r in &mut results {
+                    r.degraded = true;
+                }
+            }
+            results
+        })
+    }
+
+    /// Enter overload brownout: swap in a lazily-built mean-field backend
+    /// programmed with the active model's kernels.  One deterministic pass
+    /// per request, and — crucially — no entropy consumed from the real
+    /// backend's persistent shard streams, so exiting brownout resumes
+    /// them exactly where they left off and the bitwise replay contract
+    /// per `(model, seed, threads, prefetch, rule)` survives the episode.
+    fn enter_brownout(&mut self) -> Result<()> {
+        if self.brownout {
+            return Ok(());
+        }
+        if self.standby_mean.is_none() || self.brownout_model != self.active_model {
+            let mut be = backend::build_with_opts_monitored(
+                BackendKind::Mean,
+                &self.mcfg,
+                self.pool.clone(),
+                self.popts,
+                None,
+            );
+            // no calibration: the brownout backend is a cheap shelter
+            // under pressure, not a calibrated serving substrate
+            be.program(&self.params.prob_kernels()?, false)?;
+            self.standby_mean = Some(be);
+            self.brownout_model = self.active_model.clone();
+            log_warn!(
+                "engine[{}]: brownout backend programmed for '{}'",
+                self.arts.meta.dataset,
+                self.active_model
+            );
+        }
+        std::mem::swap(&mut self.backend, self.standby_mean.as_mut().unwrap());
+        self.brownout = true;
+        Ok(())
+    }
+
+    /// Exit brownout (no-op when not browned out).
+    fn exit_brownout(&mut self) {
+        if !self.brownout {
+            return;
+        }
+        std::mem::swap(&mut self.backend, self.standby_mean.as_mut().unwrap());
+        self.brownout = false;
+    }
+
+    /// Deterministically rebuild the sampling substrate after a panic
+    /// escaped a classify call (the service loop's `catch_unwind`
+    /// recovery path).  A panic can leave the backend mid-plan — entropy
+    /// streams partially advanced, prefetched banks half-consumed — so
+    /// the backend is rebuilt from the engine's retained `(machine
+    /// config, pool, pipeline options)` exactly as at construction:
+    /// post-recovery outputs replay bitwise against a freshly-built
+    /// engine per `(model, seed, threads, prefetch, rule)`.  Scratch
+    /// arenas are length-addressed lanes re-filled by every request and
+    /// need no reset.
+    pub fn recover_after_panic(&mut self) -> Result<()> {
+        // a panic mid-call may have left a brownout swap un-unwound;
+        // discard the parked backend (cheap to rebuild) and recompute
+        // which substrate is current truth
+        self.brownout = false;
+        self.standby_mean = None;
+        self.brownout_model.clear();
+        let target = if self.fell_back {
+            self.cfg
+                .entropy_fallback
+                .unwrap_or_else(|| self.cfg.mode.backend_kind())
+        } else {
+            self.cfg.mode.backend_kind()
+        };
+        let kernels = self.params.prob_kernels()?;
+        let mut backend = backend::build_with_opts_monitored(
+            target,
+            &self.mcfg,
+            self.pool.clone(),
+            self.popts,
+            self.monitor.clone(),
+        );
+        if let Some(metrics) = &self.reg_metrics {
+            // registry mode: fresh (empty) model cache, programmed through
+            // the switch path so the active model keeps its model-mixed seed
+            backend.enable_model_cache(self.cfg.bank_budget_bytes, metrics.clone());
+        } else {
+            backend.program(&kernels, self.cfg.calibrate)?;
+        }
+        let old = std::mem::replace(&mut self.backend, backend);
+        drop(old); // joins the poisoned backend's entropy producers
+        if self.reg_metrics.is_some() {
+            self.program_active()?;
+        }
+        // the surrogate eps stream may also be mid-draw: rebuild from seed
+        self.noise = EpsSource::chaotic(self.cfg.seed.wrapping_add(77), self.cfg.noise_bw_ghz);
+        log_warn!(
+            "engine[{}]: rebuilt '{}' backend after an isolated panic",
+            self.arts.meta.dataset,
+            target
+        );
+        Ok(())
     }
 
     pub fn n_classes(&self) -> usize {
@@ -455,6 +600,21 @@ impl Engine {
         n: usize,
         budget: &RequestBudget,
     ) -> Result<Vec<ClassifyResult>> {
+        self.classify_with_deadline(images, n, budget, None)
+    }
+
+    /// [`Self::classify_with_budget`] under an absolute deadline: checked
+    /// at entry and again between adaptive chunks, so an expired request
+    /// stops burning samples at the next chunk boundary and returns a
+    /// typed [`ServeError::DeadlineExceeded`] carrying the stochastic
+    /// work spent so far.
+    pub fn classify_with_deadline(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<ClassifyResult>> {
         if images.len() != n * self.image_size() {
             return Err(anyhow!(
                 "batch buffer {} != {} images x {}",
@@ -466,6 +626,12 @@ impl Engine {
         if n == 0 {
             return Ok(Vec::new());
         }
+        if deadline_expired(deadline) {
+            return Err(anyhow::Error::new(ServeError::DeadlineExceeded {
+                samples_used: 0,
+            }));
+        }
+        fault::faultpoint("engine.classify").map_err(|e| anyhow!("{e}"))?;
         self.check_entropy_health()?;
         let mut resolved = self
             .cfg
@@ -487,8 +653,12 @@ impl Engine {
             self.classify_fixed(images, n, resolved.fixed_samples(), t0)?
         } else {
             match self.cfg.mode {
-                ExecMode::Surrogate => self.classify_adaptive_surrogate(images, n, &resolved, t0)?,
-                ExecMode::Split(_) => self.classify_adaptive_split(images, n, &resolved, t0)?,
+                ExecMode::Surrogate => {
+                    self.classify_adaptive_surrogate(images, n, &resolved, t0, deadline)?
+                }
+                ExecMode::Split(_) => {
+                    self.classify_adaptive_split(images, n, &resolved, t0, deadline)?
+                }
             }
         };
         self.metrics.record_batch(n, t0.elapsed(), &results);
@@ -524,6 +694,7 @@ impl Engine {
                     decision,
                     latency_us: per_image_latency,
                     samples_used: passes_n,
+                    degraded: false,
                 }
             })
             .collect::<Vec<_>>();
@@ -602,6 +773,7 @@ impl Engine {
         n: usize,
         r: &ResolvedSampler,
         t0: Instant,
+        deadline: Option<Instant>,
     ) -> Result<Vec<ClassifyResult>> {
         let st = self.stage_split(images, n)?;
         let meta = &self.arts.meta;
@@ -613,6 +785,10 @@ impl Engine {
         let mut verdicts: Vec<Option<Verdict>> = vec![None; n];
         let mut sched = ChunkSchedule::new(r, self.cfg.resolved_threads());
         while let Some(chunk) = sched.next_chunk() {
+            if deadline_expired(deadline) {
+                return Err(deadline_error(&accums));
+            }
+            fault::faultpoint("engine.chunk").map_err(|e| anyhow!("{e}"))?;
             let plan = SamplePlan::new(chunk, n, prob_ch, prob_hw, prob_hw);
             let d_all = grow(&mut self.scratch.samples, plan.total_size());
             self.backend.sample_conv(&plan, &st.x3q[..n * st.act], d_all)?;
@@ -684,6 +860,7 @@ impl Engine {
         n: usize,
         r: &ResolvedSampler,
         t0: Instant,
+        deadline: Option<Instant>,
     ) -> Result<Vec<ClassifyResult>> {
         let st = self.stage_surrogate(images, n)?;
         let nc = self.arts.meta.n_classes;
@@ -695,6 +872,10 @@ impl Engine {
         // thread-aligned chunks would only inflate the stop granularity
         let mut sched = ChunkSchedule::new(r, 1);
         while let Some(chunk) = sched.next_chunk() {
+            if deadline_expired(deadline) {
+                return Err(deadline_error(&accums));
+            }
+            fault::faultpoint("engine.chunk").map_err(|e| anyhow!("{e}"))?;
             for _ in 0..chunk {
                 let pass = self.surrogate_pass(&st)?;
                 push_pass(&mut accums, &pass, nc);
@@ -769,6 +950,12 @@ impl Engine {
     /// prefetched photonic weight-plane banks retire before the first
     /// fallback plan runs, never leaking stale draws.
     fn check_entropy_health(&mut self) -> Result<()> {
+        if self.brownout {
+            // the real backend is parked; a fallback swap now would
+            // replace the mean-field stand-in and corrupt the un-swap.
+            // Events stay queued for the next non-brownout call.
+            return Ok(());
+        }
         let Some(monitor) = self.monitor.clone() else {
             return Ok(());
         };
@@ -869,6 +1056,20 @@ struct SurrogateStage {
     eps_len: usize,
 }
 
+/// Whether an optional absolute deadline has passed.
+fn deadline_expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+/// Typed deadline error carrying the largest per-image sample spend so
+/// far (the batch's information budget actually consumed).
+fn deadline_error(accums: &[PredictiveAccum]) -> anyhow::Error {
+    let spent = accums.iter().map(|a| a.n()).max().unwrap_or(0);
+    anyhow::Error::new(ServeError::DeadlineExceeded {
+        samples_used: spent,
+    })
+}
+
 /// Fold one pass's batch logits into every still-sampling image.
 fn push_pass(accums: &mut [PredictiveAccum], pass: &[f32], nc: usize) {
     for (i, acc) in accums.iter_mut().enumerate() {
@@ -933,6 +1134,7 @@ fn assemble_results(
                 decision,
                 latency_us: per_image_latency,
                 samples_used: verdict.samples_used,
+                degraded: false,
             }
         })
         .collect()

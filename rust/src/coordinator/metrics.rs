@@ -1,5 +1,7 @@
 //! Engine/serving telemetry: counters and latency histogram.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::bnn::Decision;
@@ -69,6 +71,57 @@ impl LatencyHistogram {
     }
 }
 
+/// Lock-free serving/robustness counters shared between the admission
+/// path (gateway workers), the engine service loop, and `/info`.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Requests answered with a typed error instead of being served
+    /// (deadline sheds + overload rejects).
+    pub requests_shed: AtomicU64,
+    /// Requests whose deadline passed (at dequeue or mid-run).
+    pub deadline_expired: AtomicU64,
+    /// Requests rejected at admission (queue/work budget full).
+    pub overload_rejects: AtomicU64,
+    /// Batch panics isolated and recovered from.
+    pub panics_recovered: AtomicU64,
+    /// Queue-depth gauge (last observed at admission/dequeue).
+    pub queue_depth: AtomicU64,
+}
+
+/// Point-in-time copy of [`ServeCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeSnapshot {
+    pub requests_shed: u64,
+    pub deadline_expired: u64,
+    pub overload_rejects: u64,
+    pub panics_recovered: u64,
+    pub queue_depth: u64,
+}
+
+impl ServeCounters {
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            overload_rejects: self.overload_rejects.load(Ordering::Relaxed),
+            panics_recovered: self.panics_recovered.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl ServeSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("requests_shed", Json::Num(self.requests_shed as f64)),
+            ("deadline_expired", Json::Num(self.deadline_expired as f64)),
+            ("overload_rejects", Json::Num(self.overload_rejects as f64)),
+            ("panics_recovered", Json::Num(self.panics_recovered as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+        ])
+    }
+}
+
 /// Aggregated engine metrics.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
@@ -93,6 +146,10 @@ pub struct EngineMetrics {
     /// including any cold bank rebuild) — the cost model-coalesced batching
     /// amortizes.
     pub switch_latency: LatencyHistogram,
+    /// Shed/deadline/overload/panic counters, shared (`Arc`) with the
+    /// service loop and the admission path so `to_json` surfaces live
+    /// robustness state alongside the throughput counters.
+    pub serving: Arc<ServeCounters>,
 }
 
 impl EngineMetrics {
@@ -126,9 +183,11 @@ impl EngineMetrics {
     }
 
     pub fn report(&self) -> String {
+        let s = self.serving.snapshot();
         format!(
             "requests={} batches={} accept={} reject_ood={} ambiguous={} mean_samples={:.2} \
-             mean_batch={:.0}us p95_batch={:.0}us model_switches={} mean_switch={:.0}us",
+             mean_batch={:.0}us p95_batch={:.0}us model_switches={} mean_switch={:.0}us \
+             shed={} deadline_expired={} overload_rejects={} panics_recovered={}",
             self.requests,
             self.batches,
             self.accepted,
@@ -139,6 +198,10 @@ impl EngineMetrics {
             self.batch_latency.percentile_us(95.0),
             self.model_switches,
             self.switch_latency.mean_us(),
+            s.requests_shed,
+            s.deadline_expired,
+            s.overload_rejects,
+            s.panics_recovered,
         )
     }
 
@@ -172,6 +235,26 @@ impl EngineMetrics {
             (
                 "mean_switch_us",
                 Json::Num(self.switch_latency.mean_us()),
+            ),
+            (
+                "requests_shed",
+                Json::Num(self.serving.requests_shed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "deadline_expired",
+                Json::Num(self.serving.deadline_expired.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "overload_rejects",
+                Json::Num(self.serving.overload_rejects.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "panics_recovered",
+                Json::Num(self.serving.panics_recovered.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "queue_depth",
+                Json::Num(self.serving.queue_depth.load(Ordering::Relaxed) as f64),
             ),
         ])
     }
@@ -235,6 +318,37 @@ mod tests {
     }
 
     #[test]
+    fn serving_counters_surface_in_json_and_report() {
+        let m = EngineMetrics::default();
+        m.serving.requests_shed.store(5, Ordering::Relaxed);
+        m.serving.deadline_expired.store(2, Ordering::Relaxed);
+        m.serving.overload_rejects.store(3, Ordering::Relaxed);
+        m.serving.panics_recovered.store(1, Ordering::Relaxed);
+        m.serving.queue_depth.store(7, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_shed").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("overload_rejects").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("panics_recovered").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(7.0));
+        assert!(m.report().contains("panics_recovered=1"), "{}", m.report());
+        // clones share the counters (the engine thread and the handle
+        // must see one set of atomics)
+        let c = m.clone();
+        c.serving.requests_shed.store(9, Ordering::Relaxed);
+        assert_eq!(m.serving.snapshot().requests_shed, 9);
+    }
+
+    #[test]
+    fn serve_snapshot_json_well_formed() {
+        let c = ServeCounters::default();
+        c.overload_rejects.store(4, Ordering::Relaxed);
+        let j = c.snapshot().to_json();
+        assert_eq!(j.get("overload_rejects").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
     fn mean_samples_tracks_adaptive_spend() {
         let pred = crate::bnn::Predictive::from_logits(&vec![vec![3.0, 0.0]; 2]);
         let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
@@ -243,6 +357,7 @@ mod tests {
             decision: decision.clone(),
             latency_us: 10.0,
             samples_used,
+            degraded: false,
         };
         let mut m = EngineMetrics::default();
         m.record_batch(2, Duration::from_micros(100), &[r(4), r(10)]);

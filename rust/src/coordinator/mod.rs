@@ -26,10 +26,18 @@
 //! statistically resolved; requests carry optional budgets
 //! ([`RequestBudget`]), and the service loop batches same-budget requests
 //! together so variable-cost requests never cross-contaminate a plan.
+//!
+//! The lifecycle is overload-safe end to end: [`overload`] adds cost-aware
+//! admission with typed `overloaded` shedding, per-request deadlines
+//! (checked at dequeue and between adaptive chunks), tiered degradation
+//! (budget clamping, opt-in mean-field brownout), and `catch_unwind` panic
+//! isolation with deterministic engine rebuild — see
+//! [`service::run_service_loop`].
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod overload;
 pub mod router;
 pub mod service;
 
@@ -38,5 +46,10 @@ pub use crate::sampler::{RequestBudget, SamplerConfig, StopRule};
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
 pub use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics, UnknownModel};
+pub use metrics::{ServeCounters, ServeSnapshot};
+pub use overload::{OverloadConfig, OverloadControl, ServeError, Tier};
 pub use router::Router;
-pub use service::{ClassifyRequest, EngineHandle, GroupKey};
+pub use service::{
+    run_service_loop, submit_with_admission, BatchExecutor, ClassifyRequest, EngineHandle,
+    GroupKey, ServiceConfig, SynthExecutor,
+};

@@ -1,0 +1,405 @@
+//! Overload control for the serving queue: typed request-lifecycle
+//! errors, cost-aware admission, and tiered graceful degradation.
+//!
+//! Admission charges each request an *estimated work* cost (its sample
+//! budget, capped at the engine's configured `n_samples`) against a
+//! bounded work budget.  A request that would overflow the budget — or
+//! the bounded queue itself — is rejected immediately with a typed
+//! [`ServeError::Overloaded`] carrying a drain-time `retry_after_ms`
+//! hint, instead of blocking the gateway worker (shed, don't
+//! backpressure).
+//!
+//! A pressure EWMA (queued work / capacity, updated at admit and
+//! dequeue) drives three degradation tiers:
+//!
+//! | tier | pressure | behavior |
+//! |------|----------|----------|
+//! | `Normal` | low | full budgets |
+//! | `Clamped` | ≥ `clamp_pressure` | request sample budgets clamped; responses flagged `degraded` |
+//! | `Brownout` | ≥ `brownout_pressure` (opt-in) | mean-field backend, 1 deterministic pass; `degraded` |
+//!
+//! All state is atomics — the submit side (many gateway workers) and
+//! the engine thread share one [`OverloadControl`] without locks.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::sampler::RequestBudget;
+
+/// Typed request-lifecycle error.  Carried through `anyhow` from the
+/// engine/service layer to the gateway, which maps it onto coded wire
+/// errors (`code:"deadline_exceeded"` etc.).  `Clone` so one engine
+/// error can fan out to every reply channel of a batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline passed before (or while) serving it;
+    /// `samples_used` is the stochastic work spent before giving up
+    /// (0 when shed at dequeue without touching the engine).
+    DeadlineExceeded { samples_used: usize },
+    /// Admission control rejected the request; retry after the hinted
+    /// backoff (estimated queue drain time).
+    Overloaded { retry_after_ms: u64 },
+    /// A panic was isolated while serving this batch; the engine
+    /// rebuilt itself and the request is safe to retry.
+    Internal { detail: String },
+}
+
+impl ServeError {
+    /// Stable wire error code (the protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::Internal { .. } => "internal_error",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { samples_used } => write!(
+                f,
+                "deadline exceeded after {samples_used} samples"
+            ),
+            ServeError::Overloaded { retry_after_ms } => write!(
+                f,
+                "server overloaded; retry after {retry_after_ms} ms"
+            ),
+            ServeError::Internal { detail } => {
+                write!(f, "internal error: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Degradation tier derived from the pressure EWMA (ordered: each tier
+/// includes the measures of the ones below it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Normal,
+    /// Clamp per-request sample budgets.
+    Clamped,
+    /// Additionally swap in the mean-field backend (opt-in).
+    Brownout,
+}
+
+/// Admission-control and degradation knobs ([`ServiceConfig`] embeds
+/// one; `[overload]` in a serving config file).
+///
+/// [`ServiceConfig`]: super::ServiceConfig
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// Admission ceiling on total queued estimated work (samples).
+    /// 0 = auto: `queue_depth × default_cost`.
+    pub work_capacity: u64,
+    /// Estimated samples for a request without an explicit
+    /// `max_samples`, and the per-request cost cap.  0 = resolved from
+    /// the engine's `n_samples` at spawn.
+    pub default_cost: u64,
+    /// Pressure EWMA at or above which budgets are clamped.
+    pub clamp_pressure: f64,
+    /// Clamped per-request sample budget.  0 = `default_cost / 2`.
+    pub clamp_samples: usize,
+    /// Pressure EWMA at or above which serving browns out to the
+    /// mean-field backend (only when `brownout` is set).
+    pub brownout_pressure: f64,
+    /// Opt-in for the brownout tier.
+    pub brownout: bool,
+    /// EWMA smoothing factor for the pressure estimate.
+    pub alpha: f64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            work_capacity: 0,
+            default_cost: 0,
+            clamp_pressure: 0.75,
+            clamp_samples: 0,
+            brownout_pressure: 0.92,
+            brownout: false,
+            alpha: 0.1,
+        }
+    }
+}
+
+/// Shared overload state: queued-work accounting, the pressure EWMA,
+/// and a service-rate estimate for `retry_after_ms` hints.
+#[derive(Debug)]
+pub struct OverloadControl {
+    cfg: OverloadConfig,
+    capacity: u64,
+    work_queued: AtomicU64,
+    /// Pressure EWMA in milli-units (0..=1000).  Plain load/store — a
+    /// lost race between two updates only smudges a gauge.
+    pressure_milli: AtomicU64,
+    /// EWMA of engine service time per unit work, nanoseconds.
+    ns_per_sample: AtomicU64,
+}
+
+impl OverloadControl {
+    /// Build from config; `queue_depth` sizes the auto work capacity.
+    /// A zero `default_cost` falls back to 1 (callers resolve it from
+    /// the engine's `n_samples` before constructing the control).
+    pub fn new(mut cfg: OverloadConfig, queue_depth: usize) -> Self {
+        cfg.default_cost = cfg.default_cost.max(1);
+        let capacity = if cfg.work_capacity > 0 {
+            cfg.work_capacity
+        } else {
+            (queue_depth.max(1) as u64).saturating_mul(cfg.default_cost)
+        };
+        Self {
+            cfg,
+            capacity,
+            work_queued: AtomicU64::new(0),
+            pressure_milli: AtomicU64::new(0),
+            ns_per_sample: AtomicU64::new(0),
+        }
+    }
+
+    /// Per-request work cost for a cost-aware admission decision: its
+    /// sample budget, capped at the engine default (a request asking
+    /// for more than the engine runs still costs one engine run).
+    pub fn estimate_cost(&self, budget: &RequestBudget) -> u64 {
+        budget
+            .max_samples
+            .map_or(self.cfg.default_cost, |m| m as u64)
+            .min(self.cfg.default_cost)
+            .max(1)
+    }
+
+    /// Engine default work per request (samples).
+    pub fn default_cost(&self) -> u64 {
+        self.cfg.default_cost
+    }
+
+    /// Charge `cost` against the work budget; a budget overflow is a
+    /// typed overload rejection (the caller refunds with
+    /// [`Self::on_dequeue`] if its enqueue fails afterwards).
+    pub fn try_admit(&self, cost: u64) -> Result<(), ServeError> {
+        let prev = self.work_queued.fetch_add(cost, Ordering::Relaxed);
+        if prev.saturating_add(cost) > self.capacity {
+            self.work_queued.fetch_sub(cost, Ordering::Relaxed);
+            self.update_pressure(self.capacity);
+            return Err(ServeError::Overloaded {
+                retry_after_ms: self.retry_after_ms(),
+            });
+        }
+        self.update_pressure(prev + cost);
+        Ok(())
+    }
+
+    /// Return dequeued (or failed-to-enqueue) work to the budget.
+    pub fn on_dequeue(&self, cost: u64) {
+        let _ = self.work_queued.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |w| Some(w.saturating_sub(cost)),
+        );
+        self.update_pressure(self.work_queued.load(Ordering::Relaxed));
+    }
+
+    /// Record a finished batch so `retry_after_ms` tracks the actual
+    /// service rate.
+    pub fn on_work_done(&self, work: u64, elapsed: Duration) {
+        if work == 0 {
+            return;
+        }
+        let ns = (elapsed.as_nanos() as u64) / work;
+        let prev = self.ns_per_sample.load(Ordering::Relaxed);
+        let next = if prev == 0 {
+            ns
+        } else {
+            // same EWMA shape as pressure, fixed-point in ns
+            let a = self.cfg.alpha.clamp(0.01, 1.0);
+            ((prev as f64) * (1.0 - a) + (ns as f64) * a) as u64
+        };
+        self.ns_per_sample.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Suggested client backoff: estimated time to drain the queued
+    /// work at the observed service rate, clamped to [1, 5000] ms.
+    pub fn retry_after_ms(&self) -> u64 {
+        let queued = self.work_queued.load(Ordering::Relaxed);
+        let ns = self.ns_per_sample.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 50; // no service-rate observation yet
+        }
+        (queued.saturating_mul(ns) / 1_000_000).clamp(1, 5000)
+    }
+
+    /// Smoothed utilization in [0, 1].
+    pub fn pressure(&self) -> f64 {
+        self.pressure_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Instantaneous queued work (samples).
+    pub fn work_queued(&self) -> u64 {
+        self.work_queued.load(Ordering::Relaxed)
+    }
+
+    /// Current degradation tier.  `Brownout` is only ever returned when
+    /// the config opts in; otherwise sustained extreme pressure stays
+    /// `Clamped`.
+    pub fn tier(&self) -> Tier {
+        let p = self.pressure();
+        if self.cfg.brownout && p >= self.cfg.brownout_pressure {
+            Tier::Brownout
+        } else if p >= self.cfg.clamp_pressure {
+            Tier::Clamped
+        } else {
+            Tier::Normal
+        }
+    }
+
+    /// Per-request sample budget applied at the `Clamped` tier.
+    pub fn clamp_samples(&self) -> usize {
+        if self.cfg.clamp_samples > 0 {
+            self.cfg.clamp_samples
+        } else {
+            ((self.cfg.default_cost / 2) as usize).max(1)
+        }
+    }
+
+    fn update_pressure(&self, queued: u64) {
+        let util = (queued as f64 / self.capacity as f64).clamp(0.0, 1.0);
+        let a = self.cfg.alpha.clamp(0.01, 1.0);
+        let prev = self.pressure_milli.load(Ordering::Relaxed) as f64;
+        let next = prev * (1.0 - a) + util * 1000.0 * a;
+        self.pressure_milli
+            .store(next.round() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget(max: Option<usize>) -> RequestBudget {
+        RequestBudget {
+            max_samples: max,
+            target_confidence: None,
+        }
+    }
+
+    fn cfg(default_cost: u64) -> OverloadConfig {
+        OverloadConfig {
+            default_cost,
+            ..OverloadConfig::default()
+        }
+    }
+
+    #[test]
+    fn cost_estimate_caps_at_engine_default() {
+        let ctrl = OverloadControl::new(cfg(10), 4);
+        assert_eq!(ctrl.estimate_cost(&budget(None)), 10);
+        assert_eq!(ctrl.estimate_cost(&budget(Some(3))), 3);
+        assert_eq!(ctrl.estimate_cost(&budget(Some(500))), 10);
+        assert_eq!(ctrl.estimate_cost(&budget(Some(0))), 1);
+    }
+
+    #[test]
+    fn admission_rejects_past_capacity_and_refunds() {
+        // capacity = 4 × 10 = 40
+        let ctrl = OverloadControl::new(cfg(10), 4);
+        for _ in 0..4 {
+            assert!(ctrl.try_admit(10).is_ok());
+        }
+        let err = ctrl.try_admit(10).unwrap_err();
+        assert!(matches!(err, ServeError::Overloaded { .. }));
+        assert_eq!(err.code(), "overloaded");
+        assert_eq!(ctrl.work_queued(), 40);
+        ctrl.on_dequeue(10);
+        assert!(ctrl.try_admit(10).is_ok());
+    }
+
+    #[test]
+    fn explicit_work_capacity_overrides_auto() {
+        let ctrl = OverloadControl::new(
+            OverloadConfig {
+                work_capacity: 5,
+                ..cfg(10)
+            },
+            1000,
+        );
+        assert!(ctrl.try_admit(5).is_ok());
+        assert!(ctrl.try_admit(1).is_err());
+    }
+
+    #[test]
+    fn tier_rises_under_sustained_pressure_and_recovers() {
+        let mut c = cfg(10);
+        c.brownout = true;
+        c.alpha = 0.5; // fast EWMA for the test
+        let ctrl = OverloadControl::new(c, 4);
+        assert_eq!(ctrl.tier(), Tier::Normal);
+        for _ in 0..4 {
+            ctrl.try_admit(10).unwrap();
+        }
+        // saturate the EWMA with rejected admissions at full pressure
+        for _ in 0..16 {
+            let _ = ctrl.try_admit(10);
+        }
+        assert_eq!(ctrl.tier(), Tier::Brownout);
+        for _ in 0..4 {
+            ctrl.on_dequeue(10);
+        }
+        for _ in 0..16 {
+            ctrl.on_dequeue(0);
+        }
+        assert_eq!(ctrl.tier(), Tier::Normal);
+    }
+
+    #[test]
+    fn brownout_tier_requires_opt_in() {
+        let mut c = cfg(10);
+        c.alpha = 1.0;
+        let ctrl = OverloadControl::new(c, 1);
+        let _ = ctrl.try_admit(100); // rejected, pressure pinned to 1.0
+        assert_eq!(ctrl.tier(), Tier::Clamped);
+    }
+
+    #[test]
+    fn retry_after_tracks_service_rate_and_clamps() {
+        let ctrl = OverloadControl::new(cfg(10), 4);
+        assert_eq!(ctrl.retry_after_ms(), 50); // no observation yet
+        ctrl.try_admit(20).unwrap();
+        // 1 ms per sample → 20 queued samples ≈ 20 ms
+        ctrl.on_work_done(10, Duration::from_millis(10));
+        let hint = ctrl.retry_after_ms();
+        assert!((1..=5000).contains(&hint), "hint {hint} out of range");
+        assert!(hint >= 10, "hint {hint} ignores queued work");
+    }
+
+    #[test]
+    fn clamp_samples_defaults_to_half_engine_budget() {
+        let ctrl = OverloadControl::new(cfg(20), 4);
+        assert_eq!(ctrl.clamp_samples(), 10);
+        let ctrl = OverloadControl::new(
+            OverloadConfig {
+                clamp_samples: 3,
+                ..cfg(20)
+            },
+            4,
+        );
+        assert_eq!(ctrl.clamp_samples(), 3);
+    }
+
+    #[test]
+    fn serve_error_codes_and_display() {
+        let d = ServeError::DeadlineExceeded { samples_used: 7 };
+        assert_eq!(d.code(), "deadline_exceeded");
+        assert!(format!("{d}").contains('7'));
+        let o = ServeError::Overloaded { retry_after_ms: 12 };
+        assert_eq!(o.code(), "overloaded");
+        assert!(format!("{o}").contains("12"));
+        let i = ServeError::Internal {
+            detail: "x".into(),
+        };
+        assert_eq!(i.code(), "internal_error");
+    }
+}

@@ -10,6 +10,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
+use super::metrics::ServeSnapshot;
 use super::service::{ClassifyRequest, EngineHandle};
 use crate::entropy::health::Scorecard;
 use crate::registry::{RegistrySnapshot, UnknownModel};
@@ -88,6 +89,21 @@ impl Router {
         snap
     }
 
+    /// Per-engine serving/robustness counters (shed, deadline-expired,
+    /// overload rejects, recovered panics, live queue depth), keyed by the
+    /// engine's primary name and sorted.  Reads the shared
+    /// [`super::metrics::ServeCounters`] directly — no round-trip through
+    /// any engine thread.
+    pub fn serving_snapshot(&self) -> Vec<(String, ServeSnapshot)> {
+        let mut snap: Vec<(String, ServeSnapshot)> = self
+            .engines
+            .iter()
+            .map(|h| (h.dataset.clone(), h.serve_snapshot()))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
     /// Shut down every engine.
     pub fn shutdown(self) {
         for h in self.engines {
@@ -116,5 +132,6 @@ mod tests {
         assert!(r.datasets().is_empty());
         assert!(r.health_snapshot().is_empty());
         assert!(r.registry_snapshot().is_empty());
+        assert!(r.serving_snapshot().is_empty());
     }
 }

@@ -1,29 +1,47 @@
-//! Engine service: confines the non-`Send` engine to a dedicated thread and
-//! exposes a channel-based request API.
+//! Engine service: confines the non-`Send` engine to a dedicated thread
+//! and exposes a channel-based request API with an overload-safe
+//! lifecycle — cost-aware admission at the queue ([`submit_with_admission`]),
+//! deadline shedding at dequeue and between adaptive chunks, tiered
+//! degradation under sustained pressure, and per-batch panic isolation
+//! with deterministic engine recovery ([`run_service_loop`]).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::DynamicBatcher;
 use super::engine::{ClassifyResult, Engine, EngineConfig};
+use super::metrics::{ServeCounters, ServeSnapshot};
+use super::overload::{OverloadConfig, OverloadControl, ServeError, Tier};
+use crate::bnn::{Predictive, UncertaintyPolicy};
 use crate::entropy::health::Monitor;
-use crate::exec::channel::{channel, Receiver, Sender};
+use crate::exec::channel::{channel, Receiver, Sender, TrySendError};
 use crate::log_info;
-use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics};
+use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics, UnknownModel};
 use crate::runtime::{ModelArtifacts, ParamStore};
 use crate::sampler::RequestBudget;
+use crate::util::fault;
 
 /// One classification request: an image, the model it targets (`None` =
-/// the engine's default), its per-request sample budget, and a one-shot
-/// reply channel.
+/// the engine's default), its per-request sample budget, an optional
+/// absolute deadline, and a one-shot reply channel.
 pub struct ClassifyRequest {
     pub image: Vec<f32>,
     pub model: Option<String>,
     pub budget: RequestBudget,
+    /// Absolute deadline (protocol `deadline_ms`, or the server default
+    /// applied at admission).  `None` = wait forever.  Expired requests
+    /// are shed at dequeue and between adaptive chunks with a typed
+    /// `deadline_exceeded` error.
+    pub deadline: Option<Instant>,
+    /// Estimated work (stochastic samples) charged against the overload
+    /// budget at admission; 0 until admitted.
+    pub cost: u64,
     pub reply: Sender<Result<ClassifyResult>>,
 }
 
@@ -55,6 +73,8 @@ impl ClassifyRequest {
                 image,
                 model,
                 budget,
+                deadline: None,
+                cost: 0,
                 reply: tx,
             },
             rx,
@@ -101,6 +121,314 @@ fn group_requests(batch: Vec<ClassifyRequest>) -> Vec<(GroupKey, Vec<ClassifyReq
     groups
 }
 
+/// Batching + overload knobs for the service loop.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+    /// Server-default deadline applied at admission to requests that
+    /// carry none (protocol `deadline_ms` wins).  0 = no default.
+    pub deadline_ms: u64,
+    /// Cost-aware admission and tiered-degradation knobs.
+    pub overload: OverloadConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+            deadline_ms: 0,
+            overload: OverloadConfig::default(),
+        }
+    }
+}
+
+/// The per-batch work surface of the service loop, factored out of
+/// [`Engine`] so the overload/deadline/panic machinery — and the chaos
+/// suite and serving bench driving it — runs without model artifacts
+/// (see [`SynthExecutor`]).
+pub trait BatchExecutor {
+    /// Model serving requests that carry no `model` field.
+    fn default_model(&self) -> &str;
+    /// Expected flat image length for `model` (`None` = the default);
+    /// `None` return = the model is not served here.
+    fn image_size_for(&self, model: Option<&str>) -> Option<usize>;
+    /// Every servable model name (for typed `unknown_model` errors).
+    fn model_names(&self) -> Vec<String>;
+    /// Classify one same-(model, budget) group.  `brownout` requests the
+    /// degraded mean-field path (tier-2 overload).
+    fn classify_group(
+        &mut self,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>>;
+    /// Deterministically rebuild internal state after a panic escaped
+    /// `classify_group` (the `catch_unwind` recovery path).
+    fn recover_after_panic(&mut self) -> Result<()>;
+    /// One-line telemetry for the exit log.
+    fn report_line(&self) -> String;
+}
+
+impl BatchExecutor for Engine {
+    fn default_model(&self) -> &str {
+        Engine::default_model(self)
+    }
+
+    fn image_size_for(&self, model: Option<&str>) -> Option<usize> {
+        match model {
+            None => Some(self.image_size()),
+            Some(m) => self.image_size_of(m),
+        }
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        Engine::model_names(self)
+    }
+
+    fn classify_group(
+        &mut self,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        self.classify_opts(model, images, n, budget, deadline, brownout)
+    }
+
+    fn recover_after_panic(&mut self) -> Result<()> {
+        Engine::recover_after_panic(self)
+    }
+
+    fn report_line(&self) -> String {
+        self.report()
+    }
+}
+
+/// Cost-aware admission: estimate the request's work, charge it against
+/// the overload budget, apply the server-default deadline, and enqueue
+/// *without blocking*.  A full queue or exhausted work budget answers a
+/// typed [`ServeError::Overloaded`] with a drain-time `retry_after_ms`
+/// hint — overload sheds instead of backpressuring into the gateway's
+/// worker pool (where a blocked worker is itself an outage amplifier).
+pub fn submit_with_admission(
+    tx: &Sender<ClassifyRequest>,
+    ctrl: &OverloadControl,
+    counters: &ServeCounters,
+    default_deadline_ms: u64,
+    mut req: ClassifyRequest,
+) -> Result<()> {
+    if req.deadline.is_none() && default_deadline_ms > 0 {
+        req.deadline = Some(Instant::now() + Duration::from_millis(default_deadline_ms));
+    }
+    let cost = ctrl.estimate_cost(&req.budget);
+    if let Err(e) = ctrl.try_admit(cost) {
+        counters.overload_rejects.fetch_add(1, Ordering::Relaxed);
+        counters.requests_shed.fetch_add(1, Ordering::Relaxed);
+        return Err(anyhow::Error::new(e));
+    }
+    req.cost = cost;
+    match tx.try_send(req) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(_)) => {
+            // work budget admitted it but the queue (request count) is
+            // full — refund and shed
+            ctrl.on_dequeue(cost);
+            counters.overload_rejects.fetch_add(1, Ordering::Relaxed);
+            counters.requests_shed.fetch_add(1, Ordering::Relaxed);
+            Err(anyhow::Error::new(ServeError::Overloaded {
+                retry_after_ms: ctrl.retry_after_ms(),
+            }))
+        }
+        Err(TrySendError::Closed(_)) => {
+            ctrl.on_dequeue(cost);
+            Err(anyhow!("engine is shut down"))
+        }
+    }
+}
+
+/// Run the service loop over `rx` until the channel closes: cost-weighted
+/// dynamic batching, deadline shedding at dequeue, tier-based budget
+/// clamping / brownout, and `catch_unwind` panic isolation around
+/// per-group executor work.  Public so the chaos suite and the serving
+/// bench can drive it with a [`SynthExecutor`]; engine threads spawned
+/// by [`EngineHandle`] run exactly this loop.
+pub fn run_service_loop<E: BatchExecutor>(
+    exec: &mut E,
+    rx: Receiver<ClassifyRequest>,
+    svc: &ServiceConfig,
+    ctrl: &OverloadControl,
+    counters: &ServeCounters,
+) {
+    let batcher = DynamicBatcher::new(rx.clone(), svc.max_batch, svc.max_wait);
+    // close batches on estimated work, not just count: max_batch
+    // heavyweight requests are max_batch × default_cost samples of work
+    let max_work = (svc.max_batch as u64).saturating_mul(ctrl.default_cost());
+    'serve: while let Some(batch) = batcher.next_batch_weighted(|r| r.cost.max(1), max_work) {
+        let cost_sum: u64 = batch.iter().map(|r| r.cost).sum();
+        ctrl.on_dequeue(cost_sum);
+        counters
+            .queue_depth
+            .store(rx.len() as u64, Ordering::Relaxed);
+        // one tier decision per batch: requests admitted together degrade
+        // together (and grouping stays stable)
+        let tier = ctrl.tier();
+        for (key, group) in group_requests(batch) {
+            if let Err(e) = serve_group(exec, ctrl, counters, tier, key, group) {
+                crate::log_error!("engine thread unrecoverable: {e:#}");
+                break 'serve;
+            }
+        }
+    }
+    log_info!("engine thread exiting: {}", exec.report_line());
+}
+
+/// Serve one same-(model, budget) group.  `Err` only for unrecoverable
+/// states (panic recovery itself failed) — per-request failures answer
+/// their reply channels and return `Ok`.
+fn serve_group<E: BatchExecutor>(
+    exec: &mut E,
+    ctrl: &OverloadControl,
+    counters: &ServeCounters,
+    tier: Tier,
+    key: GroupKey,
+    group: Vec<ClassifyRequest>,
+) -> Result<()> {
+    // deadline shed at dequeue: expired requests answer immediately
+    // instead of burning engine samples
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(group.len());
+    for req in group {
+        match req.deadline {
+            Some(d) if now >= d => {
+                counters.requests_shed.fetch_add(1, Ordering::Relaxed);
+                counters.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(anyhow::Error::new(
+                    ServeError::DeadlineExceeded { samples_used: 0 },
+                )));
+            }
+            _ => live.push(req),
+        }
+    }
+    if live.is_empty() {
+        return Ok(());
+    }
+    // validate image size against the *target* model, not whichever is
+    // active; an unservable model is a typed routing error for the group
+    let Some(image_size) = exec.image_size_for(key.model.as_deref()) else {
+        let err = UnknownModel {
+            model: key
+                .model
+                .clone()
+                .unwrap_or_else(|| exec.default_model().to_string()),
+            known: exec.model_names(),
+        };
+        for req in live {
+            let _ = req.reply.send(Err(anyhow::Error::new(err.clone())));
+        }
+        return Ok(());
+    };
+    let mut images = Vec::with_capacity(live.len() * image_size);
+    let mut ok = Vec::with_capacity(live.len());
+    // the group's effective deadline is its earliest member's: one round
+    // loop serves the whole group, so the tightest member binds it
+    let mut deadline: Option<Instant> = None;
+    for req in live {
+        if req.image.len() == image_size {
+            images.extend_from_slice(&req.image);
+            deadline = match (deadline, req.deadline) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            ok.push(req.reply);
+        } else {
+            let _ = req.reply.send(Err(anyhow!(
+                "image size {} != expected {}",
+                req.image.len(),
+                image_size
+            )));
+        }
+    }
+    if ok.is_empty() {
+        return Ok(());
+    }
+    // tiered degradation: clamp the group's sample budget under sustained
+    // pressure; brown out to the mean-field backend at the opt-in tier
+    let mut budget = key.budget;
+    let mut degraded = false;
+    if tier >= Tier::Clamped {
+        let clamp = ctrl.clamp_samples();
+        budget.max_samples = Some(budget.max_samples.map_or(clamp, |m| m.min(clamp)));
+        degraded = true;
+    }
+    let brownout = tier >= Tier::Brownout;
+    let n = ok.len();
+    let t0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        exec.classify_group(key.model.as_deref(), &images, n, &budget, deadline, brownout)
+    }));
+    match outcome {
+        Ok(Ok(mut results)) => {
+            let work: u64 = results.iter().map(|r| r.samples_used as u64).sum();
+            ctrl.on_work_done(work.max(1), t0.elapsed());
+            if degraded {
+                for r in &mut results {
+                    r.degraded = true;
+                }
+            }
+            for (reply, res) in ok.into_iter().zip(results) {
+                let _ = reply.send(Ok(res));
+            }
+        }
+        Ok(Err(e)) => {
+            // typed lifecycle errors are `Clone` and fan out per reply;
+            // anything else flattens to a message (anyhow isn't Clone)
+            if let Some(se) = e.downcast_ref::<ServeError>() {
+                if matches!(se, ServeError::DeadlineExceeded { .. }) {
+                    counters
+                        .requests_shed
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                    counters
+                        .deadline_expired
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                }
+                for reply in ok {
+                    let _ = reply.send(Err(anyhow::Error::new(se.clone())));
+                }
+            } else if let Some(um) = e.downcast_ref::<UnknownModel>() {
+                for reply in ok {
+                    let _ = reply.send(Err(anyhow::Error::new(um.clone())));
+                }
+            } else {
+                for reply in ok {
+                    let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                }
+            }
+        }
+        Err(_panic) => {
+            // a poisoned batch answers its replies and dies alone: the
+            // executor rebuilds deterministically and keeps serving
+            for reply in ok {
+                let _ = reply.send(Err(anyhow::Error::new(ServeError::Internal {
+                    detail: "engine panicked serving this batch; state was rebuilt".into(),
+                })));
+            }
+            exec.recover_after_panic()
+                .map_err(|e| anyhow!("rebuilding engine after panic: {e}"))?;
+            counters.panics_recovered.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}
+
 /// Handle to a running engine thread.
 pub struct EngineHandle {
     /// Primary serving name (the dataset of a single-model engine; the
@@ -116,26 +444,15 @@ pub struct EngineHandle {
     /// Registry residency/hit/miss counters shared with a multi-model
     /// engine's backend cache; `/info` reads them from here.
     pub registry: Option<Arc<RegistryMetrics>>,
+    /// Shed/deadline/overload/panic counters shared with the service
+    /// loop, the admission path, and the engine's metrics.
+    pub counters: Arc<ServeCounters>,
+    ctrl: Arc<OverloadControl>,
+    deadline_ms: u64,
     tx: Sender<ClassifyRequest>,
+    /// Probe clone of the request queue for the live depth gauge.
+    rx_probe: Receiver<ClassifyRequest>,
     thread: Option<JoinHandle<()>>,
-}
-
-/// Batching knobs for the service loop.
-#[derive(Debug, Clone)]
-pub struct ServiceConfig {
-    pub max_batch: usize,
-    pub max_wait: Duration,
-    pub queue_depth: usize,
-}
-
-impl Default for ServiceConfig {
-    fn default() -> Self {
-        Self {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-            queue_depth: 256,
-        }
-    }
 }
 
 impl EngineHandle {
@@ -156,87 +473,26 @@ impl EngineHandle {
             engine_cfg.health_monitor = Some(Arc::new(Monitor::new(engine_cfg.health)));
         }
         let health = engine_cfg.health_monitor.clone();
-        let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
         let dir = artifacts_root.join(dataset);
         let params_path = params_path.map(|p| p.to_path_buf());
         let dataset_name = dataset.to_string();
-        let dataset_name2 = dataset_name.clone();
-        let thread = std::thread::Builder::new()
-            .name(format!("pbm-engine-{dataset}"))
-            .spawn(move || {
-                // all PJRT + machine state is created on this thread
-                let run = || -> Result<()> {
-                    let arts = ModelArtifacts::load(&dir)?;
-                    let params = match &params_path {
-                        Some(p) => ParamStore::load_bin(&arts.meta, p)?,
-                        None => ParamStore::load_init(&arts.meta, &dir)?,
-                    };
-                    let mut engine = Engine::new(arts, params, engine_cfg)?;
-                    let image_size = engine.image_size();
-                    let name = dataset_name2;
-                    let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
-                    while let Some(batch) = batcher.next_batch() {
-                        // same-(model, budget) requests share one batched
-                        // plan; mixed keys split into sub-batches
-                        for (key, group) in group_requests(batch) {
-                            // single-model engine: a request naming any
-                            // other model is a routing error, not a switch
-                            if key.model.as_deref().is_some_and(|m| m != name) {
-                                let m = key.model.as_deref().unwrap_or("");
-                                for req in group {
-                                    let _ = req.reply.send(Err(anyhow!(
-                                        "unknown model '{m}' (this engine serves '{name}')"
-                                    )));
-                                }
-                                continue;
-                            }
-                            let mut images = Vec::with_capacity(group.len() * image_size);
-                            let mut ok = Vec::with_capacity(group.len());
-                            for req in group {
-                                if req.image.len() == image_size {
-                                    images.extend_from_slice(&req.image);
-                                    ok.push(req.reply);
-                                } else {
-                                    let _ = req.reply.send(Err(anyhow!(
-                                        "image size {} != expected {}",
-                                        req.image.len(),
-                                        image_size
-                                    )));
-                                }
-                            }
-                            if ok.is_empty() {
-                                continue;
-                            }
-                            match engine.classify_with_budget(&images, ok.len(), &key.budget) {
-                                Ok(results) => {
-                                    for (reply, res) in ok.into_iter().zip(results) {
-                                        let _ = reply.send(Ok(res));
-                                    }
-                                }
-                                Err(e) => {
-                                    for reply in ok {
-                                        let _ = reply.send(Err(anyhow!("engine error: {e}")));
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    log_info!("engine thread exiting: {}", engine.report());
-                    Ok(())
-                };
-                if let Err(e) = run() {
-                    crate::log_error!("engine thread failed: {e:#}");
-                }
-            })
-            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
-        Ok(Self {
-            models: vec![dataset_name.clone()],
-            dataset: dataset_name,
+        let n_samples = engine_cfg.n_samples;
+        Self::spawn_loop(
+            dataset_name.clone(),
+            vec![dataset_name],
             health,
-            registry: None,
-            tx,
-            thread: Some(thread),
-        })
+            None,
+            n_samples,
+            svc_cfg,
+            move || {
+                let arts = ModelArtifacts::load(&dir)?;
+                let params = match &params_path {
+                    Some(p) => ParamStore::load_bin(&arts.meta, p)?,
+                    None => ParamStore::load_init(&arts.meta, &dir)?,
+                };
+                Engine::new(arts, params, engine_cfg)
+            },
+        )
     }
 
     /// Spawn one engine thread serving every model in `specs` through a
@@ -266,66 +522,51 @@ impl EngineHandle {
         let registry = engine_cfg.registry_metrics.clone();
         let model_names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
         let default_name = model_names[0].clone();
-        let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
         let root = artifacts_root.to_path_buf();
-        let thread_default = default_name.clone();
+        let n_samples = engine_cfg.n_samples;
+        Self::spawn_loop(
+            default_name,
+            model_names,
+            health,
+            registry,
+            n_samples,
+            svc_cfg,
+            move || {
+                let reg = ProgramRegistry::load(&root, &specs)?;
+                Engine::with_registry(reg, engine_cfg)
+            },
+        )
+    }
+
+    /// Shared spawn core: wire the overload control + counters, start the
+    /// engine thread (all PJRT + machine state is created inside `build`,
+    /// on that thread), and run [`run_service_loop`] until shutdown.
+    fn spawn_loop(
+        name: String,
+        models: Vec<String>,
+        health: Option<Arc<Monitor>>,
+        registry: Option<Arc<RegistryMetrics>>,
+        n_samples: usize,
+        svc_cfg: ServiceConfig,
+        build: impl FnOnce() -> Result<Engine> + Send + 'static,
+    ) -> Result<Self> {
+        let mut ocfg = svc_cfg.overload.clone();
+        if ocfg.default_cost == 0 {
+            ocfg.default_cost = n_samples.max(1) as u64;
+        }
+        let ctrl = Arc::new(OverloadControl::new(ocfg, svc_cfg.queue_depth));
+        let counters = Arc::new(ServeCounters::default());
+        let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
+        let rx_probe = rx.clone();
+        let (ctrl2, counters2, svc2) = (ctrl.clone(), counters.clone(), svc_cfg.clone());
         let thread = std::thread::Builder::new()
-            .name(format!("pbm-engine-{thread_default}"))
+            .name(format!("pbm-engine-{name}"))
             .spawn(move || {
-                // all PJRT + machine state is created on this thread
                 let run = || -> Result<()> {
-                    let reg = ProgramRegistry::load(&root, &specs)?;
-                    let mut engine = Engine::with_registry(reg, engine_cfg)?;
-                    let batcher = DynamicBatcher::new(rx, svc_cfg.max_batch, svc_cfg.max_wait);
-                    while let Some(batch) = batcher.next_batch() {
-                        for (key, group) in group_requests(batch) {
-                            let name = key.model.as_deref().unwrap_or(&thread_default);
-                            // image size is per-model: validate against the
-                            // target model, not whichever is active
-                            let Some(image_size) = engine.image_size_of(name) else {
-                                let err = crate::registry::UnknownModel {
-                                    model: name.to_string(),
-                                    known: engine.model_names(),
-                                };
-                                for req in group {
-                                    let _ =
-                                        req.reply.send(Err(anyhow::Error::new(err.clone())));
-                                }
-                                continue;
-                            };
-                            let mut images = Vec::with_capacity(group.len() * image_size);
-                            let mut ok = Vec::with_capacity(group.len());
-                            for req in group {
-                                if req.image.len() == image_size {
-                                    images.extend_from_slice(&req.image);
-                                    ok.push(req.reply);
-                                } else {
-                                    let _ = req.reply.send(Err(anyhow!(
-                                        "image size {} != expected {}",
-                                        req.image.len(),
-                                        image_size
-                                    )));
-                                }
-                            }
-                            if ok.is_empty() {
-                                continue;
-                            }
-                            match engine.classify_model(Some(name), &images, ok.len(), &key.budget)
-                            {
-                                Ok(results) => {
-                                    for (reply, res) in ok.into_iter().zip(results) {
-                                        let _ = reply.send(Ok(res));
-                                    }
-                                }
-                                Err(e) => {
-                                    for reply in ok {
-                                        let _ = reply.send(Err(anyhow!("engine error: {e}")));
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    log_info!("engine thread exiting: {}", engine.report());
+                    let mut engine = build()?;
+                    // the engine's metrics JSON surfaces the same counters
+                    engine.metrics.serving = counters2.clone();
+                    run_service_loop(&mut engine, rx, &svc2, &ctrl2, &counters2);
                     Ok(())
                 };
                 if let Err(e) = run() {
@@ -334,21 +575,46 @@ impl EngineHandle {
             })
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
         Ok(Self {
-            dataset: default_name,
-            models: model_names,
+            dataset: name,
+            models,
             health,
             registry,
+            counters,
+            ctrl,
+            deadline_ms: svc_cfg.deadline_ms,
             tx,
+            rx_probe,
             thread: Some(thread),
         })
     }
 
-    /// Submit a request (non-blocking on the engine; blocks only if the
-    /// queue is full — backpressure).
+    /// Submit a request through cost-aware admission.  Never blocks: a
+    /// full queue or exhausted work budget answers a typed
+    /// [`ServeError::Overloaded`] immediately (shed, don't backpressure).
     pub fn submit(&self, req: ClassifyRequest) -> Result<()> {
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow!("engine '{}' is shut down", self.dataset))
+        let res = submit_with_admission(
+            &self.tx,
+            &self.ctrl,
+            &self.counters,
+            self.deadline_ms,
+            req,
+        );
+        self.counters
+            .queue_depth
+            .store(self.rx_probe.len() as u64, Ordering::Relaxed);
+        res.map_err(|e| match e.downcast_ref::<ServeError>() {
+            Some(_) => e,
+            None => anyhow!("engine '{}': {e}", self.dataset),
+        })
+    }
+
+    /// Point-in-time serving/robustness counters (refreshes the
+    /// queue-depth gauge from the live queue first).
+    pub fn serve_snapshot(&self) -> ServeSnapshot {
+        self.counters
+            .queue_depth
+            .store(self.rx_probe.len() as u64, Ordering::Relaxed);
+        self.counters.snapshot()
     }
 
     /// Convenience: classify one image synchronously.
@@ -373,6 +639,142 @@ impl Drop for EngineHandle {
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+/// Deterministic, artifact-free [`BatchExecutor`] for the chaos suite
+/// and the `paper_tables -- serving` bench.  Per-sample pseudo-logits
+/// come from a seeded splitmix64 stream that persists across calls —
+/// mirroring the engine's persistent per-shard entropy streams — and
+/// [`BatchExecutor::recover_after_panic`] rebuilds the stream from the
+/// seed, mirroring the engine's deterministic backend rebuild, so the
+/// post-recovery bitwise-replay contract is testable without model
+/// artifacts.  Budgets, deadlines (checked between simulated draws),
+/// and brownout (one deterministic pass) behave like the real engine;
+/// `work_per_sample` emulates engine time.
+pub struct SynthExecutor {
+    seed: u64,
+    state: u64,
+    /// Samples per request when the budget doesn't cap it.
+    pub n_samples: usize,
+    /// Simulated engine work per sample draw (sleep).
+    pub work_per_sample: Duration,
+    pub classes: usize,
+    pub image_size: usize,
+    policy: UncertaintyPolicy,
+}
+
+impl SynthExecutor {
+    pub fn new(seed: u64, n_samples: usize) -> Self {
+        Self {
+            seed,
+            state: seed,
+            n_samples: n_samples.max(1),
+            work_per_sample: Duration::ZERO,
+            classes: 3,
+            image_size: 4,
+            // accept-everything policy: decisions are not under test here
+            policy: UncertaintyPolicy::ood_only(f64::MAX),
+        }
+    }
+
+    /// One deterministic logit row: a function of the stream position and
+    /// the image content (so distinct inputs get distinct predictives).
+    fn logit_row(&mut self, image: &[f32]) -> Vec<f32> {
+        let mut h = 0xABCD_EF01u64;
+        for &v in image {
+            h = h.rotate_left(13) ^ u64::from(v.to_bits());
+        }
+        let mut local = fault::splitmix64(&mut self.state) ^ h;
+        (0..self.classes)
+            .map(|_| {
+                let z = fault::splitmix64(&mut local);
+                ((z >> 11) as f64 / (1u64 << 53) as f64 * 4.0) as f32
+            })
+            .collect()
+    }
+}
+
+impl BatchExecutor for SynthExecutor {
+    fn default_model(&self) -> &str {
+        "synth"
+    }
+
+    fn image_size_for(&self, model: Option<&str>) -> Option<usize> {
+        match model {
+            None | Some("synth") => Some(self.image_size),
+            Some(_) => None,
+        }
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        vec!["synth".to_string()]
+    }
+
+    fn classify_group(
+        &mut self,
+        _model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        let t0 = Instant::now();
+        fault::faultpoint("synth.classify").map_err(|e| anyhow!("{e}"))?;
+        let samples = if brownout {
+            1
+        } else {
+            budget
+                .max_samples
+                .map_or(self.n_samples, |m| m.min(self.n_samples))
+                .max(1)
+        };
+        let mut rows: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(samples); n];
+        // sample-major loop so a mid-run deadline reports partial spend,
+        // exactly like the engine's chunk-boundary checks
+        for s in 0..samples {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(anyhow::Error::new(ServeError::DeadlineExceeded {
+                    samples_used: s,
+                }));
+            }
+            fault::faultpoint("synth.sample").map_err(|e| anyhow!("{e}"))?;
+            if !self.work_per_sample.is_zero() {
+                std::thread::sleep(self.work_per_sample);
+            }
+            for (i, img_rows) in rows.iter_mut().enumerate() {
+                let row =
+                    self.logit_row(&images[i * self.image_size..(i + 1) * self.image_size]);
+                img_rows.push(row);
+            }
+        }
+        let per_image_latency = t0.elapsed().as_micros() as f64 / n as f64;
+        Ok(rows
+            .into_iter()
+            .map(|r| {
+                let predictive = Predictive::from_logits(&r);
+                let decision = self.policy.decide(&predictive);
+                ClassifyResult {
+                    predictive,
+                    decision,
+                    latency_us: per_image_latency,
+                    samples_used: samples,
+                    degraded: brownout,
+                }
+            })
+            .collect())
+    }
+
+    fn recover_after_panic(&mut self) -> Result<()> {
+        // rebuild from seed, like the engine rebuilding its backend: the
+        // post-recovery stream equals a freshly-built executor's
+        self.state = self.seed;
+        Ok(())
+    }
+
+    fn report_line(&self) -> String {
+        format!("synth(seed={}, n_samples={})", self.seed, self.n_samples)
     }
 }
 
@@ -479,5 +881,199 @@ mod tests {
         assert_eq!(groups[0].0.model.as_deref(), Some("a"));
         assert_eq!(groups[1].0.model.as_deref(), Some("a"));
         assert_ne!(groups[0].0.budget, groups[1].0.budget);
+    }
+
+    // ---- synthetic service-loop tests (no model artifacts needed) ----
+
+    fn synth_req(pixels: Vec<f32>) -> (ClassifyRequest, Receiver<Result<ClassifyResult>>) {
+        ClassifyRequest::new(pixels)
+    }
+
+    /// Spin up a full service loop over a SynthExecutor; returns the
+    /// sender side plus the shared control/counters and a join guard.
+    fn synth_service(
+        svc: ServiceConfig,
+        n_samples: usize,
+    ) -> (
+        Sender<ClassifyRequest>,
+        Arc<OverloadControl>,
+        Arc<ServeCounters>,
+        JoinHandle<()>,
+    ) {
+        let mut ocfg = svc.overload.clone();
+        if ocfg.default_cost == 0 {
+            ocfg.default_cost = n_samples as u64;
+        }
+        let ctrl = Arc::new(OverloadControl::new(ocfg, svc.queue_depth));
+        let counters = Arc::new(ServeCounters::default());
+        let (tx, rx) = channel::<ClassifyRequest>(svc.queue_depth);
+        let (c2, k2) = (ctrl.clone(), counters.clone());
+        let h = std::thread::spawn(move || {
+            let mut exec = SynthExecutor::new(7, n_samples);
+            run_service_loop(&mut exec, rx, &svc, &c2, &k2);
+        });
+        (tx, ctrl, counters, h)
+    }
+
+    #[test]
+    fn synth_loop_round_trip() {
+        let (tx, _ctrl, _k, h) = synth_service(ServiceConfig::default(), 6);
+        let (req, rx) = synth_req(vec![0.1, 0.2, 0.3, 0.4]);
+        tx.send(req).unwrap();
+        let res = rx.recv().unwrap().unwrap();
+        assert_eq!(res.samples_used, 6);
+        assert!(!res.degraded);
+        tx.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue() {
+        let (tx, _ctrl, counters, h) = synth_service(ServiceConfig::default(), 6);
+        let (mut req, rx) = synth_req(vec![0.0; 4]);
+        req.deadline = Some(Instant::now() - Duration::from_millis(5));
+        tx.send(req).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        let se = err.downcast_ref::<ServeError>().expect("typed error");
+        assert_eq!(
+            se,
+            &ServeError::DeadlineExceeded { samples_used: 0 },
+            "shed at dequeue must not burn samples"
+        );
+        tx.close();
+        h.join().unwrap();
+        assert_eq!(counters.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.requests_shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn deadline_mid_run_reports_partial_spend() {
+        let svc = ServiceConfig::default();
+        let ctrl = OverloadControl::new(
+            OverloadConfig {
+                default_cost: 50,
+                ..OverloadConfig::default()
+            },
+            svc.queue_depth,
+        );
+        let counters = ServeCounters::default();
+        let mut exec = SynthExecutor::new(3, 50);
+        exec.work_per_sample = Duration::from_millis(2);
+        let (req, rx) = synth_req(vec![0.0; 4]);
+        let mut req = req;
+        req.deadline = Some(Instant::now() + Duration::from_millis(10));
+        let key = GroupKey {
+            model: None,
+            budget: req.budget,
+        };
+        serve_group(&mut exec, &ctrl, &counters, Tier::Normal, key, vec![req]).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::DeadlineExceeded { samples_used }) => {
+                assert!(
+                    *samples_used > 0 && *samples_used < 50,
+                    "partial spend expected, got {samples_used}"
+                );
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_model_answers_typed_error() {
+        let (tx, _ctrl, _k, h) = synth_service(ServiceConfig::default(), 4);
+        let (req, rx) = ClassifyRequest::with_model(
+            Some("nope".into()),
+            vec![0.0; 4],
+            RequestBudget::default(),
+        );
+        tx.send(req).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        let um = err.downcast_ref::<UnknownModel>().expect("typed error");
+        assert_eq!(um.model, "nope");
+        assert_eq!(um.known, vec!["synth".to_string()]);
+        tx.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn admission_sheds_when_work_budget_exhausts() {
+        // no loop draining the queue: admission alone must bound it
+        let ctrl = OverloadControl::new(
+            OverloadConfig {
+                default_cost: 10,
+                ..OverloadConfig::default()
+            },
+            2, // capacity: 2 × 10 samples
+        );
+        let counters = ServeCounters::default();
+        let (tx, rx) = channel::<ClassifyRequest>(2);
+        let mut admitted = 0;
+        let mut shed = 0;
+        for _ in 0..5 {
+            let (req, _rx) = synth_req(vec![0.0; 4]);
+            match submit_with_admission(&tx, &ctrl, &counters, 0, req) {
+                Ok(()) => admitted += 1,
+                Err(e) => {
+                    let se = e.downcast_ref::<ServeError>().expect("typed");
+                    assert!(matches!(se, ServeError::Overloaded { .. }));
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(admitted, 2);
+        assert_eq!(shed, 3);
+        assert_eq!(counters.overload_rejects.load(Ordering::Relaxed), 3);
+        assert_eq!(rx.len(), 2, "queue depth stays bounded");
+    }
+
+    #[test]
+    fn default_deadline_applies_at_admission() {
+        let ctrl = OverloadControl::new(OverloadConfig::default(), 8);
+        let counters = ServeCounters::default();
+        let (tx, rx) = channel::<ClassifyRequest>(8);
+        let (req, _rx) = synth_req(vec![0.0; 4]);
+        assert!(req.deadline.is_none());
+        submit_with_admission(&tx, &ctrl, &counters, 250, req).unwrap();
+        let queued = rx.recv().unwrap();
+        let d = queued.deadline.expect("server default deadline applied");
+        assert!(d > Instant::now());
+        assert!(queued.cost > 0, "admission stamped the estimated cost");
+    }
+
+    #[test]
+    fn clamp_tier_degrades_and_clamps_budget() {
+        let svc = ServiceConfig {
+            overload: OverloadConfig {
+                default_cost: 8,
+                clamp_pressure: 0.0, // always at least Clamped
+                ..OverloadConfig::default()
+            },
+            ..ServiceConfig::default()
+        };
+        let (tx, _ctrl, _k, h) = synth_service(svc, 8);
+        let (req, rx) = synth_req(vec![0.5; 4]);
+        tx.send(req).unwrap();
+        let res = rx.recv().unwrap().unwrap();
+        assert!(res.degraded, "clamp tier must flag degraded");
+        assert_eq!(res.samples_used, 4, "budget clamped to default_cost/2");
+        tx.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn synth_executor_streams_replay_after_recover() {
+        let imgs = vec![0.3f32; 4];
+        let budget = RequestBudget::default();
+        let mut a = SynthExecutor::new(11, 5);
+        let r1 = a.classify_group(None, &imgs, 1, &budget, None, false).unwrap();
+        // advance the stream, then recover: back to the seed state
+        let _ = a.classify_group(None, &imgs, 1, &budget, None, false).unwrap();
+        a.recover_after_panic().unwrap();
+        let r2 = a.classify_group(None, &imgs, 1, &budget, None, false).unwrap();
+        let bits = |r: &ClassifyResult| -> Vec<u32> {
+            r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+        };
+        assert_eq!(bits(&r1[0]), bits(&r2[0]), "post-recover replay is bitwise");
     }
 }

@@ -69,6 +69,16 @@ pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
+/// Error returned by [`Sender::try_send`]: the item comes back so the
+/// caller can shed it with a reply instead of dropping it silently.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Queue at capacity — the admission-control signal.
+    Full(T),
+    /// Channel closed.
+    Closed(T),
+}
+
 impl<T> Sender<T> {
     /// Blocking send; errors if the channel is closed.
     pub fn send(&self, item: T) -> Result<(), SendError<T>> {
@@ -84,6 +94,22 @@ impl<T> Sender<T> {
             }
             st = self.shared.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking send: a full queue is an immediate
+    /// [`TrySendError::Full`] rather than backpressure into the caller's
+    /// thread — the load-shedding primitive.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.shared.queue.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.items.len() >= st.capacity {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        self.shared.not_empty.notify_one();
+        Ok(())
     }
 
     /// Close the channel: receivers drain remaining items then get `None`.
@@ -245,6 +271,19 @@ mod tests {
         thread::sleep(Duration::from_millis(20));
         assert_eq!(rx.recv(), Some(1));
         assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn try_send_full_and_closed() {
+        let (tx, rx) = channel(1);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Err(TrySendError::Full(2)));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(tx.try_send(3), Ok(()));
+        tx.close();
+        assert_eq!(tx.try_send(4), Err(TrySendError::Closed(4)));
+        assert_eq!(rx.recv(), Some(3));
+        assert_eq!(rx.recv(), None);
     }
 
     #[test]

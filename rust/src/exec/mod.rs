@@ -10,6 +10,6 @@ pub mod ring;
 pub mod scratch;
 
 pub use cancel::CancelToken;
-pub use channel::{channel, Receiver, Sender};
+pub use channel::{channel, Receiver, Sender, TrySendError};
 pub use pool::{PoolShutDown, ThreadPool};
 pub use scratch::ScratchArena;

@@ -65,6 +65,24 @@
 //! residency and hit/miss/switch counters.  See the README's "Multi-model
 //! serving" section.
 //!
+//! ## Overload & fault tolerance
+//!
+//! The request lifecycle is overload-safe end to end: requests carry an
+//! optional deadline (`deadline_ms` on the wire, or a server default) and
+//! are shed with a typed `deadline_exceeded` error — at dequeue if already
+//! expired, or mid-run at an adaptive chunk boundary with the samples
+//! actually spent.  Admission control ([`coordinator::OverloadControl`])
+//! tracks queued work in estimated samples and rejects beyond capacity
+//! with `overloaded` + `retry_after_ms`; sustained pressure first clamps
+//! per-request sample budgets, then (opt-in) browns out to the mean-field
+//! backend, flagging responses `degraded: true`.  A panic while serving a
+//! batch is caught, answered as `internal_error` to that batch only, and
+//! the engine rebuilds deterministically — post-recovery outputs replay
+//! bitwise against a fresh engine.  The seeded fault-injection harness
+//! ([`util::fault`], `--features fault-injection`) drives the chaos suite
+//! (`rust/tests/chaos.rs`); see the README's "Overload & fault tolerance"
+//! section for the error-code table.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 

@@ -93,7 +93,8 @@ USAGE: pbm <subcommand> [flags]
             --entropy-prefetch off|sync|on --entropy-block N
             --adaptive --min-samples N --max-samples N --target-confidence F
             --health --health-window BITS --health-duty F
-            --entropy-fallback digital|none]
+            --entropy-fallback digital|none
+            --deadline-ms N --brownout --idle-timeout-ms N]
             (--threads: sampling workers per engine; 1 = sequential,
              0 = one per core; --entropy-prefetch on: background entropy
              producers feed the sampling hot path via lock-free block
@@ -109,9 +110,16 @@ USAGE: pbm <subcommand> [flags]
              --health: online entropy-health monitor — NIST battery +
              min-entropy over tapped producer blocks, scorecards on /info;
              --entropy-fallback digital: swap degraded photonic sampling
-             to the digital baseline; see the [health] config table)
+             to the digital baseline; see the [health] config table;
+             --deadline-ms: server-default request deadline (0 = none),
+             clients may send per-request deadline_ms; full/over-budget
+             queues shed with code=overloaded + retry_after_ms; --brownout
+             opts into the mean-field degradation tier under sustained
+             overload (responses flag degraded:true); --idle-timeout-ms:
+             close silent connections, default 60000; see the [overload]
+             config table)
   classify  [--addr HOST:PORT --model D --split S --index I
-            --max-samples N --target-confidence F]
+            --max-samples N --target-confidence F --deadline-ms N]
             [--local --backend B --threads N --adaptive]  (in-process)
   info
 ",
@@ -642,12 +650,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
     };
     let make_svc_cfg = || -> Result<ServiceConfig> {
+        let od = photonic_bayes::coordinator::OverloadConfig::default();
         Ok(ServiceConfig {
             max_batch: args.get_usize("max-batch", file.get_usize("batcher", "max_batch", 8)?)?,
             max_wait: std::time::Duration::from_millis(
                 args.get_u64("max-wait-ms", file.get_usize("batcher", "max_wait_ms", 2)? as u64)?,
             ),
             queue_depth: file.get_usize("batcher", "queue_depth", 256)?,
+            deadline_ms: args
+                .get_u64("deadline-ms", file.get_usize("overload", "deadline_ms", 0)? as u64)?,
+            overload: photonic_bayes::coordinator::OverloadConfig {
+                work_capacity: file.get_usize("overload", "work_capacity", 0)? as u64,
+                clamp_pressure: file.get_f64("overload", "clamp_pressure", od.clamp_pressure)?,
+                clamp_samples: file.get_usize("overload", "clamp_samples", 0)?,
+                brownout_pressure: file
+                    .get_f64("overload", "brownout_pressure", od.brownout_pressure)?,
+                brownout: args.has("brownout") || file.get_bool("overload", "brownout", false)?,
+                ..od
+            },
         })
     };
     // multi-model registry: `--models a,b` (or a `[models]` table: model
@@ -708,6 +728,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServerOptions {
         addr: args.get_or("addr", &file.get_or("server", "addr", "127.0.0.1:7878")),
         workers: args.get_usize("workers", file.get_usize("server", "workers", 8)?)?,
+        idle_timeout: std::time::Duration::from_millis(args.get_u64(
+            "idle-timeout-ms",
+            file.get_usize("server", "idle_timeout_ms", 60_000)? as u64,
+        )?),
     };
     let cancel = CancelToken::new();
     serve(router, opts, cancel, |addr| println!("listening on {addr}"))
@@ -777,8 +801,12 @@ fn cmd_classify(args: &Args) -> Result<()> {
         return Ok(());
     }
     let addr = args.get_or("addr", "127.0.0.1:7878");
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(_) => Some(args.get_u64("deadline-ms", 0)?),
+        None => None,
+    };
     let mut client = Client::connect(&addr)?;
-    let resp = client.classify_with_budget(&dataset, ds.image(index), &budget)?;
+    let resp = client.classify_opts(&dataset, ds.image(index), &budget, deadline_ms)?;
     println!("true label: {}", ds.labels[index]);
     println!("response:   {}", resp.to_string_pretty());
     Ok(())

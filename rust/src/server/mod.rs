@@ -18,8 +18,16 @@
 //! stopping at that posterior mass.  Invalid budgets (`0`, non-finite or
 //! out-of-range confidence) are rejected at parse time with a typed error
 //! response.  `samples_used` reports the passes actually spent.
+//!
+//! Overload safety: `deadline_ms` bounds how long the server may hold a
+//! request (expired ones answer `"code":"deadline_exceeded"`); a full or
+//! over-budget queue answers `"code":"overloaded"` with `retry_after_ms`;
+//! a batch that panics the engine answers `"code":"internal_error"` while
+//! the engine rebuilds; idle connections are closed with
+//! `"code":"idle_timeout"`.  Degraded (clamped/brownout) answers carry
+//! `"degraded":true`.
 
 pub mod protocol;
 pub mod tcp;
 
-pub use tcp::{serve, Client, ServerOptions};
+pub use tcp::{serve, Client, ClientConfig, ServerOptions};

@@ -4,6 +4,8 @@ use anyhow::{anyhow, Result};
 
 use crate::bnn::Decision;
 use crate::coordinator::engine::ClassifyResult;
+use crate::coordinator::metrics::ServeSnapshot;
+use crate::coordinator::overload::ServeError;
 use crate::entropy::health::Scorecard;
 use crate::registry::RegistrySnapshot;
 use crate::sampler::RequestBudget;
@@ -31,6 +33,12 @@ pub enum Request {
         /// boundary so hostile budgets (`0`, NaN, out-of-range) are a
         /// typed error response, not a downstream panic or NaN decision.
         budget: RequestBudget,
+        /// Optional relative deadline in milliseconds: the server sheds
+        /// the request (typed `deadline_exceeded`) once this much time
+        /// has passed since admission, instead of burning samples on an
+        /// answer the client has stopped waiting for.  `None` falls back
+        /// to the server's configured default.
+        deadline_ms: Option<u64>,
     },
     Info,
     Ping,
@@ -64,10 +72,12 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 ));
             }
             let budget = parse_budget(&j)?;
+            let deadline_ms = parse_deadline_ms(&j)?;
             Ok(Request::Classify {
                 model,
                 image,
                 budget,
+                deadline_ms,
             })
         }
         Some("info") => Ok(Request::Info),
@@ -105,6 +115,22 @@ fn parse_budget(j: &Json) -> Result<RequestBudget> {
         .validate()
         .map_err(|e| anyhow!("invalid sample budget: {e}"))?;
     Ok(budget)
+}
+
+/// Parse + validate the optional `deadline_ms` field: a positive exact
+/// integer (0 would expire every request before its first sample, which
+/// can only be a client bug — reject it loudly at the boundary).
+fn parse_deadline_ms(j: &Json) -> Result<Option<u64>> {
+    match j.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .filter(|f| *f >= 1.0 && f.fract() == 0.0 && *f <= u64::MAX as f64)
+                .ok_or_else(|| anyhow!("deadline_ms must be a positive integer"))?;
+            Ok(Some(f as u64))
+        }
+    }
 }
 
 /// Encode a classification result.
@@ -151,6 +177,11 @@ pub fn encode_result_into(r: &ClassifyResult, out: &mut String) {
     o.set("mean_probs", Json::arr_f32(&r.predictive.mean_probs));
     o.set("samples_used", Json::Num(r.samples_used as f64));
     o.set("latency_us", Json::Num(r.latency_us));
+    // only flagged when true: the overwhelmingly common healthy path pays
+    // no bytes for it
+    if r.degraded {
+        o.set("degraded", Json::Bool(true));
+    }
     for (k, v) in extra {
         o.set(k, v);
     }
@@ -183,17 +214,41 @@ pub fn encode_error_coded_into(code: &str, msg: &str, out: &mut String) {
     o.write_compact(out);
 }
 
+/// Append-encode a typed serving-lifecycle error ([`ServeError`]): the
+/// coded form plus the code-specific retry hint — `retry_after_ms` on
+/// `overloaded` (queue drain estimate), `samples_used` on
+/// `deadline_exceeded` (stochastic passes spent before expiry).
+pub fn encode_serve_error_into(e: &ServeError, out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("code", Json::Str(e.code().into()));
+    o.set("error", Json::Str(e.to_string()));
+    match e {
+        ServeError::Overloaded { retry_after_ms } => {
+            o.set("retry_after_ms", Json::Num(*retry_after_ms as f64));
+        }
+        ServeError::DeadlineExceeded { samples_used } => {
+            o.set("samples_used", Json::Num(*samples_used as f64));
+        }
+        ServeError::Internal { .. } => {}
+    }
+    o.write_compact(out);
+}
+
 /// Encode the `info` response.  `models` lists every servable model name
 /// (emitted under both `models` and the legacy `datasets` key); `health`
 /// carries per-dataset entropy-health scorecards (see
 /// [`crate::coordinator::Router::health_snapshot`]) and `registry` the
 /// per-engine model-registry residency snapshots (see
-/// [`crate::coordinator::Router::registry_snapshot`]) — pass empty slices
+/// [`crate::coordinator::Router::registry_snapshot`]); `serving` the
+/// per-engine overload/robustness counters (see
+/// [`crate::coordinator::Router::serving_snapshot`]) — pass empty slices
 /// and the respective object is omitted entirely.
 pub fn encode_info(
     models: &[&str],
     health: &[(String, Vec<Scorecard>)],
     registry: &[(String, RegistrySnapshot)],
+    serving: &[(String, ServeSnapshot)],
 ) -> String {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(true));
@@ -218,6 +273,13 @@ pub fn encode_info(
             r.set(engine, encode_registry_snapshot(snap));
         }
         o.set("registry", r);
+    }
+    if !serving.is_empty() {
+        let mut s = Json::obj();
+        for (engine, snap) in serving {
+            s.set(engine, snap.to_json());
+        }
+        o.set("serving", s);
     }
     o.to_string_compact()
 }
@@ -281,6 +343,17 @@ pub fn encode_classify(model: &str, image: &[f32]) -> String {
 
 /// Client-side: encode a classify request carrying budget overrides.
 pub fn encode_classify_with_budget(model: &str, image: &[f32], budget: &RequestBudget) -> String {
+    encode_classify_opts(model, image, budget, None)
+}
+
+/// Client-side: encode a classify request with budget overrides and an
+/// optional relative deadline.
+pub fn encode_classify_opts(
+    model: &str,
+    image: &[f32],
+    budget: &RequestBudget,
+    deadline_ms: Option<u64>,
+) -> String {
     let mut o = Json::obj();
     o.set("op", Json::Str("classify".into()));
     o.set("model", Json::Str(model.into()));
@@ -290,6 +363,9 @@ pub fn encode_classify_with_budget(model: &str, image: &[f32], budget: &RequestB
     }
     if let Some(c) = budget.target_confidence {
         o.set("target_confidence", Json::Num(c));
+    }
+    if let Some(d) = deadline_ms {
+        o.set("deadline_ms", Json::Num(d as f64));
     }
     o.to_string_compact()
 }
@@ -308,10 +384,12 @@ mod tests {
                 model,
                 image,
                 budget,
+                deadline_ms,
             } => {
                 assert_eq!(model, "digits");
                 assert_eq!(image, vec![0.0, 0.5, 1.0]);
                 assert!(budget.is_default());
+                assert_eq!(deadline_ms, None);
             }
             other => panic!("{other:?}"),
         }
@@ -374,6 +452,69 @@ mod tests {
     }
 
     #[test]
+    fn parse_deadline_ms_roundtrip_and_validation() {
+        let line = encode_classify_opts("digits", &[0.1], &RequestBudget::default(), Some(250));
+        match parse_request(&line).unwrap() {
+            Request::Classify { deadline_ms, .. } => assert_eq!(deadline_ms, Some(250)),
+            other => panic!("{other:?}"),
+        }
+        let base = "{\"op\":\"classify\",\"dataset\":\"d\",\"image\":[1]";
+        // 0, negatives, fractions, and non-numbers are boundary errors
+        for bad in ["0", "-5", "1.5", "\"soon\""] {
+            let err =
+                parse_request(&format!("{base},\"deadline_ms\":{bad}}}")).unwrap_err();
+            assert!(err.to_string().contains("deadline_ms"), "{bad}: {err}");
+        }
+        assert!(parse_request(&format!("{base},\"deadline_ms\":1}}")).is_ok());
+    }
+
+    #[test]
+    fn serve_errors_encode_typed_codes_and_hints() {
+        let mut s = String::new();
+        encode_serve_error_into(&ServeError::Overloaded { retry_after_ms: 40 }, &mut s);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize(), Some(40));
+
+        s.clear();
+        encode_serve_error_into(&ServeError::DeadlineExceeded { samples_used: 7 }, &mut s);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(j.get("samples_used").unwrap().as_usize(), Some(7));
+
+        s.clear();
+        encode_serve_error_into(
+            &ServeError::Internal {
+                detail: "boom".into(),
+            },
+            &mut s,
+        );
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("internal_error"));
+        assert!(j.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn encode_info_reports_serving_counters() {
+        let snap = ServeSnapshot {
+            requests_shed: 4,
+            deadline_expired: 2,
+            overload_rejects: 2,
+            panics_recovered: 1,
+            queue_depth: 3,
+        };
+        let line = encode_info(&["digits"], &[], &[], &[("digits".to_string(), snap)]);
+        let j = crate::util::json::parse(&line).unwrap();
+        let s = j.get("serving").unwrap().get("digits").unwrap();
+        assert_eq!(s.get("requests_shed").unwrap().as_usize(), Some(4));
+        assert_eq!(s.get("deadline_expired").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("overload_rejects").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("panics_recovered").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("queue_depth").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
     fn parse_info_and_ping() {
         assert_eq!(parse_request("{\"op\":\"info\"}").unwrap(), Request::Info);
         assert_eq!(parse_request("{\"op\":\"ping\"}").unwrap(), Request::Ping);
@@ -402,11 +543,12 @@ mod tests {
     fn encode_result_has_metrics() {
         let pred = Predictive::from_logits(&vec![vec![3.0, 0.0]; 5]);
         let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
-        let r = ClassifyResult {
+        let mut r = ClassifyResult {
             predictive: pred,
             decision,
             latency_us: 123.0,
             samples_used: 5,
+            degraded: false,
         };
         let line = encode_result(&r);
         let j = crate::util::json::parse(&line).unwrap();
@@ -415,12 +557,17 @@ mod tests {
         assert_eq!(j.get("class").unwrap().as_usize(), Some(0));
         assert!(j.get("mi").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(j.get("samples_used").unwrap().as_usize(), Some(5));
+        // healthy responses carry no degraded flag at all
+        assert!(j.get("degraded").is_none());
+        r.degraded = true;
+        let j = crate::util::json::parse(&encode_result(&r)).unwrap();
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(true));
     }
 
     #[test]
     fn encode_info_reports_health_scorecards() {
         // no monitors -> no entropy_health object at all
-        let plain = encode_info(&["digits"], &[], &[]);
+        let plain = encode_info(&["digits"], &[], &[], &[]);
         let j = crate::util::json::parse(&plain).unwrap();
         assert!(j.get("entropy_health").is_none());
         assert!(j.get("registry").is_none());
@@ -440,7 +587,7 @@ mod tests {
             serial_corr: 0.6,
             degraded: true,
         };
-        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[]);
+        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[], &[]);
         let j = crate::util::json::parse(&line).unwrap();
         let cards = j
             .get("entropy_health")
@@ -509,6 +656,7 @@ mod tests {
             &["blood", "digits"],
             &[],
             &[("digits".to_string(), snap)],
+            &[],
         );
         let j = crate::util::json::parse(&line).unwrap();
         let r = j.get("registry").unwrap().get("digits").unwrap();

@@ -17,6 +17,12 @@ use crate::log_info;
 pub struct ServerOptions {
     pub addr: String,
     pub workers: usize,
+    /// Close a connection after this long without a complete request.
+    /// Each connection pins a pool worker, so a silent peer (or a
+    /// slowloris trickling bytes forever) would otherwise hold one of
+    /// `workers` slots indefinitely.  The close is announced with a coded
+    /// `"idle_timeout"` error line.  `Duration::ZERO` disables the limit.
+    pub idle_timeout: std::time::Duration,
 }
 
 impl Default for ServerOptions {
@@ -24,6 +30,7 @@ impl Default for ServerOptions {
         Self {
             addr: "127.0.0.1:7878".into(),
             workers: 8,
+            idle_timeout: std::time::Duration::from_secs(60),
         }
     }
 }
@@ -47,8 +54,9 @@ pub fn serve(
             Ok((stream, peer)) => {
                 let router = router.clone();
                 let cancel = cancel.clone();
+                let idle = opts.idle_timeout;
                 let submitted = pool.execute(move || {
-                    if let Err(e) = handle_conn(stream, &router, &cancel) {
+                    if let Err(e) = handle_conn(stream, &router, &cancel, idle) {
                         crate::log_debug!("conn {peer}: {e}");
                     }
                 });
@@ -108,7 +116,17 @@ pub(crate) fn write_line_vectored<W: Write>(w: &mut W, body: &[u8]) -> std::io::
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    cancel: &CancelToken,
+    idle_timeout: std::time::Duration,
+) -> Result<()> {
+    // short read timeout = the poll tick for cancellation and idle checks;
+    // the actual idle budget is `idle_timeout`, measured from the last
+    // completed request (the old code's 200 ms "timeout" only ever ticked —
+    // it never closed anything, so silent connections pinned workers
+    // forever)
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -116,8 +134,21 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
     // one response buffer per connection, reused across requests: encodes
     // append into it instead of allocating a fresh String per response
     let mut resp = String::new();
+    let mut last_activity = std::time::Instant::now();
     loop {
         if cancel.is_cancelled() {
+            return Ok(());
+        }
+        // a trickling peer resets nothing: only a *complete* request
+        // counts as activity, so slowloris half-lines still time out
+        if !idle_timeout.is_zero() && last_activity.elapsed() >= idle_timeout {
+            resp.clear();
+            protocol::encode_error_coded_into(
+                "idle_timeout",
+                &format!("closing idle connection after {} ms", idle_timeout.as_millis()),
+                &mut resp,
+            );
+            let _ = write_line_vectored(&mut writer, resp.as_bytes());
             return Ok(());
         }
         if line.len() >= MAX_LINE_BYTES {
@@ -145,6 +176,7 @@ fn handle_conn(stream: TcpStream, router: &Router, cancel: &CancelToken) -> Resu
                 respond_into(router, &line, &mut resp);
                 write_line_vectored(&mut writer, resp.as_bytes())?;
                 line.clear();
+                last_activity = std::time::Instant::now();
             }
             Ok(_) => {} // mid-line: keep accumulating (next loop re-budgets)
             Err(ref e)
@@ -177,15 +209,22 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
             &router.datasets(),
             &router.health_snapshot(),
             &router.registry_snapshot(),
+            &router.serving_snapshot(),
         )),
         Ok(Request::Classify {
             model,
             image,
             budget,
+            deadline_ms,
         }) => {
             // the engine thread re-resolves the name against its registry,
             // so the request carries it even though routing also uses it
-            let (req, rx) = ClassifyRequest::with_model(Some(model.clone()), image, budget);
+            let (mut req, rx) = ClassifyRequest::with_model(Some(model.clone()), image, budget);
+            // the deadline clock starts here, at admission: queueing time
+            // counts against it (that is the point — shed what went stale
+            // in the queue)
+            req.deadline = deadline_ms
+                .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
             match router.route(&model, req) {
                 Err(e) => encode_routing_error(&e, out),
                 Ok(()) => match rx.recv() {
@@ -198,29 +237,121 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
     }
 }
 
-/// Encode a routing/engine error, surfacing [`UnknownModel`] as a
-/// machine-readable `"code":"unknown_model"` response.
+/// Encode a routing/engine error, surfacing typed serving-lifecycle errors
+/// ([`crate::coordinator::overload::ServeError`]: `overloaded`,
+/// `deadline_exceeded`, `internal_error`) and [`UnknownModel`] as
+/// machine-readable coded responses.
 fn encode_routing_error(e: &anyhow::Error, out: &mut String) {
-    if e.downcast_ref::<crate::registry::UnknownModel>().is_some() {
+    if let Some(se) = e.downcast_ref::<crate::coordinator::overload::ServeError>() {
+        protocol::encode_serve_error_into(se, out);
+    } else if e.downcast_ref::<crate::registry::UnknownModel>().is_some() {
         protocol::encode_error_coded_into("unknown_model", &format!("{e}"), out);
     } else {
         protocol::encode_error_into(&format!("{e}"), out);
     }
 }
 
+/// Client-side timeouts and retry policy.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub connect_timeout: std::time::Duration,
+    /// Per-response read timeout.  The old client blocked forever on a
+    /// silent server; classification can legitimately take a while, so
+    /// the default is generous rather than absent.
+    pub read_timeout: std::time::Duration,
+    pub write_timeout: std::time::Duration,
+    /// Extra attempts for *idempotent* calls ([`Client::call_idempotent`]):
+    /// `ping`/`info` only — a retried classify could double-spend engine
+    /// samples on a response that was merely slow.
+    pub retries: u32,
+    /// First retry backoff; doubles per attempt up to `backoff_cap`, with
+    /// a deterministic jitter factor in `[0.5, 1.5)` so a fleet of clients
+    /// retrying a recovering server does not stampede in lockstep.
+    pub backoff_base: std::time::Duration,
+    pub backoff_cap: std::time::Duration,
+    /// Seed for the jitter stream (deterministic for tests).
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: std::time::Duration::from_secs(5),
+            read_timeout: std::time::Duration::from_secs(30),
+            write_timeout: std::time::Duration::from_secs(5),
+            retries: 3,
+            backoff_base: std::time::Duration::from_millis(50),
+            backoff_cap: std::time::Duration::from_secs(2),
+            seed: 0x00C1_1E47,
+        }
+    }
+}
+
+/// Backoff before retry `attempt` (1-based): exponential from
+/// `backoff_base`, capped at `backoff_cap`, jittered to 50–150% by the
+/// caller-owned splitmix64 stream.
+fn backoff_delay(cfg: &ClientConfig, attempt: u32, rng: &mut u64) -> std::time::Duration {
+    let exp = cfg
+        .backoff_base
+        .saturating_mul(1u32 << attempt.saturating_sub(1).min(16))
+        .min(cfg.backoff_cap);
+    let frac = 0.5 + (crate::util::fault::splitmix64(rng) >> 11) as f64 / (1u64 << 53) as f64;
+    exp.mul_f64(frac)
+}
+
+/// Open a connection with the configured timeouts.  `TcpStream::connect`
+/// has no timeout parameter, so resolve first and use `connect_timeout`
+/// per candidate address.
+fn dial(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let addrs: Vec<_> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .collect();
+    let mut last = None;
+    for a in &addrs {
+        match TcpStream::connect_timeout(a, cfg.connect_timeout) {
+            Ok(s) => {
+                // zero = no timeout (std rejects Some(ZERO))
+                s.set_read_timeout((!cfg.read_timeout.is_zero()).then_some(cfg.read_timeout))?;
+                s.set_write_timeout((!cfg.write_timeout.is_zero()).then_some(cfg.write_timeout))?;
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => anyhow!("connect {addr}: {e}"),
+        None => anyhow!("connect {addr}: no addresses resolved"),
+    })
+}
+
 /// Simple blocking client for the gateway (used by examples and tests).
+/// Connects with a timeout, bounds every read/write, and retries
+/// idempotent calls with jittered exponential backoff.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: String,
+    cfg: ClientConfig,
+    rng: u64,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Self> {
+        let stream = dial(addr, &cfg)?;
         let writer = stream.try_clone()?;
+        let rng = cfg.seed;
         Ok(Self {
             reader: BufReader::new(stream),
             writer,
+            addr: addr.to_string(),
+            cfg,
+            rng,
         })
     }
 
@@ -247,9 +378,42 @@ impl Client {
         crate::util::json::parse(&resp).map_err(|e| anyhow!("bad response: {e} ({resp:?})"))
     }
 
+    /// [`call`](Self::call) with bounded retries for idempotent requests:
+    /// on failure, re-dial the server and back off exponentially with
+    /// jitter (`ClientConfig::retries` extra attempts).  Only for requests
+    /// that are safe to repeat — `ping` and `info` use it, `classify`
+    /// deliberately does not.
+    pub fn call_idempotent(&mut self, line: &str) -> Result<crate::util::json::Json> {
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff_delay(&self.cfg, attempt, &mut self.rng));
+                // the old stream may be half-dead (timed-out read leaves
+                // an unread response in flight): start clean
+                if let Ok(stream) = dial(&self.addr, &self.cfg) {
+                    if let Ok(writer) = stream.try_clone() {
+                        self.reader = BufReader::new(stream);
+                        self.writer = writer;
+                    }
+                }
+            }
+            match self.call(line) {
+                Ok(j) => return Ok(j),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("no attempts made")))
+    }
+
     pub fn ping(&mut self) -> Result<bool> {
-        let j = self.call("{\"op\":\"ping\"}")?;
+        let j = self.call_idempotent("{\"op\":\"ping\"}")?;
         Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    /// Fetch the server's `info` document (models, health, registry,
+    /// serving counters), with idempotent retry.
+    pub fn info(&mut self) -> Result<crate::util::json::Json> {
+        self.call_idempotent("{\"op\":\"info\"}")
     }
 
     pub fn classify(&mut self, model: &str, image: &[f32]) -> Result<crate::util::json::Json> {
@@ -265,6 +429,19 @@ impl Client {
         budget: &crate::sampler::RequestBudget,
     ) -> Result<crate::util::json::Json> {
         self.call(&protocol::encode_classify_with_budget(model, image, budget))
+    }
+
+    /// Classify with budget overrides and an optional relative deadline
+    /// (`deadline_ms` protocol field).  Not retried: the server may have
+    /// spent samples on an attempt whose response was merely slow.
+    pub fn classify_opts(
+        &mut self,
+        model: &str,
+        image: &[f32],
+        budget: &crate::sampler::RequestBudget,
+        deadline_ms: Option<u64>,
+    ) -> Result<crate::util::json::Json> {
+        self.call(&protocol::encode_classify_opts(model, image, budget, deadline_ms))
     }
 }
 
@@ -328,6 +505,59 @@ mod tests {
         let mut buf: Vec<u8> = Vec::new();
         write_line_vectored(&mut buf, b"body").unwrap();
         assert_eq!(buf, b"body\n");
+    }
+
+    #[test]
+    fn backoff_is_jittered_bounded_and_deterministic() {
+        let cfg = ClientConfig::default();
+        let mut rng = cfg.seed;
+        let mut rng2 = cfg.seed;
+        for attempt in 1..=8 {
+            let d = backoff_delay(&cfg, attempt, &mut rng);
+            // 50–150% of the capped exponential
+            let exp = cfg
+                .backoff_base
+                .saturating_mul(1u32 << (attempt - 1).min(16))
+                .min(cfg.backoff_cap);
+            assert!(d >= exp.mul_f64(0.5) && d < exp.mul_f64(1.5), "attempt {attempt}: {d:?}");
+            assert!(d <= cfg.backoff_cap.mul_f64(1.5));
+            // same seed, same schedule
+            assert_eq!(d, backoff_delay(&cfg, attempt, &mut rng2));
+        }
+    }
+
+    #[test]
+    fn idle_connection_is_closed_with_coded_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let router = Router::new();
+            let cancel = CancelToken::new();
+            handle_conn(
+                stream,
+                &router,
+                &cancel,
+                std::time::Duration::from_millis(250),
+            )
+            .unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        // a live request resets the idle clock...
+        write_line_vectored(&mut c, b"{\"op\":\"ping\"}").unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "{line}");
+        // ...then silence: the server must announce and close, not hang
+        line.clear();
+        let t0 = std::time::Instant::now();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("\"code\":\"idle_timeout\""), "{line}");
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "connection closed");
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        h.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Deterministic fault injection for the chaos test suite.
+//!
+//! Production code marks interesting failure sites with
+//! [`faultpoint`]`("name")`.  Without the `fault-injection` cargo feature
+//! the call is an inlined `Ok(())` — the serving path carries no
+//! registry lookup, no atomics, nothing.  With the feature enabled,
+//! tests arm a named point with a [`Fault`] (panic, IO error, delay)
+//! and a [`Trigger`] (always, on the n-th traversal, or seeded
+//! pseudo-random), and the next traversal fires it.
+//!
+//! Triggers are deterministic: `Nth` counts traversals, `Seeded` draws
+//! from a splitmix64 stream owned by the armed point.  The same arming
+//! plus the same traversal order reproduces the same faults bitwise —
+//! which is what lets the chaos suite assert that post-recovery outputs
+//! replay against an unfaulted run.
+//!
+//! Fault points are process-global; concurrent tests must use distinct
+//! point names (the suite namespaces them per test).
+
+/// Tiny shared PRNG step (splitmix64).  Also used for client retry
+/// jitter — one well-known generator instead of several ad-hoc ones.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// What an armed fault point does when its trigger fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// `panic!` at the fault point (exercises `catch_unwind` recovery).
+    Panic,
+    /// Return an `std::io::Error` from the fault point.
+    IoError,
+    /// Sleep for the given milliseconds, then continue normally.
+    DelayMs(u64),
+}
+
+/// When an armed fault point fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Trigger {
+    /// Every traversal.
+    Always,
+    /// Only the n-th traversal after arming (1-based); others pass.
+    Nth(u64),
+    /// Fire with probability `prob_milli`/1000 per traversal, drawn
+    /// from a splitmix64 stream seeded with `seed`.
+    Seeded { seed: u64, prob_milli: u32 },
+}
+
+/// Traverse the named fault point.  `Err` only ever carries an injected
+/// [`Fault::IoError`]; callers on `anyhow` paths map it with `?` via
+/// `map_err`.  With the `fault-injection` feature off this is an
+/// inlined `Ok(())`.
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn faultpoint(_name: &str) -> std::io::Result<()> {
+    Ok(())
+}
+
+#[cfg(feature = "fault-injection")]
+pub use injected::{arm, disarm, disarm_all, faultpoint, hits};
+
+#[cfg(feature = "fault-injection")]
+mod injected {
+    use super::{splitmix64, Fault, Trigger};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    struct Armed {
+        fault: Fault,
+        trigger: Trigger,
+        traversals: u64,
+        rng: u64,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        armed: HashMap<String, Armed>,
+        /// Traversal counts per point name, armed or not.
+        hits: HashMap<String, u64>,
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(Registry::default()))
+    }
+
+    fn lock() -> std::sync::MutexGuard<'static, Registry> {
+        // a panic injected *after* the guard drops can still poison the
+        // mutex via an unlucky unwind elsewhere; the registry state is
+        // plain data, so recover it
+        registry().lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Arm `name` with a fault and trigger (replacing any previous
+    /// arming and resetting its traversal count / RNG stream).
+    pub fn arm(name: &str, fault: Fault, trigger: Trigger) {
+        let rng = match &trigger {
+            Trigger::Seeded { seed, .. } => *seed,
+            _ => 0,
+        };
+        lock().armed.insert(
+            name.to_string(),
+            Armed {
+                fault,
+                trigger,
+                traversals: 0,
+                rng,
+            },
+        );
+    }
+
+    /// Disarm one point (no-op if not armed).
+    pub fn disarm(name: &str) {
+        lock().armed.remove(name);
+    }
+
+    /// Disarm every point and clear traversal counters.
+    pub fn disarm_all() {
+        let mut reg = lock();
+        reg.armed.clear();
+        reg.hits.clear();
+    }
+
+    /// Times the named point has been traversed since `disarm_all`.
+    pub fn hits(name: &str) -> u64 {
+        lock().hits.get(name).copied().unwrap_or(0)
+    }
+
+    /// Traverse the named fault point (feature-on implementation).
+    pub fn faultpoint(name: &str) -> std::io::Result<()> {
+        // decide under the lock, act after dropping it, so an injected
+        // panic never unwinds while holding the registry mutex
+        let action: Option<Fault> = {
+            let mut reg = lock();
+            *reg.hits.entry(name.to_string()).or_insert(0) += 1;
+            match reg.armed.get_mut(name) {
+                None => None,
+                Some(a) => {
+                    a.traversals += 1;
+                    let fire = match &a.trigger {
+                        Trigger::Always => true,
+                        Trigger::Nth(n) => a.traversals == *n,
+                        Trigger::Seeded { prob_milli, .. } => {
+                            splitmix64(&mut a.rng) % 1000 < u64::from(*prob_milli)
+                        }
+                    };
+                    fire.then(|| a.fault.clone())
+                }
+            }
+        };
+        match action {
+            None => Ok(()),
+            Some(Fault::Panic) => panic!("injected fault at '{name}'"),
+            Some(Fault::IoError) => Err(std::io::Error::other(format!(
+                "injected IO fault at '{name}'"
+            ))),
+            Some(Fault::DelayMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic_and_mixing() {
+        let mut a = 42u64;
+        let mut b = 42u64;
+        let xs: Vec<u64> = (0..4).map(|_| splitmix64(&mut a)).collect();
+        let ys: Vec<u64> = (0..4).map(|_| splitmix64(&mut b)).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs[0], xs[1]);
+    }
+
+    #[test]
+    fn disabled_faultpoint_is_ok() {
+        // with the feature off this is the no-op; with it on, an
+        // un-armed point passes — either way Ok
+        assert!(faultpoint("never.armed").is_ok());
+    }
+
+    #[cfg(feature = "fault-injection")]
+    mod injected {
+        use super::super::*;
+
+        #[test]
+        fn nth_trigger_fires_exactly_once() {
+            let name = "test.fault.nth";
+            arm(name, Fault::IoError, Trigger::Nth(3));
+            assert!(faultpoint(name).is_ok());
+            assert!(faultpoint(name).is_ok());
+            assert!(faultpoint(name).is_err());
+            assert!(faultpoint(name).is_ok());
+            disarm(name);
+        }
+
+        #[test]
+        fn always_fires_until_disarmed() {
+            let name = "test.fault.always";
+            arm(name, Fault::IoError, Trigger::Always);
+            assert!(faultpoint(name).is_err());
+            assert!(faultpoint(name).is_err());
+            disarm(name);
+            assert!(faultpoint(name).is_ok());
+        }
+
+        #[test]
+        fn seeded_trigger_replays() {
+            let name = "test.fault.seeded";
+            let fire_pattern = |seed: u64| -> Vec<bool> {
+                arm(
+                    name,
+                    Fault::IoError,
+                    Trigger::Seeded {
+                        seed,
+                        prob_milli: 400,
+                    },
+                );
+                let p: Vec<bool> =
+                    (0..32).map(|_| faultpoint(name).is_err()).collect();
+                disarm(name);
+                p
+            };
+            let a = fire_pattern(7);
+            let b = fire_pattern(7);
+            assert_eq!(a, b);
+            assert!(a.iter().any(|&x| x), "p=0.4 over 32 draws never fired");
+            assert!(!a.iter().all(|&x| x), "p=0.4 over 32 draws always fired");
+        }
+
+        #[test]
+        fn panic_fault_unwinds() {
+            let name = "test.fault.panic";
+            arm(name, Fault::Panic, Trigger::Always);
+            let r = std::panic::catch_unwind(|| faultpoint(name));
+            disarm(name);
+            assert!(r.is_err());
+            // the registry mutex survived the unwind
+            assert!(faultpoint(name).is_ok());
+        }
+
+        #[test]
+        fn hits_counts_traversals() {
+            let name = "test.fault.hits";
+            let before = hits(name);
+            let _ = faultpoint(name);
+            let _ = faultpoint(name);
+            assert_eq!(hits(name), before + 2);
+        }
+    }
+}

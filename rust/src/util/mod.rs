@@ -1,5 +1,7 @@
-//! Small shared substrates: JSON, descriptive statistics, logging.
+//! Small shared substrates: JSON, descriptive statistics, logging,
+//! fault injection.
 
+pub mod fault;
 pub mod fft;
 pub mod json;
 pub mod logging;

@@ -1,0 +1,244 @@
+//! Chaos suite: drives the full service loop through the seeded
+//! fault-injection harness (`--features fault-injection`).
+//!
+//! The three contracts under test:
+//! 1. an injected engine panic answers *that batch* with a typed
+//!    `internal_error`, the engine thread survives, and every surviving
+//!    output is bitwise identical to an unfaulted run;
+//! 2. a full queue / exhausted work budget sheds with a typed
+//!    `overloaded` error immediately — never a hang;
+//! 3. a deadline expiring mid-run reports the samples actually spent.
+//!
+//! Fault points are process-global, so tests that arm them are
+//! serialized through `harness()`.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use photonic_bayes::coordinator::{
+    run_service_loop, submit_with_admission, ClassifyRequest, ClassifyResult, OverloadConfig,
+    OverloadControl, ServeCounters, ServeError, ServiceConfig, SynthExecutor,
+};
+use photonic_bayes::exec::{channel, Receiver, Sender};
+use photonic_bayes::util::fault::{self, Fault, Trigger};
+
+/// Serialize tests that arm global fault points (and disarm any residue
+/// a previous test left behind, even if it panicked mid-assert).
+fn harness() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    fault::disarm_all();
+    g
+}
+
+struct Service {
+    tx: Sender<ClassifyRequest>,
+    ctrl: Arc<OverloadControl>,
+    counters: Arc<ServeCounters>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Service {
+    fn spawn(seed: u64, n_samples: usize, queue_depth: usize) -> Self {
+        let svc = ServiceConfig {
+            queue_depth,
+            overload: OverloadConfig {
+                default_cost: n_samples as u64,
+                ..OverloadConfig::default()
+            },
+            ..ServiceConfig::default()
+        };
+        let ctrl = Arc::new(OverloadControl::new(svc.overload.clone(), svc.queue_depth));
+        let counters = Arc::new(ServeCounters::default());
+        let (tx, rx) = channel::<ClassifyRequest>(queue_depth);
+        let (c2, k2) = (ctrl.clone(), counters.clone());
+        let thread = std::thread::spawn(move || {
+            let mut exec = SynthExecutor::new(seed, n_samples);
+            run_service_loop(&mut exec, rx, &svc, &c2, &k2);
+        });
+        Self {
+            tx,
+            ctrl,
+            counters,
+            thread: Some(thread),
+        }
+    }
+
+    /// One request/response round trip (each forms its own batch, keeping
+    /// batch composition deterministic across faulted and control runs).
+    fn roundtrip(&self, image: Vec<f32>) -> Result<ClassifyResult, anyhow::Error> {
+        let (mut req, rx) = ClassifyRequest::new(image);
+        req.deadline = None;
+        self.tx.send(req).unwrap();
+        rx.recv().expect("reply channel open")
+    }
+
+    fn roundtrip_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<ClassifyResult, anyhow::Error> {
+        let (mut req, rx) = ClassifyRequest::new(image);
+        req.deadline = Some(deadline);
+        self.tx.send(req).unwrap();
+        rx.recv().expect("reply channel open")
+    }
+
+    fn shutdown(mut self) {
+        self.tx.close();
+        self.thread.take().unwrap().join().unwrap();
+    }
+}
+
+fn mean_bits(r: &ClassifyResult) -> Vec<u32> {
+    r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+}
+
+#[test]
+fn injected_panic_is_isolated_and_survivors_replay_bitwise() {
+    let _g = harness();
+    let img = |v: f32| vec![v; 4];
+
+    let svc = Service::spawn(42, 5, 16);
+    // healthy batch before the fault
+    let r1 = svc.roundtrip(img(0.1)).unwrap();
+
+    // poison exactly the next batch
+    fault::arm("synth.classify", Fault::Panic, Trigger::Nth(1));
+    let err = svc.roundtrip(img(0.2)).unwrap_err();
+    fault::disarm("synth.classify");
+    let se = err.downcast_ref::<ServeError>().expect("typed error");
+    assert!(
+        matches!(se, ServeError::Internal { .. }),
+        "panicked batch answers internal_error, got {se:?}"
+    );
+    assert_eq!(se.code(), "internal_error");
+
+    // the engine thread survived and keeps serving
+    let r3 = svc.roundtrip(img(0.3)).unwrap();
+    assert_eq!(svc.counters.panics_recovered.load(Ordering::Relaxed), 1);
+    svc.shutdown();
+
+    // pre-fault output replays bitwise against an unfaulted run
+    let control = Service::spawn(42, 5, 16);
+    let c1 = control.roundtrip(img(0.1)).unwrap();
+    assert_eq!(mean_bits(&r1), mean_bits(&c1), "pre-fault output diverged");
+    control.shutdown();
+
+    // recovery rebuilds from seed: the post-recovery output is bitwise
+    // identical to a freshly built engine serving the same request
+    let fresh = Service::spawn(42, 5, 16);
+    let f3 = fresh.roundtrip(img(0.3)).unwrap();
+    assert_eq!(
+        mean_bits(&r3),
+        mean_bits(&f3),
+        "post-recovery output is not a bitwise replay of a fresh engine"
+    );
+    fresh.shutdown();
+}
+
+#[test]
+fn injected_io_error_answers_that_batch_without_killing_the_engine() {
+    let _g = harness();
+    let svc = Service::spawn(7, 4, 16);
+    fault::arm("synth.classify", Fault::IoError, Trigger::Nth(1));
+    let err = svc.roundtrip(vec![0.5; 4]).unwrap_err();
+    fault::disarm("synth.classify");
+    assert!(err.to_string().contains("injected IO fault"), "{err}");
+    // no panic happened, and the loop keeps serving
+    assert_eq!(svc.counters.panics_recovered.load(Ordering::Relaxed), 0);
+    assert!(svc.roundtrip(vec![0.5; 4]).is_ok());
+    svc.shutdown();
+}
+
+#[test]
+fn overload_sheds_typed_and_never_hangs() {
+    let _g = harness();
+    // engine crawls: every simulated sample takes 20 ms
+    fault::arm("synth.sample", Fault::DelayMs(20), Trigger::Always);
+    let depth = 2;
+    let svc = Service::spawn(3, 10, depth);
+
+    // flood at well over 2x capacity; admission must answer every request
+    // immediately — accepted or typed-overloaded — without blocking
+    let mut replies: Vec<Receiver<Result<ClassifyResult, anyhow::Error>>> = Vec::new();
+    let mut rejected = 0u32;
+    for _ in 0..12 {
+        let (req, rx) = ClassifyRequest::new(vec![0.2; 4]);
+        let t0 = Instant::now();
+        match submit_with_admission(&svc.tx, &svc.ctrl, &svc.counters, 0, req) {
+            Ok(()) => replies.push(rx),
+            Err(e) => {
+                let se = e.downcast_ref::<ServeError>().expect("typed error");
+                match se {
+                    ServeError::Overloaded { retry_after_ms } => {
+                        assert!(*retry_after_ms >= 1, "retry hint present");
+                    }
+                    other => panic!("expected overloaded, got {other:?}"),
+                }
+                rejected += 1;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "admission decision must not block"
+        );
+    }
+    assert!(rejected > 0, "2x+ overload must shed something");
+    assert!(
+        svc.counters.overload_rejects.load(Ordering::Relaxed) >= u64::from(rejected)
+    );
+
+    // every admitted request still gets an answer (bounded, no hang)
+    for rx in replies {
+        assert!(rx.recv().expect("reply delivered").is_ok());
+    }
+    fault::disarm("synth.sample");
+    svc.shutdown();
+}
+
+#[test]
+fn deadline_mid_run_reports_partial_samples() {
+    let _g = harness();
+    // 50-sample budget at 5 ms per sample = 250 ms of work against a
+    // 30 ms deadline: the run must stop at a chunk boundary partway in
+    fault::arm("synth.sample", Fault::DelayMs(5), Trigger::Always);
+    let svc = Service::spawn(9, 50, 16);
+    let err = svc
+        .roundtrip_deadline(vec![0.4; 4], Instant::now() + Duration::from_millis(30))
+        .unwrap_err();
+    fault::disarm("synth.sample");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::DeadlineExceeded { samples_used }) => {
+            assert!(
+                *samples_used > 0 && *samples_used < 50,
+                "expected partial spend, got {samples_used}"
+            );
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(svc.counters.deadline_expired.load(Ordering::Relaxed) >= 1);
+    // the engine is free again immediately for well-budgeted requests
+    let ok = svc
+        .roundtrip_deadline(vec![0.4; 4], Instant::now() + Duration::from_secs(30))
+        .unwrap();
+    assert_eq!(ok.samples_used, 50);
+    svc.shutdown();
+}
+
+#[test]
+fn default_budget_without_fixture_faults_is_clean() {
+    // sanity for the harness itself: with nothing armed the loop behaves
+    // exactly like the unfaulted service-layer tests
+    let _g = harness();
+    let svc = Service::spawn(1, 3, 8);
+    let r = svc.roundtrip(vec![0.9; 4]).unwrap();
+    assert_eq!(r.samples_used, 3);
+    assert!(!r.degraded);
+    assert_eq!(svc.counters.requests_shed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}

@@ -45,6 +45,7 @@ fn engine_service_answers_concurrent_clients() {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             queue_depth: 64,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -42,6 +42,7 @@ fn tcp_round_trip_ping_info_classify() {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 queue_depth: 32,
+                ..Default::default()
             },
         )
         .unwrap(),
@@ -57,6 +58,7 @@ fn tcp_round_trip_ping_info_classify() {
             ServerOptions {
                 addr: "127.0.0.1:0".into(),
                 workers: 4,
+                ..Default::default()
             },
             c2,
             move |a| {

@@ -224,6 +224,7 @@ mod gateway {
                     max_batch: 4,
                     max_wait: Duration::from_millis(1),
                     queue_depth: 32,
+                    ..Default::default()
                 },
             )
             .unwrap(),
@@ -239,6 +240,7 @@ mod gateway {
                 ServerOptions {
                     addr: "127.0.0.1:0".into(),
                     workers: 4,
+                    ..Default::default()
                 },
                 c2,
                 move |a| {
