@@ -3,14 +3,15 @@
 //! index).  Each section prints the paper's value next to the measured one.
 //!
 //! Sections: headline, backends, entropy, adaptive, multimodel, serving,
-//! fig2_error, fig2_delay, nist, health, fig4_roc, fig4_confusion,
-//! fig5_scatter, fig5_auroc, ablations.
+//! cluster, fig2_error, fig2_delay, nist, health, fig4_roc,
+//! fig4_confusion, fig5_scatter, fig5_auroc, ablations.
 //!
 //! Machine-readable trajectories (`--json <path>`): `backends` →
 //! `BENCH_backends.json`, `entropy` → `BENCH_entropy.json`, `adaptive` →
 //! `BENCH_adaptive.json`, `health` → `BENCH_health.json`, `multimodel` →
-//! `BENCH_multimodel.json`, `serving` → `BENCH_serving.json`; CI
-//! regenerates all six per push and archives them as workflow artifacts.
+//! `BENCH_multimodel.json`, `serving` → `BENCH_serving.json`, `cluster` →
+//! `BENCH_cluster.json`; CI regenerates all seven per push and archives
+//! them as workflow artifacts.
 //!
 //! The Fig. 4/5 sections need trained checkpoints
 //! (`pbm train --dataset digits` / `--dataset blood`); they fall back to a
@@ -70,6 +71,9 @@ fn main() {
     }
     if run("serving") {
         serving(&mut sink);
+    }
+    if run("cluster") {
+        cluster_bench(&mut sink);
     }
     if run("fig2_error") {
         fig2_error();
@@ -593,6 +597,88 @@ fn serving(sink: &mut Option<JsonSink>) {
     }
     tx.close();
     engine.join().unwrap();
+}
+
+/// Cluster mode: a coordinator fronting N local workers over loopback TCP
+/// — round-trip throughput per pool size, plus the cost of the request
+/// that discovers a dead worker and re-routes.  Dispatch is serial per
+/// placement (one coordinator engine thread), so the per-pool-size rows
+/// measure protocol + shard overhead, not parallel speedup.  The rows
+/// land machine-readably in `BENCH_cluster.json`.
+fn cluster_bench(sink: &mut Option<JsonSink>) {
+    use photonic_bayes::cluster::{self, ClusterConfig, WorkerGuard, WorkerOptions};
+    use photonic_bayes::coordinator::ServiceConfig;
+    use photonic_bayes::server::ClientConfig;
+    use std::time::{Duration, Instant};
+
+    section("CLUSTER — sharded serving over loopback, failover cost");
+    let image = vec![0.2f32, 0.4, 0.6, 0.8];
+    let n_samples = 4usize;
+    let work = Duration::from_micros(100);
+    let mk_cfg = || ClusterConfig {
+        n_samples,
+        probe_interval: Duration::ZERO,
+        client: ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            ..ClientConfig::default()
+        },
+        ..ClusterConfig::default()
+    };
+    let spawn_workers = |n: usize| -> Vec<WorkerGuard> {
+        (0..n)
+            .map(|i| {
+                cluster::spawn_local_worker(WorkerOptions {
+                    seed: 100 + i as u64,
+                    n_samples,
+                    work_per_sample: work,
+                    ..WorkerOptions::default()
+                })
+                .expect("spawn worker")
+            })
+            .collect()
+    };
+
+    println!("{:<26} {:>14} {:>14}", "pool", "req/s", "us/req");
+    let reqs = 64usize;
+    for w in [1usize, 2, 4] {
+        let workers = spawn_workers(w);
+        let addrs: Vec<String> = workers.iter().map(|g| g.addr.clone()).collect();
+        let (handle, _pool) = cluster::spawn_coordinator(mk_cfg(), addrs, ServiceConfig::default())
+            .expect("spawn coordinator");
+        handle.classify_blocking(image.clone()).expect("warm");
+        let t0 = Instant::now();
+        for _ in 0..reqs {
+            black_box(handle.classify_blocking(image.clone()).expect("classify"));
+        }
+        let elapsed = t0.elapsed();
+        let us = elapsed.as_micros() as f64 / reqs as f64;
+        let rps = reqs as f64 / elapsed.as_secs_f64();
+        println!("{:<26} {:>14.0} {:>14.1}", format!("{w} worker(s)"), rps, us);
+        if let Some(sink) = sink {
+            sink.push(&format!("cluster/throughput_w{w}"), us * 1e3, rps);
+        }
+        handle.shutdown();
+        drop(workers);
+    }
+
+    // failover: kill one of two workers, then time the request whose lane
+    // points at the corpse — connect-refused on loopback plus the re-route
+    let mut workers = spawn_workers(2);
+    let addrs: Vec<String> = workers.iter().map(|g| g.addr.clone()).collect();
+    let (handle, _pool) = cluster::spawn_coordinator(mk_cfg(), addrs, ServiceConfig::default())
+        .expect("spawn coordinator");
+    handle.classify_blocking(image.clone()).expect("warm"); // placement 0 → lane 0
+    workers.pop().expect("two workers").stop();
+    let t0 = Instant::now();
+    // placement 1 → lane 1 → the dead worker: transport failure + re-route
+    black_box(handle.classify_blocking(image.clone()).expect("failover"));
+    let failover_us = t0.elapsed().as_micros() as f64;
+    println!("{:<26} {:>14.0} us", "failover (dead lane)", failover_us);
+    if let Some(sink) = sink {
+        sink.push("cluster/failover_latency_us", failover_us * 1e3, failover_us);
+    }
+    handle.shutdown();
+    drop(workers);
 }
 
 fn fig2_error() {

@@ -1,0 +1,370 @@
+//! Cluster dispatcher: a [`BatchExecutor`] that shards classify requests
+//! across the worker pool over the line protocol.
+//!
+//! Every request gets a **placement** (a monotonic per-coordinator
+//! counter) from which two things derive:
+//!
+//! - its *lane*, `placement % workers` — only a routing preference;
+//! - its *plan seed*, [`lane_seed`]`(base_seed, placement)` — the entropy
+//!   stream the serving worker must draw from.
+//!
+//! Because the seed depends on the placement alone (never on which worker
+//! happens to serve it), a request re-routed after a crash, raced by a
+//! hedge, or retried over a fresh connection reproduces **bitwise** the
+//! output a healthy cluster would have produced — the
+//! `(model, seed, threads, prefetch, rule)` replay contract extended with
+//! `placement`.  That determinism is what makes failover and hedging
+//! *idempotent*: duplicate executions of the same placement are
+//! indistinguishable, so first-response-wins cancellation is safe.
+//!
+//! Failure handling per request: transport errors fail over immediately to
+//! the next untried routable worker; a straggling primary gets a hedge
+//! after `max(hedge_min, ewma × hedge_factor)`; typed serving errors
+//! (`overloaded`, `deadline_exceeded`, …) propagate to the client — the
+//! worker answered, so retrying elsewhere would just double the load.
+//! When no routable worker remains the dispatcher either degrades into
+//! local execution (marked `degraded`) or answers a typed
+//! [`ServeError::WorkerUnavailable`].
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::pool::WorkerPool;
+use super::{lane_seed, ClusterConfig};
+use crate::coordinator::engine::ClassifyResult;
+use crate::coordinator::overload::ServeError;
+use crate::coordinator::service::{BatchExecutor, SynthExecutor};
+use crate::sampler::RequestBudget;
+use crate::server::protocol;
+use crate::server::tcp::Client;
+
+/// Outcome of one dispatch attempt on one worker.
+enum Outcome {
+    /// A well-formed result line.
+    Reply(Box<ClassifyResult>),
+    /// A typed serving error — the worker is alive; do not fail over.
+    Typed(ServeError),
+    /// Connect/read/parse failure — the worker is unreliable; fail over.
+    Transport(String),
+}
+
+struct Attempt {
+    worker: usize,
+    elapsed_us: f64,
+    outcome: Outcome,
+}
+
+/// The coordinator's executor: one per coordinator service thread.
+pub struct ClusterExecutor {
+    cfg: ClusterConfig,
+    pool: Arc<WorkerPool>,
+    /// Monotonic placement counter.  Deliberately **not** reset by
+    /// [`BatchExecutor::recover_after_panic`]: placements must stay unique
+    /// for the lifetime of the coordinator so no two requests ever share a
+    /// plan seed (the per-request seed derivation is what panic recovery
+    /// would otherwise have to rebuild — there is no other mutable state).
+    next_placement: u64,
+    /// Local degraded-mode executor for an empty pool.  Shares the
+    /// cluster's `(n_samples, image_size)` shape so its seeded path is
+    /// bitwise-identical to what a worker would have produced for the
+    /// same plan seed.
+    fallback: SynthExecutor,
+}
+
+impl ClusterExecutor {
+    pub fn new(cfg: ClusterConfig, pool: Arc<WorkerPool>) -> Self {
+        let mut fallback = SynthExecutor::new(cfg.seed, cfg.n_samples);
+        fallback.image_size = cfg.image_size;
+        Self {
+            cfg,
+            pool,
+            next_placement: 0,
+            fallback,
+        }
+    }
+
+    /// Total placements issued so far (telemetry).
+    pub fn placements(&self) -> u64 {
+        self.next_placement
+    }
+
+    /// Serve one single-image shard: encode, pick, dispatch with
+    /// failover + hedging, and fold the outcome into the pool's health.
+    fn dispatch_one(
+        &mut self,
+        model: Option<&str>,
+        image: &[f32],
+        placement: u64,
+        plan_seed: u64,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<ClassifyResult> {
+        let mut budget = budget.clone();
+        if brownout {
+            // tier-2 degradation crosses the wire as a one-sample budget
+            budget.max_samples = Some(budget.max_samples.map_or(1, |m| m.min(1)));
+        }
+        let deadline_ms = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return Err(anyhow::Error::new(ServeError::DeadlineExceeded {
+                        samples_used: 0,
+                    }));
+                }
+                Some((d - now).as_millis().max(1) as u64)
+            }
+            None => None,
+        };
+        let line = protocol::encode_classify_sharded(
+            model.unwrap_or(&self.cfg.model),
+            image,
+            &budget,
+            deadline_ms,
+            plan_seed,
+        );
+        let lane = (placement % self.pool.len().max(1) as u64) as usize;
+
+        // first-response-wins: attempt threads race into this channel;
+        // losers' sends land in the buffer (or fail once the receiver is
+        // gone) and are discarded — idempotent because every attempt of
+        // one placement computes the identical bytes
+        let (tx, rx) = crate::exec::channel::<Attempt>(8);
+        let mut tried: Vec<usize> = Vec::new();
+        let mut in_flight = 0usize;
+        let mut hedged = false;
+        let mut last_transport: Option<String> = None;
+        let overall = deadline.unwrap_or_else(|| Instant::now() + self.cfg.client.read_timeout);
+
+        loop {
+            if in_flight == 0 {
+                match self.pool.pick(lane, &tried) {
+                    Some(p) => {
+                        tried.push(p.index);
+                        self.launch(&tx, p.index, p.addr, &line);
+                        in_flight += 1;
+                    }
+                    None => {
+                        // pool exhausted for this request: every routable
+                        // worker was tried (or none exists)
+                        return self.no_route(
+                            plan_seed,
+                            model,
+                            image,
+                            &budget,
+                            deadline,
+                            brownout,
+                            last_transport,
+                        );
+                    }
+                }
+            }
+            let hedge_after = tried
+                .first()
+                .and_then(|&i| self.pool.cards().get(i).map(|c| c.latency_ewma_us))
+                .map_or(self.cfg.hedge_min, |ewma| {
+                    self.cfg
+                        .hedge_min
+                        .max(Duration::from_micros((ewma * self.cfg.hedge_factor) as u64))
+                });
+            let now = Instant::now();
+            if now >= overall {
+                return Err(anyhow::Error::new(ServeError::Internal {
+                    detail: format!("cluster dispatch timed out (placement {placement})"),
+                }));
+            }
+            let wait = if hedged { overall - now } else { hedge_after.min(overall - now) };
+            match rx.recv_timeout(wait) {
+                Ok(Some(att)) => {
+                    in_flight -= 1;
+                    match att.outcome {
+                        Outcome::Reply(r) => {
+                            self.pool.note_success(att.worker, att.elapsed_us);
+                            return Ok(*r);
+                        }
+                        Outcome::Typed(se) => {
+                            // alive worker, typed refusal: propagate as-is
+                            self.pool.note_success(att.worker, att.elapsed_us);
+                            return Err(anyhow::Error::new(se));
+                        }
+                        Outcome::Transport(e) => {
+                            self.pool.note_failure(att.worker);
+                            last_transport = Some(e);
+                            // loop: relaunch on the next untried worker
+                        }
+                    }
+                }
+                Ok(None) => {
+                    // cannot happen while we hold `tx`; treat as transport
+                    last_transport = Some("attempt channel closed".into());
+                    in_flight = 0;
+                }
+                Err(()) => {
+                    // primary is straggling: hedge once on another worker
+                    if !hedged {
+                        hedged = true;
+                        if let Some(p) = self.pool.pick(lane + 1, &tried) {
+                            tried.push(p.index);
+                            self.launch(&tx, p.index, p.addr, &line);
+                            in_flight += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fire one attempt on a detached thread.  Each attempt dials a fresh
+    /// connection, so no attempt can ever read a response left in flight
+    /// by another (the client-side single-in-flight rule).
+    fn launch(&self, tx: &crate::exec::Sender<Attempt>, worker: usize, addr: String, line: &str) {
+        let tx = tx.clone();
+        let line = line.to_string();
+        let mut ccfg = self.cfg.client.clone();
+        ccfg.retries = 0; // the dispatcher owns retry/failover policy
+        let _ = std::thread::Builder::new()
+            .name("pbm-cluster-attempt".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let outcome = match Client::connect_with(&addr, ccfg) {
+                    Ok(mut client) => match client.call(&line) {
+                        Ok(j) => {
+                            if let Some(se) = protocol::decode_serve_error(&j) {
+                                Outcome::Typed(se)
+                            } else {
+                                match protocol::decode_result(&j) {
+                                    Ok(r) => Outcome::Reply(Box::new(r)),
+                                    Err(e) => Outcome::Transport(format!("{addr}: {e}")),
+                                }
+                            }
+                        }
+                        Err(e) => Outcome::Transport(format!("{addr}: {e}")),
+                    },
+                    Err(e) => Outcome::Transport(format!("{addr}: {e}")),
+                };
+                let _ = tx.try_send(Attempt {
+                    worker,
+                    elapsed_us: t0.elapsed().as_micros() as f64,
+                    outcome,
+                });
+            });
+    }
+
+    /// No routable worker left for this request.
+    #[allow(clippy::too_many_arguments)]
+    fn no_route(
+        &mut self,
+        plan_seed: u64,
+        model: Option<&str>,
+        image: &[f32],
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+        last_transport: Option<String>,
+    ) -> Result<ClassifyResult> {
+        if self.cfg.local_fallback {
+            // degrade into local execution: same plan seed, same sample
+            // budget, so the answer is bitwise what a worker would have
+            // returned — only the `degraded` flag betrays the detour
+            let mut results = self.fallback.classify_group_seeded(
+                plan_seed, model, image, 1, budget, deadline, brownout,
+            )?;
+            let mut r = results
+                .pop()
+                .ok_or_else(|| anyhow!("local fallback returned no result"))?;
+            r.degraded = true;
+            return Ok(r);
+        }
+        let down = self.pool.down_count();
+        crate::log_debug!(
+            "no routable worker ({down} down/drained): {}",
+            last_transport.unwrap_or_else(|| "pool empty".into())
+        );
+        Err(anyhow::Error::new(ServeError::WorkerUnavailable { down }))
+    }
+}
+
+impl BatchExecutor for ClusterExecutor {
+    fn default_model(&self) -> &str {
+        &self.cfg.model
+    }
+
+    fn image_size_for(&self, model: Option<&str>) -> Option<usize> {
+        match model {
+            None => Some(self.cfg.image_size),
+            Some(m) if m == self.cfg.model => Some(self.cfg.image_size),
+            Some(_) => None,
+        }
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        vec![self.cfg.model.clone()]
+    }
+
+    fn classify_group(
+        &mut self,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        let size = self.cfg.image_size;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let placement = self.next_placement;
+            self.next_placement += 1;
+            let plan_seed = lane_seed(self.cfg.seed, placement);
+            let image = &images[i * size..(i + 1) * size];
+            out.push(self.dispatch_one(
+                model, image, placement, plan_seed, budget, deadline, brownout,
+            )?);
+        }
+        Ok(out)
+    }
+
+    fn classify_group_seeded(
+        &mut self,
+        plan_seed: u64,
+        model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        // a client that pinned its own plan seed gets it forwarded
+        // verbatim (each image dispatched under the same seed); the
+        // placement still advances so lane assignment keeps rotating
+        let size = self.cfg.image_size;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let placement = self.next_placement;
+            self.next_placement += 1;
+            let image = &images[i * size..(i + 1) * size];
+            out.push(self.dispatch_one(
+                model, image, placement, plan_seed, budget, deadline, brownout,
+            )?);
+        }
+        Ok(out)
+    }
+
+    fn recover_after_panic(&mut self) -> Result<()> {
+        // nothing to rebuild: per-request state derives from the placement
+        // counter, which must NOT reset (a reset would reuse plan seeds
+        // and break placement uniqueness)
+        Ok(())
+    }
+
+    fn report_line(&self) -> String {
+        format!(
+            "cluster(workers={}, placements={})",
+            self.pool.len(),
+            self.next_placement
+        )
+    }
+}

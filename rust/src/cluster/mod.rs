@@ -1,0 +1,329 @@
+//! L4 cluster mode: sharded multi-worker serving with health-checked
+//! failover and hedged requests.
+//!
+//! Topology (one coordinator, N workers, all speaking the line protocol):
+//!
+//! ```text
+//!   clients ──► coordinator gateway (`pbm cluster`)
+//!                 │  admission scaled to CLUSTER capacity
+//!                 ▼
+//!             ClusterExecutor ── placement p ─► plan_seed = lane_seed(seed, p)
+//!                 │ lane = p % N (preference only)
+//!                 ├──► worker₀ (`pbm worker`)   ◄─ probe: hello + /info
+//!                 ├──► worker₁                  ◄─ (entropy health, p50/95/99)
+//!                 └──► worker₂    …failover / hedge to any routable worker
+//! ```
+//!
+//! The replay contract: a request's output is a pure function of
+//! `(model, seed, threads, prefetch, rule, placement)` — **not** of which
+//! worker served it.  [`lane_seed`] mixes the placement into the base seed
+//! (splitmix64, the same scheme as the engine's per-shard streams), every
+//! attempt ships that `plan_seed` on the wire, and workers serve it from a
+//! stateless stream ([`crate::coordinator::BatchExecutor::classify_group_seeded`]).
+//! Failover after a worker crash, a hedge racing a straggler, and local
+//! degraded execution therefore all reproduce bitwise the same answer.
+//!
+//! Worker health folds the PR 6 entropy-health scorecards into routing:
+//! a worker whose `/info` reports a degraded stream is drained (state
+//! `Suspect`) within one probe interval — completing the loop from "true
+//! randomness is verified" to "unhealthy sources are routed around."
+
+pub mod exec;
+pub mod pool;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use exec::ClusterExecutor;
+pub use pool::{Pick, WorkerCard, WorkerPool, WorkerState};
+
+use crate::coordinator::service::{EngineHandle, ServiceConfig, SynthExecutor};
+use crate::coordinator::Router;
+use crate::entropy::health::Monitor;
+use crate::exec::CancelToken;
+use crate::server::tcp::{serve, ClientConfig, ServerOptions};
+use crate::util::fault::splitmix64;
+
+/// Plan seed for `placement` under `base`: splitmix-mix the placement into
+/// the base seed (golden-ratio stride, the same per-shard scheme as the
+/// engine's entropy streams).  Depends only on `(base, placement)` — never
+/// on worker identity — which is the whole failover-replay story.
+pub fn lane_seed(base: u64, placement: u64) -> u64 {
+    let mut s = base.wrapping_add(placement.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    splitmix64(&mut s)
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Base seed of the extended replay contract.
+    pub seed: u64,
+    /// Model name the coordinator serves (and forwards shards under).
+    pub model: String,
+    /// Flat image length for `model`.
+    pub image_size: usize,
+    /// Per-request stochastic passes (must match the workers' setting for
+    /// the local-fallback path to stay bitwise-faithful).
+    pub n_samples: usize,
+    /// Hedge a straggling primary after `max(hedge_min, ewma × hedge_factor)`.
+    pub hedge_factor: f64,
+    pub hedge_min: Duration,
+    /// Health-probe period for [`spawn_probe_loop`].  `ZERO` = no
+    /// automatic probing (tests drive [`WorkerPool::probe_all`] manually).
+    pub probe_interval: Duration,
+    /// Transport timeouts/backoff for worker connections.
+    pub client: ClientConfig,
+    /// With the pool empty, degrade into local execution (marked
+    /// `degraded`) instead of answering `worker_unavailable`.
+    pub local_fallback: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x00C1_0572,
+            model: "synth".into(),
+            image_size: 4,
+            n_samples: 8,
+            hedge_factor: 3.0,
+            hedge_min: Duration::from_millis(50),
+            probe_interval: Duration::from_secs(1),
+            client: ClientConfig::default(),
+            local_fallback: false,
+        }
+    }
+}
+
+/// A locally spawned worker process stand-in (service thread + TCP
+/// gateway with role `"worker"`), used by `pbm worker` internals, the
+/// cluster bench, and the chaos suite.  Dropping (or [`stop`]ping) the
+/// guard cancels the gateway and joins its thread.
+///
+/// [`stop`]: WorkerGuard::stop
+pub struct WorkerGuard {
+    /// Bound address, e.g. `127.0.0.1:41523` (port 0 resolves at bind).
+    pub addr: String,
+    cancel: CancelToken,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerGuard {
+    /// Cancel the worker's gateway and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.cancel.cancel();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Options for [`spawn_local_worker`].
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Seed of the worker's *persistent* stream (plan-seeded shards ignore
+    /// it — that independence is what makes workers interchangeable).
+    pub seed: u64,
+    pub n_samples: usize,
+    /// Simulated engine work per sample draw.
+    pub work_per_sample: Duration,
+    /// Entropy-health monitor surfaced in the worker's `/info` (probes
+    /// fold it into routing).
+    pub health: Option<Arc<Monitor>>,
+    pub svc: ServiceConfig,
+    /// Gateway bind address (`127.0.0.1:0` = ephemeral port).
+    pub addr: String,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            n_samples: 8,
+            work_per_sample: Duration::ZERO,
+            health: None,
+            svc: ServiceConfig::default(),
+            addr: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+/// Spawn a worker: a [`SynthExecutor`] service loop behind a TCP gateway
+/// that answers the `hello` handshake with role `"worker"`.
+pub fn spawn_local_worker(opts: WorkerOptions) -> Result<WorkerGuard> {
+    let health = opts.health.clone();
+    let seed = opts.seed;
+    let n_samples = opts.n_samples;
+    let work = opts.work_per_sample;
+    let handle = EngineHandle::spawn_executor(
+        "synth",
+        vec!["synth".to_string()],
+        health,
+        n_samples,
+        opts.svc.clone(),
+        move || {
+            let mut e = SynthExecutor::new(seed, n_samples);
+            e.work_per_sample = work;
+            Ok(e)
+        },
+    )?;
+    let mut router = Router::new();
+    router.set_role("worker");
+    router.register(handle);
+    let cancel = CancelToken::new();
+    let cancel2 = cancel.clone();
+    let bind_addr = opts.addr.clone();
+    let (atx, arx) = std::sync::mpsc::channel();
+    let thread = std::thread::Builder::new()
+        .name("pbm-worker-gateway".into())
+        .spawn(move || {
+            let sopts = ServerOptions {
+                addr: bind_addr,
+                workers: 4,
+                ..ServerOptions::default()
+            };
+            if let Err(e) = serve(router, sopts, cancel2, |a| {
+                let _ = atx.send(a);
+            }) {
+                crate::log_error!("worker gateway failed: {e:#}");
+            }
+        })
+        .map_err(|e| anyhow!("spawning worker gateway: {e}"))?;
+    let addr = arx
+        .recv_timeout(Duration::from_secs(5))
+        .map_err(|_| anyhow!("worker gateway did not bind"))?;
+    Ok(WorkerGuard {
+        addr: addr.to_string(),
+        cancel,
+        thread: Some(thread),
+    })
+}
+
+/// Spawn the coordinator: a [`ClusterExecutor`] service loop whose
+/// admission control is scaled to **cluster** capacity.  Returns the
+/// engine handle (register it on a [`Router`] / gateway) and the shared
+/// pool (drive probes via [`spawn_probe_loop`] or manually).
+pub fn spawn_coordinator(
+    cfg: ClusterConfig,
+    addrs: Vec<String>,
+    mut svc: ServiceConfig,
+) -> Result<(EngineHandle, Arc<WorkerPool>)> {
+    if addrs.is_empty() && !cfg.local_fallback {
+        bail!("cluster needs at least one worker address (or local_fallback)");
+    }
+    let workers = addrs.len().max(1);
+    let pool = Arc::new(WorkerPool::new(addrs, cfg.client.clone()));
+    // Overload admission reflects what the CLUSTER can absorb, not one
+    // worker: scale the queue, and with it the auto work budget
+    // (`work_capacity = 0` resolves to queue_depth × default_cost), so a
+    // flood sheds with a `retry_after_ms` derived from N-worker drain
+    // rate.  An explicit work_capacity scales the same way.
+    svc.queue_depth = svc.queue_depth.saturating_mul(workers).max(1);
+    svc.overload.work_capacity = svc.overload.work_capacity.saturating_mul(workers as u64);
+    // first probe inline: the pool starts with real states, and a worker
+    // that is already degraded never takes traffic at all
+    pool.probe_all();
+    let name = cfg.model.clone();
+    let n_samples = cfg.n_samples;
+    let pool2 = pool.clone();
+    let cfg2 = cfg.clone();
+    let mut handle = EngineHandle::spawn_executor(
+        &name,
+        vec![name.clone()],
+        None,
+        n_samples,
+        svc,
+        move || Ok(ClusterExecutor::new(cfg2, pool2)),
+    )?;
+    handle.cluster = Some(pool.clone());
+    Ok((handle, pool))
+}
+
+/// Periodic health-probe loop (the coordinator CLI's background thread):
+/// probes every `interval` until cancelled, polling the token every 20 ms
+/// so shutdown is prompt.
+pub fn spawn_probe_loop(
+    pool: Arc<WorkerPool>,
+    interval: Duration,
+    cancel: CancelToken,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("pbm-cluster-probe".into())
+        .spawn(move || {
+            while !cancel.is_cancelled() {
+                let mut waited = Duration::ZERO;
+                while waited < interval && !cancel.is_cancelled() {
+                    let tick = Duration::from_millis(20).min(interval - waited);
+                    std::thread::sleep(tick);
+                    waited += tick;
+                }
+                if !cancel.is_cancelled() {
+                    pool.probe_all();
+                }
+            }
+        })
+        .expect("spawn probe loop")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_seed_is_placement_pure_and_distinct() {
+        // pure in (base, placement)…
+        assert_eq!(lane_seed(42, 7), lane_seed(42, 7));
+        // …and placement-sensitive: consecutive placements get distinct,
+        // well-mixed streams
+        let seeds: std::collections::HashSet<u64> =
+            (0..1000).map(|p| lane_seed(42, p)).collect();
+        assert_eq!(seeds.len(), 1000);
+        assert_ne!(lane_seed(42, 0), lane_seed(43, 0), "base matters");
+    }
+
+    #[test]
+    fn coordinator_scales_admission_to_cluster_capacity() {
+        // no live workers needed: unreachable addresses still register
+        let mut client = ClientConfig::default();
+        client.connect_timeout = Duration::from_millis(100);
+        let cfg = ClusterConfig {
+            client,
+            ..ClusterConfig::default()
+        };
+        let svc = ServiceConfig {
+            queue_depth: 8,
+            ..ServiceConfig::default()
+        };
+        let (handle, pool) = spawn_coordinator(
+            cfg,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            svc,
+        )
+        .unwrap();
+        assert_eq!(pool.len(), 2);
+        assert!(handle.cluster.is_some(), "/info can read worker cards");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn empty_pool_without_fallback_is_rejected() {
+        let err = spawn_coordinator(
+            ClusterConfig::default(),
+            vec![],
+            ServiceConfig::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("worker address"), "{err}");
+    }
+}

@@ -1,0 +1,439 @@
+//! Worker pool: lifecycle state machine, health probes, and routing picks.
+//!
+//! Each backend worker moves through `Healthy → Suspect → Down →
+//! Recovering` driven by two evidence streams: request outcomes reported
+//! by the dispatcher ([`WorkerPool::note_success`] /
+//! [`WorkerPool::note_failure`]) and periodic probes
+//! ([`WorkerPool::probe_all`]) that dial the worker, run the `hello` role
+//! handshake, and fold in the worker's own `/info` — its entropy-health
+//! scorecards (a worker whose randomness degrades is *drained*, not just
+//! deprioritized) and its serving latency percentiles.  `Down` workers are
+//! re-probed on a jittered exponential backoff so a flapping worker cannot
+//! absorb the probe loop.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::server::tcp::{Client, ClientConfig};
+use crate::util::fault::splitmix64;
+
+/// Worker lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Serving traffic.
+    Healthy,
+    /// One strike (transport failure or degraded entropy health): drained
+    /// from new picks until a probe clears it.
+    Suspect,
+    /// Repeated failures: only re-probed, on bounded backoff.
+    Down,
+    /// A probe succeeded after `Down`; takes traffic again, one more clean
+    /// probe (or request) promotes it back to `Healthy`.
+    Recovering,
+}
+
+impl WorkerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkerState::Healthy => "healthy",
+            WorkerState::Suspect => "suspect",
+            WorkerState::Down => "down",
+            WorkerState::Recovering => "recovering",
+        }
+    }
+
+    /// May this worker receive new requests?
+    pub fn routable(&self) -> bool {
+        matches!(self, WorkerState::Healthy | WorkerState::Recovering)
+    }
+}
+
+/// Point-in-time card for one worker, surfaced in the coordinator's
+/// `/info` (`cluster` section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerCard {
+    pub addr: String,
+    pub state: WorkerState,
+    pub consecutive_fails: u32,
+    /// EWMA of observed request latency (µs); 0 until first sample.
+    pub latency_ewma_us: f64,
+    /// The worker's own entropy-health monitor reports a degraded stream.
+    pub entropy_degraded: bool,
+    /// Serving percentiles scraped from the worker's `/info`.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// A routing decision from [`WorkerPool::pick`].
+#[derive(Debug, Clone)]
+pub struct Pick {
+    pub index: usize,
+    pub addr: String,
+    pub latency_ewma_us: f64,
+}
+
+struct Slot {
+    addr: String,
+    state: WorkerState,
+    consecutive_fails: u32,
+    latency_ewma_us: f64,
+    entropy_degraded: bool,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    /// Reconnect-backoff attempt counter while `Down`.
+    backoff_attempt: u32,
+    /// `Down` slots are not re-probed before this instant.
+    next_probe_at: Option<Instant>,
+    /// Jitter stream for the backoff schedule (deterministic per slot).
+    rng: u64,
+}
+
+impl Slot {
+    fn new(addr: String, seed: u64) -> Self {
+        Self {
+            addr,
+            state: WorkerState::Healthy,
+            consecutive_fails: 0,
+            latency_ewma_us: 0.0,
+            entropy_degraded: false,
+            p50_us: 0.0,
+            p95_us: 0.0,
+            p99_us: 0.0,
+            backoff_attempt: 0,
+            next_probe_at: None,
+            rng: seed,
+        }
+    }
+
+    fn card(&self) -> WorkerCard {
+        WorkerCard {
+            addr: self.addr.clone(),
+            state: self.state,
+            consecutive_fails: self.consecutive_fails,
+            latency_ewma_us: self.latency_ewma_us,
+            entropy_degraded: self.entropy_degraded,
+            p50_us: self.p50_us,
+            p95_us: self.p95_us,
+            p99_us: self.p99_us,
+        }
+    }
+}
+
+/// What one successful probe learned from a worker's `/info`.
+#[derive(Debug, Clone, Copy, Default)]
+struct ProbeReport {
+    entropy_degraded: bool,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+}
+
+/// EWMA smoothing for observed request latency.
+const LATENCY_ALPHA: f64 = 0.2;
+/// Probe-backoff schedule while a worker is `Down`.
+const BACKOFF_BASE: Duration = Duration::from_millis(50);
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Shared, lock-protected view of the cluster's workers.
+pub struct WorkerPool {
+    slots: Mutex<Vec<Slot>>,
+    client_cfg: ClientConfig,
+}
+
+impl WorkerPool {
+    pub fn new(addrs: Vec<String>, client_cfg: ClientConfig) -> Self {
+        let mut seed = client_cfg.seed ^ 0x5EED_F00D;
+        let slots = addrs
+            .into_iter()
+            .map(|a| Slot::new(a, splitmix64(&mut seed)))
+            .collect();
+        Self {
+            slots: Mutex::new(slots),
+            client_cfg,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Slot>> {
+        self.slots.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Workers currently not routable (Suspect or Down).
+    pub fn down_count(&self) -> usize {
+        self.lock().iter().filter(|s| !s.state.routable()).count()
+    }
+
+    /// Cards for `/info`, in registration order.
+    pub fn cards(&self) -> Vec<WorkerCard> {
+        self.lock().iter().map(Slot::card).collect()
+    }
+
+    /// First routable worker in ring order starting at `lane`, skipping
+    /// `exclude` (indices already tried for this request).  Drained
+    /// (entropy-degraded) workers are never picked even if nominally
+    /// routable.
+    pub fn pick(&self, lane: usize, exclude: &[usize]) -> Option<Pick> {
+        let slots = self.lock();
+        let n = slots.len();
+        if n == 0 {
+            return None;
+        }
+        for k in 0..n {
+            let i = (lane + k) % n;
+            if exclude.contains(&i) {
+                continue;
+            }
+            let s = &slots[i];
+            if s.state.routable() && !s.entropy_degraded {
+                return Some(Pick {
+                    index: i,
+                    addr: s.addr.clone(),
+                    latency_ewma_us: s.latency_ewma_us,
+                });
+            }
+        }
+        None
+    }
+
+    /// A request served by worker `i` completed (including typed serving
+    /// errors — the worker answered, so it is alive): promote toward
+    /// `Healthy` and fold the observed latency into the EWMA.
+    pub fn note_success(&self, i: usize, latency_us: f64) {
+        let mut slots = self.lock();
+        let Some(s) = slots.get_mut(i) else { return };
+        s.consecutive_fails = 0;
+        s.backoff_attempt = 0;
+        s.next_probe_at = None;
+        s.state = WorkerState::Healthy;
+        s.latency_ewma_us = if s.latency_ewma_us == 0.0 {
+            latency_us
+        } else {
+            (1.0 - LATENCY_ALPHA) * s.latency_ewma_us + LATENCY_ALPHA * latency_us
+        };
+    }
+
+    /// A transport-level failure talking to worker `i` (connect refused,
+    /// dropped mid-response, garbage reply): demote one step and, once
+    /// `Down`, schedule the next probe on jittered exponential backoff.
+    pub fn note_failure(&self, i: usize) {
+        let mut slots = self.lock();
+        let Some(s) = slots.get_mut(i) else { return };
+        s.consecutive_fails += 1;
+        s.state = match s.state {
+            WorkerState::Healthy | WorkerState::Recovering => WorkerState::Suspect,
+            WorkerState::Suspect | WorkerState::Down => WorkerState::Down,
+        };
+        if s.state == WorkerState::Down {
+            s.backoff_attempt += 1;
+            let exp = BACKOFF_BASE
+                .saturating_mul(1u32 << s.backoff_attempt.saturating_sub(1).min(16))
+                .min(BACKOFF_CAP);
+            let frac = 0.5 + (splitmix64(&mut s.rng) >> 11) as f64 / (1u64 << 53) as f64;
+            s.next_probe_at = Some(Instant::now() + exp.mul_f64(frac));
+        }
+    }
+
+    /// A probe reached worker `i` and read its `/info`: clear failure
+    /// counters, scrape percentiles, and either drain it (degraded
+    /// entropy health → `Suspect`) or promote it one step toward
+    /// `Healthy` (`Down → Recovering → Healthy`).
+    fn note_probe_ok(&self, i: usize, report: ProbeReport) {
+        let mut slots = self.lock();
+        let Some(s) = slots.get_mut(i) else { return };
+        s.consecutive_fails = 0;
+        s.backoff_attempt = 0;
+        s.next_probe_at = None;
+        s.entropy_degraded = report.entropy_degraded;
+        s.p50_us = report.p50_us;
+        s.p95_us = report.p95_us;
+        s.p99_us = report.p99_us;
+        s.state = if report.entropy_degraded {
+            // reachable but its randomness is suspect: drain it from
+            // routing until its monitor clears
+            WorkerState::Suspect
+        } else {
+            match s.state {
+                WorkerState::Down => WorkerState::Recovering,
+                _ => WorkerState::Healthy,
+            }
+        };
+    }
+
+    /// Probe every worker once (skipping `Down` workers still inside their
+    /// backoff window).  Runs the network round-trips without holding the
+    /// pool lock, so routing picks never stall behind a slow probe.
+    pub fn probe_all(&self) {
+        let n = self.lock().len();
+        for i in 0..n {
+            let (addr, due) = {
+                let slots = self.lock();
+                let Some(s) = slots.get(i) else { break };
+                let due = s.state != WorkerState::Down
+                    || s.next_probe_at.map_or(true, |t| Instant::now() >= t);
+                (s.addr.clone(), due)
+            };
+            if !due {
+                continue;
+            }
+            match self.probe_one(&addr) {
+                Ok(report) => self.note_probe_ok(i, report),
+                Err(e) => {
+                    crate::log_debug!("probe {addr}: {e}");
+                    self.note_failure(i);
+                }
+            }
+        }
+    }
+
+    /// One probe round-trip: dial, `hello` role handshake (the peer must
+    /// be a worker — routing shards at another coordinator or a bare
+    /// server would be a deployment error worth failing loudly), then
+    /// `/info` for entropy health and serving percentiles.
+    fn probe_one(&self, addr: &str) -> Result<ProbeReport> {
+        let mut cfg = self.client_cfg.clone();
+        cfg.retries = 0; // the pool's own backoff owns retry policy
+        let mut client = Client::connect_with(addr, cfg)?;
+        let role = client.hello("coordinator")?;
+        if role != "worker" {
+            bail!("peer at {addr} answered hello as '{role}', not 'worker'");
+        }
+        let info = client.info()?;
+        if info.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(anyhow!("worker {addr} info returned not-ok"));
+        }
+        let mut report = ProbeReport::default();
+        // any degraded stream on any shard drains the worker
+        if let Some(health) = info.get("entropy_health").and_then(|h| h.as_obj()) {
+            report.entropy_degraded = health.values().any(|cards| {
+                cards.as_arr().is_some_and(|cs| {
+                    cs.iter()
+                        .any(|c| c.get("degraded").and_then(|d| d.as_bool()) == Some(true))
+                })
+            });
+        }
+        // aggregate percentiles: worst (max) across the worker's engines
+        if let Some(serving) = info.get("serving").and_then(|s| s.as_obj()) {
+            for snap in serving.values() {
+                let f = |k: &str| snap.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                report.p50_us = report.p50_us.max(f("p50_us"));
+                report.p95_us = report.p95_us.max(f("p95_us"));
+                report.p99_us = report.p99_us.max(f("p99_us"));
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize) -> WorkerPool {
+        let addrs = (0..n).map(|i| format!("127.0.0.1:{}", 40000 + i)).collect();
+        WorkerPool::new(addrs, ClientConfig::default())
+    }
+
+    #[test]
+    fn lifecycle_demotes_and_promotes_stepwise() {
+        let p = pool(1);
+        assert_eq!(p.cards()[0].state, WorkerState::Healthy);
+        p.note_failure(0);
+        assert_eq!(p.cards()[0].state, WorkerState::Suspect);
+        p.note_failure(0);
+        assert_eq!(p.cards()[0].state, WorkerState::Down);
+        assert_eq!(p.down_count(), 1);
+        // a clean probe promotes Down → Recovering (routable), not
+        // straight to Healthy
+        p.note_probe_ok(0, ProbeReport::default());
+        assert_eq!(p.cards()[0].state, WorkerState::Recovering);
+        assert!(p.cards()[0].state.routable());
+        p.note_probe_ok(0, ProbeReport::default());
+        assert_eq!(p.cards()[0].state, WorkerState::Healthy);
+    }
+
+    #[test]
+    fn success_heals_and_tracks_latency_ewma() {
+        let p = pool(1);
+        p.note_failure(0);
+        p.note_success(0, 1000.0);
+        let c = &p.cards()[0];
+        assert_eq!(c.state, WorkerState::Healthy);
+        assert_eq!(c.consecutive_fails, 0);
+        assert_eq!(c.latency_ewma_us, 1000.0, "first sample seeds the EWMA");
+        p.note_success(0, 2000.0);
+        let e = p.cards()[0].latency_ewma_us;
+        assert!(e > 1000.0 && e < 2000.0, "smoothed, not replaced: {e}");
+    }
+
+    #[test]
+    fn degraded_entropy_drains_worker_from_picks() {
+        let p = pool(2);
+        p.note_probe_ok(
+            0,
+            ProbeReport {
+                entropy_degraded: true,
+                ..Default::default()
+            },
+        );
+        let c = &p.cards()[0];
+        assert_eq!(c.state, WorkerState::Suspect);
+        assert!(c.entropy_degraded);
+        // lane 0 would prefer worker 0; the drain reroutes to 1
+        let pick = p.pick(0, &[]).unwrap();
+        assert_eq!(pick.index, 1);
+        // the monitor clearing restores routing
+        p.note_probe_ok(0, ProbeReport::default());
+        assert_eq!(p.pick(0, &[]).unwrap().index, 0);
+    }
+
+    #[test]
+    fn pick_walks_ring_and_honors_exclusions() {
+        let p = pool(3);
+        assert_eq!(p.pick(1, &[]).unwrap().index, 1);
+        assert_eq!(p.pick(1, &[1]).unwrap().index, 2);
+        assert_eq!(p.pick(1, &[1, 2]).unwrap().index, 0);
+        assert!(p.pick(1, &[0, 1, 2]).is_none(), "all tried");
+        p.note_failure(1);
+        assert_eq!(p.pick(1, &[]).unwrap().index, 2, "suspect skipped");
+    }
+
+    #[test]
+    fn down_worker_backs_off_between_probes() {
+        let p = pool(1);
+        p.note_failure(0);
+        p.note_failure(0); // → Down, backoff scheduled
+        let slots = p.lock();
+        let s = &slots[0];
+        assert_eq!(s.state, WorkerState::Down);
+        assert!(s.next_probe_at.is_some(), "Down schedules a re-probe time");
+        assert!(s.backoff_attempt >= 1);
+    }
+
+    #[test]
+    fn probe_all_marks_unreachable_workers() {
+        // nothing listens on these addresses: both probes must fail fast
+        // and demote (connect_timeout bounds the worst case)
+        let mut cfg = ClientConfig::default();
+        cfg.connect_timeout = Duration::from_millis(200);
+        let p = WorkerPool::new(
+            vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            cfg,
+        );
+        p.probe_all();
+        for c in p.cards() {
+            assert_eq!(c.state, WorkerState::Suspect, "{c:?}");
+        }
+        assert!(p.pick(0, &[]).is_none());
+    }
+}

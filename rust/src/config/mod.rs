@@ -87,6 +87,28 @@
 //! # policy decision, not a given)
 //! brownout = false
 //!
+//! [cluster]
+//! # pbm cluster: comma-separated worker gateway addresses
+//! workers = "127.0.0.1:7979,127.0.0.1:7980"
+//! # base seed of the extended replay contract: a request's entropy
+//! # stream is lane_seed(seed, placement), independent of which worker
+//! # serves it
+//! seed = 12648818
+//! model = "synth"
+//! image_size = 4
+//! # stochastic passes per request (match the workers' --samples so the
+//! # local-fallback path stays bitwise-faithful)
+//! n_samples = 8
+//! # hedge a straggling primary after max(hedge_min_ms, ewma x factor)
+//! hedge_min_ms = 50
+//! hedge_factor = 3.0
+//! # worker health-probe period (ms, 0 = no automatic probing); a worker
+//! # with degraded entropy health is drained within one interval
+//! probe_interval_ms = 1000
+//! # with no routable worker, serve locally (degraded:true) instead of
+//! # answering code=worker_unavailable
+//! local_fallback = false
+//!
 //! [sampler]
 //! # adaptive sequential sampling: fixed | confidence-gap | uncertainty
 //! rule = "uncertainty"
@@ -289,6 +311,28 @@ threads = 8
         assert_eq!(c.get_f64("health", "duty", 0.05).unwrap(), 0.1);
         // unset knobs fall back to monitor defaults
         assert_eq!(c.get_f64("health", "ewma_alpha", 0.3).unwrap(), 0.3);
+    }
+
+    #[test]
+    fn cluster_table_parses() {
+        let c = Config::parse(
+            "[cluster]\nworkers = \"127.0.0.1:7979,127.0.0.1:7980\"\nseed = 99\n\
+             n_samples = 4\nhedge_min_ms = 25\nhedge_factor = 2.5\n\
+             probe_interval_ms = 500\nlocal_fallback = true\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.get("cluster", "workers"),
+            Some("127.0.0.1:7979,127.0.0.1:7980")
+        );
+        assert_eq!(c.get_usize("cluster", "seed", 0).unwrap(), 99);
+        assert_eq!(c.get_usize("cluster", "n_samples", 8).unwrap(), 4);
+        assert_eq!(c.get_usize("cluster", "hedge_min_ms", 50).unwrap(), 25);
+        assert_eq!(c.get_f64("cluster", "hedge_factor", 3.0).unwrap(), 2.5);
+        assert_eq!(c.get_usize("cluster", "probe_interval_ms", 1000).unwrap(), 500);
+        assert!(c.get_bool("cluster", "local_fallback", false).unwrap());
+        // unset knobs fall back to coordinator defaults
+        assert_eq!(c.get_usize("cluster", "image_size", 4).unwrap(), 4);
     }
 
     #[test]

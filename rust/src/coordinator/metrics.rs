@@ -71,6 +71,75 @@ impl LatencyHistogram {
     }
 }
 
+/// Lock-free variant of [`LatencyHistogram`] for the serving layer:
+/// the service loop records and `/info` reads concurrently, so buckets
+/// and aggregates are relaxed atomics.  Same bucket geometry
+/// (`[2^i, 2^(i+1))` us) and the same max-clamped percentile read as the
+/// single-threaded histogram.  Reads are racy across fields — a gauge,
+/// not an invariant.
+#[derive(Debug)]
+pub struct AtomicLatencyHistogram {
+    buckets: [AtomicU64; 21],
+    count: AtomicU64,
+    /// Sum in whole microseconds (f64 precision is irrelevant at the
+    /// >=1us granularity the buckets already impose).
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for AtomicLatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicLatencyHistogram {
+    pub fn record(&self, us: f64) {
+        let b = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.max(0.0) as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us.max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Bucket-edge percentile clamped to the recorded maximum (same
+    /// contract as [`LatencyHistogram::percentile_us`]).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let max = self.max_us.load(Ordering::Relaxed) as f64;
+        let target = (p / 100.0 * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return ((1u64 << (i + 1)) as f64).min(max);
+            }
+        }
+        max
+    }
+}
+
 /// Lock-free serving/robustness counters shared between the admission
 /// path (gateway workers), the engine service loop, and `/info`.
 #[derive(Debug, Default)]
@@ -86,16 +155,27 @@ pub struct ServeCounters {
     pub panics_recovered: AtomicU64,
     /// Queue-depth gauge (last observed at admission/dequeue).
     pub queue_depth: AtomicU64,
+    /// Per-request service latency (batch wall-clock attributed to each
+    /// served member, Ok path only) — feeds the `/info` percentiles and,
+    /// in cluster mode, the coordinator's per-worker probe scrape.
+    pub latency: AtomicLatencyHistogram,
 }
 
-/// Point-in-time copy of [`ServeCounters`].
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Point-in-time copy of [`ServeCounters`] (counters plus derived
+/// latency percentiles; `Eq` is off the table because of the `f64`s).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ServeSnapshot {
     pub requests_shed: u64,
     pub deadline_expired: u64,
     pub overload_rejects: u64,
     pub panics_recovered: u64,
     pub queue_depth: u64,
+    /// Mean/percentile service latency in microseconds (0 until the
+    /// first request is served).
+    pub mean_latency_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
 }
 
 impl ServeCounters {
@@ -106,6 +186,10 @@ impl ServeCounters {
             overload_rejects: self.overload_rejects.load(Ordering::Relaxed),
             panics_recovered: self.panics_recovered.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_us: self.latency.percentile_us(50.0),
+            p95_us: self.latency.percentile_us(95.0),
+            p99_us: self.latency.percentile_us(99.0),
         }
     }
 }
@@ -118,6 +202,10 @@ impl ServeSnapshot {
             ("overload_rejects", Json::Num(self.overload_rejects as f64)),
             ("panics_recovered", Json::Num(self.panics_recovered as f64)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("mean_latency_us", Json::Num(self.mean_latency_us)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
         ])
     }
 }
@@ -346,6 +434,38 @@ mod tests {
         let j = c.snapshot().to_json();
         assert_eq!(j.get("overload_rejects").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(0.0));
+        // percentiles ride along, zero before any request is served
+        assert_eq!(j.get("p95_us").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn atomic_histogram_matches_scalar_contract() {
+        let h = AtomicLatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+        // clamped to the recorded maximum, like LatencyHistogram
+        assert!(h.percentile_us(99.0) <= 1000.0);
+        assert_eq!(h.percentile_us(100.0), 1000.0);
+        let empty = AtomicLatencyHistogram::default();
+        assert_eq!(empty.mean_us(), 0.0);
+        assert_eq!(empty.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_surfaces_latency_percentiles() {
+        let c = ServeCounters::default();
+        c.latency.record(700.0);
+        let s = c.snapshot();
+        assert_eq!(s.p50_us, 700.0);
+        assert_eq!(s.p99_us, 700.0);
+        assert!((s.mean_latency_us - 700.0).abs() < 1.0);
+        let j = s.to_json();
+        assert_eq!(j.get("p95_us").unwrap().as_f64(), Some(700.0));
+        assert_eq!(j.get("mean_latency_us").unwrap().as_f64(), Some(700.0));
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub enum ServeError {
     /// A panic was isolated while serving this batch; the engine
     /// rebuilt itself and the request is safe to retry.
     Internal { detail: String },
+    /// Cluster mode: no routable backend worker was available (and the
+    /// coordinator's local fallback is disabled).  `down` is the number
+    /// of pool workers currently drained from routing, so clients can
+    /// distinguish a collapsed pool from a misconfigured empty one.
+    WorkerUnavailable { down: usize },
 }
 
 impl ServeError {
@@ -52,6 +57,7 @@ impl ServeError {
             ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
             ServeError::Overloaded { .. } => "overloaded",
             ServeError::Internal { .. } => "internal_error",
+            ServeError::WorkerUnavailable { .. } => "worker_unavailable",
         }
     }
 }
@@ -69,6 +75,9 @@ impl fmt::Display for ServeError {
             ),
             ServeError::Internal { detail } => {
                 write!(f, "internal error: {detail}")
+            }
+            ServeError::WorkerUnavailable { down } => {
+                write!(f, "no routable cluster worker ({down} drained)")
             }
         }
     }
@@ -401,5 +410,8 @@ mod tests {
             detail: "x".into(),
         };
         assert_eq!(i.code(), "internal_error");
+        let w = ServeError::WorkerUnavailable { down: 3 };
+        assert_eq!(w.code(), "worker_unavailable");
+        assert!(format!("{w}").contains('3'));
     }
 }

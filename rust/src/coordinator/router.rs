@@ -16,17 +16,39 @@ use crate::entropy::health::Scorecard;
 use crate::registry::{RegistrySnapshot, UnknownModel};
 
 /// Routes requests to the engine serving each model.
-#[derive(Default)]
 pub struct Router {
     engines: Vec<EngineHandle>,
     /// model name → index into `engines`; every name in
     /// [`EngineHandle::models`] is a key.
     by_model: HashMap<String, usize>,
+    /// Role announced in the `hello` handshake (`"server"`, `"worker"`,
+    /// `"coordinator"`): a cluster coordinator probing its pool checks the
+    /// peer really is a worker before routing shards at it.
+    role: String,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self {
+            engines: Vec::new(),
+            by_model: HashMap::new(),
+            role: "server".to_string(),
+        }
+    }
 }
 
 impl Router {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the role announced in the `hello` handshake.
+    pub fn set_role(&mut self, role: &str) {
+        self.role = role.to_string();
+    }
+
+    pub fn role(&self) -> &str {
+        &self.role
     }
 
     pub fn register(&mut self, handle: EngineHandle) {
@@ -104,6 +126,20 @@ impl Router {
         snap
     }
 
+    /// Per-engine cluster worker cards (coordinator engines only; plain
+    /// engines have no pool and are omitted), keyed by the engine's primary
+    /// name and sorted.  Reads the shared [`crate::cluster::WorkerPool`]
+    /// directly — no round-trip through any engine thread.
+    pub fn cluster_snapshot(&self) -> Vec<(String, Vec<crate::cluster::WorkerCard>)> {
+        let mut snap: Vec<(String, Vec<crate::cluster::WorkerCard>)> = self
+            .engines
+            .iter()
+            .filter_map(|h| h.cluster.as_ref().map(|p| (h.dataset.clone(), p.cards())))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
     /// Shut down every engine.
     pub fn shutdown(self) {
         for h in self.engines {
@@ -133,5 +169,14 @@ mod tests {
         assert!(r.health_snapshot().is_empty());
         assert!(r.registry_snapshot().is_empty());
         assert!(r.serving_snapshot().is_empty());
+        assert!(r.cluster_snapshot().is_empty());
+    }
+
+    #[test]
+    fn role_defaults_to_server_and_is_settable() {
+        let mut r = Router::new();
+        assert_eq!(r.role(), "server");
+        r.set_role("worker");
+        assert_eq!(r.role(), "worker");
     }
 }

@@ -42,6 +42,12 @@ pub struct ClassifyRequest {
     /// Estimated work (stochastic samples) charged against the overload
     /// budget at admission; 0 until admitted.
     pub cost: u64,
+    /// Shard-scoped plan seed (cluster mode): when set, the executor must
+    /// draw from a stream derived from exactly this seed instead of its
+    /// own persistent stream, making the request *stateless* — any worker
+    /// (or a retry on the same worker) reproduces the answer bitwise.
+    /// This is the `placement` extension of the replay contract.
+    pub plan_seed: Option<u64>,
     pub reply: Sender<Result<ClassifyResult>>,
 }
 
@@ -75,6 +81,7 @@ impl ClassifyRequest {
                 budget,
                 deadline: None,
                 cost: 0,
+                plan_seed: None,
                 reply: tx,
             },
             rx,
@@ -94,6 +101,9 @@ pub struct GroupKey {
     /// distinction is one extra no-op switch check).
     pub model: Option<String>,
     pub budget: RequestBudget,
+    /// Shard-scoped plan seed: requests pinned to different seeds must
+    /// not batch together (each seed is its own deterministic stream).
+    pub plan_seed: Option<u64>,
 }
 
 /// Partition one dynamic batch into same-(model, budget) groups, preserving
@@ -104,15 +114,15 @@ pub struct GroupKey {
 fn group_requests(batch: Vec<ClassifyRequest>) -> Vec<(GroupKey, Vec<ClassifyRequest>)> {
     let mut groups: Vec<(GroupKey, Vec<ClassifyRequest>)> = Vec::new();
     for req in batch {
-        match groups
-            .iter_mut()
-            .find(|(k, _)| k.model == req.model && k.budget == req.budget)
-        {
+        match groups.iter_mut().find(|(k, _)| {
+            k.model == req.model && k.budget == req.budget && k.plan_seed == req.plan_seed
+        }) {
             Some((_, members)) => members.push(req),
             None => {
                 let key = GroupKey {
                     model: req.model.clone(),
                     budget: req.budget,
+                    plan_seed: req.plan_seed,
                 };
                 groups.push((key, vec![req]));
             }
@@ -169,6 +179,30 @@ pub trait BatchExecutor {
         deadline: Option<Instant>,
         brownout: bool,
     ) -> Result<Vec<ClassifyResult>>;
+    /// Classify one group from a *shard-scoped* plan seed (cluster mode):
+    /// draw every stochastic pass from a stream derived from `plan_seed`
+    /// alone, without consuming the executor's persistent stream, so the
+    /// same `(model, plan_seed, budget)` reproduces bitwise on any
+    /// executor instance — the property failover and hedging rely on.
+    /// Default: a typed refusal (the artifact-backed [`Engine`] keeps its
+    /// persistent per-shard streams and does not serve seeded plans yet).
+    fn classify_group_seeded(
+        &mut self,
+        _plan_seed: u64,
+        _model: Option<&str>,
+        _images: &[f32],
+        _n: usize,
+        _budget: &RequestBudget,
+        _deadline: Option<Instant>,
+        _brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        Err(anyhow!(
+            "this executor does not serve shard-scoped (plan_seed) requests"
+        ))
+    }
+    /// Share the serving counters with the executor's own telemetry
+    /// (called once on the engine thread before the loop starts).
+    fn attach_counters(&mut self, _counters: &Arc<ServeCounters>) {}
     /// Deterministically rebuild internal state after a panic escaped
     /// `classify_group` (the `catch_unwind` recovery path).
     fn recover_after_panic(&mut self) -> Result<()>;
@@ -202,6 +236,11 @@ impl BatchExecutor for Engine {
         brownout: bool,
     ) -> Result<Vec<ClassifyResult>> {
         self.classify_opts(model, images, n, budget, deadline, brownout)
+    }
+
+    fn attach_counters(&mut self, counters: &Arc<ServeCounters>) {
+        // the engine's metrics JSON surfaces the same counters
+        self.metrics.serving = counters.clone();
     }
 
     fn recover_after_panic(&mut self) -> Result<()> {
@@ -372,13 +411,33 @@ fn serve_group<E: BatchExecutor>(
     let brownout = tier >= Tier::Brownout;
     let n = ok.len();
     let t0 = Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        exec.classify_group(key.model.as_deref(), &images, n, &budget, deadline, brownout)
+    let outcome = catch_unwind(AssertUnwindSafe(|| match key.plan_seed {
+        // shard-scoped plan (cluster mode): the stream derives from the
+        // request's seed, not the executor's persistent one
+        Some(ps) => exec.classify_group_seeded(
+            ps,
+            key.model.as_deref(),
+            &images,
+            n,
+            &budget,
+            deadline,
+            brownout,
+        ),
+        None => {
+            exec.classify_group(key.model.as_deref(), &images, n, &budget, deadline, brownout)
+        }
     }));
     match outcome {
         Ok(Ok(mut results)) => {
             let work: u64 = results.iter().map(|r| r.samples_used as u64).sum();
-            ctrl.on_work_done(work.max(1), t0.elapsed());
+            let elapsed = t0.elapsed();
+            ctrl.on_work_done(work.max(1), elapsed);
+            // per-request service latency (batch wall-clock attributed to
+            // each served member) — feeds the /info percentiles
+            let us = elapsed.as_micros() as f64;
+            for _ in 0..n {
+                counters.latency.record(us);
+            }
             if degraded {
                 for r in &mut results {
                     r.degraded = true;
@@ -447,6 +506,11 @@ pub struct EngineHandle {
     /// Shed/deadline/overload/panic counters shared with the service
     /// loop, the admission path, and the engine's metrics.
     pub counters: Arc<ServeCounters>,
+    /// Cluster-mode worker pool (present when this handle fronts a
+    /// [`crate::cluster::ClusterExecutor`]): `/info` reads per-worker
+    /// health/latency cards from here without a round-trip through the
+    /// coordinator thread.
+    pub cluster: Option<Arc<crate::cluster::WorkerPool>>,
     ctrl: Arc<OverloadControl>,
     deadline_ms: u64,
     tx: Sender<ClassifyRequest>,
@@ -538,17 +602,33 @@ impl EngineHandle {
         )
     }
 
+    /// Spawn a service thread over *any* [`BatchExecutor`] (the executor
+    /// is built inside the thread, so it needs no `Send`): the seam that
+    /// lets one gateway front an artifact engine, a [`SynthExecutor`]
+    /// worker substrate (`pbm worker`), or a
+    /// [`crate::cluster::ClusterExecutor`] coordinator.
+    pub fn spawn_executor<E: BatchExecutor>(
+        name: &str,
+        models: Vec<String>,
+        health: Option<Arc<Monitor>>,
+        n_samples: usize,
+        svc_cfg: ServiceConfig,
+        build: impl FnOnce() -> Result<E> + Send + 'static,
+    ) -> Result<Self> {
+        Self::spawn_loop(name.to_string(), models, health, None, n_samples, svc_cfg, build)
+    }
+
     /// Shared spawn core: wire the overload control + counters, start the
     /// engine thread (all PJRT + machine state is created inside `build`,
     /// on that thread), and run [`run_service_loop`] until shutdown.
-    fn spawn_loop(
+    fn spawn_loop<E: BatchExecutor>(
         name: String,
         models: Vec<String>,
         health: Option<Arc<Monitor>>,
         registry: Option<Arc<RegistryMetrics>>,
         n_samples: usize,
         svc_cfg: ServiceConfig,
-        build: impl FnOnce() -> Result<Engine> + Send + 'static,
+        build: impl FnOnce() -> Result<E> + Send + 'static,
     ) -> Result<Self> {
         let mut ocfg = svc_cfg.overload.clone();
         if ocfg.default_cost == 0 {
@@ -563,10 +643,9 @@ impl EngineHandle {
             .name(format!("pbm-engine-{name}"))
             .spawn(move || {
                 let run = || -> Result<()> {
-                    let mut engine = build()?;
-                    // the engine's metrics JSON surfaces the same counters
-                    engine.metrics.serving = counters2.clone();
-                    run_service_loop(&mut engine, rx, &svc2, &ctrl2, &counters2);
+                    let mut exec = build()?;
+                    exec.attach_counters(&counters2);
+                    run_service_loop(&mut exec, rx, &svc2, &ctrl2, &counters2);
                     Ok(())
                 };
                 if let Err(e) = run() {
@@ -580,6 +659,7 @@ impl EngineHandle {
             health,
             registry,
             counters,
+            cluster: None,
             ctrl,
             deadline_ms: svc_cfg.deadline_ms,
             tx,
@@ -678,42 +758,29 @@ impl SynthExecutor {
         }
     }
 
-    /// One deterministic logit row: a function of the stream position and
-    /// the image content (so distinct inputs get distinct predictives).
-    fn logit_row(&mut self, image: &[f32]) -> Vec<f32> {
+    /// One deterministic logit row: a function of the stream position
+    /// (`state`) and the image content (so distinct inputs get distinct
+    /// predictives).
+    fn logit_row(classes: usize, state: &mut u64, image: &[f32]) -> Vec<f32> {
         let mut h = 0xABCD_EF01u64;
         for &v in image {
             h = h.rotate_left(13) ^ u64::from(v.to_bits());
         }
-        let mut local = fault::splitmix64(&mut self.state) ^ h;
-        (0..self.classes)
+        let mut local = fault::splitmix64(state) ^ h;
+        (0..classes)
             .map(|_| {
                 let z = fault::splitmix64(&mut local);
                 ((z >> 11) as f64 / (1u64 << 53) as f64 * 4.0) as f32
             })
             .collect()
     }
-}
 
-impl BatchExecutor for SynthExecutor {
-    fn default_model(&self) -> &str {
-        "synth"
-    }
-
-    fn image_size_for(&self, model: Option<&str>) -> Option<usize> {
-        match model {
-            None | Some("synth") => Some(self.image_size),
-            Some(_) => None,
-        }
-    }
-
-    fn model_names(&self) -> Vec<String> {
-        vec!["synth".to_string()]
-    }
-
-    fn classify_group(
-        &mut self,
-        _model: Option<&str>,
+    /// The classify core, parameterized by the entropy stream it draws
+    /// from: the persistent `self.state` for normal traffic, a local
+    /// seed-derived state for stateless shard-scoped plans.
+    fn classify_stream(
+        &self,
+        state: &mut u64,
         images: &[f32],
         n: usize,
         budget: &RequestBudget,
@@ -744,8 +811,11 @@ impl BatchExecutor for SynthExecutor {
                 std::thread::sleep(self.work_per_sample);
             }
             for (i, img_rows) in rows.iter_mut().enumerate() {
-                let row =
-                    self.logit_row(&images[i * self.image_size..(i + 1) * self.image_size]);
+                let row = Self::logit_row(
+                    self.classes,
+                    state,
+                    &images[i * self.image_size..(i + 1) * self.image_size],
+                );
                 img_rows.push(row);
             }
         }
@@ -764,6 +834,57 @@ impl BatchExecutor for SynthExecutor {
                 }
             })
             .collect())
+    }
+}
+
+impl BatchExecutor for SynthExecutor {
+    fn default_model(&self) -> &str {
+        "synth"
+    }
+
+    fn image_size_for(&self, model: Option<&str>) -> Option<usize> {
+        match model {
+            None | Some("synth") => Some(self.image_size),
+            Some(_) => None,
+        }
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        vec!["synth".to_string()]
+    }
+
+    fn classify_group(
+        &mut self,
+        _model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        // the persistent stream advances by however much was drawn, even
+        // when a mid-run deadline errors out (same as mutating in place)
+        let mut state = self.state;
+        let res = self.classify_stream(&mut state, images, n, budget, deadline, brownout);
+        self.state = state;
+        res
+    }
+
+    fn classify_group_seeded(
+        &mut self,
+        plan_seed: u64,
+        _model: Option<&str>,
+        images: &[f32],
+        n: usize,
+        budget: &RequestBudget,
+        deadline: Option<Instant>,
+        brownout: bool,
+    ) -> Result<Vec<ClassifyResult>> {
+        // stateless: the stream derives from the plan seed alone and the
+        // persistent stream is untouched, so re-executing (failover,
+        // hedging, replay) is free of side effects
+        let mut state = plan_seed;
+        self.classify_stream(&mut state, images, n, budget, deadline, brownout)
     }
 
     fn recover_after_panic(&mut self) -> Result<()> {
@@ -965,6 +1086,7 @@ mod tests {
         let key = GroupKey {
             model: None,
             budget: req.budget,
+            plan_seed: None,
         };
         serve_group(&mut exec, &ctrl, &counters, Tier::Normal, key, vec![req]).unwrap();
         let err = rx.recv().unwrap().unwrap_err();
@@ -1059,6 +1181,78 @@ mod tests {
         assert_eq!(res.samples_used, 4, "budget clamped to default_cost/2");
         tx.close();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn grouping_separates_plan_seeds() {
+        let mut a = req(0.0, RequestBudget::default());
+        a.plan_seed = Some(7);
+        let mut b = req(1.0, RequestBudget::default());
+        b.plan_seed = Some(8);
+        let mut c = req(2.0, RequestBudget::default());
+        c.plan_seed = Some(7);
+        let d = req(3.0, RequestBudget::default());
+        let groups = group_requests(vec![a, b, c, d]);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0.plan_seed, Some(7));
+        assert_eq!(groups[0].1.len(), 2);
+        assert_eq!(groups[1].0.plan_seed, Some(8));
+        assert_eq!(groups[2].0.plan_seed, None);
+    }
+
+    #[test]
+    fn seeded_classify_is_stateless_and_deterministic() {
+        let imgs = vec![0.3f32; 4];
+        let budget = RequestBudget::default();
+        let mut a = SynthExecutor::new(11, 5);
+        let mut b = SynthExecutor::new(999, 5); // different persistent seed
+        let bits = |r: &ClassifyResult| -> Vec<u32> {
+            r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+        };
+        let s1 = a
+            .classify_group_seeded(42, None, &imgs, 1, &budget, None, false)
+            .unwrap();
+        // a different executor instance with a different own-seed
+        // reproduces the plan bitwise — the failover/hedging property
+        let s2 = b
+            .classify_group_seeded(42, None, &imgs, 1, &budget, None, false)
+            .unwrap();
+        assert_eq!(bits(&s1[0]), bits(&s2[0]), "seeded plans replay on any worker");
+        // and the persistent stream is untouched by seeded traffic
+        let n1 = a.classify_group(None, &imgs, 1, &budget, None, false).unwrap();
+        let mut fresh = SynthExecutor::new(11, 5);
+        let n2 = fresh
+            .classify_group(None, &imgs, 1, &budget, None, false)
+            .unwrap();
+        assert_eq!(bits(&n1[0]), bits(&n2[0]), "seeded traffic is side-effect free");
+    }
+
+    #[test]
+    fn service_loop_serves_plan_seeded_requests() {
+        let (tx, _ctrl, _k, h) = synth_service(ServiceConfig::default(), 5);
+        let (mut req, rx) = synth_req(vec![0.1, 0.2, 0.3, 0.4]);
+        req.plan_seed = Some(1234);
+        tx.send(req).unwrap();
+        let res = rx.recv().unwrap().unwrap();
+        tx.close();
+        h.join().unwrap();
+        // the reply equals a direct seeded classify on a fresh executor
+        let mut exec = SynthExecutor::new(777, 5);
+        let direct = exec
+            .classify_group_seeded(
+                1234,
+                None,
+                &[0.1, 0.2, 0.3, 0.4],
+                1,
+                &RequestBudget::default(),
+                None,
+                false,
+            )
+            .unwrap();
+        let bits = |r: &ClassifyResult| -> Vec<u32> {
+            r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+        };
+        assert_eq!(bits(&res), bits(&direct[0]));
     }
 
     #[test]

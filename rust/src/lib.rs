@@ -83,6 +83,25 @@
 //! (`rust/tests/chaos.rs`); see the README's "Overload & fault tolerance"
 //! section for the error-code table.
 //!
+//! ## Cluster mode
+//!
+//! [`cluster`] scales serving out to N backend worker processes behind one
+//! coordinator, all speaking the same line protocol (`pbm worker` serves
+//! shards, `pbm cluster` fronts them).  Each request gets a *placement*;
+//! its entropy stream is [`cluster::lane_seed`]`(seed, placement)` and
+//! ships on the wire as `plan_seed`, so any worker — the primary, a
+//! failover target after a crash, a hedge racing a straggler, or the
+//! coordinator's own degraded local fallback — produces the bitwise-same
+//! answer: the replay contract extends to
+//! `(model, seed, threads, prefetch, rule, placement)`.  Worker health
+//! (`Healthy → Suspect → Down → Recovering`) folds each worker's
+//! entropy-health scorecards and latency percentiles from `/info` into
+//! routing: degraded-randomness workers are drained within one probe
+//! interval.  An empty pool answers a typed `worker_unavailable` error.
+//! The chaos suite (`rust/tests/cluster_chaos.rs`) proves no request is
+//! lost or doubled across mid-batch worker kills, stalls, and garbage
+//! responses; see the README's "Cluster mode" section.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 
@@ -91,6 +110,7 @@ pub mod benchkit;
 pub mod bnn;
 pub mod calibration;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -9,6 +9,9 @@
 //! * `calibrate`  — the Fig. 2(c,d) computation-error experiment
 //! * `nist`       — SP800-22 battery on the chaotic-light source
 //! * `serve`      — TCP serving gateway (router + dynamic batcher + engines)
+//! * `worker`     — cluster backend: serve plan-seeded shards (role `worker`)
+//! * `cluster`    — cluster coordinator: shard requests across workers with
+//!                  health-checked failover and hedging
 //! * `classify`   — client: classify a test image against a running server
 //! * `info`       — artifact inventory
 
@@ -56,6 +59,8 @@ fn run(args: &Args) -> Result<()> {
         Some("calibrate") => cmd_calibrate(args),
         Some("nist") => cmd_nist(args),
         Some("serve") => cmd_serve(args),
+        Some("worker") => cmd_worker(args),
+        Some("cluster") => cmd_cluster(args),
         Some("classify") => cmd_classify(args),
         Some("info") => cmd_info(args),
         other => {
@@ -118,6 +123,26 @@ USAGE: pbm <subcommand> [flags]
              overload (responses flag degraded:true); --idle-timeout-ms:
              close silent connections, default 60000; see the [overload]
              config table)
+  worker    [--addr HOST:PORT --seed N --samples N --work-us N
+            --health --health-window BITS --health-duty F
+            --queue-depth N --idle-timeout-ms N]
+            (cluster backend: serves shard-scoped plan-seeded classifies
+             over the synthetic substrate, answers hello with role=worker;
+             probes read its entropy-health scorecards + latency
+             percentiles from /info)
+  cluster   [--config FILE --addr HOST:PORT --workers H:P[,H:P...]
+            --seed N --samples N --image-size N --model NAME
+            --hedge-ms N --hedge-factor F --probe-ms N --local-fallback
+            --idle-timeout-ms N]
+            (coordinator: shards classifies across the worker pool; each
+             request's plan_seed = lane_seed(seed, placement), so failover,
+             hedging, and replay are bitwise-deterministic per
+             (model, seed, threads, prefetch, rule, placement); admission
+             capacity scales with pool size; workers whose entropy health
+             degrades are drained within one probe interval (--probe-ms,
+             0 = no probing); --local-fallback degrades into local
+             execution instead of code=worker_unavailable when the pool is
+             empty; see the [cluster] config table)
   classify  [--addr HOST:PORT --model D --split S --index I
             --max-samples N --target-confidence F --deadline-ms N]
             [--local --backend B --threads N --adaptive]  (in-process)
@@ -735,6 +760,114 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let cancel = CancelToken::new();
     serve(router, opts, cancel, |addr| println!("listening on {addr}"))
+}
+
+/// `pbm worker` — a cluster backend: the synthetic deterministic substrate
+/// behind a gateway whose `hello` role is `worker`.  Serves plan-seeded
+/// (shard-scoped) classifies bitwise-reproducibly, so any worker is
+/// interchangeable with any other for the same `plan_seed`.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 7)?;
+    let n_samples = args.get_usize("samples", 8)?;
+    let work = std::time::Duration::from_micros(args.get_u64("work-us", 0)?);
+    let health = if args.has("health") {
+        let hc = parse_health(args, &Config::default())?;
+        Some(std::sync::Arc::new(
+            photonic_bayes::entropy::health::Monitor::new(hc),
+        ))
+    } else {
+        None
+    };
+    let svc = ServiceConfig {
+        queue_depth: args.get_usize("queue-depth", 256)?,
+        ..ServiceConfig::default()
+    };
+    let handle = photonic_bayes::coordinator::service::EngineHandle::spawn_executor(
+        "synth",
+        vec!["synth".to_string()],
+        health,
+        n_samples,
+        svc,
+        move || {
+            let mut e = photonic_bayes::coordinator::SynthExecutor::new(seed, n_samples);
+            e.work_per_sample = work;
+            Ok(e)
+        },
+    )?;
+    let mut router = Router::new();
+    router.set_role("worker");
+    router.register(handle);
+    let opts = ServerOptions {
+        addr: args.get_or("addr", "127.0.0.1:7979"),
+        workers: args.get_usize("gateway-workers", 4)?,
+        idle_timeout: std::time::Duration::from_millis(args.get_u64("idle-timeout-ms", 60_000)?),
+    };
+    serve(router, opts, CancelToken::new(), |addr| {
+        println!("worker listening on {addr}")
+    })
+}
+
+/// `pbm cluster` — the coordinator: shard classify traffic across a pool
+/// of `pbm worker` processes with health probes, failover, and hedging.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use photonic_bayes::cluster;
+    let file = match args.get("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
+    let workers_raw = args
+        .get("workers")
+        .map(str::to_string)
+        .or_else(|| file.get("cluster", "workers").map(str::to_string))
+        .ok_or_else(|| anyhow!("--workers HOST:PORT[,HOST:PORT...] required"))?;
+    let addrs: Vec<String> = workers_raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let cfg = cluster::ClusterConfig {
+        seed: args.get_u64("seed", file.get_usize("cluster", "seed", 0x00C1_0572)? as u64)?,
+        model: args.get_or("model", &file.get_or("cluster", "model", "synth")),
+        image_size: args.get_usize("image-size", file.get_usize("cluster", "image_size", 4)?)?,
+        n_samples: args.get_usize("samples", file.get_usize("cluster", "n_samples", 8)?)?,
+        hedge_factor: args.get_f64("hedge-factor", file.get_f64("cluster", "hedge_factor", 3.0)?)?,
+        hedge_min: std::time::Duration::from_millis(
+            args.get_u64("hedge-ms", file.get_usize("cluster", "hedge_min_ms", 50)? as u64)?,
+        ),
+        probe_interval: std::time::Duration::from_millis(args.get_u64(
+            "probe-ms",
+            file.get_usize("cluster", "probe_interval_ms", 1000)? as u64,
+        )?),
+        client: photonic_bayes::server::tcp::ClientConfig::default(),
+        local_fallback: args.has("local-fallback")
+            || file.get_bool("cluster", "local_fallback", false)?,
+    };
+    let svc = ServiceConfig {
+        queue_depth: file.get_usize("batcher", "queue_depth", 256)?,
+        ..ServiceConfig::default()
+    };
+    let probe_interval = cfg.probe_interval;
+    let (handle, pool) = cluster::spawn_coordinator(cfg, addrs, svc)?;
+    let mut router = Router::new();
+    router.set_role("coordinator");
+    router.register(handle);
+    let cancel = CancelToken::new();
+    let probe = (!probe_interval.is_zero())
+        .then(|| cluster::spawn_probe_loop(pool, probe_interval, cancel.clone()));
+    let opts = ServerOptions {
+        addr: args.get_or("addr", &file.get_or("server", "addr", "127.0.0.1:7878")),
+        workers: args.get_usize("gateway-workers", 8)?,
+        idle_timeout: std::time::Duration::from_millis(args.get_u64("idle-timeout-ms", 60_000)?),
+    };
+    let res = serve(router, opts, cancel.clone(), |addr| {
+        println!("coordinator listening on {addr}")
+    });
+    cancel.cancel();
+    if let Some(p) = probe {
+        let _ = p.join();
+    }
+    res
 }
 
 fn cmd_classify(args: &Args) -> Result<()> {

@@ -7,6 +7,16 @@
 //! work to a dedicated engine thread (see `coordinator::service`), which is
 //! also the right shape for the CPU backend (executables parallelize
 //! internally via their own thread pool; concurrent dispatch buys nothing).
+//!
+//! Not to be confused with the *network* client
+//! ([`crate::server::tcp::Client`]), which carries the serving RPC
+//! idempotency rule: `ping`/`info` retry freely
+//! (`call_idempotent`), a plain `classify` is never retried (the engine's
+//! persistent entropy stream makes a repeat a *different* answer and a
+//! double spend), and a plan-seeded classify retries via
+//! `call_replayable` because its answer is a pure function of
+//! `(model, plan_seed, budget)` — see that module for the
+//! dirty-connection mechanics that close the duplicate-answer window.
 
 use std::cell::RefCell;
 

@@ -26,6 +26,16 @@
 //! the engine rebuilds; idle connections are closed with
 //! `"code":"idle_timeout"`.  Degraded (clamped/brownout) answers carry
 //! `"degraded":true`.
+//!
+//! Cluster extensions: `{"op":"hello","role":"coordinator"}` is the role
+//! handshake (the server answers with its own role — `worker` for
+//! `pbm worker`, `coordinator` for `pbm cluster`); classify requests may
+//! carry `"plan_seed":"<u64 as decimal string>"` to pin the entropy
+//! stream of a shard-scoped plan (a string because JSON numbers are f64
+//! and would corrupt seeds above 2^53); a coordinator whose worker pool
+//! is empty answers `"code":"worker_unavailable"` with a `down` count.
+//! The coordinator's `/info` carries a `cluster` section of per-worker
+//! cards (state, latency EWMA, entropy health, p50/p95/p99).
 
 pub mod protocol;
 pub mod tcp;

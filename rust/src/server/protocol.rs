@@ -2,7 +2,8 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::bnn::Decision;
+use crate::bnn::{Decision, Predictive};
+use crate::cluster::WorkerCard;
 use crate::coordinator::engine::ClassifyResult;
 use crate::coordinator::metrics::ServeSnapshot;
 use crate::coordinator::overload::ServeError;
@@ -39,9 +40,24 @@ pub enum Request {
         /// answer the client has stopped waiting for.  `None` falls back
         /// to the server's configured default.
         deadline_ms: Option<u64>,
+        /// Shard-scoped plan seed (cluster mode): the exact seed this
+        /// request's stochastic stream must derive from, making the
+        /// answer a pure function of `(model, plan_seed, budget)` and
+        /// therefore safe to re-route, hedge, or replay.  Travels as a
+        /// decimal *string* on the wire — JSON numbers are f64 and would
+        /// corrupt 64-bit seeds.
+        plan_seed: Option<u64>,
     },
     Info,
     Ping,
+    /// Role handshake (cluster mode): a coordinator announces itself and
+    /// learns whether the peer is a `worker` before routing shard-scoped
+    /// plans at it.
+    Hello {
+        /// The *peer's* announced role (`"coordinator"`, `"worker"`,
+        /// `"client"`; free-form).
+        role: String,
+    },
 }
 
 /// Parse one request line.
@@ -73,16 +89,46 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             let budget = parse_budget(&j)?;
             let deadline_ms = parse_deadline_ms(&j)?;
+            let plan_seed = parse_plan_seed(&j)?;
             Ok(Request::Classify {
                 model,
                 image,
                 budget,
                 deadline_ms,
+                plan_seed,
             })
         }
         Some("info") => Ok(Request::Info),
         Some("ping") => Ok(Request::Ping),
+        Some("hello") => {
+            let role = match j.get("role") {
+                None => "client".to_string(),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("role must be a string"))?
+                    .to_string(),
+            };
+            Ok(Request::Hello { role })
+        }
         other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+/// Parse the optional `plan_seed` field: a u64 carried as a decimal
+/// string (JSON numbers are f64 — above 2^53 they silently lose bits,
+/// which for a seed means a silently different stochastic stream).
+fn parse_plan_seed(j: &Json) -> Result<Option<u64>> {
+    match j.get("plan_seed") {
+        None => Ok(None),
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("plan_seed must be a decimal string (u64)"))?;
+            let seed: u64 = s
+                .parse()
+                .map_err(|e| anyhow!("plan_seed '{s}' is not a u64: {e}"))?;
+            Ok(Some(seed))
+        }
     }
 }
 
@@ -231,6 +277,9 @@ pub fn encode_serve_error_into(e: &ServeError, out: &mut String) {
             o.set("samples_used", Json::Num(*samples_used as f64));
         }
         ServeError::Internal { .. } => {}
+        ServeError::WorkerUnavailable { down } => {
+            o.set("down", Json::Num(*down as f64));
+        }
     }
     o.write_compact(out);
 }
@@ -242,13 +291,16 @@ pub fn encode_serve_error_into(e: &ServeError, out: &mut String) {
 /// per-engine model-registry residency snapshots (see
 /// [`crate::coordinator::Router::registry_snapshot`]); `serving` the
 /// per-engine overload/robustness counters (see
-/// [`crate::coordinator::Router::serving_snapshot`]) — pass empty slices
+/// [`crate::coordinator::Router::serving_snapshot`]); `cluster` the
+/// per-worker pool cards of a cluster coordinator (see
+/// [`crate::coordinator::Router::cluster_snapshot`]) — pass empty slices
 /// and the respective object is omitted entirely.
 pub fn encode_info(
     models: &[&str],
     health: &[(String, Vec<Scorecard>)],
     registry: &[(String, RegistrySnapshot)],
     serving: &[(String, ServeSnapshot)],
+    cluster: &[(String, Vec<WorkerCard>)],
 ) -> String {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(true));
@@ -281,7 +333,31 @@ pub fn encode_info(
         }
         o.set("serving", s);
     }
+    if !cluster.is_empty() {
+        let mut c = Json::obj();
+        for (engine, cards) in cluster {
+            c.set(
+                engine,
+                Json::Arr(cards.iter().map(encode_worker_card).collect()),
+            );
+        }
+        o.set("cluster", c);
+    }
     o.to_string_compact()
+}
+
+/// One cluster worker's pool card as a JSON object.
+fn encode_worker_card(c: &WorkerCard) -> Json {
+    let mut o = Json::obj();
+    o.set("addr", Json::Str(c.addr.clone()));
+    o.set("state", Json::Str(c.state.name().into()));
+    o.set("consecutive_fails", Json::Num(f64::from(c.consecutive_fails)));
+    o.set("latency_ewma_us", Json::Num(c.latency_ewma_us));
+    o.set("entropy_degraded", Json::Bool(c.entropy_degraded));
+    o.set("p50_us", Json::Num(c.p50_us));
+    o.set("p95_us", Json::Num(c.p95_us));
+    o.set("p99_us", Json::Num(c.p99_us));
+    o
 }
 
 /// One engine's model-registry snapshot as a JSON object: cache-wide
@@ -336,6 +412,26 @@ pub fn encode_pong() -> String {
     "{\"ok\":true,\"pong\":true}".to_string()
 }
 
+/// Append-encode the `hello` response: the server announces its own
+/// role (`"worker"` for `pbm worker`, `"coordinator"` for `pbm cluster`,
+/// `"server"` otherwise) so a coordinator can verify it is routing
+/// shard-scoped plans at an actual worker.
+pub fn encode_hello_ack_into(server_role: &str, out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("role", Json::Str(server_role.into()));
+    o.set("version", Json::Str(crate::version().into()));
+    o.write_compact(out);
+}
+
+/// Client-side: encode a `hello` handshake announcing `role`.
+pub fn encode_hello(role: &str) -> String {
+    let mut o = Json::obj();
+    o.set("op", Json::Str("hello".into()));
+    o.set("role", Json::Str(role.into()));
+    o.to_string_compact()
+}
+
 /// Client-side: encode a classify request.
 pub fn encode_classify(model: &str, image: &[f32]) -> String {
     encode_classify_with_budget(model, image, &RequestBudget::default())
@@ -370,6 +466,100 @@ pub fn encode_classify_opts(
     o.to_string_compact()
 }
 
+/// Client-side (the cluster coordinator): encode a shard-scoped classify
+/// request pinning the worker's stochastic stream to `plan_seed`.
+pub fn encode_classify_sharded(
+    model: &str,
+    image: &[f32],
+    budget: &RequestBudget,
+    deadline_ms: Option<u64>,
+    plan_seed: u64,
+) -> String {
+    let mut line = encode_classify_opts(model, image, budget, deadline_ms);
+    // splice the seed in as a string field (see `parse_plan_seed`)
+    line.truncate(line.len() - 1);
+    line.push_str(&format!(",\"plan_seed\":\"{plan_seed}\"}}"));
+    line
+}
+
+/// Client-side: decode a successful classify response back into a
+/// [`ClassifyResult`] — the inverse of [`encode_result_into`], used by
+/// the cluster coordinator to forward worker answers through its own
+/// serving loop.  f32 probabilities survive the trip bitwise: they widen
+/// exactly to f64, and the JSON writer prints the shortest round-tripping
+/// decimal.
+pub fn decode_result(j: &Json) -> Result<ClassifyResult> {
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(anyhow!("not a successful classify response"));
+    }
+    let num = |k: &str| -> Result<f64> {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("classify response missing numeric '{k}'"))
+    };
+    let mean_probs: Vec<f32> = j
+        .get("mean_probs")
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| anyhow!("classify response missing mean_probs"))?
+        .into_iter()
+        .map(|x| x as f32)
+        .collect();
+    let predictive = Predictive {
+        mean_probs,
+        predicted: num("predicted")? as usize,
+        shannon_entropy: num("h")?,
+        softmax_entropy: num("se")?,
+        mutual_information: num("mi")?,
+        agreement: num("agreement")?,
+    };
+    let decision = match j.get("decision").and_then(Json::as_str) {
+        Some("accept") => Decision::Accept {
+            class: num("class")? as usize,
+            confidence: num("confidence")? as f32,
+        },
+        Some("reject_ood") => Decision::RejectOod {
+            mutual_information: num("mi_trigger")?,
+        },
+        Some("flag_ambiguous") => Decision::FlagAmbiguous {
+            class: num("class")? as usize,
+            softmax_entropy: num("se_trigger")?,
+        },
+        other => return Err(anyhow!("unknown decision {other:?}")),
+    };
+    Ok(ClassifyResult {
+        predictive,
+        decision,
+        latency_us: num("latency_us")?,
+        samples_used: num("samples_used")? as usize,
+        degraded: j.get("degraded").and_then(Json::as_bool) == Some(true),
+    })
+}
+
+/// Client-side: map a coded error response onto the typed [`ServeError`]
+/// it came from (`None` for non-lifecycle errors like `unknown_model`).
+pub fn decode_serve_error(j: &Json) -> Option<ServeError> {
+    let usize_of = |k: &str| j.get(k).and_then(Json::as_usize);
+    match j.get("code").and_then(Json::as_str) {
+        Some("overloaded") => Some(ServeError::Overloaded {
+            retry_after_ms: usize_of("retry_after_ms").unwrap_or(50) as u64,
+        }),
+        Some("deadline_exceeded") => Some(ServeError::DeadlineExceeded {
+            samples_used: usize_of("samples_used").unwrap_or(0),
+        }),
+        Some("internal_error") => Some(ServeError::Internal {
+            detail: j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("internal error")
+                .to_string(),
+        }),
+        Some("worker_unavailable") => Some(ServeError::WorkerUnavailable {
+            down: usize_of("down").unwrap_or(0),
+        }),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,11 +575,13 @@ mod tests {
                 image,
                 budget,
                 deadline_ms,
+                plan_seed,
             } => {
                 assert_eq!(model, "digits");
                 assert_eq!(image, vec![0.0, 0.5, 1.0]);
                 assert!(budget.is_default());
                 assert_eq!(deadline_ms, None);
+                assert_eq!(plan_seed, None);
             }
             other => panic!("{other:?}"),
         }
@@ -503,11 +695,14 @@ mod tests {
             overload_rejects: 2,
             panics_recovered: 1,
             queue_depth: 3,
+            p95_us: 800.0,
+            ..ServeSnapshot::default()
         };
-        let line = encode_info(&["digits"], &[], &[], &[("digits".to_string(), snap)]);
+        let line = encode_info(&["digits"], &[], &[], &[("digits".to_string(), snap)], &[]);
         let j = crate::util::json::parse(&line).unwrap();
         let s = j.get("serving").unwrap().get("digits").unwrap();
         assert_eq!(s.get("requests_shed").unwrap().as_usize(), Some(4));
+        assert_eq!(s.get("p95_us").unwrap().as_f64(), Some(800.0));
         assert_eq!(s.get("deadline_expired").unwrap().as_usize(), Some(2));
         assert_eq!(s.get("overload_rejects").unwrap().as_usize(), Some(2));
         assert_eq!(s.get("panics_recovered").unwrap().as_usize(), Some(1));
@@ -518,6 +713,145 @@ mod tests {
     fn parse_info_and_ping() {
         assert_eq!(parse_request("{\"op\":\"info\"}").unwrap(), Request::Info);
         assert_eq!(parse_request("{\"op\":\"ping\"}").unwrap(), Request::Ping);
+    }
+
+    #[test]
+    fn hello_handshake_roundtrip() {
+        let line = encode_hello("coordinator");
+        assert_eq!(
+            parse_request(&line).unwrap(),
+            Request::Hello {
+                role: "coordinator".into()
+            }
+        );
+        // role defaults to "client" when omitted
+        assert_eq!(
+            parse_request("{\"op\":\"hello\"}").unwrap(),
+            Request::Hello {
+                role: "client".into()
+            }
+        );
+        let mut ack = String::new();
+        encode_hello_ack_into("worker", &mut ack);
+        let j = crate::util::json::parse(&ack).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("role").unwrap().as_str(), Some("worker"));
+    }
+
+    #[test]
+    fn plan_seed_rides_as_string_and_survives_u64_range() {
+        // a seed above 2^53 — exactly what a JSON number would corrupt
+        let seed = u64::MAX - 12345;
+        let line = encode_classify_sharded(
+            "synth",
+            &[0.1, 0.2],
+            &RequestBudget::default(),
+            Some(100),
+            seed,
+        );
+        match parse_request(&line).unwrap() {
+            Request::Classify {
+                plan_seed,
+                deadline_ms,
+                ..
+            } => {
+                assert_eq!(plan_seed, Some(seed));
+                assert_eq!(deadline_ms, Some(100));
+            }
+            other => panic!("{other:?}"),
+        }
+        // numeric plan_seed is a boundary error, not silent precision loss
+        let bad = "{\"op\":\"classify\",\"model\":\"m\",\"image\":[1],\"plan_seed\":42}";
+        assert!(parse_request(bad).is_err());
+        let bad = "{\"op\":\"classify\",\"model\":\"m\",\"image\":[1],\"plan_seed\":\"x\"}";
+        assert!(parse_request(bad).is_err());
+    }
+
+    #[test]
+    fn decode_result_inverts_encode_bitwise() {
+        let pred = Predictive::from_logits(&vec![vec![3.0, 0.7, 0.1]; 5]);
+        let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
+        let r = ClassifyResult {
+            predictive: pred,
+            decision,
+            latency_us: 123.0,
+            samples_used: 5,
+            degraded: true,
+        };
+        let j = crate::util::json::parse(&encode_result(&r)).unwrap();
+        let back = decode_result(&j).unwrap();
+        let bits = |r: &ClassifyResult| -> Vec<u32> {
+            r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+        };
+        assert_eq!(bits(&r), bits(&back), "f32 probs survive the wire bitwise");
+        assert_eq!(back.samples_used, 5);
+        assert!(back.degraded);
+        assert_eq!(back.predictive.predicted, r.predictive.predicted);
+        assert_eq!(back.decision, r.decision);
+        // error responses refuse to decode as results
+        let err = crate::util::json::parse("{\"ok\":false,\"code\":\"overloaded\"}").unwrap();
+        assert!(decode_result(&err).is_err());
+    }
+
+    #[test]
+    fn decode_serve_error_inverts_encode() {
+        let cases = [
+            ServeError::Overloaded { retry_after_ms: 40 },
+            ServeError::DeadlineExceeded { samples_used: 7 },
+            ServeError::WorkerUnavailable { down: 2 },
+        ];
+        for e in cases {
+            let mut s = String::new();
+            encode_serve_error_into(&e, &mut s);
+            let j = crate::util::json::parse(&s).unwrap();
+            assert_eq!(decode_serve_error(&j).as_ref(), Some(&e), "{s}");
+        }
+        let um = crate::util::json::parse("{\"ok\":false,\"code\":\"unknown_model\"}").unwrap();
+        assert!(decode_serve_error(&um).is_none());
+    }
+
+    #[test]
+    fn worker_unavailable_encodes_down_count() {
+        let mut s = String::new();
+        encode_serve_error_into(&ServeError::WorkerUnavailable { down: 2 }, &mut s);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("worker_unavailable"));
+        assert_eq!(j.get("down").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn encode_info_reports_cluster_cards() {
+        use crate::cluster::WorkerState;
+        let card = WorkerCard {
+            addr: "127.0.0.1:7979".into(),
+            state: WorkerState::Suspect,
+            consecutive_fails: 1,
+            latency_ewma_us: 850.0,
+            entropy_degraded: true,
+            p50_us: 400.0,
+            p95_us: 900.0,
+            p99_us: 1200.0,
+        };
+        let line = encode_info(
+            &["synth"],
+            &[],
+            &[],
+            &[],
+            &[("cluster".to_string(), vec![card])],
+        );
+        let j = crate::util::json::parse(&line).unwrap();
+        let cards = j
+            .get("cluster")
+            .unwrap()
+            .get("cluster")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(cards.len(), 1);
+        assert_eq!(cards[0].get("state").unwrap().as_str(), Some("suspect"));
+        assert_eq!(cards[0].get("entropy_degraded").unwrap().as_bool(), Some(true));
+        assert_eq!(cards[0].get("p95_us").unwrap().as_f64(), Some(900.0));
     }
 
     #[test]
@@ -567,7 +901,7 @@ mod tests {
     #[test]
     fn encode_info_reports_health_scorecards() {
         // no monitors -> no entropy_health object at all
-        let plain = encode_info(&["digits"], &[], &[], &[]);
+        let plain = encode_info(&["digits"], &[], &[], &[], &[]);
         let j = crate::util::json::parse(&plain).unwrap();
         assert!(j.get("entropy_health").is_none());
         assert!(j.get("registry").is_none());
@@ -587,7 +921,7 @@ mod tests {
             serial_corr: 0.6,
             degraded: true,
         };
-        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[], &[]);
+        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[], &[], &[]);
         let j = crate::util::json::parse(&line).unwrap();
         let cards = j
             .get("entropy_health")
@@ -656,6 +990,7 @@ mod tests {
             &["blood", "digits"],
             &[],
             &[("digits".to_string(), snap)],
+            &[],
             &[],
         );
         let j = crate::util::json::parse(&line).unwrap();

@@ -173,6 +173,26 @@ fn handle_conn(
                 return Ok(());
             }
             Ok(_) if line.ends_with('\n') => {
+                // Worker-side chaos hooks, exercised by the cluster chaos
+                // suite.  Gated on classify lines so health probes keep
+                // working while a worker misbehaves for real requests.
+                #[cfg(feature = "fault-injection")]
+                if line.contains("\"op\":\"classify\"") {
+                    // crash: drop the connection with no response — the
+                    // coordinator must fail over without losing the request
+                    if crate::util::fault::faultpoint("worker.kill").is_err() {
+                        return Ok(());
+                    }
+                    // straggle: DelayMs sleeps inside the faultpoint itself
+                    let _ = crate::util::fault::faultpoint("worker.stall");
+                    // corrupt: emit a non-protocol line instead of the answer
+                    if crate::util::fault::faultpoint("worker.garbage").is_err() {
+                        write_line_vectored(&mut writer, b"%%% not protocol json %%%")?;
+                        line.clear();
+                        last_activity = std::time::Instant::now();
+                        continue;
+                    }
+                }
                 respond_into(router, &line, &mut resp);
                 write_line_vectored(&mut writer, resp.as_bytes())?;
                 line.clear();
@@ -205,21 +225,30 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
     match protocol::parse_request(line) {
         Err(e) => protocol::encode_error_into(&format!("{e}"), out),
         Ok(Request::Ping) => out.push_str(&protocol::encode_pong()),
+        Ok(Request::Hello { role: _ }) => {
+            // the peer announces its role; we answer with ours so a
+            // coordinator probing a pool can verify it dialed an actual
+            // worker (and not, say, another coordinator or a bare server)
+            protocol::encode_hello_ack_into(router.role(), out)
+        }
         Ok(Request::Info) => out.push_str(&protocol::encode_info(
             &router.datasets(),
             &router.health_snapshot(),
             &router.registry_snapshot(),
             &router.serving_snapshot(),
+            &router.cluster_snapshot(),
         )),
         Ok(Request::Classify {
             model,
             image,
             budget,
             deadline_ms,
+            plan_seed,
         }) => {
             // the engine thread re-resolves the name against its registry,
             // so the request carries it even though routing also uses it
             let (mut req, rx) = ClassifyRequest::with_model(Some(model.clone()), image, budget);
+            req.plan_seed = plan_seed;
             // the deadline clock starts here, at admission: queueing time
             // counts against it (that is the point — shed what went stale
             // in the queue)
@@ -260,9 +289,11 @@ pub struct ClientConfig {
     /// the default is generous rather than absent.
     pub read_timeout: std::time::Duration,
     pub write_timeout: std::time::Duration,
-    /// Extra attempts for *idempotent* calls ([`Client::call_idempotent`]):
-    /// `ping`/`info` only — a retried classify could double-spend engine
-    /// samples on a response that was merely slow.
+    /// Extra attempts for calls that are safe to repeat
+    /// ([`Client::call_idempotent`] for `ping`/`info`,
+    /// [`Client::call_replayable`] for plan-seeded classifies).  A plain
+    /// classify is never retried — it could double-spend engine samples
+    /// on a response that was merely slow.
     pub retries: u32,
     /// First retry backoff; doubles per attempt up to `backoff_cap`, with
     /// a deterministic jitter factor in `[0.5, 1.5)` so a fleet of clients
@@ -335,6 +366,13 @@ pub struct Client {
     addr: String,
     cfg: ClientConfig,
     rng: u64,
+    /// Set while a request may have left a response (whole or partial) in
+    /// flight on this connection.  Reading the next reply off a dirty
+    /// connection could consume the *previous* request's answer — the
+    /// duplicate-answer window that makes naive retry unsafe.  [`call`]
+    /// re-dials a dirty connection before sending, so every request reads
+    /// from a stream that provably holds no stale response.
+    dirty: bool,
 }
 
 impl Client {
@@ -352,7 +390,17 @@ impl Client {
             addr: addr.to_string(),
             cfg,
             rng,
+            dirty: false,
         })
+    }
+
+    /// Replace the half-dead stream with a freshly dialed one.
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = dial(&self.addr, &self.cfg)?;
+        self.writer = stream.try_clone()?;
+        self.reader = BufReader::new(stream);
+        self.dirty = false;
+        Ok(())
     }
 
     /// Send one request line; wait for one response line.  Reads are capped
@@ -360,6 +408,12 @@ impl Client {
     /// — so a misbehaving (or spoofed) server cannot make the client buffer
     /// an unbounded response.
     pub fn call(&mut self, line: &str) -> Result<crate::util::json::Json> {
+        if self.dirty {
+            self.reconnect()?;
+        }
+        // dirty until a complete response line has been read and parsed:
+        // any early exit leaves the connection marked for re-dial
+        self.dirty = true;
         // mirror of the gateway's response path: body + newline in one
         // vectored syscall
         write_line_vectored(&mut self.writer, line.as_bytes())?;
@@ -375,27 +429,26 @@ impl Client {
             let _ = self.writer.shutdown(std::net::Shutdown::Both);
             return Err(anyhow!("response line exceeds {MAX_LINE_BYTES} bytes"));
         }
-        crate::util::json::parse(&resp).map_err(|e| anyhow!("bad response: {e} ({resp:?})"))
+        let j = crate::util::json::parse(&resp)
+            .map_err(|e| anyhow!("bad response: {e} ({resp:?})"))?;
+        self.dirty = false;
+        Ok(j)
     }
 
     /// [`call`](Self::call) with bounded retries for idempotent requests:
     /// on failure, re-dial the server and back off exponentially with
     /// jitter (`ClientConfig::retries` extra attempts).  Only for requests
-    /// that are safe to repeat — `ping` and `info` use it, `classify`
-    /// deliberately does not.
+    /// that are safe to repeat — `ping`/`info` use it, and
+    /// [`call_replayable`](Self::call_replayable) reuses it for
+    /// plan-seeded classifies.
     pub fn call_idempotent(&mut self, line: &str) -> Result<crate::util::json::Json> {
         let mut last_err = None;
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
                 std::thread::sleep(backoff_delay(&self.cfg, attempt, &mut self.rng));
                 // the old stream may be half-dead (timed-out read leaves
-                // an unread response in flight): start clean
-                if let Ok(stream) = dial(&self.addr, &self.cfg) {
-                    if let Ok(writer) = stream.try_clone() {
-                        self.reader = BufReader::new(stream);
-                        self.writer = writer;
-                    }
-                }
+                // an unread response in flight): force `call` to re-dial
+                self.dirty = true;
             }
             match self.call(line) {
                 Ok(j) => return Ok(j),
@@ -405,9 +458,38 @@ impl Client {
         Err(last_err.unwrap_or_else(|| anyhow!("no attempts made")))
     }
 
+    /// Retry-on-reconnect for **replayable** requests.
+    ///
+    /// # The idempotency rule
+    ///
+    /// A plain classify must not be retried: the engine draws from a
+    /// stateful entropy stream, so a second attempt would both spend
+    /// fresh samples and return a *different* answer than the (possibly
+    /// merely slow) first attempt.  A classify that pins its entropy
+    /// with a `plan_seed` is replayable — any server, asked any number
+    /// of times, computes the bitwise-identical response — so a retry
+    /// can never observe a divergent answer.  Single-in-flight is
+    /// enforced by the dirty-connection tracking in [`call`](Self::call):
+    /// a retry always starts on a freshly dialed connection, so it can
+    /// never read a stale response left over from the failed attempt
+    /// (no duplicate-answer window).
+    pub fn call_replayable(&mut self, line: &str) -> Result<crate::util::json::Json> {
+        self.call_idempotent(line)
+    }
+
     pub fn ping(&mut self) -> Result<bool> {
         let j = self.call_idempotent("{\"op\":\"ping\"}")?;
         Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    /// Role handshake: announce our role, return the server's.  A cluster
+    /// coordinator uses this to verify it dialed an actual worker.
+    pub fn hello(&mut self, role: &str) -> Result<String> {
+        let j = self.call_idempotent(&protocol::encode_hello(role))?;
+        j.get("role")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("hello ack missing role"))
     }
 
     /// Fetch the server's `info` document (models, health, registry,
@@ -442,6 +524,26 @@ impl Client {
         deadline_ms: Option<u64>,
     ) -> Result<crate::util::json::Json> {
         self.call(&protocol::encode_classify_opts(model, image, budget, deadline_ms))
+    }
+
+    /// Shard-scoped classify pinned to `plan_seed`, retried on reconnect —
+    /// see [`call_replayable`](Self::call_replayable) for why pinning the
+    /// seed makes the retry safe.
+    pub fn classify_replayable(
+        &mut self,
+        model: &str,
+        image: &[f32],
+        budget: &crate::sampler::RequestBudget,
+        deadline_ms: Option<u64>,
+        plan_seed: u64,
+    ) -> Result<crate::util::json::Json> {
+        self.call_replayable(&protocol::encode_classify_sharded(
+            model,
+            image,
+            budget,
+            deadline_ms,
+            plan_seed,
+        ))
     }
 }
 
@@ -576,5 +678,17 @@ mod tests {
         assert!(err.contains("\"code\":\"unknown_model\""), "{err}");
         let bad = respond(&router, "garbage");
         assert!(bad.contains("\"ok\":false"));
+    }
+
+    #[test]
+    fn hello_reports_router_role() {
+        let router = Router::new();
+        let ack = respond(&router, "{\"op\":\"hello\",\"role\":\"coordinator\"}");
+        assert!(ack.contains("\"ok\":true"), "{ack}");
+        assert!(ack.contains("\"role\":\"server\""), "{ack}");
+        let mut worker = Router::new();
+        worker.set_role("worker");
+        let ack = respond(&worker, "{\"op\":\"hello\"}");
+        assert!(ack.contains("\"role\":\"worker\""), "{ack}");
     }
 }

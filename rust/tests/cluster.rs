@@ -1,0 +1,220 @@
+//! End-to-end cluster-mode tests (no fault injection — the chaos side
+//! lives in `cluster_chaos.rs` behind `--features fault-injection`).
+//!
+//! The three contracts under test:
+//! 1. a request's answer is a pure function of `(seed, placement)` —
+//!    two clusters built from workers with *different* private seeds
+//!    reproduce each other bitwise;
+//! 2. the coordinator's gateway speaks the full protocol: `hello`
+//!    answers role `coordinator`, `/info` carries per-worker cluster
+//!    cards and the serving latency percentiles;
+//! 3. a flood sheds with a typed `overloaded` + `retry_after_ms` from
+//!    *cluster* capacity (two workers admit strictly more than one
+//!    worker's queue), and every admitted request is answered exactly
+//!    once.
+
+use std::time::Duration;
+
+use photonic_bayes::cluster::{self, ClusterConfig, WorkerGuard, WorkerOptions};
+use photonic_bayes::coordinator::{
+    ClassifyRequest, ClassifyResult, Router, ServeError, ServiceConfig,
+};
+use photonic_bayes::exec::CancelToken;
+use photonic_bayes::server::{serve, Client, ClientConfig, ServerOptions};
+
+fn fast_client() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_millis(500),
+        ..ClientConfig::default()
+    }
+}
+
+fn test_cfg() -> ClusterConfig {
+    ClusterConfig {
+        // tests drive probes explicitly
+        probe_interval: Duration::ZERO,
+        client: fast_client(),
+        ..ClusterConfig::default()
+    }
+}
+
+fn image(k: usize) -> Vec<f32> {
+    (0..4).map(|i| ((k * 4 + i) as f32) * 0.017).collect()
+}
+
+/// Bitwise fingerprint of a result's predictive distribution.
+fn bits(r: &ClassifyResult) -> Vec<u32> {
+    r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+}
+
+fn spawn_pair(seeds: [u64; 2], opts: WorkerOptions) -> Vec<WorkerGuard> {
+    seeds
+        .iter()
+        .map(|&seed| {
+            cluster::spawn_local_worker(WorkerOptions {
+                seed,
+                ..opts.clone()
+            })
+            .expect("spawn worker")
+        })
+        .collect()
+}
+
+fn addrs_of(workers: &[WorkerGuard]) -> Vec<String> {
+    workers.iter().map(|w| w.addr.clone()).collect()
+}
+
+#[test]
+fn answers_are_worker_independent_and_replay_bitwise() {
+    let images: Vec<Vec<f32>> = (0..4).map(image).collect();
+    let run = |worker_seeds: [u64; 2]| -> Vec<Vec<u32>> {
+        let workers = spawn_pair(worker_seeds, WorkerOptions::default());
+        let (handle, _pool) =
+            cluster::spawn_coordinator(test_cfg(), addrs_of(&workers), ServiceConfig::default())
+                .expect("spawn coordinator");
+        let out = images
+            .iter()
+            .map(|im| bits(&handle.classify_blocking(im.clone()).expect("classify")))
+            .collect();
+        handle.shutdown();
+        out
+    };
+    // same cluster seed, wildly different worker-private seeds: the
+    // plan-seeded shard path must make worker identity irrelevant
+    let a = run([1, 2]);
+    let b = run([91, 92]);
+    assert_eq!(a, b, "answers must depend on (seed, placement), not workers");
+    // while distinct placements still get distinct entropy streams
+    assert_ne!(a[0], a[1], "placements must not share a stream");
+}
+
+#[test]
+fn coordinator_gateway_reports_cluster_cards_and_percentiles() {
+    let workers = spawn_pair([5, 6], WorkerOptions::default());
+    let (handle, pool) =
+        cluster::spawn_coordinator(test_cfg(), addrs_of(&workers), ServiceConfig::default())
+            .expect("spawn coordinator");
+    let mut router = Router::new();
+    router.set_role("coordinator");
+    router.register(handle);
+    let cancel = CancelToken::new();
+    let cancel2 = cancel.clone();
+    let (atx, arx) = std::sync::mpsc::channel();
+    let gateway = std::thread::spawn(move || {
+        let opts = ServerOptions {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            ..ServerOptions::default()
+        };
+        serve(router, opts, cancel2, move |a| {
+            let _ = atx.send(a);
+        })
+        .expect("coordinator gateway");
+    });
+    let addr = arx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("gateway bind")
+        .to_string();
+    let mut client = Client::connect_with(&addr, fast_client()).expect("connect");
+
+    // role handshake end to end
+    assert_eq!(client.hello("client").expect("hello"), "coordinator");
+
+    // real traffic through the whole stack...
+    for k in 0..3 {
+        let j = client.classify("synth", &image(k)).expect("classify");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{j:?}");
+    }
+    // ...then refresh the pool's scrape of the workers' /info
+    pool.probe_all();
+
+    let j = client.info().expect("info");
+    let cards = j
+        .get("cluster")
+        .and_then(|c| c.get("synth"))
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("info missing cluster cards: {j:?}"));
+    assert_eq!(cards.len(), 2);
+    for card in cards {
+        assert_eq!(card.get("state").and_then(|v| v.as_str()), Some("healthy"));
+        assert_eq!(
+            card.get("entropy_degraded").and_then(|v| v.as_bool()),
+            Some(false)
+        );
+    }
+    // the workers served shard traffic, so scraped percentiles are live
+    assert!(
+        cards
+            .iter()
+            .any(|c| c.get("p50_us").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0),
+        "worker percentiles should reflect served traffic: {cards:?}"
+    );
+    // and the coordinator's own serving section aggregates its latency
+    let p50 = j
+        .get("serving")
+        .and_then(|s| s.get("synth"))
+        .and_then(|s| s.get("p50_us"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    assert!(p50 > 0.0, "coordinator p50 after traffic: {j:?}");
+
+    cancel.cancel();
+    gateway.join().expect("gateway thread");
+}
+
+#[test]
+fn flood_sheds_typed_overload_at_cluster_capacity() {
+    // slow workers so the coordinator's queue actually fills
+    let workers = spawn_pair(
+        [21, 22],
+        WorkerOptions {
+            n_samples: 4,
+            work_per_sample: Duration::from_millis(2),
+            ..WorkerOptions::default()
+        },
+    );
+    let cfg = ClusterConfig {
+        n_samples: 4,
+        ..test_cfg()
+    };
+    let svc = ServiceConfig {
+        queue_depth: 4, // scaled ×2 workers by spawn_coordinator
+        ..ServiceConfig::default()
+    };
+    let (handle, _pool) =
+        cluster::spawn_coordinator(cfg, addrs_of(&workers), svc).expect("spawn coordinator");
+
+    let mut admitted = Vec::new();
+    let mut shed = 0u32;
+    for k in 0..48 {
+        let (req, rx) = ClassifyRequest::new(image(k % 4));
+        match handle.submit(req) {
+            Ok(()) => admitted.push(rx),
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Overloaded { retry_after_ms }) => {
+                    assert!(*retry_after_ms >= 1, "retry hint present");
+                    shed += 1;
+                }
+                other => panic!("expected overloaded, got {other:?}: {e:#}"),
+            },
+        }
+    }
+    assert!(shed > 0, "a 48-deep flood must shed");
+    // admission reflects CLUSTER capacity: the scaled queue alone admits
+    // two workers' worth (8) even before the engine drains anything
+    assert!(
+        admitted.len() >= 8,
+        "cluster admission should exceed one worker's depth, admitted {}",
+        admitted.len()
+    );
+    // no admitted request is lost — and none is answered twice
+    for rx in admitted {
+        let first = rx.recv().expect("admitted request must be answered");
+        assert!(first.is_ok(), "{first:?}");
+        assert!(
+            rx.recv().is_none(),
+            "a request must be answered exactly once"
+        );
+    }
+    handle.shutdown();
+}

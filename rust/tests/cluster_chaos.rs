@@ -1,0 +1,281 @@
+//! Cluster chaos suite (`--features fault-injection`): proves the
+//! coordinator loses no request, answers none twice, and reproduces a
+//! healthy cluster **bitwise** across every injected failure mode —
+//! worker crashes mid-batch, dead workers, stalls (hedged), garbage
+//! responses, and entropy-degraded workers (drained from routing).
+//!
+//! Every chaos run is compared against a fault-free *control* cluster
+//! built from workers with different private seeds: because a request's
+//! plan seed is `lane_seed(cluster_seed, placement)`, the two runs must
+//! agree bit for bit no matter which worker (or failover/hedge path)
+//! served each placement.
+//!
+//! Fault points are process-global, so tests are serialized through
+//! `harness()` (same idiom as `chaos.rs`).
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use photonic_bayes::cluster::{
+    self, ClusterConfig, WorkerGuard, WorkerOptions, WorkerPool, WorkerState,
+};
+use photonic_bayes::coordinator::{
+    ClassifyRequest, ClassifyResult, EngineHandle, ServiceConfig,
+};
+use photonic_bayes::entropy::health::{HealthConfig, Monitor};
+use photonic_bayes::entropy::Xoshiro256pp;
+use photonic_bayes::server::ClientConfig;
+use photonic_bayes::util::fault::{self, Fault, Trigger};
+
+/// Serialize tests that arm global fault points (and disarm any residue
+/// a previous test left behind, even if it panicked mid-assert).
+fn harness() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    fault::disarm_all();
+    g
+}
+
+fn fast_client() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(5),
+        ..ClientConfig::default()
+    }
+}
+
+fn test_cfg() -> ClusterConfig {
+    ClusterConfig {
+        probe_interval: Duration::ZERO, // probes driven by hand
+        client: fast_client(),
+        ..ClusterConfig::default()
+    }
+}
+
+fn image(k: usize) -> Vec<f32> {
+    (0..4).map(|i| ((k * 4 + i) as f32) * 0.013).collect()
+}
+
+fn bits(r: &ClassifyResult) -> Vec<u32> {
+    r.predictive.mean_probs.iter().map(|p| p.to_bits()).collect()
+}
+
+struct TestCluster {
+    workers: Vec<WorkerGuard>,
+    handle: EngineHandle,
+    pool: Arc<WorkerPool>,
+}
+
+impl TestCluster {
+    fn spawn(cfg: ClusterConfig, worker_opts: Vec<WorkerOptions>) -> Self {
+        let workers: Vec<WorkerGuard> = worker_opts
+            .into_iter()
+            .map(|o| cluster::spawn_local_worker(o).expect("spawn worker"))
+            .collect();
+        let addrs = workers.iter().map(|w| w.addr.clone()).collect();
+        let (handle, pool) = cluster::spawn_coordinator(cfg, addrs, ServiceConfig::default())
+            .expect("spawn coordinator");
+        Self {
+            workers,
+            handle,
+            pool,
+        }
+    }
+
+    fn spawn_pair(cfg: ClusterConfig, seeds: [u64; 2]) -> Self {
+        let opts = seeds
+            .iter()
+            .map(|&seed| WorkerOptions {
+                seed,
+                ..WorkerOptions::default()
+            })
+            .collect();
+        Self::spawn(cfg, opts)
+    }
+
+    /// Classify exactly-once: submit, take the single reply, and prove
+    /// no second one can ever arrive.
+    fn classify_once(&self, im: Vec<f32>) -> ClassifyResult {
+        let (req, rx) = ClassifyRequest::new(im);
+        self.handle.submit(req).expect("admit");
+        let first = rx
+            .recv()
+            .expect("request must be answered")
+            .expect("request must succeed");
+        assert!(rx.recv().is_none(), "request answered twice");
+        first
+    }
+
+    fn shutdown(self) {
+        self.handle.shutdown();
+        drop(self.workers);
+    }
+}
+
+/// Fault-free reference run: same cluster seed, *different* worker
+/// seeds — the bitwise yardstick every chaos run must match.
+fn control_bits(cfg: &ClusterConfig, images: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    fault::disarm_all();
+    let c = TestCluster::spawn_pair(cfg.clone(), [101, 102]);
+    let out = images
+        .iter()
+        .map(|im| bits(&c.classify_once(im.clone())))
+        .collect();
+    c.shutdown();
+    out
+}
+
+#[test]
+fn worker_kill_mid_batch_loses_nothing_and_replays_bitwise() {
+    let _g = harness();
+    let cfg = test_cfg();
+    let images: Vec<Vec<f32>> = (0..4).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    let c = TestCluster::spawn_pair(cfg, [1, 2]);
+    // the 2nd classify line to reach any worker gateway drops the
+    // connection with no response — a mid-batch worker crash
+    fault::arm("worker.kill", Fault::IoError, Trigger::Nth(2));
+    let got: Vec<Vec<u32>> = images
+        .iter()
+        .map(|im| bits(&c.classify_once(im.clone())))
+        .collect();
+    assert!(fault::hits("worker.kill") >= 2, "fault actually traversed");
+    fault::disarm_all();
+    assert_eq!(
+        got, control,
+        "failover must reproduce the healthy cluster bitwise"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn dead_worker_is_drained_within_one_probe_and_rerouted_bitwise() {
+    let _g = harness();
+    let cfg = test_cfg();
+    let images: Vec<Vec<f32>> = (0..4).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    let mut c = TestCluster::spawn_pair(cfg, [3, 4]);
+    // kill worker 1 outright (process death, not a protocol fault)
+    c.workers.pop().expect("two workers").stop();
+    // one probe interval is enough to take it out of routing
+    c.pool.probe_all();
+    let card = &c.pool.cards()[1];
+    assert_ne!(card.state, WorkerState::Healthy, "dead worker drained");
+    assert!(card.consecutive_fails >= 1);
+
+    let got: Vec<Vec<u32>> = images
+        .iter()
+        .map(|im| bits(&c.classify_once(im.clone())))
+        .collect();
+    assert_eq!(got, control, "survivor must replay every placement bitwise");
+    c.shutdown();
+}
+
+#[test]
+fn entropy_degraded_worker_is_drained_and_skipped() {
+    let _g = harness();
+    let cfg = test_cfg();
+    let images: Vec<Vec<f32>> = (0..4).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    // worker 1 carries a monitor already in the degraded state (80/20
+    // biased bits fail the battery inside one 512-bit window)
+    let mon = Arc::new(Monitor::new(HealthConfig {
+        enabled: true,
+        window_bits: 512,
+        duty: 1.0,
+        ewma_alpha: 1.0,
+        fail_threshold: 0.6,
+        fail_consecutive: 1,
+        ..HealthConfig::default()
+    }));
+    let mut rng = Xoshiro256pp::new(7);
+    let biased: Vec<u8> = (0..512).map(|_| u8::from(rng.next_f64() < 0.8)).collect();
+    mon.ingest_bits(0, "synth-s0", &biased);
+    assert!(mon.any_degraded());
+
+    let c = TestCluster::spawn(
+        cfg,
+        vec![
+            WorkerOptions {
+                seed: 5,
+                ..WorkerOptions::default()
+            },
+            WorkerOptions {
+                seed: 6,
+                health: Some(mon),
+                ..WorkerOptions::default()
+            },
+        ],
+    );
+    // spawn_coordinator's inline first probe already scraped /info
+    let cards = c.pool.cards();
+    assert!(cards[1].entropy_degraded, "scorecard folded into the card");
+    assert_eq!(cards[1].state, WorkerState::Suspect, "drained from routing");
+    assert_eq!(cards[0].state, WorkerState::Healthy);
+
+    // all traffic lands on the healthy worker — and still replays
+    let got: Vec<Vec<u32>> = images
+        .iter()
+        .map(|im| bits(&c.classify_once(im.clone())))
+        .collect();
+    assert_eq!(got, control);
+    assert_eq!(
+        c.pool.cards()[1].state,
+        WorkerState::Suspect,
+        "degraded worker stays drained (no success notes revived it)"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn straggler_is_hedged_and_first_response_wins() {
+    let _g = harness();
+    let cfg = ClusterConfig {
+        hedge_min: Duration::from_millis(10),
+        ..test_cfg()
+    };
+    let images: Vec<Vec<f32>> = (0..2).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    let c = TestCluster::spawn_pair(cfg, [8, 9]);
+    // the first classify line to reach a worker stalls well past the
+    // hedge delay; the hedge on the other worker must win the race
+    fault::arm("worker.stall", Fault::DelayMs(400), Trigger::Nth(1));
+    let t0 = Instant::now();
+    let first = bits(&c.classify_once(images[0].clone()));
+    let elapsed = t0.elapsed();
+    fault::disarm_all();
+    assert!(
+        elapsed < Duration::from_millis(300),
+        "hedge should beat the 400ms straggler, took {elapsed:?}"
+    );
+    let second = bits(&c.classify_once(images[1].clone()));
+    assert_eq!(vec![first, second], control, "hedged answers replay bitwise");
+    c.shutdown();
+}
+
+#[test]
+fn garbage_response_fails_over_bitwise() {
+    let _g = harness();
+    let cfg = test_cfg();
+    let images: Vec<Vec<f32>> = (0..2).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    let c = TestCluster::spawn_pair(cfg, [12, 13]);
+    // the first classify answer is a non-protocol line: the dispatcher
+    // must treat it as a transport fault and fail over, not surface it
+    fault::arm("worker.garbage", Fault::IoError, Trigger::Nth(1));
+    let got: Vec<Vec<u32>> = images
+        .iter()
+        .map(|im| bits(&c.classify_once(im.clone())))
+        .collect();
+    assert!(fault::hits("worker.garbage") >= 1);
+    fault::disarm_all();
+    assert_eq!(got, control, "corruption must never change an answer");
+    c.shutdown();
+}
