@@ -36,9 +36,11 @@ use super::{lane_seed, ClusterConfig};
 use crate::coordinator::engine::ClassifyResult;
 use crate::coordinator::overload::ServeError;
 use crate::coordinator::service::{BatchExecutor, SynthExecutor};
+use crate::observe::{Stage, TraceRecorder};
 use crate::sampler::RequestBudget;
 use crate::server::protocol;
 use crate::server::tcp::Client;
+use crate::util::logging;
 
 /// Outcome of one dispatch attempt on one worker.
 enum Outcome {
@@ -71,6 +73,13 @@ pub struct ClusterExecutor {
     /// bitwise-identical to what a worker would have produced for the
     /// same plan seed.
     fallback: SynthExecutor,
+    /// Coordinator-side span recorder (None while tracing is off).
+    trace: Option<Arc<TraceRecorder>>,
+    /// Positional request ids for the current group, aligned with image
+    /// order (`0` = untraced).  Kept even without a local recorder: the
+    /// nonzero ids still ride the wire so the serving *worker's* recorder
+    /// stitches its spans under the same id.
+    trace_ids: Vec<u64>,
 }
 
 impl ClusterExecutor {
@@ -82,6 +91,8 @@ impl ClusterExecutor {
             pool,
             next_placement: 0,
             fallback,
+            trace: None,
+            trace_ids: Vec::new(),
         }
     }
 
@@ -90,8 +101,17 @@ impl ClusterExecutor {
         self.next_placement
     }
 
+    /// Record one span under `request_id` if tracing is on (`record`
+    /// itself drops id 0).
+    fn trace_span(&self, request_id: u64, stage: Stage, index: u16, start: Instant, dur: Duration) {
+        if let Some(t) = &self.trace {
+            t.record(request_id, stage, index, start, dur);
+        }
+    }
+
     /// Serve one single-image shard: encode, pick, dispatch with
     /// failover + hedging, and fold the outcome into the pool's health.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch_one(
         &mut self,
         model: Option<&str>,
@@ -101,6 +121,7 @@ impl ClusterExecutor {
         budget: &RequestBudget,
         deadline: Option<Instant>,
         brownout: bool,
+        request_id: u64,
     ) -> Result<ClassifyResult> {
         let mut budget = budget.clone();
         if brownout {
@@ -119,13 +140,26 @@ impl ClusterExecutor {
             }
             None => None,
         };
-        let line = protocol::encode_classify_sharded(
-            model.unwrap_or(&self.cfg.model),
-            image,
-            &budget,
-            deadline_ms,
-            plan_seed,
-        );
+        // a nonzero request_id rides along so the worker's recorder files
+        // its spans under the same trace (stitched across the hop)
+        let line = if request_id != 0 {
+            protocol::encode_classify_sharded_traced(
+                model.unwrap_or(&self.cfg.model),
+                image,
+                &budget,
+                deadline_ms,
+                plan_seed,
+                request_id,
+            )
+        } else {
+            protocol::encode_classify_sharded(
+                model.unwrap_or(&self.cfg.model),
+                image,
+                &budget,
+                deadline_ms,
+                plan_seed,
+            )
+        };
         let lane = (placement % self.pool.len().max(1) as u64) as usize;
 
         // first-response-wins: attempt threads race into this channel;
@@ -158,6 +192,7 @@ impl ClusterExecutor {
                             deadline,
                             brownout,
                             last_transport,
+                            request_id,
                         );
                     }
                 }
@@ -192,6 +227,20 @@ impl ClusterExecutor {
                         }
                         Outcome::Transport(e) => {
                             self.pool.note_failure(att.worker);
+                            // annotate the trace with the failed attempt:
+                            // index = worker slot, duration = how long the
+                            // attempt burned before failing over
+                            let dur = Duration::from_micros(att.elapsed_us as u64);
+                            let start = Instant::now().checked_sub(dur).unwrap_or_else(Instant::now);
+                            self.trace_span(request_id, Stage::Failover, att.worker as u16, start, dur);
+                            let w = att.worker.to_string();
+                            logging::event(
+                                logging::Level::Warn,
+                                module_path!(),
+                                "failover",
+                                request_id,
+                                &[("worker", &w), ("error", &e)],
+                            );
                             last_transport = Some(e);
                             // loop: relaunch on the next untried worker
                         }
@@ -208,6 +257,23 @@ impl ClusterExecutor {
                         hedged = true;
                         if let Some(p) = self.pool.pick(lane + 1, &tried) {
                             tried.push(p.index);
+                            // zero-duration annotation at the instant the
+                            // hedge fired, indexed by the hedge worker
+                            self.trace_span(
+                                request_id,
+                                Stage::Hedge,
+                                p.index as u16,
+                                Instant::now(),
+                                Duration::ZERO,
+                            );
+                            let w = p.index.to_string();
+                            logging::event(
+                                logging::Level::Info,
+                                module_path!(),
+                                "hedge",
+                                request_id,
+                                &[("worker", &w)],
+                            );
                             self.launch(&tx, p.index, p.addr, &line);
                             in_flight += 1;
                         }
@@ -264,14 +330,24 @@ impl ClusterExecutor {
         deadline: Option<Instant>,
         brownout: bool,
         last_transport: Option<String>,
+        request_id: u64,
     ) -> Result<ClassifyResult> {
         if self.cfg.local_fallback {
             // degrade into local execution: same plan seed, same sample
             // budget, so the answer is bitwise what a worker would have
             // returned — only the `degraded` flag betrays the detour
+            logging::event(
+                logging::Level::Warn,
+                module_path!(),
+                "fallback",
+                request_id,
+                &[("reason", "no_routable_worker")],
+            );
+            let t0 = Instant::now();
             let mut results = self.fallback.classify_group_seeded(
                 plan_seed, model, image, 1, budget, deadline, brownout,
             )?;
+            self.trace_span(request_id, Stage::Fallback, 0, t0, t0.elapsed());
             let mut r = results
                 .pop()
                 .ok_or_else(|| anyhow!("local fallback returned no result"))?;
@@ -304,6 +380,23 @@ impl BatchExecutor for ClusterExecutor {
         vec![self.cfg.model.clone()]
     }
 
+    fn attach_recorder(&mut self, recorder: &Arc<TraceRecorder>) {
+        if recorder.enabled() {
+            self.trace = Some(recorder.clone());
+        }
+        // the fallback executor is deliberately NOT attached: the
+        // coordinator's Chunk span already covers the whole dispatch, and
+        // a second top-level chunk under the same id would double-count
+        // the request in `critical_path_us`
+    }
+
+    fn begin_group(&mut self, request_ids: &[u64]) {
+        // positional (zeros kept): ids must stay aligned with image order
+        // so dispatch_one(i) forwards the right id over the wire
+        self.trace_ids.clear();
+        self.trace_ids.extend_from_slice(request_ids);
+    }
+
     fn classify_group(
         &mut self,
         model: Option<&str>,
@@ -320,9 +413,15 @@ impl BatchExecutor for ClusterExecutor {
             self.next_placement += 1;
             let plan_seed = lane_seed(self.cfg.seed, placement);
             let image = &images[i * size..(i + 1) * size];
-            out.push(self.dispatch_one(
-                model, image, placement, plan_seed, budget, deadline, brownout,
-            )?);
+            let rid = self.trace_ids.get(i).copied().unwrap_or(0);
+            let t0 = Instant::now();
+            let r = self.dispatch_one(
+                model, image, placement, plan_seed, budget, deadline, brownout, rid,
+            )?;
+            // coordinator-side "chunk": the whole remote dispatch,
+            // failover and hedging included
+            self.trace_span(rid, Stage::Chunk, 0, t0, t0.elapsed());
+            out.push(r);
         }
         Ok(out)
     }
@@ -346,9 +445,13 @@ impl BatchExecutor for ClusterExecutor {
             let placement = self.next_placement;
             self.next_placement += 1;
             let image = &images[i * size..(i + 1) * size];
-            out.push(self.dispatch_one(
-                model, image, placement, plan_seed, budget, deadline, brownout,
-            )?);
+            let rid = self.trace_ids.get(i).copied().unwrap_or(0);
+            let t0 = Instant::now();
+            let r = self.dispatch_one(
+                model, image, placement, plan_seed, budget, deadline, brownout, rid,
+            )?;
+            self.trace_span(rid, Stage::Chunk, 0, t0, t0.elapsed());
+            out.push(r);
         }
         Ok(out)
     }

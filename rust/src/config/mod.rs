@@ -87,6 +87,19 @@
 //! # policy decision, not a given)
 //! brownout = false
 //!
+//! [observe]
+//! # record per-request trace spans (admission/queue/batch_form/chunk/
+//! # respond); off by default.  Responses are bitwise identical either
+//! # way — tracing records timestamps, never bytes
+//! trace = false
+//! # span ring capacity (oldest spans overwritten)
+//! trace_capacity = 4096
+//! # requests slower than this retain a verbatim span exemplar
+//! # (0 = every traced request); query with {"op":"trace"}
+//! slow_ms = 250
+//! # retained exemplars (FIFO)
+//! exemplars = 32
+//!
 //! [cluster]
 //! # pbm cluster: comma-separated worker gateway addresses
 //! workers = "127.0.0.1:7979,127.0.0.1:7980"
@@ -333,6 +346,21 @@ threads = 8
         assert!(c.get_bool("cluster", "local_fallback", false).unwrap());
         // unset knobs fall back to coordinator defaults
         assert_eq!(c.get_usize("cluster", "image_size", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn observe_table_parses() {
+        let c = Config::parse(
+            "[observe]\ntrace = true\ntrace_capacity = 1024\nslow_ms = 100\nexemplars = 8\n",
+        )
+        .unwrap();
+        assert!(c.get_bool("observe", "trace", false).unwrap());
+        assert_eq!(c.get_usize("observe", "trace_capacity", 4096).unwrap(), 1024);
+        assert_eq!(c.get_usize("observe", "slow_ms", 250).unwrap(), 100);
+        assert_eq!(c.get_usize("observe", "exemplars", 32).unwrap(), 8);
+        // unset section falls back to ObserveConfig defaults
+        let d = Config::parse("").unwrap();
+        assert!(!d.get_bool("observe", "trace", false).unwrap());
     }
 
     #[test]

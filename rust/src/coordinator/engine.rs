@@ -3,7 +3,7 @@
 //! on top.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -15,6 +15,7 @@ use crate::entropy::health::{HealthConfig, HealthEvent, Monitor};
 use crate::exec::scratch::{grow, ScratchArena};
 use crate::exec::ThreadPool;
 use crate::{log_info, log_warn};
+use crate::observe::{Stage, TraceRecorder};
 use crate::photonics::MachineConfig;
 use crate::registry::{ModelCheckpoint, ProgramKey, ProgramRegistry, RegistryMetrics, UnknownModel};
 use crate::runtime::{Arg, CompiledFn, ModelArtifacts, ParamStore};
@@ -22,7 +23,7 @@ use crate::sampler::{
     ChunkSchedule, PredictiveAccum, RequestBudget, ResolvedSampler, SamplerConfig, StopReason,
     StopRule, StopState, Verdict,
 };
-use crate::util::fault;
+use crate::util::{fault, logging};
 
 use super::overload::ServeError;
 
@@ -221,6 +222,11 @@ pub struct Engine {
     /// Residency/hit/miss accounting, shared with the backend's model
     /// cache and the serving layer.  `None` on single-model engines.
     reg_metrics: Option<Arc<RegistryMetrics>>,
+    /// Trace recorder (present when tracing is on) + the traced ids of
+    /// the group currently being classified, set by the service loop
+    /// through [`super::service::BatchExecutor::begin_group`].
+    trace: Option<Arc<TraceRecorder>>,
+    trace_ids: Vec<u64>,
     pub metrics: super::metrics::EngineMetrics,
 }
 
@@ -343,6 +349,8 @@ impl Engine {
             default_model: active_model.clone(),
             active_model,
             reg_metrics: None,
+            trace: None,
+            trace_ids: Vec::new(),
             metrics: Default::default(),
         })
     }
@@ -784,21 +792,33 @@ impl Engine {
         let mut states: Vec<StopState> = vec![StopState::default(); n];
         let mut verdicts: Vec<Option<Verdict>> = vec![None; n];
         let mut sched = ChunkSchedule::new(r, self.cfg.resolved_threads());
+        let mut k: u16 = 0;
         while let Some(chunk) = sched.next_chunk() {
             if deadline_expired(deadline) {
                 return Err(deadline_error(&accums));
             }
             fault::faultpoint("engine.chunk").map_err(|e| anyhow!("{e}"))?;
+            let t_chunk = Instant::now();
             let plan = SamplePlan::new(chunk, n, prob_ch, prob_hw, prob_hw);
             let d_all = grow(&mut self.scratch.samples, plan.total_size());
             self.backend.sample_conv(&plan, &st.x3q[..n * st.act], d_all)?;
+            let t_post = Instant::now();
+            self.trace_span(
+                Stage::SampleConv,
+                k,
+                t_chunk,
+                t_post.saturating_duration_since(t_chunk),
+            );
             for s in 0..chunk {
                 let pass = self.post_pass(&st, n, s * n * st.act)?;
                 push_pass(&mut accums, &pass, nc);
             }
+            self.trace_span(Stage::FwdPost, k, t_post, t_post.elapsed());
+            self.trace_span(Stage::Chunk, k, t_chunk, t_chunk.elapsed());
             if check_stops(r, &mut accums, &mut states, &mut verdicts) {
                 break;
             }
+            k = k.saturating_add(1);
         }
         Ok(assemble_results(accums, verdicts, &self.cfg.policy, n, t0))
     }
@@ -917,13 +937,49 @@ impl Engine {
         // the backend is the only source of randomness on this path; all
         // N x B stochastic convolutions happen in this one call, sharded
         // across the worker pool and written into reusable arena lanes
+        let t_chunk = Instant::now();
         let d_all = grow(&mut self.scratch.samples, plan.total_size());
         self.backend.sample_conv(&plan, &st.x3q[..n * st.act], d_all)?;
+        let t_post = Instant::now();
+        self.trace_span(
+            Stage::SampleConv,
+            0,
+            t_chunk,
+            t_post.saturating_duration_since(t_chunk),
+        );
         let mut passes = Vec::with_capacity(passes_n);
         for s in 0..passes_n {
             passes.push(self.post_pass(&st, n, s * n * st.act)?);
         }
+        self.trace_span(Stage::FwdPost, 0, t_post, t_post.elapsed());
+        self.trace_span(Stage::Chunk, 0, t_chunk, t_chunk.elapsed());
         Ok(passes)
+    }
+
+    /// Share the trace recorder (service-loop wiring; observational only).
+    pub fn attach_trace(&mut self, recorder: &Arc<TraceRecorder>) {
+        if recorder.enabled() {
+            self.trace = Some(recorder.clone());
+        }
+    }
+
+    /// Set the traced ids of the group about to be classified (0s — the
+    /// untraced members — are filtered here).
+    pub fn begin_trace_group(&mut self, ids: &[u64]) {
+        self.trace_ids.clear();
+        if self.trace.is_some() {
+            self.trace_ids.extend(ids.iter().copied().filter(|&id| id != 0));
+        }
+    }
+
+    /// Record one span under every traced id of the current group.  A
+    /// group is one plan, so its stage timings are shared by members.
+    fn trace_span(&self, stage: Stage, index: u16, start: Instant, dur: Duration) {
+        if let Some(rec) = &self.trace {
+            for &id in &self.trace_ids {
+                rec.record(id, stage, index, start, dur);
+            }
+        }
     }
 
     /// The engine's sampler configuration (effective stop rule).
@@ -1017,6 +1073,18 @@ impl Engine {
             old_name,
             target,
             kernels.len()
+        );
+        let to = target.to_string();
+        logging::event(
+            logging::Level::Warn,
+            module_path!(),
+            "entropy_fallback",
+            0,
+            &[
+                ("engine", &self.arts.meta.dataset),
+                ("from", old_name),
+                ("to", &to),
+            ],
         );
         Ok(())
     }

@@ -5,6 +5,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::bnn::Decision;
+use crate::observe::buckets;
 use crate::util::json::Json;
 
 use super::engine::ClassifyResult;
@@ -22,7 +23,7 @@ pub struct LatencyHistogram {
 impl Default for LatencyHistogram {
     fn default() -> Self {
         Self {
-            buckets: vec![0; 21],
+            buckets: vec![0; buckets::NUM_BUCKETS],
             count: 0,
             sum_us: 0.0,
             max_us: 0.0,
@@ -32,7 +33,7 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn record(&mut self, us: f64) {
-        let b = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        let b = buckets::bucket_index(us, self.buckets.len());
         self.buckets[b] += 1;
         self.count += 1;
         self.sum_us += us;
@@ -52,22 +53,10 @@ impl LatencyHistogram {
     }
 
     /// Approximate percentile from bucket boundaries (upper edge), clamped
-    /// to the maximum recorded value: the raw edge `2^(i+1)` of the last
-    /// bucket can be nearly 2x the true maximum, so an unclamped p95/p100
-    /// would over-report tail latency.
+    /// to the maximum recorded value — see
+    /// [`crate::observe::buckets::percentile_us`].
     pub fn percentile_us(&self, p: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = (p / 100.0 * self.count as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return ((1u64 << (i + 1)) as f64).min(self.max_us);
-            }
-        }
-        self.max_us
+        buckets::percentile_us(self.buckets.iter().copied(), self.count, self.max_us, p)
     }
 }
 
@@ -79,7 +68,7 @@ impl LatencyHistogram {
 /// not an invariant.
 #[derive(Debug)]
 pub struct AtomicLatencyHistogram {
-    buckets: [AtomicU64; 21],
+    buckets: [AtomicU64; buckets::NUM_BUCKETS],
     count: AtomicU64,
     /// Sum in whole microseconds (f64 precision is irrelevant at the
     /// >=1us granularity the buckets already impose).
@@ -100,7 +89,7 @@ impl Default for AtomicLatencyHistogram {
 
 impl AtomicLatencyHistogram {
     pub fn record(&self, us: f64) {
-        let b = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        let b = buckets::bucket_index(us, self.buckets.len());
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us.max(0.0) as u64, Ordering::Relaxed);
@@ -121,23 +110,39 @@ impl AtomicLatencyHistogram {
     }
 
     /// Bucket-edge percentile clamped to the recorded maximum (same
-    /// contract as [`LatencyHistogram::percentile_us`]).
+    /// contract as [`LatencyHistogram::percentile_us`], same shared
+    /// bucket math).
     pub fn percentile_us(&self, p: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        let max = self.max_us.load(Ordering::Relaxed) as f64;
-        let target = (p / 100.0 * n as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, c) in self.buckets.iter().enumerate() {
-            acc += c.load(Ordering::Relaxed);
-            if acc >= target {
-                return ((1u64 << (i + 1)) as f64).min(max);
-            }
-        }
-        max
+        buckets::percentile_us(
+            self.buckets.iter().map(|c| c.load(Ordering::Relaxed)),
+            self.count(),
+            self.max_us.load(Ordering::Relaxed) as f64,
+            p,
+        )
     }
+
+    /// Raw bucket view for the `/metrics` exposition (per-bucket counts
+    /// with `2^(i+1)` us upper edges, plus the running sum/max).
+    pub fn raw(&self) -> LatencyBuckets {
+        LatencyBuckets {
+            counts: self
+                .buckets
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of an [`AtomicLatencyHistogram`]'s buckets.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyBuckets {
+    /// Per-bucket counts; bucket `i` covers `[2^i, 2^(i+1))` us.
+    pub counts: Vec<u64>,
+    pub sum_us: u64,
+    pub max_us: u64,
 }
 
 /// Lock-free serving/robustness counters shared between the admission

@@ -46,10 +46,10 @@ pub use crate::sampler::{RequestBudget, SamplerConfig, StopRule};
 pub use batcher::DynamicBatcher;
 pub use engine::{ClassifyResult, Engine, EngineConfig, ExecMode};
 pub use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics, UnknownModel};
-pub use metrics::{ServeCounters, ServeSnapshot};
+pub use metrics::{LatencyBuckets, ServeCounters, ServeSnapshot};
 pub use overload::{OverloadConfig, OverloadControl, ServeError, Tier};
 pub use router::Router;
 pub use service::{
-    run_service_loop, submit_with_admission, BatchExecutor, ClassifyRequest, EngineHandle,
-    GroupKey, ServiceConfig, SynthExecutor,
+    run_service_loop, run_service_loop_traced, submit_with_admission, BatchExecutor,
+    ClassifyRequest, EngineHandle, GroupKey, ServiceConfig, SynthExecutor,
 };

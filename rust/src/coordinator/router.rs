@@ -10,9 +10,10 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::metrics::ServeSnapshot;
+use super::metrics::{LatencyBuckets, ServeSnapshot};
 use super::service::{ClassifyRequest, EngineHandle};
 use crate::entropy::health::Scorecard;
+use crate::observe::{Exemplar, Span, TraceStats, UncertaintySnapshot};
 use crate::registry::{RegistrySnapshot, UnknownModel};
 
 /// Routes requests to the engine serving each model.
@@ -140,6 +141,75 @@ impl Router {
         snap
     }
 
+    /// Per-engine raw service-latency histogram buckets (for the
+    /// `/metrics` exposition — `/info` reports only percentiles), keyed
+    /// by the engine's primary name and sorted.
+    pub fn serving_latency(&self) -> Vec<(String, LatencyBuckets)> {
+        let mut snap: Vec<(String, LatencyBuckets)> = self
+            .engines
+            .iter()
+            .map(|h| (h.dataset.clone(), h.counters.latency.raw()))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
+    /// Per-engine trace-recorder counters (enabled flag, ring capacity,
+    /// spans recorded/dropped, retained exemplars), keyed by the engine's
+    /// primary name and sorted.
+    pub fn trace_stats(&self) -> Vec<(String, TraceStats)> {
+        let mut snap: Vec<(String, TraceStats)> = self
+            .engines
+            .iter()
+            .map(|h| (h.dataset.clone(), h.recorder.stats()))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
+    /// Every span recorded for `request_id`, merged across engines (a
+    /// cluster coordinator records gateway + dispatch spans while its
+    /// local-fallback engine may record execution spans for the same id)
+    /// and sorted by start time.  Empty when the id was never traced or
+    /// its ring slots have been overwritten without an exemplar.
+    pub fn trace_spans(&self, request_id: u64) -> Vec<Span> {
+        let mut spans: Vec<Span> = self
+            .engines
+            .iter()
+            .flat_map(|h| h.recorder.spans_for(request_id))
+            .collect();
+        spans.sort_by_key(|s| (s.start_us, s.start_us + s.dur_us));
+        spans
+    }
+
+    /// Retained slow-request exemplars per engine, keyed by the engine's
+    /// primary name and sorted (engines with none are omitted).
+    pub fn trace_exemplars(&self) -> Vec<(String, Vec<Exemplar>)> {
+        let mut snap: Vec<(String, Vec<Exemplar>)> = self
+            .engines
+            .iter()
+            .filter_map(|h| {
+                let ex = h.recorder.exemplars();
+                (!ex.is_empty()).then(|| (h.dataset.clone(), ex))
+            })
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
+    /// Per-engine, per-model uncertainty telemetry (predictive-entropy /
+    /// mutual-information / samples-used histograms), keyed by the
+    /// engine's primary name and sorted.
+    pub fn uncertainty_snapshot(&self) -> Vec<(String, Vec<(String, UncertaintySnapshot)>)> {
+        let mut snap: Vec<(String, Vec<(String, UncertaintySnapshot)>)> = self
+            .engines
+            .iter()
+            .map(|h| (h.dataset.clone(), h.uncertainty.snapshot()))
+            .collect();
+        snap.sort_by(|a, b| a.0.cmp(&b.0));
+        snap
+    }
+
     /// Shut down every engine.
     pub fn shutdown(self) {
         for h in self.engines {
@@ -170,6 +240,11 @@ mod tests {
         assert!(r.registry_snapshot().is_empty());
         assert!(r.serving_snapshot().is_empty());
         assert!(r.cluster_snapshot().is_empty());
+        assert!(r.serving_latency().is_empty());
+        assert!(r.trace_stats().is_empty());
+        assert!(r.trace_spans(1).is_empty());
+        assert!(r.trace_exemplars().is_empty());
+        assert!(r.uncertainty_snapshot().is_empty());
     }
 
     #[test]

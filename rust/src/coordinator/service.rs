@@ -22,10 +22,11 @@ use crate::bnn::{Predictive, UncertaintyPolicy};
 use crate::entropy::health::Monitor;
 use crate::exec::channel::{channel, Receiver, Sender, TrySendError};
 use crate::log_info;
+use crate::observe::{ObserveConfig, Stage, TraceRecorder, UncertaintyTelemetry};
 use crate::registry::{ModelSpec, ProgramRegistry, RegistryMetrics, UnknownModel};
 use crate::runtime::{ModelArtifacts, ParamStore};
 use crate::sampler::RequestBudget;
-use crate::util::fault;
+use crate::util::{fault, logging};
 
 /// One classification request: an image, the model it targets (`None` =
 /// the engine's default), its per-request sample budget, an optional
@@ -48,6 +49,14 @@ pub struct ClassifyRequest {
     /// (or a retry on the same worker) reproduces the answer bitwise.
     /// This is the `placement` extension of the replay contract.
     pub plan_seed: Option<u64>,
+    /// Trace key (0 = untraced): minted at the gateway when tracing is on,
+    /// or supplied by the client / a forwarding coordinator so one request
+    /// stitches into a single trace across cluster hops.  Purely
+    /// observational — never feeds any computation.
+    pub request_id: u64,
+    /// When the request entered the queue (re-stamped at admission):
+    /// attributes queue-wait vs batch-formation time in the trace.
+    pub enqueued: Instant,
     pub reply: Sender<Result<ClassifyResult>>,
 }
 
@@ -82,6 +91,8 @@ impl ClassifyRequest {
                 deadline: None,
                 cost: 0,
                 plan_seed: None,
+                request_id: 0,
+                enqueued: Instant::now(),
                 reply: tx,
             },
             rx,
@@ -142,6 +153,8 @@ pub struct ServiceConfig {
     pub deadline_ms: u64,
     /// Cost-aware admission and tiered-degradation knobs.
     pub overload: OverloadConfig,
+    /// Request tracing / exemplar knobs ([`crate::observe`]).
+    pub observe: ObserveConfig,
 }
 
 impl Default for ServiceConfig {
@@ -152,6 +165,7 @@ impl Default for ServiceConfig {
             queue_depth: 256,
             deadline_ms: 0,
             overload: OverloadConfig::default(),
+            observe: ObserveConfig::default(),
         }
     }
 }
@@ -203,6 +217,16 @@ pub trait BatchExecutor {
     /// Share the serving counters with the executor's own telemetry
     /// (called once on the engine thread before the loop starts).
     fn attach_counters(&mut self, _counters: &Arc<ServeCounters>) {}
+    /// Share the trace recorder so the executor can attribute per-chunk
+    /// spans (called once on the engine thread before the loop starts).
+    /// Default: ignore — tracing degrades to the service-loop spans.
+    fn attach_recorder(&mut self, _recorder: &Arc<TraceRecorder>) {}
+    /// Announce the positional `request_id`s (0 = untraced) of the group
+    /// about to be classified, aligned with the group's image order, so
+    /// the executor's spans land under the right trace keys.  Called
+    /// right before `classify_group`/`classify_group_seeded`; the ids are
+    /// valid only for that one call.  Default: ignore.
+    fn begin_group(&mut self, _request_ids: &[u64]) {}
     /// Deterministically rebuild internal state after a panic escaped
     /// `classify_group` (the `catch_unwind` recovery path).
     fn recover_after_panic(&mut self) -> Result<()>;
@@ -243,6 +267,14 @@ impl BatchExecutor for Engine {
         self.metrics.serving = counters.clone();
     }
 
+    fn attach_recorder(&mut self, recorder: &Arc<TraceRecorder>) {
+        Engine::attach_trace(self, recorder);
+    }
+
+    fn begin_group(&mut self, request_ids: &[u64]) {
+        Engine::begin_trace_group(self, request_ids);
+    }
+
     fn recover_after_panic(&mut self) -> Result<()> {
         Engine::recover_after_panic(self)
     }
@@ -265,16 +297,25 @@ pub fn submit_with_admission(
     default_deadline_ms: u64,
     mut req: ClassifyRequest,
 ) -> Result<()> {
+    req.enqueued = Instant::now();
     if req.deadline.is_none() && default_deadline_ms > 0 {
-        req.deadline = Some(Instant::now() + Duration::from_millis(default_deadline_ms));
+        req.deadline = Some(req.enqueued + Duration::from_millis(default_deadline_ms));
     }
     let cost = ctrl.estimate_cost(&req.budget);
     if let Err(e) = ctrl.try_admit(cost) {
         counters.overload_rejects.fetch_add(1, Ordering::Relaxed);
         counters.requests_shed.fetch_add(1, Ordering::Relaxed);
+        logging::event(
+            logging::Level::Warn,
+            module_path!(),
+            "shed",
+            req.request_id,
+            &[("reason", "work_budget"), ("where", "admission")],
+        );
         return Err(anyhow::Error::new(e));
     }
     req.cost = cost;
+    let rid = req.request_id;
     match tx.try_send(req) {
         Ok(()) => Ok(()),
         Err(TrySendError::Full(_)) => {
@@ -283,6 +324,13 @@ pub fn submit_with_admission(
             ctrl.on_dequeue(cost);
             counters.overload_rejects.fetch_add(1, Ordering::Relaxed);
             counters.requests_shed.fetch_add(1, Ordering::Relaxed);
+            logging::event(
+                logging::Level::Warn,
+                module_path!(),
+                "shed",
+                rid,
+                &[("reason", "queue_full"), ("where", "admission")],
+            );
             Err(anyhow::Error::new(ServeError::Overloaded {
                 retry_after_ms: ctrl.retry_after_ms(),
             }))
@@ -307,11 +355,69 @@ pub fn run_service_loop<E: BatchExecutor>(
     ctrl: &OverloadControl,
     counters: &ServeCounters,
 ) {
+    run_service_loop_traced(exec, rx, svc, ctrl, counters, &Arc::new(TraceRecorder::disabled()));
+}
+
+/// [`run_service_loop`] with a shared [`TraceRecorder`]: per traced
+/// request it attributes `queue` (enqueue → batch window opening) and
+/// `batch_form` (batch window) spans, and hands the recorder to the
+/// executor for per-chunk attribution.  With a disabled recorder this is
+/// exactly the untraced loop — the fast path is one atomic load per span.
+pub fn run_service_loop_traced<E: BatchExecutor>(
+    exec: &mut E,
+    rx: Receiver<ClassifyRequest>,
+    svc: &ServiceConfig,
+    ctrl: &OverloadControl,
+    counters: &ServeCounters,
+    recorder: &Arc<TraceRecorder>,
+) {
+    exec.attach_recorder(recorder);
     let batcher = DynamicBatcher::new(rx.clone(), svc.max_batch, svc.max_wait);
     // close batches on estimated work, not just count: max_batch
     // heavyweight requests are max_batch × default_cost samples of work
     let max_work = (svc.max_batch as u64).saturating_mul(ctrl.default_cost());
-    'serve: while let Some(batch) = batcher.next_batch_weighted(|r| r.cost.max(1), max_work) {
+    'serve: loop {
+        // the instant the batch window opens: for requests already queued,
+        // everything before this is queue wait and everything after is
+        // batch formation; requests arriving *during* the window have no
+        // queue wait at all
+        let t_batch_start = Instant::now();
+        let Some(batch) = batcher.next_batch_weighted(|r| r.cost.max(1), max_work) else {
+            break 'serve;
+        };
+        let t_batch_done = Instant::now();
+        if recorder.enabled() {
+            for req in &batch {
+                if req.request_id == 0 {
+                    continue;
+                }
+                if req.enqueued <= t_batch_start {
+                    recorder.record(
+                        req.request_id,
+                        Stage::Queue,
+                        0,
+                        req.enqueued,
+                        t_batch_start.saturating_duration_since(req.enqueued),
+                    );
+                    recorder.record(
+                        req.request_id,
+                        Stage::BatchForm,
+                        0,
+                        t_batch_start,
+                        t_batch_done.saturating_duration_since(t_batch_start),
+                    );
+                } else {
+                    recorder.record(req.request_id, Stage::Queue, 0, req.enqueued, Duration::ZERO);
+                    recorder.record(
+                        req.request_id,
+                        Stage::BatchForm,
+                        0,
+                        req.enqueued,
+                        t_batch_done.saturating_duration_since(req.enqueued),
+                    );
+                }
+            }
+        }
         let cost_sum: u64 = batch.iter().map(|r| r.cost).sum();
         ctrl.on_dequeue(cost_sum);
         counters
@@ -350,6 +456,13 @@ fn serve_group<E: BatchExecutor>(
             Some(d) if now >= d => {
                 counters.requests_shed.fetch_add(1, Ordering::Relaxed);
                 counters.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                logging::event(
+                    logging::Level::Warn,
+                    module_path!(),
+                    "deadline_expired",
+                    req.request_id,
+                    &[("where", "dequeue")],
+                );
                 let _ = req.reply.send(Err(anyhow::Error::new(
                     ServeError::DeadlineExceeded { samples_used: 0 },
                 )));
@@ -377,6 +490,9 @@ fn serve_group<E: BatchExecutor>(
     };
     let mut images = Vec::with_capacity(live.len() * image_size);
     let mut ok = Vec::with_capacity(live.len());
+    // positional trace keys aligned with `images` (0 = untraced), handed
+    // to the executor so its chunk spans land under the right requests
+    let mut ids = Vec::with_capacity(live.len());
     // the group's effective deadline is its earliest member's: one round
     // loop serves the whole group, so the tightest member binds it
     let mut deadline: Option<Instant> = None;
@@ -387,6 +503,7 @@ fn serve_group<E: BatchExecutor>(
                 (Some(a), Some(b)) => Some(a.min(b)),
                 (a, b) => a.or(b),
             };
+            ids.push(req.request_id);
             ok.push(req.reply);
         } else {
             let _ = req.reply.send(Err(anyhow!(
@@ -410,6 +527,7 @@ fn serve_group<E: BatchExecutor>(
     }
     let brownout = tier >= Tier::Brownout;
     let n = ok.len();
+    exec.begin_group(&ids);
     let t0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| match key.plan_seed {
         // shard-scoped plan (cluster mode): the stream derives from the
@@ -458,6 +576,15 @@ fn serve_group<E: BatchExecutor>(
                     counters
                         .deadline_expired
                         .fetch_add(n as u64, Ordering::Relaxed);
+                    for &rid in &ids {
+                        logging::event(
+                            logging::Level::Warn,
+                            module_path!(),
+                            "deadline_expired",
+                            rid,
+                            &[("where", "mid_run")],
+                        );
+                    }
                 }
                 for reply in ok {
                     let _ = reply.send(Err(anyhow::Error::new(se.clone())));
@@ -475,6 +602,15 @@ fn serve_group<E: BatchExecutor>(
         Err(_panic) => {
             // a poisoned batch answers its replies and dies alone: the
             // executor rebuilds deterministically and keeps serving
+            for &rid in &ids {
+                logging::event(
+                    logging::Level::Error,
+                    module_path!(),
+                    "panic_recovered",
+                    rid,
+                    &[("model", key.model.as_deref().unwrap_or("default"))],
+                );
+            }
             for reply in ok {
                 let _ = reply.send(Err(anyhow::Error::new(ServeError::Internal {
                     detail: "engine panicked serving this batch; state was rebuilt".into(),
@@ -511,6 +647,15 @@ pub struct EngineHandle {
     /// health/latency cards from here without a round-trip through the
     /// coordinator thread.
     pub cluster: Option<Arc<crate::cluster::WorkerPool>>,
+    /// Lock-free span ring shared with the service loop and executor
+    /// (disabled unless `ServiceConfig::observe.trace`): the gateway
+    /// mints `request_id`s here and the `trace` verb / `/metrics` read
+    /// spans and counters without a round-trip through the engine thread.
+    pub recorder: Arc<TraceRecorder>,
+    /// Per-model uncertainty histograms (predictive entropy, mutual
+    /// information, samples used), recorded by the gateway on successful
+    /// replies and rendered by `/metrics`.
+    pub uncertainty: Arc<UncertaintyTelemetry>,
     ctrl: Arc<OverloadControl>,
     deadline_ms: u64,
     tx: Sender<ClassifyRequest>,
@@ -636,16 +781,19 @@ impl EngineHandle {
         }
         let ctrl = Arc::new(OverloadControl::new(ocfg, svc_cfg.queue_depth));
         let counters = Arc::new(ServeCounters::default());
+        let recorder = Arc::new(TraceRecorder::new(&svc_cfg.observe));
+        let uncertainty = Arc::new(UncertaintyTelemetry::new(&models));
         let (tx, rx) = channel::<ClassifyRequest>(svc_cfg.queue_depth);
         let rx_probe = rx.clone();
         let (ctrl2, counters2, svc2) = (ctrl.clone(), counters.clone(), svc_cfg.clone());
+        let rec2 = recorder.clone();
         let thread = std::thread::Builder::new()
             .name(format!("pbm-engine-{name}"))
             .spawn(move || {
                 let run = || -> Result<()> {
                     let mut exec = build()?;
                     exec.attach_counters(&counters2);
-                    run_service_loop(&mut exec, rx, &svc2, &ctrl2, &counters2);
+                    run_service_loop_traced(&mut exec, rx, &svc2, &ctrl2, &counters2, &rec2);
                     Ok(())
                 };
                 if let Err(e) = run() {
@@ -660,6 +808,8 @@ impl EngineHandle {
             registry,
             counters,
             cluster: None,
+            recorder,
+            uncertainty,
             ctrl,
             deadline_ms: svc_cfg.deadline_ms,
             tx,
@@ -672,6 +822,8 @@ impl EngineHandle {
     /// full queue or exhausted work budget answers a typed
     /// [`ServeError::Overloaded`] immediately (shed, don't backpressure).
     pub fn submit(&self, req: ClassifyRequest) -> Result<()> {
+        let rid = req.request_id;
+        let t0 = Instant::now();
         let res = submit_with_admission(
             &self.tx,
             &self.ctrl,
@@ -679,6 +831,11 @@ impl EngineHandle {
             self.deadline_ms,
             req,
         );
+        if res.is_ok() {
+            // sub-microsecond cost-estimate + try_send work; recorded so
+            // every traced request starts at its admission instant
+            self.recorder.record(rid, Stage::Admission, 0, t0, t0.elapsed());
+        }
         self.counters
             .queue_depth
             .store(self.rx_probe.len() as u64, Ordering::Relaxed);
@@ -742,6 +899,10 @@ pub struct SynthExecutor {
     pub classes: usize,
     pub image_size: usize,
     policy: UncertaintyPolicy,
+    /// Trace recorder (present when tracing is on) + the traced ids of
+    /// the group currently being classified.
+    trace: Option<Arc<TraceRecorder>>,
+    trace_ids: Vec<u64>,
 }
 
 impl SynthExecutor {
@@ -755,6 +916,19 @@ impl SynthExecutor {
             image_size: 4,
             // accept-everything policy: decisions are not under test here
             policy: UncertaintyPolicy::ood_only(f64::MAX),
+            trace: None,
+            trace_ids: Vec::new(),
+        }
+    }
+
+    /// Record one `chunk` span (the synthetic executor draws all samples
+    /// in a single chunk) under every traced id of the current group.
+    fn trace_chunk(&self, start: Instant) {
+        if let Some(rec) = &self.trace {
+            let dur = start.elapsed();
+            for &id in &self.trace_ids {
+                rec.record(id, Stage::Chunk, 0, start, dur);
+            }
         }
     }
 
@@ -865,7 +1039,9 @@ impl BatchExecutor for SynthExecutor {
         // the persistent stream advances by however much was drawn, even
         // when a mid-run deadline errors out (same as mutating in place)
         let mut state = self.state;
+        let t0 = Instant::now();
         let res = self.classify_stream(&mut state, images, n, budget, deadline, brownout);
+        self.trace_chunk(t0);
         self.state = state;
         res
     }
@@ -884,7 +1060,23 @@ impl BatchExecutor for SynthExecutor {
         // persistent stream is untouched, so re-executing (failover,
         // hedging, replay) is free of side effects
         let mut state = plan_seed;
-        self.classify_stream(&mut state, images, n, budget, deadline, brownout)
+        let t0 = Instant::now();
+        let res = self.classify_stream(&mut state, images, n, budget, deadline, brownout);
+        self.trace_chunk(t0);
+        res
+    }
+
+    fn attach_recorder(&mut self, recorder: &Arc<TraceRecorder>) {
+        if recorder.enabled() {
+            self.trace = Some(recorder.clone());
+        }
+    }
+
+    fn begin_group(&mut self, request_ids: &[u64]) {
+        self.trace_ids.clear();
+        if self.trace.is_some() {
+            self.trace_ids.extend(request_ids.iter().copied().filter(|&id| id != 0));
+        }
     }
 
     fn recover_after_panic(&mut self) -> Result<()> {

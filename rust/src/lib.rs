@@ -102,6 +102,28 @@
 //! lost or doubled across mid-batch worker kills, stalls, and garbage
 //! responses; see the README's "Cluster mode" section.
 //!
+//! ## Observability
+//!
+//! [`observe`] threads per-request tracing and one metrics surface
+//! through every layer.  With tracing on (`--trace`, `[observe]` in a
+//! config), each request is keyed by a `request_id` — minted at the
+//! gateway or supplied by the client as a decimal string, and forwarded
+//! coordinator → worker so failover/hedging stitches into one trace —
+//! and a lock-free [`observe::TraceRecorder`] ring records disjoint
+//! spans `admission → queue → batch_form → chunk[k] → respond` (with
+//! `sample_conv`/`fwd_post` chunk children and cluster annotations)
+//! whose durations sum to wall-clock latency.  Slow requests retain
+//! verbatim exemplars, queryable with the `trace` protocol verb.  The
+//! `metrics` verb renders one Prometheus text exposition
+//! ([`observe::prom`]) over serving counters, latency histograms,
+//! registry/health/cluster state, and per-model uncertainty histograms
+//! (predictive entropy, mutual information, `samples_used`);
+//! `pbm scrape --lint` checks it with the in-repo
+//! [`observe::expo::lint`].  Tracing never changes an output byte and
+//! the replay contract is untouched; `PBM_LOG_FORMAT=json` switches
+//! [`util::logging`] to structured JSON lines carrying `request_id` on
+//! the failure paths.  See the README's "Observability" section.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a bench target.
 
@@ -117,6 +139,7 @@ pub mod data;
 pub mod entropy;
 pub mod exec;
 pub mod experiments;
+pub mod observe;
 pub mod photonics;
 pub mod proptest_mini;
 pub mod registry;

@@ -13,6 +13,8 @@
 //! * `cluster`    — cluster coordinator: shard requests across workers with
 //!                  health-checked failover and hedging
 //! * `classify`   — client: classify a test image against a running server
+//! * `scrape`     — client: fetch (and optionally lint) a server's
+//!                  Prometheus text-format `/metrics` exposition
 //! * `info`       — artifact inventory
 
 use std::path::{Path, PathBuf};
@@ -31,6 +33,7 @@ use photonic_bayes::coordinator::{
 use photonic_bayes::data::{Dataset, DatasetKind};
 use photonic_bayes::entropy::{nist, ChaoticLightSource, HealthConfig};
 use photonic_bayes::exec::CancelToken;
+use photonic_bayes::observe::ObserveConfig;
 use photonic_bayes::experiments::uncertainty::{accuracy_vs_samples, build_report, eval_split};
 use photonic_bayes::photonics::{timing, MachineConfig, PhotonicMachine};
 use photonic_bayes::runtime::artifact::artifacts_root;
@@ -62,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
         Some("worker") => cmd_worker(args),
         Some("cluster") => cmd_cluster(args),
         Some("classify") => cmd_classify(args),
+        Some("scrape") => cmd_scrape(args),
         Some("info") => cmd_info(args),
         other => {
             print_usage();
@@ -99,7 +103,8 @@ USAGE: pbm <subcommand> [flags]
             --adaptive --min-samples N --max-samples N --target-confidence F
             --health --health-window BITS --health-duty F
             --entropy-fallback digital|none
-            --deadline-ms N --brownout --idle-timeout-ms N]
+            --deadline-ms N --brownout --idle-timeout-ms N
+            --trace --trace-slow-ms N]
             (--threads: sampling workers per engine; 1 = sequential,
              0 = one per core; --entropy-prefetch on: background entropy
              producers feed the sampling hot path via lock-free block
@@ -122,10 +127,15 @@ USAGE: pbm <subcommand> [flags]
              opts into the mean-field degradation tier under sustained
              overload (responses flag degraded:true); --idle-timeout-ms:
              close silent connections, default 60000; see the [overload]
-             config table)
+             config table; --trace: record per-request spans (admission →
+             queue → batch_form → chunk[k] → respond) queryable via the
+             `trace` protocol verb, with slow-request exemplars retained
+             beyond --trace-slow-ms (default 250); responses stay bitwise
+             identical with tracing on or off; see the [observe] config
+             table; Prometheus text metrics via `pbm scrape` either way)
   worker    [--addr HOST:PORT --seed N --samples N --work-us N
             --health --health-window BITS --health-duty F
-            --queue-depth N --idle-timeout-ms N]
+            --queue-depth N --idle-timeout-ms N --trace --trace-slow-ms N]
             (cluster backend: serves shard-scoped plan-seeded classifies
              over the synthetic substrate, answers hello with role=worker;
              probes read its entropy-health scorecards + latency
@@ -133,7 +143,7 @@ USAGE: pbm <subcommand> [flags]
   cluster   [--config FILE --addr HOST:PORT --workers H:P[,H:P...]
             --seed N --samples N --image-size N --model NAME
             --hedge-ms N --hedge-factor F --probe-ms N --local-fallback
-            --idle-timeout-ms N]
+            --idle-timeout-ms N --trace --trace-slow-ms N]
             (coordinator: shards classifies across the worker pool; each
              request's plan_seed = lane_seed(seed, placement), so failover,
              hedging, and replay are bitwise-deterministic per
@@ -146,6 +156,10 @@ USAGE: pbm <subcommand> [flags]
   classify  [--addr HOST:PORT --model D --split S --index I
             --max-samples N --target-confidence F --deadline-ms N]
             [--local --backend B --threads N --adaptive]  (in-process)
+  scrape    [--addr HOST:PORT --lint]
+            (fetch the server's Prometheus text exposition via the
+             `metrics` protocol verb and print the body; --lint checks it
+             against the exposition format and exits nonzero on errors)
   info
 ",
         photonic_bayes::version()
@@ -262,6 +276,21 @@ fn parse_health(args: &Args, file: &Config) -> Result<HealthConfig> {
         serial_corr_cap: file.get_f64("health", "serial_corr_cap", d.serial_corr_cap)?,
     }
     .sanitized())
+}
+
+/// Assemble the tracing configuration from `--trace` / `--trace-slow-ms`
+/// layered over an optional `[observe]` config-file table.
+fn parse_observe(args: &Args, file: &Config) -> Result<ObserveConfig> {
+    let d = ObserveConfig::default();
+    Ok(ObserveConfig {
+        trace: args.has("trace") || file.get_bool("observe", "trace", d.trace)?,
+        trace_capacity: file.get_usize("observe", "trace_capacity", d.trace_capacity)?,
+        slow_ms: args.get_u64(
+            "trace-slow-ms",
+            file.get_usize("observe", "slow_ms", d.slow_ms as usize)? as u64,
+        )?,
+        exemplars: file.get_usize("observe", "exemplars", d.exemplars)?,
+    })
 }
 
 /// Resolve the opt-in automatic backend fallback (`--entropy-fallback` /
@@ -693,6 +722,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 brownout: args.has("brownout") || file.get_bool("overload", "brownout", false)?,
                 ..od
             },
+            observe: parse_observe(args, &file)?,
         })
     };
     // multi-model registry: `--models a,b` (or a `[models]` table: model
@@ -780,6 +810,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     let svc = ServiceConfig {
         queue_depth: args.get_usize("queue-depth", 256)?,
+        observe: parse_observe(args, &Config::default())?,
         ..ServiceConfig::default()
     };
     let handle = photonic_bayes::coordinator::service::EngineHandle::spawn_executor(
@@ -845,6 +876,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
     let svc = ServiceConfig {
         queue_depth: file.get_usize("batcher", "queue_depth", 256)?,
+        observe: parse_observe(args, &file)?,
         ..ServiceConfig::default()
     };
     let probe_interval = cfg.probe_interval;
@@ -942,6 +974,28 @@ fn cmd_classify(args: &Args) -> Result<()> {
     let resp = client.classify_opts(&dataset, ds.image(index), &budget, deadline_ms)?;
     println!("true label: {}", ds.labels[index]);
     println!("response:   {}", resp.to_string_pretty());
+    Ok(())
+}
+
+/// `pbm scrape` — fetch the Prometheus text exposition from a running
+/// gateway (the `metrics` protocol verb) and print the body.  `--lint`
+/// runs the in-repo exposition-format checker and exits nonzero on any
+/// violation — the CI step that keeps the scrape surface well-formed.
+fn cmd_scrape(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(&addr)?;
+    let body = client.metrics()?;
+    print!("{body}");
+    if args.has("lint") {
+        let errs = photonic_bayes::observe::expo::lint(&body);
+        if !errs.is_empty() {
+            for e in &errs {
+                eprintln!("lint: {e}");
+            }
+            return Err(anyhow!("{} exposition lint error(s)", errs.len()));
+        }
+        eprintln!("lint: ok ({} bytes)", body.len());
+    }
     Ok(())
 }
 

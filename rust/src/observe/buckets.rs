@@ -1,0 +1,102 @@
+//! Shared log2 bucket math for the latency histograms.
+//!
+//! `LatencyHistogram` (single-threaded, engine metrics) and
+//! `AtomicLatencyHistogram` (lock-free, serving layer) use the same
+//! geometry — bucket `i` covers `[2^i, 2^(i+1))` microseconds — and the
+//! same max-clamped percentile read.  Both delegate here so the
+//! semantics can't drift apart again.
+
+/// Bucket count used by both latency histograms (1 us .. ~1 s, 2x).
+pub const NUM_BUCKETS: usize = 21;
+
+/// Bucket index for a sample: `floor(log2(us))`, clamped to the table.
+#[inline]
+pub fn bucket_index(us: f64, num_buckets: usize) -> usize {
+    (us.max(1.0).log2() as usize).min(num_buckets - 1)
+}
+
+/// Upper edge of bucket `i` in microseconds (`2^(i+1)`).
+#[inline]
+pub fn bucket_upper_us(i: usize) -> f64 {
+    (1u64 << (i + 1)) as f64
+}
+
+/// Approximate percentile from bucket counts: walks the cumulative
+/// counts to the target rank and reports the bucket's upper edge,
+/// clamped to the recorded maximum (the raw edge of the last occupied
+/// bucket can be nearly 2x the true max, so an unclamped p95/p100
+/// would over-report tail latency).
+pub fn percentile_us<I>(counts: I, count: u64, max_us: f64, p: f64) -> f64
+where
+    I: IntoIterator<Item = u64>,
+{
+    if count == 0 {
+        return 0.0;
+    }
+    let target = (p / 100.0 * count as f64).ceil() as u64;
+    let mut acc = 0u64;
+    for (i, c) in counts.into_iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return bucket_upper_us(i).min(max_us);
+        }
+    }
+    max_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini::{self, Config};
+
+    #[test]
+    fn index_and_edge_agree() {
+        // a sample always lands in a bucket whose upper edge exceeds it
+        for us in [1.0, 1.5, 2.0, 700.0, 1e6, 5e8] {
+            let i = bucket_index(us, NUM_BUCKETS);
+            assert!(bucket_upper_us(i) > us || i == NUM_BUCKETS - 1, "{us}");
+        }
+        // sub-microsecond samples clamp into the first bucket
+        assert_eq!(bucket_index(0.0, NUM_BUCKETS), 0);
+        assert_eq!(bucket_index(0.3, NUM_BUCKETS), 0);
+    }
+
+    /// Property: `percentile_us` is monotone in `p` and never exceeds
+    /// the recorded maximum, for arbitrary recorded samples.
+    #[test]
+    fn percentile_monotone_and_clamped() {
+        let cfg = Config::default();
+        proptest_mini::check(
+            "percentile_monotone_and_clamped",
+            &cfg,
+            proptest_mini::vec_f32(1, 200, 0.0, 2.0e6),
+            |samples| {
+                let mut counts = vec![0u64; NUM_BUCKETS];
+                let mut max_us = 0.0f64;
+                for &us in samples {
+                    let us = us as f64;
+                    counts[bucket_index(us, NUM_BUCKETS)] += 1;
+                    max_us = max_us.max(us);
+                }
+                let count = samples.len() as u64;
+                let mut prev = 0.0f64;
+                for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+                    let v = percentile_us(counts.iter().copied(), count, max_us, p);
+                    if v < prev {
+                        return Err(format!("p{p} = {v} < previous {prev}"));
+                    }
+                    if v > max_us {
+                        return Err(format!("p{p} = {v} exceeds recorded max {max_us}"));
+                    }
+                    prev = v;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_counts_report_zero() {
+        assert_eq!(percentile_us(std::iter::empty(), 0, 0.0, 99.0), 0.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! Minimal Prometheus text-exposition (0.0.4) format checker.
+//!
+//! Used by CI to lint the live `/metrics` scrape (`pbm scrape --lint`)
+//! and by tests against [`super::prom::render`].  Checks the subset of
+//! the format this crate emits: metric/label name grammar, HELP/TYPE
+//! placement, family contiguity, value parseability, duplicate series,
+//! and histogram shape (ascending `le`, terminal `+Inf`, cumulative
+//! bucket counts, `_count` consistency).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Lint `text`; returns a list of violations (empty = clean).
+pub fn lint(text: &str) -> Vec<String> {
+    let mut errs = Vec::new();
+    // family name -> declared type ("counter" | "gauge" | "histogram" | ...)
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helped: BTreeSet<String> = BTreeSet::new();
+    let mut closed: BTreeSet<String> = BTreeSet::new();
+    let mut current: Option<String> = None;
+    let mut seen_series: BTreeSet<String> = BTreeSet::new();
+    // (family, labels-minus-le) -> [(le, value)]
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let n = ln + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            check_metric_name(name, n, &mut errs);
+            if !helped.insert(name.to_string()) {
+                errs.push(format!("line {n}: duplicate HELP for '{name}'"));
+            }
+            if types.contains_key(name) {
+                errs.push(format!("line {n}: HELP for '{name}' after its TYPE"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            check_metric_name(name, n, &mut errs);
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                errs.push(format!("line {n}: unknown TYPE '{kind}' for '{name}'"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                errs.push(format!("line {n}: duplicate TYPE for '{name}'"));
+            }
+            if closed.contains(name) {
+                errs.push(format!("line {n}: family '{name}' reopened"));
+            }
+            if let Some(prev) = current.replace(name.to_string()) {
+                closed.insert(prev);
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+
+        // sample line: name[{labels}] value
+        let (series, value) = match split_sample(line) {
+            Ok(v) => v,
+            Err(e) => {
+                errs.push(format!("line {n}: {e}"));
+                continue;
+            }
+        };
+        let (name, labels) = match split_labels(&series) {
+            Ok(v) => v,
+            Err(e) => {
+                errs.push(format!("line {n}: {e}"));
+                continue;
+            }
+        };
+        check_metric_name(&name, n, &mut errs);
+        for (k, _) in &labels {
+            if !is_label_name(k) {
+                errs.push(format!("line {n}: invalid label name '{k}'"));
+            }
+        }
+        if value.parse::<f64>().is_err()
+            && !matches!(value.as_str(), "+Inf" | "-Inf" | "NaN")
+        {
+            errs.push(format!("line {n}: unparseable value '{value}'"));
+        }
+        if !seen_series.insert(series.clone()) {
+            errs.push(format!("line {n}: duplicate series '{series}'"));
+        }
+
+        // resolve the owning family (histograms own _bucket/_sum/_count)
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf)
+                    .filter(|base| types.get(*base).map(String::as_str) == Some("histogram"))
+                    .map(str::to_string)
+            })
+            .unwrap_or_else(|| name.clone());
+        match types.get(&family) {
+            None => errs.push(format!("line {n}: sample '{name}' has no TYPE")),
+            Some(kind) => {
+                if current.as_deref() != Some(family.as_str()) {
+                    errs.push(format!(
+                        "line {n}: sample '{name}' outside its family group '{family}'"
+                    ));
+                }
+                if kind == "histogram" {
+                    let rest: Vec<(String, String)> = labels
+                        .iter()
+                        .filter(|(k, _)| k != "le")
+                        .cloned()
+                        .collect();
+                    let key = (family.clone(), format!("{rest:?}"));
+                    if name.ends_with("_bucket") {
+                        match labels.iter().find(|(k, _)| k == "le") {
+                            None => errs.push(format!("line {n}: bucket without 'le' label")),
+                            Some((_, le)) => {
+                                let edge = if le == "+Inf" {
+                                    f64::INFINITY
+                                } else {
+                                    le.parse::<f64>().unwrap_or(f64::NAN)
+                                };
+                                let v = value.parse::<f64>().unwrap_or(f64::NAN);
+                                buckets.entry(key).or_default().push((edge, v));
+                            }
+                        }
+                    } else if name.ends_with("_count") {
+                        counts.insert(key, value.parse::<f64>().unwrap_or(f64::NAN));
+                    }
+                } else if name != family {
+                    errs.push(format!(
+                        "line {n}: sample '{name}' does not match {kind} family '{family}'"
+                    ));
+                }
+            }
+        }
+    }
+
+    for ((family, labels), series) in &buckets {
+        let ctx = format!("histogram '{family}' {labels}");
+        if series.windows(2).any(|w| w[0].0 >= w[1].0) {
+            errs.push(format!("{ctx}: 'le' edges not strictly ascending"));
+        }
+        if series.last().map(|(e, _)| *e) != Some(f64::INFINITY) {
+            errs.push(format!("{ctx}: missing terminal le=\"+Inf\" bucket"));
+        }
+        if series.windows(2).any(|w| w[0].1 > w[1].1) {
+            errs.push(format!("{ctx}: bucket counts not cumulative"));
+        }
+        if let (Some((_, inf)), Some(total)) =
+            (series.last(), counts.get(&(family.clone(), labels.clone())))
+        {
+            if (inf - total).abs() > 0.0 {
+                errs.push(format!("{ctx}: +Inf bucket {inf} != _count {total}"));
+            }
+        }
+    }
+    errs
+}
+
+fn check_metric_name(name: &str, line: usize, errs: &mut Vec<String>) {
+    let ok = !name.is_empty()
+        && name
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+    if !ok {
+        errs.push(format!("line {line}: invalid metric name '{name}'"));
+    }
+}
+
+fn is_label_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Split a sample line into (series, value); series keeps its labels.
+fn split_sample(line: &str) -> Result<(String, String), String> {
+    // the value is the last whitespace-separated token *outside* braces
+    let split_at = match line.find('{') {
+        Some(ob) => {
+            let cb = line[ob..]
+                .find('}')
+                .map(|i| ob + i)
+                .ok_or_else(|| "unterminated label block".to_string())?;
+            cb + 1
+        }
+        None => line
+            .find(char::is_whitespace)
+            .ok_or_else(|| "sample without value".to_string())?,
+    };
+    let series = line[..split_at].trim().to_string();
+    let value = line[split_at..].trim();
+    if value.is_empty() {
+        return Err("sample without value".to_string());
+    }
+    // optional timestamp would be a second token; this crate never emits one
+    let value = value.split_whitespace().next().unwrap_or("").to_string();
+    Ok((series, value))
+}
+
+/// Split a series into (metric name, label pairs).
+fn split_labels(series: &str) -> Result<(String, Vec<(String, String)>), String> {
+    let Some(ob) = series.find('{') else {
+        return Ok((series.to_string(), Vec::new()));
+    };
+    if !series.ends_with('}') {
+        return Err(format!("malformed label block in '{series}'"));
+    }
+    let name = series[..ob].to_string();
+    let body = &series[ob + 1..series.len() - 1];
+    let mut labels = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let eq = rest
+            .find('=')
+            .ok_or_else(|| format!("label without '=' in '{body}'"))?;
+        let key = rest[..eq].trim().to_string();
+        let after = &rest[eq + 1..];
+        if !after.starts_with('"') {
+            return Err(format!("unquoted label value in '{body}'"));
+        }
+        // scan for the closing quote, honoring backslash escapes
+        let mut end = None;
+        let mut esc = false;
+        for (i, c) in after.char_indices().skip(1) {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.ok_or_else(|| format!("unterminated label value in '{body}'"))?;
+        labels.push((key, after[1..end].to_string()));
+        rest = after[end + 1..].trim_start_matches(',');
+    }
+    Ok((name, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_exposition_passes() {
+        let text = "\
+# HELP pbm_requests_total Requests served.
+# TYPE pbm_requests_total counter
+pbm_requests_total{engine=\"digits\"} 42
+pbm_requests_total{engine=\"synth\"} 7
+# HELP pbm_queue_depth Queue depth.
+# TYPE pbm_queue_depth gauge
+pbm_queue_depth 3
+# TYPE pbm_latency_us histogram
+pbm_latency_us_bucket{le=\"2\"} 1
+pbm_latency_us_bucket{le=\"4\"} 3
+pbm_latency_us_bucket{le=\"+Inf\"} 5
+pbm_latency_us_sum 123.5
+pbm_latency_us_count 5
+";
+        assert_eq!(lint(text), Vec::<String>::new());
+    }
+
+    #[test]
+    fn flags_sample_without_type() {
+        let errs = lint("pbm_orphan 1\n");
+        assert!(errs.iter().any(|e| e.contains("no TYPE")), "{errs:?}");
+    }
+
+    #[test]
+    fn flags_bad_names_and_values() {
+        let text = "\
+# TYPE 9bad counter
+9bad 1
+# TYPE pbm_ok gauge
+pbm_ok{0l=\"x\"} nope
+";
+        let errs = lint(text);
+        assert!(errs.iter().any(|e| e.contains("invalid metric name")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("invalid label name")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("unparseable value")), "{errs:?}");
+    }
+
+    #[test]
+    fn flags_histogram_shape_violations() {
+        let text = "\
+# TYPE h histogram
+h_bucket{le=\"4\"} 5
+h_bucket{le=\"2\"} 1
+h_count 5
+";
+        let errs = lint(text);
+        assert!(errs.iter().any(|e| e.contains("not strictly ascending")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("missing terminal")), "{errs:?}");
+    }
+
+    #[test]
+    fn flags_non_cumulative_buckets_and_count_mismatch() {
+        let text = "\
+# TYPE h histogram
+h_bucket{le=\"2\"} 5
+h_bucket{le=\"4\"} 3
+h_bucket{le=\"+Inf\"} 6
+h_count 9
+";
+        let errs = lint(text);
+        assert!(errs.iter().any(|e| e.contains("not cumulative")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("!= _count")), "{errs:?}");
+    }
+
+    #[test]
+    fn flags_duplicate_series_and_split_family() {
+        let text = "\
+# TYPE a counter
+a 1
+a 2
+# TYPE b counter
+b 1
+a 3
+";
+        let errs = lint(text);
+        assert!(errs.iter().any(|e| e.contains("duplicate series")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("outside its family group")), "{errs:?}");
+    }
+
+    #[test]
+    fn escaped_label_values_parse() {
+        let (name, labels) =
+            split_labels("m{path=\"a\\\"b\",x=\"y\"}").unwrap();
+        assert_eq!(name, "m");
+        assert_eq!(labels.len(), 2);
+        assert_eq!(labels[0].1, "a\\\"b");
+    }
+}

@@ -1,0 +1,70 @@
+//! Observability: per-request tracing, uncertainty telemetry, and
+//! Prometheus-style metrics exposition.
+//!
+//! Three surfaces, one subsystem:
+//!
+//! - [`trace::TraceRecorder`] — a lock-free ring of per-request spans
+//!   (`admission → queue → batch_form → chunk[k] → respond`, with
+//!   `sample_conv`/`fwd_post` nested as children of each chunk and
+//!   cluster events — failover, hedge, local fallback — annotated),
+//!   keyed by a `request_id` minted at the gateway or supplied by the
+//!   client, and forwarded coordinator → worker so a failed-over or
+//!   hedged request stitches into one trace across hops.
+//! - [`stats::UncertaintyTelemetry`] — running fixed-bucket histograms
+//!   of predictive entropy, mutual information, and `samples_used` per
+//!   model, so OOD drift is visible operationally, not just per-reply.
+//! - [`prom::render`] — one Prometheus text-format scrape surface
+//!   (`{"op":"metrics"}`) over serving counters, latency histograms,
+//!   registry/health/cluster state, trace stats, and the uncertainty
+//!   histograms; [`expo::lint`] is a minimal in-repo checker for the
+//!   exposition format, wired into CI against a live server.
+//!
+//! Tracing never alters outputs: responses are bitwise identical with
+//! tracing on or off (a `request_id` is echoed only when the client
+//! supplied one), and the `(model, seed, threads, prefetch, rule,
+//! placement)` replay contract is untouched — instrumentation records
+//! stage timestamps and nothing else.
+
+pub mod buckets;
+pub mod expo;
+pub mod prom;
+pub mod stats;
+pub mod trace;
+
+pub use stats::{HistSnapshot, UncertaintySnapshot, UncertaintyStats, UncertaintyTelemetry};
+pub use trace::{critical_path_us, Exemplar, Span, Stage, TraceRecorder, TraceStats};
+
+/// Tracing configuration (the `[observe]` config table / `--trace` flags).
+#[derive(Debug, Clone)]
+pub struct ObserveConfig {
+    /// Record spans (off by default; recording is cheap but not free).
+    pub trace: bool,
+    /// Ring capacity in spans (the oldest spans are overwritten).
+    pub trace_capacity: usize,
+    /// Requests slower than this retain a verbatim span exemplar;
+    /// `0` captures every traced request.
+    pub slow_ms: u64,
+    /// Maximum retained exemplars (FIFO eviction).
+    pub exemplars: usize,
+}
+
+impl Default for ObserveConfig {
+    fn default() -> Self {
+        Self {
+            trace: false,
+            trace_capacity: 4096,
+            slow_ms: 250,
+            exemplars: 32,
+        }
+    }
+}
+
+impl ObserveConfig {
+    /// Tracing on with defaults (tests, benches).
+    pub fn enabled() -> Self {
+        Self {
+            trace: true,
+            ..Self::default()
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Prometheus text-format (0.0.4) rendering: one scrape surface over
+//! every telemetry source the router can reach.
+//!
+//! Conventions: every metric is prefixed `pbm_`, monotonic counters end
+//! in `_total`, histograms carry explicit buckets with a terminal
+//! `le="+Inf"`, and series are labeled `engine` (the engine's primary
+//! dataset name) plus `model`/`worker`/`stream`/`shard` where finer
+//! attribution exists.  `_count` is always emitted equal to the `+Inf`
+//! bucket (both derived from the same per-bucket reads) so a racy
+//! scrape still lints clean.
+
+use crate::coordinator::Router;
+
+use super::stats::HistSnapshot;
+
+/// Render the full exposition for `router`'s engines.
+pub fn render(router: &Router) -> String {
+    let mut w = Writer::default();
+
+    w.family("pbm_build_info", "gauge", "Crate version (value is always 1).");
+    w.sample("pbm_build_info", &[("version", crate::version())], "1");
+
+    w.family("pbm_models", "gauge", "Servable model names registered on this router.");
+    w.sample("pbm_models", &[], &router.datasets().len().to_string());
+
+    let serving = router.serving_snapshot();
+    let counter =
+        |w: &mut Writer, name: &str, help: &str, pick: &dyn Fn(&crate::coordinator::ServeSnapshot) -> u64| {
+            w.family(name, "counter", help);
+            for (engine, s) in &serving {
+                w.sample(name, &[("engine", engine)], &pick(s).to_string());
+            }
+        };
+    counter(
+        &mut w,
+        "pbm_requests_shed_total",
+        "Requests answered with a typed error instead of being served.",
+        &|s| s.requests_shed,
+    );
+    counter(
+        &mut w,
+        "pbm_deadline_expired_total",
+        "Requests whose deadline passed at dequeue or mid-run.",
+        &|s| s.deadline_expired,
+    );
+    counter(
+        &mut w,
+        "pbm_overload_rejects_total",
+        "Requests rejected at admission (queue/work budget full).",
+        &|s| s.overload_rejects,
+    );
+    counter(
+        &mut w,
+        "pbm_panics_recovered_total",
+        "Batch panics isolated and recovered from.",
+        &|s| s.panics_recovered,
+    );
+    w.family("pbm_queue_depth", "gauge", "Queue depth last observed at admission/dequeue.");
+    for (engine, s) in &serving {
+        w.sample("pbm_queue_depth", &[("engine", engine)], &s.queue_depth.to_string());
+    }
+
+    w.family(
+        "pbm_request_latency_us",
+        "histogram",
+        "Per-request service latency in microseconds (log2 buckets).",
+    );
+    for (engine, raw) in router.serving_latency() {
+        // bucket i covers [2^i, 2^(i+1)); the final clamp bucket folds
+        // into +Inf rather than lying about a 2^21 us edge
+        let labels = [("engine", engine.as_str())];
+        let mut acc = 0u64;
+        for (i, c) in raw.counts.iter().enumerate() {
+            acc += c;
+            if i + 1 < raw.counts.len() {
+                w.bucket("pbm_request_latency_us", &labels, &fmt_f64((1u64 << (i + 1)) as f64), acc);
+            }
+        }
+        w.bucket("pbm_request_latency_us", &labels, "+Inf", acc);
+        w.sample_suffixed("pbm_request_latency_us", "_sum", &labels, &raw.sum_us.to_string());
+        w.sample_suffixed("pbm_request_latency_us", "_count", &labels, &acc.to_string());
+    }
+
+    let registry = router.registry_snapshot();
+    if !registry.is_empty() {
+        let reg_metric = |w: &mut Writer, name: &str, kind: &str, help: &str, pick: &dyn Fn(&crate::registry::RegistrySnapshot) -> u64| {
+            w.family(name, kind, help);
+            for (engine, r) in &registry {
+                w.sample(name, &[("engine", engine)], &pick(r).to_string());
+            }
+        };
+        reg_metric(&mut w, "pbm_registry_budget_bytes", "gauge", "Model-cache byte budget.", &|r| r.budget_bytes);
+        reg_metric(&mut w, "pbm_registry_resident_bytes", "gauge", "Bytes of realized banks currently cached.", &|r| r.resident_bytes);
+        reg_metric(&mut w, "pbm_registry_hits_total", "counter", "Model switches served from cache.", &|r| r.hits);
+        reg_metric(&mut w, "pbm_registry_misses_total", "counter", "Model switches requiring a rebuild.", &|r| r.misses);
+        reg_metric(&mut w, "pbm_registry_switches_total", "counter", "Program switches between models.", &|r| r.switches);
+        reg_metric(&mut w, "pbm_registry_evictions_total", "counter", "Models evicted under the byte budget.", &|r| r.evictions);
+        w.family("pbm_model_bytes", "gauge", "Realized bank bytes per model.");
+        for (engine, r) in &registry {
+            for m in &r.models {
+                w.sample("pbm_model_bytes", &[("engine", engine), ("model", &m.model)], &m.bytes.to_string());
+            }
+        }
+    }
+
+    let health = router.health_snapshot();
+    if !health.is_empty() {
+        let health_metric = |w: &mut Writer, name: &str, kind: &str, help: &str, pick: &dyn Fn(&crate::entropy::health::Scorecard) -> String| {
+            w.family(name, kind, help);
+            for (engine, cards) in &health {
+                for c in cards {
+                    let shard = c.shard.to_string();
+                    w.sample(
+                        name,
+                        &[("engine", engine), ("stream", &c.stream), ("shard", &shard)],
+                        &pick(c),
+                    );
+                }
+            }
+        };
+        health_metric(&mut w, "pbm_entropy_degraded", "gauge", "1 while the entropy stream is degraded.", &|c| u64::from(c.degraded).to_string());
+        health_metric(&mut w, "pbm_entropy_score_ewma", "gauge", "Entropy-battery pass-rate EWMA in [0,1].", &|c| fmt_f64(c.score_ewma));
+        health_metric(&mut w, "pbm_entropy_min_entropy", "gauge", "MCV min-entropy (bits/bit) of the last window.", &|c| fmt_f64(c.min_entropy));
+        health_metric(&mut w, "pbm_entropy_windows_total", "counter", "Entropy windows analyzed.", &|c| c.windows.to_string());
+    }
+
+    let cluster = router.cluster_snapshot();
+    if !cluster.is_empty() {
+        let worker_metric = |w: &mut Writer, name: &str, kind: &str, help: &str, pick: &dyn Fn(&crate::cluster::WorkerCard) -> String| {
+            w.family(name, kind, help);
+            for (engine, cards) in &cluster {
+                for c in cards {
+                    w.sample(name, &[("engine", engine), ("worker", &c.addr)], &pick(c));
+                }
+            }
+        };
+        worker_metric(&mut w, "pbm_worker_up", "gauge", "1 while the worker takes traffic (healthy/recovering).", &|c| {
+            let up = matches!(
+                c.state,
+                crate::cluster::WorkerState::Healthy | crate::cluster::WorkerState::Recovering
+            );
+            u64::from(up).to_string()
+        });
+        worker_metric(&mut w, "pbm_worker_consecutive_fails", "gauge", "Consecutive failures against this worker.", &|c| c.consecutive_fails.to_string());
+        worker_metric(&mut w, "pbm_worker_latency_ewma_us", "gauge", "EWMA of observed worker request latency (us).", &|c| fmt_f64(c.latency_ewma_us));
+        worker_metric(&mut w, "pbm_worker_entropy_degraded", "gauge", "1 while the worker reports degraded entropy.", &|c| u64::from(c.entropy_degraded).to_string());
+    }
+
+    let traces = router.trace_stats();
+    w.family("pbm_trace_enabled", "gauge", "1 while span recording is on for this engine.");
+    for (engine, t) in &traces {
+        w.sample("pbm_trace_enabled", &[("engine", engine)], &u64::from(t.enabled).to_string());
+    }
+    w.family("pbm_trace_spans_recorded_total", "counter", "Spans recorded (including those since overwritten).");
+    for (engine, t) in &traces {
+        w.sample("pbm_trace_spans_recorded_total", &[("engine", engine)], &t.recorded.to_string());
+    }
+    w.family("pbm_trace_spans_dropped_total", "counter", "Spans overwritten by ring wrap.");
+    for (engine, t) in &traces {
+        w.sample("pbm_trace_spans_dropped_total", &[("engine", engine)], &t.dropped.to_string());
+    }
+    w.family("pbm_trace_exemplars", "gauge", "Slow-request exemplars currently retained.");
+    for (engine, t) in &traces {
+        w.sample("pbm_trace_exemplars", &[("engine", engine)], &t.exemplars.to_string());
+    }
+
+    let uncertainty = router.uncertainty_snapshot();
+    let unc_hist = |w: &mut Writer, name: &str, help: &str, pick: &dyn Fn(&super::UncertaintySnapshot) -> HistSnapshot| {
+        w.family(name, "histogram", help);
+        for (engine, models) in &uncertainty {
+            for (model, u) in models {
+                w.hist(name, &[("engine", engine), ("model", model)], &pick(u));
+            }
+        }
+    };
+    unc_hist(
+        &mut w,
+        "pbm_predictive_entropy_nats",
+        "Predictive entropy of served results (nats).",
+        &|u| u.entropy.clone(),
+    );
+    unc_hist(
+        &mut w,
+        "pbm_mutual_information_nats",
+        "Mutual information (epistemic uncertainty) of served results (nats).",
+        &|u| u.mutual_information.clone(),
+    );
+    unc_hist(
+        &mut w,
+        "pbm_samples_used",
+        "Stochastic passes spent per served request.",
+        &|u| u.samples_used.clone(),
+    );
+
+    w.out
+}
+
+/// Shortest lossless-enough rendering: integers print bare, everything
+/// else uses Rust's shortest-roundtrip `Display`.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[derive(Default)]
+struct Writer {
+    out: String,
+}
+
+impl Writer {
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: &str) {
+        self.sample_suffixed(name, "", labels, value);
+    }
+
+    fn sample_suffixed(&mut self, name: &str, suffix: &str, labels: &[(&str, &str)], value: &str) {
+        self.out.push_str(name);
+        self.out.push_str(suffix);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                escape_into(v, &mut self.out);
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(value);
+        self.out.push('\n');
+    }
+
+    fn bucket(&mut self, name: &str, labels: &[(&str, &str)], le: &str, cumulative: u64) {
+        let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+        with_le.push(("le", le));
+        self.sample_suffixed(name, "_bucket", &with_le, &cumulative.to_string());
+    }
+
+    /// Emit `_bucket`/`_sum`/`_count` for a fixed-bound histogram whose
+    /// last count is the overflow bucket.
+    fn hist(&mut self, name: &str, labels: &[(&str, &str)], snap: &HistSnapshot) {
+        let mut acc = 0u64;
+        for (i, c) in snap.counts.iter().enumerate() {
+            acc += c;
+            if i < snap.bounds.len() {
+                self.bucket(name, labels, &fmt_f64(snap.bounds[i]), acc);
+            }
+        }
+        self.bucket(name, labels, "+Inf", acc);
+        self.sample_suffixed(name, "_sum", labels, &fmt_f64(snap.sum));
+        self.sample_suffixed(name, "_count", labels, &acc.to_string());
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_router_renders_and_lints_clean() {
+        let router = Router::new();
+        let text = render(&router);
+        assert!(text.contains("pbm_build_info"));
+        assert!(text.contains("# TYPE pbm_request_latency_us histogram"));
+        let errs = super::super::expo::lint(&text);
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn fmt_f64_prints_integers_bare() {
+        assert_eq!(fmt_f64(1.0), "1");
+        assert_eq!(fmt_f64(0.001), "0.001");
+        assert_eq!(fmt_f64(256.0), "256");
+        assert_eq!(fmt_f64(f64::NAN), "NaN");
+    }
+
+    #[test]
+    fn label_values_escape() {
+        let mut w = Writer::default();
+        w.family("m", "gauge", "x");
+        w.sample("m", &[("k", "a\"b\\c")], "1");
+        assert!(w.out.contains("m{k=\"a\\\"b\\\\c\"} 1"), "{}", w.out);
+        assert!(super::super::expo::lint(&w.out).is_empty());
+    }
+}

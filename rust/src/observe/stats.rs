@@ -1,0 +1,200 @@
+//! Running fixed-bucket histograms for uncertainty telemetry.
+//!
+//! The serving stack's uncertainty outputs (predictive entropy, mutual
+//! information, `samples_used`) are the product, but until now they
+//! were only visible per-reply.  [`UncertaintyTelemetry`] aggregates
+//! them per model with lock-free fixed-bucket histograms so OOD drift
+//! shows up on the `/metrics` scrape surface: a population shifting
+//! into the high-entropy buckets is drift, visible without logging a
+//! single request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Upper bounds (nats) for predictive-entropy and mutual-information
+/// histograms; ln(10) ≈ 2.3 nats is the 10-class uniform ceiling.
+pub const ENTROPY_BOUNDS: &[f64] = &[
+    0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 1.5, 2.5,
+];
+
+/// Upper bounds for `samples_used` (powers of two, like the budgets).
+pub const SAMPLES_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0];
+
+/// Lock-free histogram over static explicit bounds (the `+Inf` bucket
+/// is implicit as the last counter).  Same relaxed-atomics discipline
+/// as `AtomicLatencyHistogram`: reads are racy gauges, not invariants.
+#[derive(Debug)]
+pub struct FixedHistogram {
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` counters; the last one is the overflow bucket.
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Sum in millionths (fixed point keeps the add lock-free).
+    sum_micro: AtomicU64,
+}
+
+impl FixedHistogram {
+    pub fn new(bounds: &'static [f64]) -> Self {
+        FixedHistogram {
+            bounds,
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        let i = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micro
+            .fetch_add((v * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bounds: self.bounds.to_vec(),
+            counts: self
+                .counts
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+/// Plain-data copy of a [`FixedHistogram`] (per-bucket counts, the last
+/// entry being the overflow bucket).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// Uncertainty histograms for one model.
+#[derive(Debug)]
+pub struct UncertaintyStats {
+    pub entropy: FixedHistogram,
+    pub mutual_information: FixedHistogram,
+    pub samples_used: FixedHistogram,
+}
+
+impl Default for UncertaintyStats {
+    fn default() -> Self {
+        UncertaintyStats {
+            entropy: FixedHistogram::new(ENTROPY_BOUNDS),
+            mutual_information: FixedHistogram::new(ENTROPY_BOUNDS),
+            samples_used: FixedHistogram::new(SAMPLES_BOUNDS),
+        }
+    }
+}
+
+impl UncertaintyStats {
+    pub fn record(&self, entropy: f64, mutual_information: f64, samples_used: u32) {
+        self.entropy.record(entropy);
+        self.mutual_information.record(mutual_information);
+        self.samples_used.record(samples_used as f64);
+    }
+}
+
+/// Plain-data copy of one model's uncertainty histograms.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct UncertaintySnapshot {
+    pub entropy: HistSnapshot,
+    pub mutual_information: HistSnapshot,
+    pub samples_used: HistSnapshot,
+}
+
+/// Per-model uncertainty telemetry.  Models are pre-registered at
+/// engine spawn so the record path is lock-free (a linear scan over a
+/// handful of names, no map, no lock).
+#[derive(Debug, Default)]
+pub struct UncertaintyTelemetry {
+    models: Vec<(String, UncertaintyStats)>,
+}
+
+impl UncertaintyTelemetry {
+    pub fn new(models: &[String]) -> Self {
+        UncertaintyTelemetry {
+            models: models
+                .iter()
+                .map(|m| (m.clone(), UncertaintyStats::default()))
+                .collect(),
+        }
+    }
+
+    /// Record one served result under `model`; unknown models (never
+    /// routed here in practice) are dropped rather than locked in.
+    pub fn record(&self, model: &str, entropy: f64, mutual_information: f64, samples_used: u32) {
+        if let Some((_, s)) = self.models.iter().find(|(m, _)| m == model) {
+            s.record(entropy, mutual_information, samples_used);
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, UncertaintySnapshot)> {
+        self.models
+            .iter()
+            .map(|(m, s)| {
+                (
+                    m.clone(),
+                    UncertaintySnapshot {
+                        entropy: s.entropy.snapshot(),
+                        mutual_information: s.mutual_information.snapshot(),
+                        samples_used: s.samples_used.snapshot(),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_correct_buckets() {
+        let h = FixedHistogram::new(&[1.0, 4.0, 16.0]);
+        for v in [0.5, 1.0, 3.0, 20.0] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![2, 1, 0, 1]);
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 24.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_finite_and_negative_clamp_to_zero() {
+        let h = FixedHistogram::new(&[1.0]);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-3.0);
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![3, 0]);
+        assert_eq!(s.sum, 0.0);
+    }
+
+    #[test]
+    fn telemetry_is_per_model_and_drops_unknown() {
+        let t = UncertaintyTelemetry::new(&["a".into(), "b".into()]);
+        t.record("a", 0.02, 0.003, 8);
+        t.record("a", 1.2, 0.4, 32);
+        t.record("nope", 9.0, 9.0, 999);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        let (name, a) = &snap[0];
+        assert_eq!(name, "a");
+        assert_eq!(a.entropy.count, 2);
+        assert_eq!(a.samples_used.count, 2);
+        assert_eq!(snap[1].1.entropy.count, 0);
+    }
+}

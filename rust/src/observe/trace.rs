@@ -1,0 +1,459 @@
+//! Lock-free per-request span recorder.
+//!
+//! A [`TraceRecorder`] is a fixed ring of atomic slots following the
+//! `AtomicLatencyHistogram` discipline: the steady-state record path is
+//! a handful of relaxed stores plus one `fetch_add`, with zero
+//! allocation.  Writers claim a slot with `head.fetch_add` (wrap
+//! overwrites the oldest span) and publish by storing the request id
+//! last with `Release`; readers load the id with `Acquire` and accept
+//! that a concurrently rewritten slot can yield a torn span — this is a
+//! telemetry surface, not an invariant, and the race window is one slot
+//! out of thousands.
+//!
+//! Span taxonomy: `admission`, `queue`, `batch_form`, `chunk[k]`, and
+//! `respond` are disjoint top-level stages whose durations sum to
+//! wall-clock request latency; `sample_conv[k]` and `fwd_post[k]` are
+//! children nested inside `chunk[k]`; `failover`/`hedge`/`fallback` are
+//! cluster-event annotations.  Children and annotations are excluded
+//! from the top-level sum.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::ObserveConfig;
+
+/// Request lifecycle stage of a recorded span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission control at submit (cost estimate + budget check).
+    Admission,
+    /// Enqueued, waiting for the batcher to pick the request up.
+    Queue,
+    /// Inside the batcher's collection window.
+    BatchForm,
+    /// One adaptive sampling chunk (covers its children).
+    Chunk,
+    /// Probabilistic convolution passes of one chunk (child of `Chunk`).
+    SampleConv,
+    /// Forward post-processing of one chunk (child of `Chunk`).
+    FwdPost,
+    /// Gateway response encode after the reply arrived.
+    Respond,
+    /// Cluster annotation: a worker attempt failed and was retried.
+    Failover,
+    /// Cluster annotation: a hedge request was launched.
+    Hedge,
+    /// Cluster annotation: served by the coordinator's local fallback.
+    Fallback,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::BatchForm => "batch_form",
+            Stage::Chunk => "chunk",
+            Stage::SampleConv => "sample_conv",
+            Stage::FwdPost => "fwd_post",
+            Stage::Respond => "respond",
+            Stage::Failover => "failover",
+            Stage::Hedge => "hedge",
+            Stage::Fallback => "fallback",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Stage::Admission => 0,
+            Stage::Queue => 1,
+            Stage::BatchForm => 2,
+            Stage::Chunk => 3,
+            Stage::SampleConv => 4,
+            Stage::FwdPost => 5,
+            Stage::Respond => 6,
+            Stage::Failover => 7,
+            Stage::Hedge => 8,
+            Stage::Fallback => 9,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Stage> {
+        Some(match c {
+            0 => Stage::Admission,
+            1 => Stage::Queue,
+            2 => Stage::BatchForm,
+            3 => Stage::Chunk,
+            4 => Stage::SampleConv,
+            5 => Stage::FwdPost,
+            6 => Stage::Respond,
+            7 => Stage::Failover,
+            8 => Stage::Hedge,
+            9 => Stage::Fallback,
+            _ => return None,
+        })
+    }
+
+    /// Child spans nest inside a `chunk` span (excluded from the
+    /// disjoint top-level sum).
+    pub fn is_child(self) -> bool {
+        matches!(self, Stage::SampleConv | Stage::FwdPost)
+    }
+
+    /// Cluster-event annotations (excluded from the top-level sum).
+    pub fn is_annotation(self) -> bool {
+        matches!(self, Stage::Failover | Stage::Hedge | Stage::Fallback)
+    }
+}
+
+/// One recorded span, decoded from the ring or a retained exemplar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub request_id: u64,
+    pub stage: Stage,
+    /// Chunk index `k` for chunked stages; worker index for cluster
+    /// annotations; 0 otherwise.
+    pub index: u16,
+    /// Start offset from the recorder's epoch, microseconds.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Sum of top-level span durations (children/annotations excluded) —
+/// the disjoint account of wall-clock latency.
+pub fn critical_path_us(spans: &[Span]) -> u64 {
+    spans
+        .iter()
+        .filter(|s| !s.stage.is_child() && !s.stage.is_annotation())
+        .map(|s| s.dur_us)
+        .sum()
+}
+
+/// Slow-request exemplar: the full span set retained verbatim at
+/// respond time.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    pub request_id: u64,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+/// Point-in-time recorder statistics (for `/info` and `/metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    pub enabled: bool,
+    pub capacity: usize,
+    /// Spans ever recorded (including those since overwritten).
+    pub recorded: u64,
+    /// Spans overwritten by ring wrap.
+    pub dropped: u64,
+    pub exemplars: usize,
+}
+
+struct Slot {
+    /// 0 = empty or mid-write; stored last by the writer (`Release`).
+    id: AtomicU64,
+    /// stage code (low 8 bits) | index << 8.
+    meta: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            id: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free per-request span ring (see module docs).
+pub struct TraceRecorder {
+    enabled: bool,
+    epoch: Instant,
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+    next_id: AtomicU64,
+    slow_us: u64,
+    max_exemplars: usize,
+    exemplars: Mutex<VecDeque<Exemplar>>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("enabled", &self.enabled)
+            .field("capacity", &self.slots.len())
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: &ObserveConfig) -> Self {
+        let cap = if cfg.trace {
+            cfg.trace_capacity.max(8)
+        } else {
+            0
+        };
+        TraceRecorder {
+            enabled: cfg.trace,
+            epoch: Instant::now(),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            slow_us: cfg.slow_ms.saturating_mul(1000),
+            max_exemplars: cfg.exemplars,
+            exemplars: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// A recorder that records nothing (tracing off): every call is a
+    /// cheap no-op, so the untraced hot path stays untouched.
+    pub fn disabled() -> Self {
+        Self::new(&ObserveConfig::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Mint a nonzero request id (gateway-side, for clients that did
+    /// not supply one).
+    pub fn mint_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one span.  `request_id == 0` means untraced; disabled
+    /// recorders drop everything.
+    pub fn record(&self, request_id: u64, stage: Stage, index: u16, start: Instant, dur: Duration) {
+        if !self.enabled || request_id == 0 {
+            return;
+        }
+        let claim = self.head.fetch_add(1, Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        if claim >= cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        let slot = &self.slots[(claim % cap) as usize];
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        // invalidate, mutate, then publish the id last
+        slot.id.store(0, Ordering::Release);
+        slot.meta
+            .store(stage.code() as u64 | (index as u64) << 8, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur.as_micros() as u64, Ordering::Relaxed);
+        slot.id.store(request_id, Ordering::Release);
+    }
+
+    fn scan_ring(&self, request_id: u64) -> Vec<Span> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter() {
+            if slot.id.load(Ordering::Acquire) != request_id {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let Some(stage) = Stage::from_code((meta & 0xff) as u8) else {
+                continue;
+            };
+            out.push(Span {
+                request_id,
+                stage,
+                index: ((meta >> 8) & 0xffff) as u16,
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+
+    /// All spans recorded for `request_id` — live ring first, falling
+    /// back to a retained exemplar once the ring has wrapped past the
+    /// request.  Sorted by start time.
+    pub fn spans_for(&self, request_id: u64) -> Vec<Span> {
+        if request_id == 0 {
+            return Vec::new();
+        }
+        let mut out = self.scan_ring(request_id);
+        if out.is_empty() {
+            if let Ok(ex) = self.exemplars.lock() {
+                if let Some(e) = ex.iter().find(|e| e.request_id == request_id) {
+                    out = e.spans.clone();
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.start_us, s.start_us + s.dur_us));
+        out
+    }
+
+    /// Retain a verbatim exemplar if the request's wall-clock exceeded
+    /// the slow threshold (`slow_ms = 0` captures every traced
+    /// request).  Called at respond time, off the steady-state path.
+    pub fn maybe_capture_exemplar(&self, request_id: u64, total: Duration) {
+        if !self.enabled || request_id == 0 {
+            return;
+        }
+        let total_us = total.as_micros() as u64;
+        if total_us < self.slow_us {
+            return;
+        }
+        let mut spans = self.scan_ring(request_id);
+        if spans.is_empty() {
+            return;
+        }
+        spans.sort_by_key(|s| (s.start_us, s.start_us + s.dur_us));
+        if let Ok(mut ex) = self.exemplars.lock() {
+            ex.retain(|e| e.request_id != request_id);
+            ex.push_back(Exemplar {
+                request_id,
+                total_us,
+                spans,
+            });
+            while ex.len() > self.max_exemplars {
+                ex.pop_front();
+            }
+        }
+    }
+
+    pub fn exemplars(&self) -> Vec<Exemplar> {
+        self.exemplars
+            .lock()
+            .map(|ex| ex.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            enabled: self.enabled,
+            capacity: self.slots.len(),
+            recorded: self.head.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            exemplars: self.exemplars.lock().map(|e| e.len()).unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: usize, slow_ms: u64, exemplars: usize) -> ObserveConfig {
+        ObserveConfig {
+            trace: true,
+            trace_capacity: capacity,
+            slow_ms,
+            exemplars,
+        }
+    }
+
+    #[test]
+    fn records_and_reads_back_spans() {
+        let r = TraceRecorder::new(&cfg(64, 1000, 4));
+        let t0 = Instant::now();
+        r.record(7, Stage::Queue, 0, t0, Duration::from_micros(100));
+        r.record(7, Stage::Chunk, 2, t0, Duration::from_micros(300));
+        r.record(9, Stage::Queue, 0, t0, Duration::from_micros(50));
+        let spans = r.spans_for(7);
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().any(|s| s.stage == Stage::Chunk && s.index == 2));
+        assert_eq!(r.spans_for(9).len(), 1);
+        assert!(r.spans_for(12345).is_empty());
+        assert!(r.spans_for(0).is_empty());
+    }
+
+    #[test]
+    fn ring_wrap_overwrites_and_counts_drops() {
+        let r = TraceRecorder::new(&cfg(8, 1000, 0));
+        let t0 = Instant::now();
+        for i in 1..=20u64 {
+            r.record(i, Stage::Chunk, 0, t0, Duration::from_micros(1));
+        }
+        let s = r.stats();
+        assert_eq!(s.recorded, 20);
+        assert_eq!(s.dropped, 12);
+        // the oldest ids have been overwritten, the newest survive
+        assert!(r.spans_for(1).is_empty());
+        assert_eq!(r.spans_for(20).len(), 1);
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let r = TraceRecorder::disabled();
+        assert!(!r.enabled());
+        r.record(1, Stage::Queue, 0, Instant::now(), Duration::from_micros(5));
+        assert!(r.spans_for(1).is_empty());
+        assert_eq!(r.stats().recorded, 0);
+        r.maybe_capture_exemplar(1, Duration::from_secs(10));
+        assert!(r.exemplars().is_empty());
+    }
+
+    #[test]
+    fn mint_ids_are_nonzero_and_distinct() {
+        let r = TraceRecorder::new(&cfg(8, 1000, 0));
+        let a = r.mint_id();
+        let b = r.mint_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn exemplar_captured_over_threshold_only() {
+        let r = TraceRecorder::new(&cfg(64, 100, 4));
+        let t0 = Instant::now();
+        r.record(5, Stage::Chunk, 0, t0, Duration::from_micros(200));
+        r.maybe_capture_exemplar(5, Duration::from_millis(50));
+        assert!(r.exemplars().is_empty(), "under threshold");
+        r.maybe_capture_exemplar(5, Duration::from_millis(200));
+        let ex = r.exemplars();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].request_id, 5);
+        assert_eq!(ex[0].spans.len(), 1);
+    }
+
+    #[test]
+    fn exemplar_survives_ring_wrap_and_fifo_evicts() {
+        let r = TraceRecorder::new(&cfg(8, 0, 2));
+        let t0 = Instant::now();
+        for id in 1..=4u64 {
+            r.record(id, Stage::Chunk, 0, t0, Duration::from_micros(10));
+            r.maybe_capture_exemplar(id, Duration::from_micros(10));
+        }
+        // FIFO cap of 2: only the last two exemplars survive
+        let ids: Vec<u64> = r.exemplars().iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![3, 4]);
+        // wrap the ring past id 3, then spans_for falls back to the exemplar
+        for i in 100..120u64 {
+            r.record(i, Stage::Queue, 0, t0, Duration::from_micros(1));
+        }
+        assert!(!r.spans_for(3).is_empty(), "exemplar fallback");
+    }
+
+    #[test]
+    fn critical_path_excludes_children_and_annotations() {
+        let sp = |stage, dur_us| Span {
+            request_id: 1,
+            stage,
+            index: 0,
+            start_us: 0,
+            dur_us,
+        };
+        let spans = vec![
+            sp(Stage::Admission, 10),
+            sp(Stage::Queue, 20),
+            sp(Stage::BatchForm, 30),
+            sp(Stage::Chunk, 400),
+            sp(Stage::SampleConv, 350),
+            sp(Stage::FwdPost, 40),
+            sp(Stage::Failover, 999),
+            sp(Stage::Respond, 5),
+        ];
+        assert_eq!(critical_path_us(&spans), 10 + 20 + 30 + 400 + 5);
+    }
+}

@@ -36,8 +36,17 @@
 //! is empty answers `"code":"worker_unavailable"` with a `down` count.
 //! The coordinator's `/info` carries a `cluster` section of per-worker
 //! cards (state, latency EWMA, entropy health, p50/p95/p99).
+//!
+//! Observability: classify requests may carry `"request_id":"<nonzero
+//! u64 as decimal string>"` — the server traces the request under that id
+//! (forwarded coordinator → worker, so cluster hops stitch into one
+//! trace) and echoes it in the response; without one, responses are
+//! byte-identical whether tracing is on or off.  `{"op":"metrics"}`
+//! answers the Prometheus text exposition in a `body` field;
+//! `{"op":"trace","request_id":"N"}` returns the recorded spans (omit
+//! `request_id` for the retained slow-request exemplars).
 
 pub mod protocol;
 pub mod tcp;
 
-pub use tcp::{serve, Client, ClientConfig, ServerOptions};
+pub use tcp::{respond, serve, Client, ClientConfig, ServerOptions};

@@ -8,6 +8,7 @@ use crate::coordinator::engine::ClassifyResult;
 use crate::coordinator::metrics::ServeSnapshot;
 use crate::coordinator::overload::ServeError;
 use crate::entropy::health::Scorecard;
+use crate::observe::{critical_path_us, Exemplar, Span, TraceStats};
 use crate::registry::RegistrySnapshot;
 use crate::sampler::RequestBudget;
 use crate::util::json::{self, Json};
@@ -47,9 +48,22 @@ pub enum Request {
         /// decimal *string* on the wire — JSON numbers are f64 and would
         /// corrupt 64-bit seeds.
         plan_seed: Option<u64>,
+        /// Optional trace key, a nonzero u64 carried as a decimal string
+        /// (same rationale as `plan_seed`).  Clients set it to correlate
+        /// the reply (it is echoed back) and query the trace afterwards;
+        /// a cluster coordinator forwards the gateway-minted id so the
+        /// worker's spans stitch into the same trace.  Purely
+        /// observational — never feeds any computation.
+        request_id: Option<u64>,
     },
     Info,
     Ping,
+    /// Render the Prometheus text exposition ([`crate::observe::prom`]).
+    Metrics,
+    /// Query recorded spans for one traced request (`request_id` as a
+    /// decimal string), or — without a `request_id` — list the retained
+    /// slow-request exemplars.
+    Trace { request_id: Option<u64> },
     /// Role handshake (cluster mode): a coordinator announces itself and
     /// learns whether the peer is a `worker` before routing shard-scoped
     /// plans at it.
@@ -90,16 +104,22 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let budget = parse_budget(&j)?;
             let deadline_ms = parse_deadline_ms(&j)?;
             let plan_seed = parse_plan_seed(&j)?;
+            let request_id = parse_request_id(&j)?;
             Ok(Request::Classify {
                 model,
                 image,
                 budget,
                 deadline_ms,
                 plan_seed,
+                request_id,
             })
         }
         Some("info") => Ok(Request::Info),
         Some("ping") => Ok(Request::Ping),
+        Some("metrics") => Ok(Request::Metrics),
+        Some("trace") => Ok(Request::Trace {
+            request_id: parse_request_id(&j)?,
+        }),
         Some("hello") => {
             let role = match j.get("role") {
                 None => "client".to_string(),
@@ -128,6 +148,27 @@ fn parse_plan_seed(j: &Json) -> Result<Option<u64>> {
                 .parse()
                 .map_err(|e| anyhow!("plan_seed '{s}' is not a u64: {e}"))?;
             Ok(Some(seed))
+        }
+    }
+}
+
+/// Parse the optional `request_id` field: a *nonzero* u64 carried as a
+/// decimal string (0 is the internal untraced sentinel; accepting it
+/// would let a client silently opt out of its own echo).
+fn parse_request_id(j: &Json) -> Result<Option<u64>> {
+    match j.get("request_id") {
+        None => Ok(None),
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("request_id must be a decimal string (u64)"))?;
+            let id: u64 = s
+                .parse()
+                .map_err(|e| anyhow!("request_id '{s}' is not a u64: {e}"))?;
+            if id == 0 {
+                return Err(anyhow!("request_id must be nonzero"));
+            }
+            Ok(Some(id))
         }
     }
 }
@@ -234,6 +275,18 @@ pub fn encode_result_into(r: &ClassifyResult, out: &mut String) {
     o.write_compact(out);
 }
 
+/// Append-encode a classification result echoing the client-supplied
+/// `request_id` (decimal string, like `plan_seed`).  Only called when
+/// the client sent one: untraced and internally-traced responses use
+/// [`encode_result_into`] unchanged, so enabling tracing on a server
+/// never alters a response byte.
+pub fn encode_result_traced_into(r: &ClassifyResult, request_id: u64, out: &mut String) {
+    encode_result_into(r, out);
+    // splice the id in as a string field (see `parse_request_id`)
+    out.truncate(out.len() - 1);
+    out.push_str(&format!(",\"request_id\":\"{request_id}\"}}"));
+}
+
 /// Encode an error response.
 pub fn encode_error(msg: &str) -> String {
     let mut s = String::new();
@@ -301,6 +354,7 @@ pub fn encode_info(
     registry: &[(String, RegistrySnapshot)],
     serving: &[(String, ServeSnapshot)],
     cluster: &[(String, Vec<WorkerCard>)],
+    observe: &[(String, TraceStats)],
 ) -> String {
     let mut o = Json::obj();
     o.set("ok", Json::Bool(true));
@@ -342,6 +396,21 @@ pub fn encode_info(
             );
         }
         o.set("cluster", c);
+    }
+    // tracing-disabled engines are omitted: a default /info stays
+    // byte-identical to the pre-observe protocol
+    let traced: Vec<_> = observe.iter().filter(|(_, t)| t.enabled).collect();
+    if !traced.is_empty() {
+        let mut t = Json::obj();
+        for (engine, stats) in traced {
+            let mut s = Json::obj();
+            s.set("trace_capacity", Json::Num(stats.capacity as f64));
+            s.set("spans_recorded", Json::Num(stats.recorded as f64));
+            s.set("spans_dropped", Json::Num(stats.dropped as f64));
+            s.set("exemplars", Json::Num(stats.exemplars as f64));
+            t.set(engine, s);
+        }
+        o.set("observe", t);
     }
     o.to_string_compact()
 }
@@ -482,6 +551,105 @@ pub fn encode_classify_sharded(
     line
 }
 
+/// Client-side (the cluster coordinator): [`encode_classify_sharded`]
+/// additionally forwarding the coordinator-side `request_id`, so the
+/// worker's spans land under the same trace key and a failed-over or
+/// hedged request still reads as ONE request end to end.
+pub fn encode_classify_sharded_traced(
+    model: &str,
+    image: &[f32],
+    budget: &RequestBudget,
+    deadline_ms: Option<u64>,
+    plan_seed: u64,
+    request_id: u64,
+) -> String {
+    let mut line = encode_classify_sharded(model, image, budget, deadline_ms, plan_seed);
+    line.truncate(line.len() - 1);
+    line.push_str(&format!(",\"request_id\":\"{request_id}\"}}"));
+    line
+}
+
+/// Client-side: encode a `metrics` request (Prometheus exposition).
+pub fn encode_metrics_req() -> String {
+    "{\"op\":\"metrics\"}".to_string()
+}
+
+/// Client-side: encode a `trace` request — for one request's spans
+/// (`Some(id)`) or the exemplar list (`None`).
+pub fn encode_trace_req(request_id: Option<u64>) -> String {
+    match request_id {
+        Some(id) => format!("{{\"op\":\"trace\",\"request_id\":\"{id}\"}}"),
+        None => "{\"op\":\"trace\"}".to_string(),
+    }
+}
+
+/// Append-encode the `metrics` response: the rendered Prometheus text
+/// travels as one JSON string field so it fits the line-framed protocol
+/// (`pbm scrape` unwraps it back to plain text).
+pub fn encode_metrics_into(body: &str, out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set(
+        "content_type",
+        Json::Str("text/plain; version=0.0.4".into()),
+    );
+    o.set("body", Json::Str(body.into()));
+    o.write_compact(out);
+}
+
+/// One recorded span as a JSON object.
+fn encode_span(s: &Span) -> Json {
+    let mut o = Json::obj();
+    o.set("stage", Json::Str(s.stage.name().into()));
+    o.set("index", Json::Num(f64::from(s.index)));
+    o.set("start_us", Json::Num(s.start_us as f64));
+    o.set("dur_us", Json::Num(s.dur_us as f64));
+    if s.stage.is_child() {
+        o.set("child", Json::Bool(true));
+    }
+    if s.stage.is_annotation() {
+        o.set("annotation", Json::Bool(true));
+    }
+    o
+}
+
+/// Append-encode the spans of one traced request: the span list plus
+/// `critical_path_us`, the sum over top-level spans (children and
+/// annotations excluded) that tracks the request's wall-clock latency.
+pub fn encode_trace_spans_into(request_id: u64, spans: &[Span], out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("request_id", Json::Str(request_id.to_string()));
+    o.set("spans", Json::Arr(spans.iter().map(encode_span).collect()));
+    o.set("critical_path_us", Json::Num(critical_path_us(spans) as f64));
+    o.write_compact(out);
+}
+
+/// Append-encode the retained slow-request exemplars, keyed by engine.
+pub fn encode_trace_exemplars_into(exemplars: &[(String, Vec<Exemplar>)], out: &mut String) {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    let mut by_engine = Json::obj();
+    for (engine, list) in exemplars {
+        by_engine.set(
+            engine,
+            Json::Arr(
+                list.iter()
+                    .map(|e| {
+                        let mut x = Json::obj();
+                        x.set("request_id", Json::Str(e.request_id.to_string()));
+                        x.set("total_us", Json::Num(e.total_us as f64));
+                        x.set("spans", Json::Arr(e.spans.iter().map(encode_span).collect()));
+                        x
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    o.set("exemplars", by_engine);
+    o.write_compact(out);
+}
+
 /// Client-side: decode a successful classify response back into a
 /// [`ClassifyResult`] — the inverse of [`encode_result_into`], used by
 /// the cluster coordinator to forward worker answers through its own
@@ -576,12 +744,14 @@ mod tests {
                 budget,
                 deadline_ms,
                 plan_seed,
+                request_id,
             } => {
                 assert_eq!(model, "digits");
                 assert_eq!(image, vec![0.0, 0.5, 1.0]);
                 assert!(budget.is_default());
                 assert_eq!(deadline_ms, None);
                 assert_eq!(plan_seed, None);
+                assert_eq!(request_id, None);
             }
             other => panic!("{other:?}"),
         }
@@ -698,7 +868,7 @@ mod tests {
             p95_us: 800.0,
             ..ServeSnapshot::default()
         };
-        let line = encode_info(&["digits"], &[], &[], &[("digits".to_string(), snap)], &[]);
+        let line = encode_info(&["digits"], &[], &[], &[("digits".to_string(), snap)], &[], &[]);
         let j = crate::util::json::parse(&line).unwrap();
         let s = j.get("serving").unwrap().get("digits").unwrap();
         assert_eq!(s.get("requests_shed").unwrap().as_usize(), Some(4));
@@ -765,6 +935,142 @@ mod tests {
         assert!(parse_request(bad).is_err());
         let bad = "{\"op\":\"classify\",\"model\":\"m\",\"image\":[1],\"plan_seed\":\"x\"}";
         assert!(parse_request(bad).is_err());
+    }
+
+    #[test]
+    fn request_id_rides_as_string_and_rejects_zero() {
+        let seed = 9;
+        let id = u64::MAX - 7; // above 2^53: a JSON number would corrupt it
+        let line = encode_classify_sharded_traced(
+            "synth",
+            &[0.1],
+            &RequestBudget::default(),
+            None,
+            seed,
+            id,
+        );
+        match parse_request(&line).unwrap() {
+            Request::Classify {
+                plan_seed,
+                request_id,
+                ..
+            } => {
+                assert_eq!(plan_seed, Some(seed));
+                assert_eq!(request_id, Some(id));
+            }
+            other => panic!("{other:?}"),
+        }
+        let base = "{\"op\":\"classify\",\"model\":\"m\",\"image\":[1]";
+        // numeric, zero, and garbage ids are boundary errors
+        for bad in ["42", "\"0\"", "\"x\""] {
+            assert!(
+                parse_request(&format!("{base},\"request_id\":{bad}}}")).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_and_trace_verbs_parse() {
+        assert_eq!(parse_request(&encode_metrics_req()).unwrap(), Request::Metrics);
+        assert_eq!(
+            parse_request(&encode_trace_req(Some(77))).unwrap(),
+            Request::Trace {
+                request_id: Some(77)
+            }
+        );
+        assert_eq!(
+            parse_request(&encode_trace_req(None)).unwrap(),
+            Request::Trace { request_id: None }
+        );
+    }
+
+    #[test]
+    fn traced_result_is_plain_result_plus_echo() {
+        let pred = Predictive::from_logits(&vec![vec![3.0, 0.0]; 5]);
+        let decision = crate::bnn::UncertaintyPolicy::ood_only(0.5).decide(&pred);
+        let r = ClassifyResult {
+            predictive: pred,
+            decision,
+            latency_us: 1.0,
+            samples_used: 5,
+            degraded: false,
+        };
+        let plain = encode_result(&r);
+        let mut traced = String::new();
+        encode_result_traced_into(&r, 321, &mut traced);
+        // the traced form is the plain bytes plus exactly the echo field
+        assert!(traced.starts_with(&plain[..plain.len() - 1]), "{traced}");
+        assert!(traced.ends_with(",\"request_id\":\"321\"}"), "{traced}");
+        let j = crate::util::json::parse(&traced).unwrap();
+        assert_eq!(j.get("request_id").unwrap().as_str(), Some("321"));
+    }
+
+    #[test]
+    fn encode_trace_spans_reports_critical_path() {
+        use crate::observe::Stage;
+        let spans = vec![
+            Span {
+                request_id: 5,
+                stage: Stage::Queue,
+                index: 0,
+                start_us: 0,
+                dur_us: 100,
+            },
+            Span {
+                request_id: 5,
+                stage: Stage::SampleConv,
+                index: 0,
+                start_us: 100,
+                dur_us: 40,
+            },
+            Span {
+                request_id: 5,
+                stage: Stage::Chunk,
+                index: 0,
+                start_us: 100,
+                dur_us: 50,
+            },
+        ];
+        let mut s = String::new();
+        encode_trace_spans_into(5, &spans, &mut s);
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.get("request_id").unwrap().as_str(), Some("5"));
+        let arr = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("stage").unwrap().as_str(), Some("queue"));
+        assert_eq!(arr[1].get("child").unwrap().as_bool(), Some(true));
+        assert!(arr[2].get("child").is_none());
+        // children are excluded from the critical path: 100 + 50
+        assert_eq!(j.get("critical_path_us").unwrap().as_usize(), Some(150));
+    }
+
+    #[test]
+    fn encode_info_reports_observe_only_when_tracing() {
+        let off = TraceStats {
+            enabled: false,
+            capacity: 0,
+            recorded: 0,
+            dropped: 0,
+            exemplars: 0,
+        };
+        let line = encode_info(&["m"], &[], &[], &[], &[], &[("m".to_string(), off)]);
+        let j = crate::util::json::parse(&line).unwrap();
+        assert!(j.get("observe").is_none(), "disabled tracing stays invisible");
+        let on = TraceStats {
+            enabled: true,
+            capacity: 64,
+            recorded: 10,
+            dropped: 2,
+            exemplars: 1,
+        };
+        let line = encode_info(&["m"], &[], &[], &[], &[], &[("m".to_string(), on)]);
+        let j = crate::util::json::parse(&line).unwrap();
+        let t = j.get("observe").unwrap().get("m").unwrap();
+        assert_eq!(t.get("trace_capacity").unwrap().as_usize(), Some(64));
+        assert_eq!(t.get("spans_recorded").unwrap().as_usize(), Some(10));
+        assert_eq!(t.get("spans_dropped").unwrap().as_usize(), Some(2));
+        assert_eq!(t.get("exemplars").unwrap().as_usize(), Some(1));
     }
 
     #[test]
@@ -839,6 +1145,7 @@ mod tests {
             &[],
             &[],
             &[("cluster".to_string(), vec![card])],
+            &[],
         );
         let j = crate::util::json::parse(&line).unwrap();
         let cards = j
@@ -901,7 +1208,7 @@ mod tests {
     #[test]
     fn encode_info_reports_health_scorecards() {
         // no monitors -> no entropy_health object at all
-        let plain = encode_info(&["digits"], &[], &[], &[], &[]);
+        let plain = encode_info(&["digits"], &[], &[], &[], &[], &[]);
         let j = crate::util::json::parse(&plain).unwrap();
         assert!(j.get("entropy_health").is_none());
         assert!(j.get("registry").is_none());
@@ -921,7 +1228,14 @@ mod tests {
             serial_corr: 0.6,
             degraded: true,
         };
-        let line = encode_info(&["digits"], &[("digits".to_string(), vec![card])], &[], &[], &[]);
+        let line = encode_info(
+            &["digits"],
+            &[("digits".to_string(), vec![card])],
+            &[],
+            &[],
+            &[],
+            &[],
+        );
         let j = crate::util::json::parse(&line).unwrap();
         let cards = j
             .get("entropy_health")
@@ -990,6 +1304,7 @@ mod tests {
             &["blood", "digits"],
             &[],
             &[("digits".to_string(), snap)],
+            &[],
             &[],
             &[],
         );

@@ -11,6 +11,7 @@ use crate::coordinator::service::ClassifyRequest;
 use crate::coordinator::Router;
 use crate::exec::{CancelToken, ThreadPool};
 use crate::log_info;
+use crate::observe::{prom, Stage};
 
 /// Server options.
 #[derive(Debug, Clone)]
@@ -237,14 +238,25 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
             &router.registry_snapshot(),
             &router.serving_snapshot(),
             &router.cluster_snapshot(),
+            &router.trace_stats(),
         )),
+        Ok(Request::Metrics) => {
+            let body = prom::render(router);
+            protocol::encode_metrics_into(&body, out);
+        }
+        Ok(Request::Trace { request_id }) => match request_id {
+            Some(id) => protocol::encode_trace_spans_into(id, &router.trace_spans(id), out),
+            None => protocol::encode_trace_exemplars_into(&router.trace_exemplars(), out),
+        },
         Ok(Request::Classify {
             model,
             image,
             budget,
             deadline_ms,
             plan_seed,
+            request_id,
         }) => {
+            let t_req = std::time::Instant::now();
             // the engine thread re-resolves the name against its registry,
             // so the request carries it even though routing also uses it
             let (mut req, rx) = ClassifyRequest::with_model(Some(model.clone()), image, budget);
@@ -252,12 +264,41 @@ pub fn respond_into(router: &Router, line: &str, out: &mut String) {
             // the deadline clock starts here, at admission: queueing time
             // counts against it (that is the point — shed what went stale
             // in the queue)
-            req.deadline = deadline_ms
-                .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
+            req.deadline =
+                deadline_ms.map(|ms| t_req + std::time::Duration::from_millis(ms));
+            // A client-supplied id is both used and echoed back; otherwise,
+            // with tracing on, mint an internal one that is *not* echoed —
+            // so response bytes are identical with tracing on or off.
+            let rid = match request_id {
+                Some(id) => id,
+                None => match router.get(&model) {
+                    Ok(h) if h.recorder.enabled() => h.recorder.mint_id(),
+                    _ => 0,
+                },
+            };
+            req.request_id = rid;
             match router.route(&model, req) {
                 Err(e) => encode_routing_error(&e, out),
                 Ok(()) => match rx.recv() {
-                    Some(Ok(result)) => protocol::encode_result_into(&result, out),
+                    Some(Ok(result)) => {
+                        let t_resp = std::time::Instant::now();
+                        match request_id {
+                            Some(id) => protocol::encode_result_traced_into(&result, id, out),
+                            None => protocol::encode_result_into(&result, out),
+                        }
+                        if let Ok(h) = router.get(&model) {
+                            h.uncertainty.record(
+                                &model,
+                                result.predictive.shannon_entropy,
+                                result.predictive.mutual_information,
+                                result.samples_used as u32,
+                            );
+                            if rid != 0 {
+                                h.recorder.record(rid, Stage::Respond, 0, t_resp, t_resp.elapsed());
+                                h.recorder.maybe_capture_exemplar(rid, t_req.elapsed());
+                            }
+                        }
+                    }
                     Some(Err(e)) => encode_routing_error(&e, out),
                     None => protocol::encode_error_into("engine dropped request", out),
                 },
@@ -545,6 +586,47 @@ impl Client {
             plan_seed,
         ))
     }
+
+    /// [`classify_replayable`](Self::classify_replayable) carrying a
+    /// client-chosen nonzero `request_id`: the server traces the request
+    /// under that id (stitched across cluster hops) and echoes it in the
+    /// response.
+    #[allow(clippy::too_many_arguments)]
+    pub fn classify_traced(
+        &mut self,
+        model: &str,
+        image: &[f32],
+        budget: &crate::sampler::RequestBudget,
+        deadline_ms: Option<u64>,
+        plan_seed: u64,
+        request_id: u64,
+    ) -> Result<crate::util::json::Json> {
+        self.call_replayable(&protocol::encode_classify_sharded_traced(
+            model,
+            image,
+            budget,
+            deadline_ms,
+            plan_seed,
+            request_id,
+        ))
+    }
+
+    /// Fetch the Prometheus text-format metrics body (the `metrics` op),
+    /// with idempotent retry.
+    pub fn metrics(&mut self) -> Result<String> {
+        let j = self.call_idempotent(&protocol::encode_metrics_req())?;
+        j.get("body")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("metrics response missing body"))
+    }
+
+    /// Fetch trace spans for one `request_id` (`Some(id)`) or the retained
+    /// slow-request exemplars (`None`), with idempotent retry — reading a
+    /// trace never spends engine samples.
+    pub fn trace(&mut self, request_id: Option<u64>) -> Result<crate::util::json::Json> {
+        self.call_idempotent(&protocol::encode_trace_req(request_id))
+    }
 }
 
 #[cfg(test)]
@@ -678,6 +760,21 @@ mod tests {
         assert!(err.contains("\"code\":\"unknown_model\""), "{err}");
         let bad = respond(&router, "garbage");
         assert!(bad.contains("\"ok\":false"));
+    }
+
+    #[test]
+    fn metrics_and_trace_verbs_answer_without_engines() {
+        let router = Router::new();
+        let m = respond(&router, "{\"op\":\"metrics\"}");
+        assert!(m.contains("\"ok\":true"), "{m}");
+        assert!(m.contains("text/plain"), "{m}");
+        assert!(m.contains("pbm_build_info"), "{m}");
+        // a trace query for an unknown id is an empty span list, not an error
+        let t = respond(&router, "{\"op\":\"trace\",\"request_id\":\"42\"}");
+        assert!(t.contains("\"ok\":true"), "{t}");
+        assert!(t.contains("\"spans\":[]"), "{t}");
+        let ex = respond(&router, "{\"op\":\"trace\"}");
+        assert!(ex.contains("\"ok\":true"), "{ex}");
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! Minimal leveled logger (stderr), controlled by `PBM_LOG` env var.
 //!
-//! Levels: `error` < `warn` < `info` (default) < `debug` < `trace`.
+//! Levels: `error` < `warn` < `info` (default) < `debug` < `trace`;
+//! `off` silences everything.  Unrecognized values (typos like `dbug`)
+//! fall back to `info` with a one-time warning instead of silently
+//! defaulting.
+//!
+//! `PBM_LOG_FORMAT=json` switches output to JSON lines
+//! (`{"t":…,"level":…,"module":…,"msg":…}`); [`event`] adds structured
+//! failure events that carry a `request_id` and key/value fields in
+//! both formats.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -16,7 +24,15 @@ pub enum Level {
     Trace = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(255);
+/// Level cache: `UNSET` until the env var is parsed or `set_level`
+/// runs; `OFF` silences all levels.
+const UNSET: u8 = 255;
+const OFF: u8 = 254;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Output format cache: `UNSET` until parsed; 0 = text, 1 = JSON lines.
+static FORMAT: AtomicU8 = AtomicU8::new(UNSET);
 
 fn start() -> Instant {
     use std::sync::OnceLock;
@@ -24,20 +40,67 @@ fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
+/// Parse a `PBM_LOG` value; `None` for unrecognized input.
+fn parse_level(s: &str) -> Option<u8> {
+    Some(match s {
+        "error" => Level::Error as u8,
+        "warn" => Level::Warn as u8,
+        "info" => Level::Info as u8,
+        "debug" => Level::Debug as u8,
+        "trace" => Level::Trace as u8,
+        "off" | "none" => OFF,
+        _ => return None,
+    })
+}
+
+fn warn_once(flag: &'static AtomicBool, var: &str, value: &str, want: &str) {
+    if !flag.swap(true, Ordering::Relaxed) {
+        eprintln!("[logging] {var}={value:?} unrecognized (want {want}); using the default");
+    }
+}
+
 fn level() -> u8 {
     let v = LEVEL.load(Ordering::Relaxed);
-    if v != 255 {
+    if v != UNSET {
         return v;
     }
-    let parsed = match std::env::var("PBM_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
+    let parsed = match std::env::var("PBM_LOG") {
+        // absent: default to info WITHOUT caching, so a test (or late
+        // caller) that sets the env var before the first real parse
+        // still wins — a failed read must not be sticky
+        Err(_) => return Level::Info as u8,
+        Ok(s) => match parse_level(&s) {
+            Some(l) => l,
+            None => {
+                static WARNED: AtomicBool = AtomicBool::new(false);
+                warn_once(&WARNED, "PBM_LOG", &s, "error|warn|info|debug|trace|off");
+                Level::Info as u8
+            }
+        },
+    };
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
+}
+
+fn json_format() -> bool {
+    let v = FORMAT.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v == 1;
+    }
+    let parsed = match std::env::var("PBM_LOG_FORMAT") {
+        Err(_) => return false, // absent: text, uncached (see level())
+        Ok(s) => match s.as_str() {
+            "json" => 1,
+            "text" | "" => 0,
+            _ => {
+                static WARNED: AtomicBool = AtomicBool::new(false);
+                warn_once(&WARNED, "PBM_LOG_FORMAT", &s, "text|json");
+                0
+            }
+        },
+    };
+    FORMAT.store(parsed, Ordering::Relaxed);
+    parsed == 1
 }
 
 /// Override the log level programmatically (tests, CLI `-v`).
@@ -45,8 +108,87 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Override the output format programmatically (tests, CLI).
+pub fn set_json(json: bool) {
+    FORMAT.store(u8::from(json), Ordering::Relaxed);
+}
+
 pub fn enabled(l: Level) -> bool {
-    (l as u8) <= level()
+    let lv = level();
+    lv != OFF && (l as u8) <= lv
+}
+
+fn tag(l: Level) -> &'static str {
+    match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    }
+}
+
+fn tag_lower(l: Level) -> &'static str {
+    match l {
+        Level::Error => "error",
+        Level::Warn => "warn",
+        Level::Info => "info",
+        Level::Debug => "debug",
+        Level::Trace => "trace",
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render one JSON log line (without the trailing newline).
+fn json_line(
+    t: f64,
+    l: Level,
+    module: &str,
+    msg: &str,
+    event: Option<&str>,
+    request_id: u64,
+    fields: &[(&str, &str)],
+) -> String {
+    let mut line = String::with_capacity(msg.len() + 96);
+    line.push_str(&format!("{{\"t\":{t:.3},\"level\":\"{}\"", tag_lower(l)));
+    line.push_str(",\"module\":\"");
+    escape_into(module, &mut line);
+    line.push('"');
+    if let Some(ev) = event {
+        line.push_str(",\"event\":\"");
+        escape_into(ev, &mut line);
+        line.push('"');
+    }
+    if request_id != 0 {
+        line.push_str(&format!(",\"request_id\":\"{request_id}\""));
+    }
+    for (k, v) in fields {
+        line.push_str(",\"");
+        escape_into(k, &mut line);
+        line.push_str("\":\"");
+        escape_into(v, &mut line);
+        line.push('"');
+    }
+    if !msg.is_empty() {
+        line.push_str(",\"msg\":\"");
+        escape_into(msg, &mut line);
+        line.push('"');
+    }
+    line.push('}');
+    line
 }
 
 pub fn log(l: Level, module: &str, msg: &str) {
@@ -54,15 +196,40 @@ pub fn log(l: Level, module: &str, msg: &str) {
         return;
     }
     let t = start().elapsed().as_secs_f64();
-    let tag = match l {
-        Level::Error => "ERROR",
-        Level::Warn => "WARN ",
-        Level::Info => "INFO ",
-        Level::Debug => "DEBUG",
-        Level::Trace => "TRACE",
-    };
     let mut err = std::io::stderr().lock();
-    let _ = writeln!(err, "[{t:9.3}s {tag} {module}] {msg}");
+    if json_format() {
+        let _ = writeln!(err, "{}", json_line(t, l, module, msg, None, 0, &[]));
+    } else {
+        let _ = writeln!(err, "[{t:9.3}s {} {module}] {msg}", tag(l));
+    }
+}
+
+/// Structured event for the failure paths (shed, deadline, panic
+/// recovery, failover, fallback): in JSON mode `event`, `request_id`
+/// (when nonzero) and the fields become first-class keys; in text mode
+/// they render as `event=… request_id=… k=v`.
+pub fn event(l: Level, module: &str, name: &str, request_id: u64, fields: &[(&str, &str)]) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    if json_format() {
+        let _ = writeln!(
+            err,
+            "{}",
+            json_line(t, l, module, "", Some(name), request_id, fields)
+        );
+    } else {
+        let mut msg = format!("event={name}");
+        if request_id != 0 {
+            msg.push_str(&format!(" request_id={request_id}"));
+        }
+        for (k, v) in fields {
+            msg.push_str(&format!(" {k}={v}"));
+        }
+        let _ = writeln!(err, "[{t:9.3}s {} {module}] {msg}", tag(l));
+    }
 }
 
 #[macro_export]
@@ -89,13 +256,57 @@ macro_rules! log_debug {
 mod tests {
     use super::*;
 
+    // one test owns the global LEVEL (tests run in parallel; two tests
+    // poking the same atomic would race)
     #[test]
-    fn level_ordering() {
+    fn level_ordering_and_off() {
         assert!(Level::Error < Level::Trace);
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        LEVEL.store(OFF, Ordering::Relaxed);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Trace));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_accepts_all_levels_and_off() {
+        assert_eq!(parse_level("error"), Some(Level::Error as u8));
+        assert_eq!(parse_level("warn"), Some(Level::Warn as u8));
+        assert_eq!(parse_level("info"), Some(Level::Info as u8));
+        assert_eq!(parse_level("debug"), Some(Level::Debug as u8));
+        assert_eq!(parse_level("trace"), Some(Level::Trace as u8));
+        assert_eq!(parse_level("off"), Some(OFF));
+        assert_eq!(parse_level("none"), Some(OFF));
+    }
+
+    #[test]
+    fn parse_rejects_typos_instead_of_silent_info() {
+        assert_eq!(parse_level("dbug"), None);
+        assert_eq!(parse_level("INFO"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn json_line_shape() {
+        let line = json_line(
+            1.5,
+            Level::Warn,
+            "pbm::x",
+            "oops \"quoted\"",
+            Some("shed"),
+            42,
+            &[("reason", "deadline")],
+        );
+        assert_eq!(
+            line,
+            "{\"t\":1.500,\"level\":\"warn\",\"module\":\"pbm::x\",\"event\":\"shed\",\
+             \"request_id\":\"42\",\"reason\":\"deadline\",\"msg\":\"oops \\\"quoted\\\"\"}"
+        );
+        // untraced requests omit request_id entirely
+        let line = json_line(0.0, Level::Info, "m", "hi", None, 0, &[]);
+        assert!(!line.contains("request_id"), "{line}");
     }
 }

@@ -26,7 +26,8 @@ use photonic_bayes::coordinator::{
 };
 use photonic_bayes::entropy::health::{HealthConfig, Monitor};
 use photonic_bayes::entropy::Xoshiro256pp;
-use photonic_bayes::server::ClientConfig;
+use photonic_bayes::observe::{ObserveConfig, Stage};
+use photonic_bayes::server::{Client, ClientConfig};
 use photonic_bayes::util::fault::{self, Fault, Trigger};
 
 /// Serialize tests that arm global fault points (and disarm any residue
@@ -70,13 +71,17 @@ struct TestCluster {
 
 impl TestCluster {
     fn spawn(cfg: ClusterConfig, worker_opts: Vec<WorkerOptions>) -> Self {
+        Self::spawn_svc(cfg, worker_opts, ServiceConfig::default())
+    }
+
+    fn spawn_svc(cfg: ClusterConfig, worker_opts: Vec<WorkerOptions>, svc: ServiceConfig) -> Self {
         let workers: Vec<WorkerGuard> = worker_opts
             .into_iter()
             .map(|o| cluster::spawn_local_worker(o).expect("spawn worker"))
             .collect();
         let addrs = workers.iter().map(|w| w.addr.clone()).collect();
-        let (handle, pool) = cluster::spawn_coordinator(cfg, addrs, ServiceConfig::default())
-            .expect("spawn coordinator");
+        let (handle, pool) =
+            cluster::spawn_coordinator(cfg, addrs, svc).expect("spawn coordinator");
         Self {
             workers,
             handle,
@@ -256,6 +261,114 @@ fn straggler_is_hedged_and_first_response_wins() {
     );
     let second = bits(&c.classify_once(images[1].clone()));
     assert_eq!(vec![first, second], control, "hedged answers replay bitwise");
+    c.shutdown();
+}
+
+/// A [`ServiceConfig`] with span recording on (defaults otherwise).
+fn traced_svc() -> ServiceConfig {
+    ServiceConfig {
+        observe: ObserveConfig::enabled(),
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn trace_stitches_across_failover() {
+    let _g = harness();
+    let cfg = test_cfg();
+    let images: Vec<Vec<f32>> = (0..1).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    // tracing on at BOTH hops: the coordinator records its spans, and the
+    // request id rides the wire so the serving worker's recorder files
+    // its own spans under the same id — one stitched trace
+    let worker_opts: Vec<WorkerOptions> = [21u64, 22]
+        .iter()
+        .map(|&seed| WorkerOptions {
+            seed,
+            svc: traced_svc(),
+            ..WorkerOptions::default()
+        })
+        .collect();
+    let c = TestCluster::spawn_svc(cfg, worker_opts, traced_svc());
+    // the first classify line to reach a worker drops the connection:
+    // the primary dies mid-request and the dispatcher fails over
+    fault::arm("worker.kill", Fault::IoError, Trigger::Nth(1));
+    let (mut req, rx) = ClassifyRequest::new(images[0].clone());
+    req.request_id = 777;
+    c.handle.submit(req).expect("admit");
+    let r = rx
+        .recv()
+        .expect("request must be answered")
+        .expect("request must succeed");
+    assert!(fault::hits("worker.kill") >= 1, "fault actually traversed");
+    fault::disarm_all();
+    assert_eq!(bits(&r), control[0], "traced failover still replays bitwise");
+
+    // coordinator side: the failed attempt is annotated, and the remote
+    // dispatch (failover included) is accounted as the request's chunk
+    let spans = c.handle.recorder.spans_for(777);
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Failover),
+        "failover annotation missing: {spans:?}"
+    );
+    assert!(spans.iter().any(|s| s.stage == Stage::Queue), "{spans:?}");
+    assert!(spans.iter().any(|s| s.stage == Stage::Chunk), "{spans:?}");
+
+    // worker side: the `trace` verb on the survivor returns spans for the
+    // same id (the killed primary never served it, so exactly one worker
+    // holds them)
+    let mut worker_spans = 0usize;
+    for w in &c.workers {
+        let mut cl = Client::connect(&w.addr).expect("dial worker");
+        let j = cl.trace(Some(777)).expect("trace verb");
+        worker_spans += j
+            .get("spans")
+            .and_then(|v| v.as_arr())
+            .map_or(0, |a| a.len());
+    }
+    assert!(
+        worker_spans > 0,
+        "the request id must stitch into the serving worker's trace"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn trace_marks_hedge() {
+    let _g = harness();
+    let cfg = ClusterConfig {
+        hedge_min: Duration::from_millis(10),
+        ..test_cfg()
+    };
+    let images: Vec<Vec<f32>> = (0..1).map(image).collect();
+    let control = control_bits(&cfg, &images);
+
+    let opts = [31u64, 32]
+        .iter()
+        .map(|&seed| WorkerOptions {
+            seed,
+            ..WorkerOptions::default()
+        })
+        .collect();
+    let c = TestCluster::spawn_svc(cfg, opts, traced_svc());
+    // the primary stalls well past the hedge delay; the hedge wins and
+    // the trace records where the duplicate attempt went
+    fault::arm("worker.stall", Fault::DelayMs(400), Trigger::Nth(1));
+    let (mut req, rx) = ClassifyRequest::new(images[0].clone());
+    req.request_id = 778;
+    c.handle.submit(req).expect("admit");
+    let r = rx
+        .recv()
+        .expect("request must be answered")
+        .expect("request must succeed");
+    fault::disarm_all();
+    assert_eq!(bits(&r), control[0], "hedged answer replays bitwise");
+    let spans = c.handle.recorder.spans_for(778);
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Hedge),
+        "hedge annotation missing: {spans:?}"
+    );
     c.shutdown();
 }
 

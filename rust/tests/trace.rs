@@ -1,0 +1,218 @@
+//! End-to-end request tracing: span attribution, the replay guarantee
+//! (responses unchanged by tracing), the `request_id` echo, the `trace`
+//! and `metrics` protocol verbs, and slow-request exemplars.
+//!
+//! All tests run over the deterministic [`SynthExecutor`] substrate so
+//! span durations are controlled by `work_per_sample` and every response
+//! is reproducible for a fixed seed and request order.
+
+use std::time::{Duration, Instant};
+
+use photonic_bayes::coordinator::{
+    ClassifyRequest, EngineHandle, RequestBudget, Router, ServiceConfig, SynthExecutor,
+};
+use photonic_bayes::observe::{critical_path_us, ObserveConfig, Stage};
+use photonic_bayes::server::{protocol, respond};
+use photonic_bayes::util::json;
+
+const N_SAMPLES: usize = 8;
+
+fn spawn_synth(seed: u64, observe: ObserveConfig, work: Duration) -> EngineHandle {
+    let svc = ServiceConfig {
+        observe,
+        ..ServiceConfig::default()
+    };
+    EngineHandle::spawn_executor(
+        "synth",
+        vec!["synth".to_string()],
+        None,
+        N_SAMPLES,
+        svc,
+        move || {
+            let mut e = SynthExecutor::new(seed, N_SAMPLES);
+            e.work_per_sample = work;
+            Ok(e)
+        },
+    )
+    .expect("spawn synth executor")
+}
+
+fn image(k: usize) -> Vec<f32> {
+    (0..4).map(|i| ((k * 4 + i) as f32) * 0.017).collect()
+}
+
+/// Blank out the one inherently nondeterministic response field (the
+/// measured `latency_us`) so the rest of the line can be compared
+/// byte-for-byte across runs.
+fn mask_latency(s: &str) -> String {
+    let key = "\"latency_us\":";
+    match s.find(key) {
+        None => s.to_string(),
+        Some(i) => {
+            let tail = &s[i + key.len()..];
+            let end = tail.find([',', '}']).unwrap_or(tail.len());
+            format!("{}{}<t>{}", &s[..i], key, &tail[end..])
+        }
+    }
+}
+
+/// The acceptance bar for attribution: the disjoint top-level spans
+/// (admission + queue + batch_form + chunk) must account for the
+/// request's measured wall clock to within 5%.
+#[test]
+fn span_durations_sum_to_wall_clock_within_5_percent() {
+    // 8 samples x 5 ms of simulated work dominate the request, so the
+    // tolerance has real slack over scheduling noise
+    let handle = spawn_synth(11, ObserveConfig::enabled(), Duration::from_millis(5));
+    let rid = handle.recorder.mint_id();
+    let (mut req, rx) = ClassifyRequest::new(image(0));
+    req.request_id = rid;
+    let t0 = Instant::now();
+    handle.submit(req).expect("admit");
+    rx.recv().expect("request answered").expect("request succeeds");
+    let wall_us = t0.elapsed().as_micros() as u64;
+
+    let spans = handle.recorder.spans_for(rid);
+    for stage in [Stage::Admission, Stage::Queue, Stage::BatchForm, Stage::Chunk] {
+        assert!(
+            spans.iter().any(|s| s.stage == stage),
+            "missing {stage:?}: {spans:?}"
+        );
+    }
+    // children (sample_conv / fwd_post) nest inside chunks and must not
+    // inflate the disjoint account
+    let sum = critical_path_us(&spans);
+    assert!(
+        sum <= wall_us + wall_us / 20,
+        "span sum {sum}us exceeds wall {wall_us}us by >5%: {spans:?}"
+    );
+    assert!(
+        sum + wall_us / 20 >= wall_us,
+        "span sum {sum}us accounts for <95% of wall {wall_us}us: {spans:?}"
+    );
+    handle.shutdown();
+}
+
+/// The replay guarantee: with no client-supplied `request_id`, enabling
+/// tracing changes no response byte (everything except the measured
+/// `latency_us`, which differs run to run regardless of tracing).
+#[test]
+fn responses_are_byte_identical_with_tracing_on_or_off() {
+    let on = spawn_synth(5, ObserveConfig::enabled(), Duration::ZERO);
+    let off = spawn_synth(5, ObserveConfig::default(), Duration::ZERO);
+    let mut traced = Router::new();
+    traced.register(on);
+    let mut plain = Router::new();
+    plain.register(off);
+    for k in 0..4 {
+        let line = protocol::encode_classify("synth", &image(k));
+        let a = respond(&traced, &line);
+        let b = respond(&plain, &line);
+        assert!(a.contains("\"ok\":true"), "{a}");
+        assert_eq!(mask_latency(&a), mask_latency(&b), "request {k}");
+        // the internally minted trace id never leaks into the response
+        assert!(!a.contains("request_id"), "{a}");
+    }
+    // ...and the traced server did actually record the requests
+    let stats = traced.trace_stats();
+    assert!(stats.iter().any(|(_, t)| t.enabled && t.recorded > 0));
+    traced.shutdown();
+    plain.shutdown();
+}
+
+/// A client-chosen `request_id` is used for the trace AND echoed in the
+/// response; the `trace` verb then returns the spans with their critical
+/// path.
+#[test]
+fn client_supplied_request_id_is_echoed_and_traceable() {
+    let handle = spawn_synth(3, ObserveConfig::enabled(), Duration::from_millis(1));
+    let mut router = Router::new();
+    router.register(handle);
+    let line = protocol::encode_classify_sharded_traced(
+        "synth",
+        &image(1),
+        &RequestBudget::default(),
+        None,
+        42,
+        9001,
+    );
+    let resp = respond(&router, &line);
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+    assert!(resp.contains("\"request_id\":\"9001\""), "{resp}");
+
+    let t = respond(&router, "{\"op\":\"trace\",\"request_id\":\"9001\"}");
+    let j = json::parse(&t).expect("trace response parses");
+    let spans = j.get("spans").and_then(|v| v.as_arr()).expect("spans");
+    assert!(!spans.is_empty(), "{t}");
+    assert!(
+        j.get("critical_path_us").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+        "{t}"
+    );
+    // a zero id is rejected at the protocol boundary
+    let bad = respond(&router, "{\"op\":\"trace\",\"request_id\":\"0\"}");
+    assert!(bad.contains("\"ok\":false"), "{bad}");
+    router.shutdown();
+}
+
+/// The `metrics` verb renders a Prometheus exposition that the in-repo
+/// checker accepts, with live-traffic series present.
+#[test]
+fn metrics_exposition_lints_clean_with_live_traffic() {
+    let handle = spawn_synth(9, ObserveConfig::enabled(), Duration::ZERO);
+    let mut router = Router::new();
+    router.register(handle);
+    for k in 0..3 {
+        let r = respond(&router, &protocol::encode_classify("synth", &image(k)));
+        assert!(r.contains("\"ok\":true"), "{r}");
+    }
+    let m = respond(&router, "{\"op\":\"metrics\"}");
+    let j = json::parse(&m).expect("metrics response parses");
+    assert_eq!(
+        j.get("content_type").and_then(|v| v.as_str()),
+        Some("text/plain; version=0.0.4")
+    );
+    let body = j.get("body").and_then(|v| v.as_str()).expect("body");
+    assert!(body.contains("pbm_request_latency_us_bucket"), "latency histogram");
+    assert!(body.contains("pbm_trace_enabled"), "trace stats");
+    assert!(body.contains("pbm_samples_used"), "uncertainty telemetry");
+    assert!(body.contains("pbm_predictive_entropy_nats"), "entropy histogram");
+    let errs = photonic_bayes::observe::expo::lint(body);
+    assert!(errs.is_empty(), "{errs:?}");
+    router.shutdown();
+}
+
+/// With `slow_ms = 0` every traced request retains an exemplar, and the
+/// bare `trace` verb returns them keyed by engine.
+#[test]
+fn slow_request_exemplars_are_retained_and_queryable() {
+    let ocfg = ObserveConfig {
+        slow_ms: 0,
+        ..ObserveConfig::enabled()
+    };
+    let handle = spawn_synth(13, ocfg, Duration::from_millis(1));
+    let mut router = Router::new();
+    router.register(handle);
+    let r = respond(&router, &protocol::encode_classify("synth", &image(2)));
+    assert!(r.contains("\"ok\":true"), "{r}");
+    let ex = respond(&router, "{\"op\":\"trace\"}");
+    let j = json::parse(&ex).expect("exemplar response parses");
+    let list = j
+        .get("exemplars")
+        .and_then(|v| v.get("synth"))
+        .and_then(|v| v.as_arr())
+        .expect("synth exemplars");
+    assert!(!list.is_empty(), "{ex}");
+    assert!(
+        list[0].get("total_us").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+        "{ex}"
+    );
+    assert!(
+        !list[0]
+            .get("spans")
+            .and_then(|v| v.as_arr())
+            .unwrap_or_default()
+            .is_empty(),
+        "{ex}"
+    );
+    router.shutdown();
+}
